@@ -1,0 +1,101 @@
+//! End-to-end driver: the full system on a real (small) serving
+//! workload, proving all layers compose — rust batching server →
+//! scheduler → PJRT runtime → AOT-compiled XLA/Pallas artifacts.
+//!
+//! Loads the reduced-scale VGG-11+BN, serves a synthetic trace of
+//! single-image requests through the dynamic batcher in BOTH modes
+//! (breadth-first baseline, BrainSlug depth-first plan), reports
+//! latency/throughput for each, and cross-checks numerics between modes.
+//! Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!   cargo run --release --example e2e_serve [-- <num_requests>]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use brainslug::bench;
+use brainslug::optimizer::optimize;
+use brainslug::rng::fill_f32;
+use brainslug::server::Server;
+use brainslug::zoo;
+
+fn serve_trace(
+    plan_mode: bool,
+    n_requests: usize,
+) -> anyhow::Result<(f64, f64, f64, Vec<f32>)> {
+    let batch = *bench::measured_batches().last().unwrap();
+    let g = Arc::new(zoo::build("vgg11_bn", zoo::small_config("vgg11_bn", batch)));
+    let device = bench::measured_device();
+    let plan = plan_mode.then(|| Arc::new(optimize(&g, &device, &bench::measured_opts())));
+    let server = Server::start(
+        std::path::PathBuf::from(bench::ARTIFACT_DIR),
+        g.clone(),
+        plan,
+        bench::oracle_seed(),
+        Duration::from_millis(3),
+    )?;
+    let handle = server.handle();
+    let image_elems = handle.image_shape().numel();
+
+    // Warm-up batch so executable compilation is off the trace.
+    handle.infer(fill_f32(999, image_elems))?;
+
+    let t0 = std::time::Instant::now();
+    let workers: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                // Poisson-ish arrivals: small deterministic jitter.
+                std::thread::sleep(Duration::from_micros((i as u64 % 7) * 300));
+                let img = fill_f32(i as u64, image_elems);
+                h.infer(img).map(|t| t.data[0])
+            })
+        })
+        .collect();
+    let mut firsts = Vec::new();
+    for w in workers {
+        firsts.push(w.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let throughput = n_requests as f64 / wall;
+    let latency = server.stats.mean_latency_ms();
+    let occupancy = server.stats.occupancy(batch);
+    server.stop();
+    Ok((throughput, latency, occupancy, firsts))
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    println!("# End-to-end serving: vgg11_bn, {n} requests, dynamic batching");
+
+    let (thr_b, lat_b, occ_b, out_b) = serve_trace(false, n)?;
+    println!(
+        "baseline : {thr_b:6.1} req/s, mean latency {lat_b:6.2} ms, occupancy {:.0}%",
+        occ_b * 100.0
+    );
+    let (thr_p, lat_p, occ_p, out_p) = serve_trace(true, n)?;
+    println!(
+        "brainslug: {thr_p:6.1} req/s, mean latency {lat_p:6.2} ms, occupancy {:.0}%",
+        occ_p * 100.0
+    );
+
+    // Numerics must agree per request across modes.
+    let max_diff = out_b
+        .iter()
+        .zip(&out_p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max per-request output diff between modes: {max_diff:.2e}");
+    anyhow::ensure!(max_diff < 1e-3, "serving modes diverge numerically");
+
+    println!(
+        "throughput gain: {:+.1}%  latency change: {:+.1}%",
+        (thr_p / thr_b - 1.0) * 100.0,
+        (lat_p / lat_b - 1.0) * 100.0
+    );
+    println!("OK: full stack (server -> scheduler -> PJRT -> Pallas artifacts) composes");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Sweep the full 21-network TorchVision zoo through the optimizer and
+//! the paper-device simulators — a compact reproduction of the paper's
+//! whole evaluation section in one command:
+//!
+//!   cargo run --release --example model_zoo
+//!
+//! Prints, per network: structure (Table 2's left columns), simulated
+//! GPU/CPU total speed-ups at batch 128 (Figures 13/14), and the batch-32
+//! GPU speed-up (the paper highlights DenseNet-201's 35.7% there).
+
+use brainslug::bench::{fmt_pct, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::zoo;
+
+fn speedup(name: &str, batch: usize, device: &DeviceSpec) -> f64 {
+    let g = zoo::build(name, zoo::paper_config(name, batch));
+    let plan = optimize(&g, device, &CollapseOptions::default());
+    let base = simulate_baseline(&g, device);
+    let bs = simulate_plan(&g, &plan, device);
+    speedup_pct(base.total_s, bs.total_s)
+}
+
+fn main() {
+    let gpu = DeviceSpec::paper_gpu();
+    let cpu = DeviceSpec::paper_cpu();
+    let mut table = Table::new(&[
+        "network", "layers", "opt", "stacks", "gpu@128", "cpu@128", "gpu@32",
+    ]);
+    let mut best = ("", f64::MIN);
+    for name in zoo::ALL_NETWORKS {
+        let g = zoo::build(name, zoo::paper_config(name, 1));
+        let plan = optimize(&g, &gpu, &CollapseOptions::default());
+        let g128 = speedup(name, 128, &gpu);
+        let c128 = speedup(name, 128, &cpu);
+        let g32 = speedup(name, 32, &gpu);
+        if g32 > best.1 {
+            best = (name, g32);
+        }
+        table.row(vec![
+            name.to_string(),
+            g.num_layers().to_string(),
+            plan.num_optimized_layers().to_string(),
+            plan.num_stacks().to_string(),
+            fmt_pct(g128),
+            fmt_pct(c128),
+            fmt_pct(g32),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nbest GPU speed-up at batch 32: {} ({}) — paper: densenet201 (+35.7%)",
+        best.0,
+        fmt_pct(best.1)
+    );
+}

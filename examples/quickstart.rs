@@ -1,0 +1,70 @@
+//! Quickstart: the library's 5-minute tour, mirroring the paper's
+//! Listing 3 (`brainslug.optimize(model)`).
+//!
+//!   1. build a network (VGG-11+BN at reduced scale),
+//!   2. run the optimizer — the one-call transparent acceleration,
+//!   3. execute baseline and optimized plans on the PJRT runtime,
+//!   4. verify both produce identical results.
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example quickstart
+
+use brainslug::bench;
+use brainslug::optimizer::{optimize, Segment};
+use brainslug::runtime::Runtime;
+use brainslug::scheduler::Executor;
+use brainslug::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the model (the paper's `models.__dict__['vgg11_bn']()`).
+    let batch = bench::measured_batches()[0];
+    let graph = zoo::build("vgg11_bn", zoo::small_config("vgg11_bn", batch));
+    println!(
+        "vgg11_bn: {} layers, input {}",
+        graph.num_layers(),
+        graph.input_shape()
+    );
+
+    // 2. Optimize — the `brainslug.optimize(model)` call.
+    let device = bench::measured_device();
+    let plan = optimize(&graph, &device, &bench::measured_opts());
+    println!(
+        "optimizer: {} of {} layers collapsed into {} stacks ({} unique kernels)",
+        plan.num_optimized_layers(),
+        graph.num_layers(),
+        plan.num_stacks(),
+        plan.num_unique_stacks()
+    );
+    for (i, seg) in plan.segments.iter().enumerate().take(8) {
+        match seg {
+            Segment::Single(id) => {
+                println!("  seg {i}: {}", graph.node(*id).name)
+            }
+            Segment::Stack(st) => println!(
+                "  seg {i}: STACK of {} layers -> {} ({} sequence(s))",
+                st.nodes.len(),
+                st.artifact_name(),
+                st.sequences.len()
+            ),
+        }
+    }
+    println!("  ...");
+
+    // 3. Execute both modes on AOT-compiled artifacts.
+    let runtime = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR))?;
+    let mut exec = Executor::new(&runtime, &graph, bench::oracle_seed());
+    let input = exec.synthetic_input();
+    let (out_base, stats_base) = exec.run_baseline(input.clone())?;
+    let (out_bs, stats_bs) = exec.run_plan(&plan, input)?;
+
+    // 4. Transparent means *same results*.
+    let diff = out_base.max_abs_diff(&out_bs);
+    println!(
+        "baseline {:.1}ms vs brainslug {:.1}ms — max output diff {diff:.2e}",
+        stats_base.total_s * 1e3,
+        stats_bs.total_s * 1e3
+    );
+    assert!(out_base.allclose(&out_bs, 1e-4, 1e-4));
+    println!("OK: depth-first execution is numerically transparent");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""BrainSlug compile path (build-time only; never imported at runtime)."""

@@ -1,0 +1,233 @@
+"""AOT path: lower every compile request to an HLO-text artifact.
+
+Reads ``artifacts/requests.json`` (written by ``brainslug
+emit-requests``), builds a JAX function per request — per-layer
+executables from the L2 layer library, fused per-stack executables from
+the L1 Pallas kernel — lowers each to HLO *text* and writes
+``artifacts/manifest.json`` plus the numerics oracles.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--requests PATH] [--out DIR] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import detrng, layers, model
+from .kernels import fused_stack
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a 1-tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer executables
+# ---------------------------------------------------------------------------
+
+
+def layer_fn_and_specs(req: dict):
+    """Build (fn, arg_specs) for a layer request. Argument order matches
+    the rust scheduler: activations first, then parameters."""
+    kind = req["kind"]
+    in_dims = [s["dims"] for s in req["in_shapes"]]
+    x = spec(in_dims[0])
+
+    if kind == "conv2d":
+        stride = tuple(req["stride"])
+        pad = tuple(req["pad"])
+        oc = req["out_channels"]
+        w = spec((oc, in_dims[0][1], req["kernel"][0], req["kernel"][1]))
+        if req["bias"]:
+            b = spec((oc,))
+            return (
+                lambda x, w, b: (layers.conv2d(x, w, b, stride, pad),),
+                [x, w, b],
+            )
+        return (lambda x, w: (layers.conv2d(x, w, None, stride, pad),), [x, w])
+
+    if kind == "linear":
+        of = req["out_features"]
+        w = spec((in_dims[0][1], of))
+        if req["bias"]:
+            b = spec((of,))
+            return (lambda x, w, b: (layers.linear(x, w, b),), [x, w, b])
+        return (lambda x, w: (layers.linear(x, w, None),), [x, w])
+
+    if kind in ("maxpool", "avgpool"):
+        kernel = tuple(req["kernel"])
+        stride = tuple(req["stride"])
+        pad = tuple(req["pad"])
+        if req["pool"] == "max":
+            ceil = req["ceil_mode"]
+            return (
+                lambda x: (layers.max_pool2d(x, kernel, stride, pad, ceil),),
+                [x],
+            )
+        cip = req["count_include_pad"]
+        return (
+            lambda x: (layers.avg_pool2d(x, kernel, stride, pad, cip),),
+            [x],
+        )
+
+    if kind == "adaptiveavgpool":
+        out_hw = tuple(req["out_hw"])
+        return (lambda x: (layers.adaptive_avg_pool2d(x, out_hw),), [x])
+
+    if kind == "batchnorm":
+        c = in_dims[0][1]
+        s = spec((c,))
+        return (
+            lambda x, scale, shift: (layers.bn_affine(x, scale, shift),),
+            [x, s, s],
+        )
+
+    if kind == "relu":
+        return (lambda x: (layers.relu(x),), [x])
+
+    if kind == "add":
+        return (lambda a, b: (a + b,), [spec(in_dims[0]), spec(in_dims[1])])
+
+    if kind == "concat":
+        specs = [spec(d) for d in in_dims]
+        return (lambda *xs: (jnp.concatenate(xs, axis=1),), specs)
+
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def stack_fn_and_specs(req: dict):
+    """Build (fn, arg_specs) for a fused stack request."""
+    fn = fused_stack.stack_fn(req)
+    x = spec(req["in_shape"]["dims"])
+    c = req["in_shape"]["dims"][1] if len(req["in_shape"]["dims"]) == 4 else None
+    n_bn = sum(
+        1
+        for seq in req["sequences"]
+        for step in seq["steps"]
+        for op in step
+        if op["op"] == "bn"
+    )
+    assert n_bn == 0 or c is not None, "bn params require rank-4 stacks"
+    params = [spec((c,)) for _ in range(2 * n_bn)]
+    return fn, [x] + params
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def shape_manifest(dims) -> dict:
+    return {"dims": list(dims), "dtype": "f32"}
+
+
+def lower_one(name: str, fn, arg_specs, out_dir: str) -> dict:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    # Determine the output shape by abstract evaluation.
+    out = jax.eval_shape(fn, *arg_specs)
+    (out0,) = out  # all executables return 1-tuples
+    return {
+        "name": name,
+        "path": path,
+        "inputs": [shape_manifest(s.shape) for s in arg_specs],
+        "output": shape_manifest(out0.shape),
+    }
+
+
+def run_oracle(entry: dict, out_dir: str) -> dict:
+    graph = entry["graph"]
+    seed = entry["seed"]
+    tag = entry["tag"]
+    params = model.make_params(graph, seed)
+    x = model.synthetic_input(graph, seed)
+    out = np.asarray(model.run_graph(graph, jnp.asarray(x), params))
+    in_path = f"oracle_{tag}_input.f32"
+    out_path = f"oracle_{tag}_output.f32"
+    x.astype("<f4").tofile(os.path.join(out_dir, in_path))
+    out.astype("<f4").tofile(os.path.join(out_dir, out_path))
+    return {
+        "tag": tag,
+        "seed": seed,
+        "input_path": in_path,
+        "output_path": out_path,
+        "input": shape_manifest(x.shape),
+        "output": shape_manifest(out.shape),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", default="artifacts/requests.json")
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--only", default=None, help="lower only this executable")
+    args = ap.parse_args()
+
+    with open(args.requests) as f:
+        requests = json.load(f)
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    t0 = time.time()
+    work = [("layer", r) for r in requests["layers"]] + [
+        ("stack", r) for r in requests["stacks"]
+    ]
+    for i, (kind, req) in enumerate(work):
+        name = req["name"]
+        if args.only and name != args.only:
+            continue
+        fn, specs = (
+            layer_fn_and_specs(req) if kind == "layer" else stack_fn_and_specs(req)
+        )
+        try:
+            entries.append(lower_one(name, fn, specs, args.out))
+        except Exception:
+            print(f"FAILED lowering {name}", file=sys.stderr)
+            raise
+        if (i + 1) % 25 == 0:
+            print(f"  lowered {i + 1}/{len(work)} ({time.time() - t0:.0f}s)")
+
+    oracles = []
+    if not args.only:
+        for entry in requests.get("oracles", []):
+            oracles.append(run_oracle(entry, args.out))
+            print(f"  oracle {entry['tag']} done")
+
+    manifest = {"executables": entries, "oracles": oracles}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(
+        f"wrote {len(entries)} executables + {len(oracles)} oracles "
+        f"to {args.out} in {time.time() - t0:.0f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Deterministic parameter/data generation — python mirror of
+``rust/src/rng.rs``.
+
+Both sides generate network parameters and synthetic inputs from the same
+SplitMix64 stream -> f32 mapping so the rust scheduler and the python
+oracle compute over bit-identical values. Covered by the golden-file test
+``python/tests/test_detrng.py`` against vectors pinned in rust.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+_GOLDEN = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def splitmix64_at(seed: int, n: int) -> np.ndarray:
+    """The first ``n`` outputs of the SplitMix64 stream for ``seed``,
+    vectorized: output ``i`` mixes state ``seed + (i+1)*GOLDEN``."""
+    idx = np.arange(1, n + 1, dtype=np.uint64)
+    z = (np.uint64(seed & _MASK) + idx * np.uint64(_GOLDEN)) & np.uint64(_MASK)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(_MIX1)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(_MIX2)
+    return z ^ (z >> np.uint64(31))
+
+
+def u64_to_f32(x: np.ndarray) -> np.ndarray:
+    """Top 24 bits -> fraction of 2^23, offset -1 (uniform [-1, 1))."""
+    return (x >> np.uint64(40)).astype(np.float32) / np.float32(1 << 23) - np.float32(1.0)
+
+
+def fill_f32(seed: int, n: int) -> np.ndarray:
+    return u64_to_f32(splitmix64_at(seed, n))
+
+
+def tensor_seed(base: int, tag: str) -> int:
+    """FNV-1a over the tag, XOR rotate_left(base, 17)."""
+    h = _FNV_OFFSET
+    for b in tag.encode():
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK
+    rot = ((base << 17) | (base >> 47)) & _MASK
+    return h ^ rot
+
+
+def fill_param(seed: int, n: int, kind: str) -> np.ndarray:
+    """Post-processed fills; ``kind`` matches rust's ``ParamKind``."""
+    raw = fill_f32(seed, n)
+    if kind == "weight":
+        return raw * np.float32(0.1)
+    if kind == "bias":
+        return raw * np.float32(0.01)
+    if kind == "bn_gamma":
+        return np.float32(1.0) + raw * np.float32(0.1)
+    if kind == "bn_beta":
+        return raw * np.float32(0.01)
+    if kind == "bn_mean":
+        return raw * np.float32(0.1)
+    if kind == "bn_var":
+        return np.float32(0.55) + raw * np.float32(0.45)
+    if kind == "activation":
+        return raw
+    raise ValueError(f"unknown param kind {kind}")

@@ -1,0 +1,1 @@
+"""L1 kernels: fused depth-first stack + pure-jnp oracle."""

@@ -1,0 +1,303 @@
+"""L1: the fused depth-first stack kernel (Pallas).
+
+This is the paper's generated code (Listing 2) written once,
+parametrically: a collapsed stack is a list of *sequences*, each a list
+of *steps* (<= 1 pooling op per step, any number of element-wise ops).
+One ``pallas_call`` executes one sequence; sequences synchronize through
+HBM (the paper's "serialized fashion", §4.2).
+
+Depth-first tiling: one *band* of ``tile_rows`` output rows is pushed
+through every step of the sequence before the next band is touched, so
+intermediates never materialize at full-tensor size — the band working
+set is what the rust collapser budgeted against VMEM. Within a band the
+computation is vectorized across batch × channels × width (the SIMD
+lanes of §3.2); across bands execution is sequential per core, exactly
+the paper's depth-first schedule. Band origins are static (the band loop
+unrolls at trace time), so halo regions are static slices plus
+pool-identity padding — rows outside the valid image range are never
+materialized between pools (they are re-padded at each pool with that
+pool's identity, which is what makes BN-after-pool numerically safe).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+version maps a thread block per (batch, channel, patch) with
+double-buffered shared memory; here a band plays the role of the patch,
+VMEM the role of shared memory, and the (8,128) VPU lanes run the
+band's (channel, width) plane. ``interpret=True`` everywhere — the CPU
+PJRT runtime cannot execute Mosaic custom-calls, and lowering through
+the interpreter emits plain HLO the rust runtime runs.
+
+§Perf iteration log lives in EXPERIMENTS.md: the first version ran a
+grid program per (batch, channel) plane with per-plane gathers and was
+~64x slower than the jitted jnp reference on XLA:CPU; restructuring to
+band-major with full (N, C, ·, W) vectorization (this version) makes
+the lowered HLO a short chain of fused slice/pad/reduce-window ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import layers
+
+
+def _pool_dims_of(op: dict, h: int, w: int) -> tuple[int, int]:
+    f = layers.ceil_out_dim if op.get("ceil_mode", False) else layers.conv_out_dim
+    return (
+        f(h, op["kernel"][0], op["stride"][0], op["pad"][0]),
+        f(w, op["kernel"][1], op["stride"][1], op["pad"][1]),
+    )
+
+
+def _step_pool(step: list[dict]):
+    """The (at most one) pooling op of a step."""
+    pools = [op for op in step if op["op"] == "pool"]
+    assert len(pools) <= 1, "a step may contain at most one pooling op"
+    return pools[0] if pools else None
+
+
+def _plan_levels(steps: list[list[dict]], h: int, w: int):
+    """Static (H, W) entering each step, plus the final extent."""
+    levels = []
+    for step in steps:
+        levels.append((h, w))
+        pool = _step_pool(step)
+        if pool is not None:
+            h, w = _pool_dims_of(pool, h, w)
+    levels.append((h, w))
+    return levels
+
+
+def _row_window(step: list[dict]) -> tuple[int, int, int]:
+    pool = _step_pool(step)
+    if pool is None:
+        return 1, 1, 0
+    return pool["kernel"][0], pool["stride"][0], pool["pad"][0]
+
+
+def _band_ranges(steps, tile: int, out_start: int):
+    """Backward pass: requested row range [a_i, a_i + len_i) entering each
+    step for a band producing rows [out_start, out_start+tile)."""
+    a, length = out_start, tile
+    ranges = [(a, length)]
+    for step in reversed(steps):
+        kh, sh, ph = _row_window(step)
+        a = a * sh - ph
+        length = (length - 1) * sh + kh
+        ranges.append((a, length))
+    ranges.reverse()  # ranges[i] = requested input range of step i
+    return ranges
+
+
+def _apply_pool_banded(op: dict, cur, lo: int, a: int, length: int, h: int, w: int):
+    """Apply one pooling op to a band of shape (N, C, rows, W).
+
+    ``cur`` holds valid rows [lo, lo+rows) of the level-(h,w) image; the
+    backward-computed *requested* row range is [a, a+length). Returns
+    (out, out_lo) where out holds only the valid next-level rows.
+    """
+    kh, kw = op["kernel"]
+    sh, sw = op["stride"]
+    ph, pw = op["pad"]
+    is_max = op["pool"] == "max"
+    identity = jnp.float32(jnp.finfo(jnp.float32).min) if is_max else jnp.float32(0.0)
+
+    # Rows: pad the requested halo that lies outside the valid image.
+    top = lo - a
+    bottom = (a + length) - (lo + cur.shape[2])
+    assert top >= 0 and bottom >= 0, (top, bottom)
+    # Cols: symmetric pool padding plus ceil-mode right extension.
+    out_h, out_w = _pool_dims_of(op, h, w)
+    extra_w = max(0, (out_w - 1) * sw + kw - (w + 2 * pw))
+    pad_cfg = ((0, 0), (0, 0), (top, bottom), (pw, pw + extra_w))
+    padded = jnp.pad(cur, pad_cfg, constant_values=identity)
+    reducer = jax.lax.max if is_max else jax.lax.add
+    out = jax.lax.reduce_window(
+        padded,
+        identity,
+        reducer,
+        window_dimensions=(1, 1, kh, kw),
+        window_strides=(1, 1, sh, sw),
+        padding="VALID",
+    )
+    if not is_max:
+        if op.get("count_include_pad", True):
+            out = out / jnp.float32(kh * kw)
+        else:
+            counts = jax.lax.reduce_window(
+                jnp.pad(jnp.ones_like(cur), pad_cfg),
+                jnp.float32(0.0),
+                jax.lax.add,
+                window_dimensions=(1, 1, kh, kw),
+                window_strides=(1, 1, sh, sw),
+                padding="VALID",
+            )
+            out = out / counts
+    # Requested output range starts at (a + ph) / sh (exact by
+    # construction of the backward ranges).
+    assert (a + ph) % sh == 0, "band origin must align with pool stride"
+    out_a = (a + ph) // sh
+    # Slice away out-of-image rows (they would otherwise leak pool
+    # identities into the next element-wise op).
+    lo_next = max(out_a, 0)
+    hi_next = min(out_a + out.shape[2], out_h)
+    out = out[:, :, lo_next - out_a : hi_next - out_a, :]
+    return out, lo_next
+
+
+def _sequence_kernel(x_ref, *refs, steps, levels, tile):
+    """Pallas kernel body for one sequence.
+
+    Band-major depth-first: the unrolled band loop pushes each band of
+    final-output rows through all steps, vectorized over (N, C, ·, W).
+    refs = [scale0, shift0, scale1, shift1, ..., out_ref] with (C,)
+    batch-norm parameter vectors.
+    """
+    out_ref = refs[-1]
+    bn_refs = refs[:-1]
+    h_in, _w_in = levels[0]
+    h_out, _w_out = levels[-1]
+
+    n_bands = -(-h_out // tile)
+    for b in range(n_bands):
+        out_start = min(b * tile, h_out - tile)
+        ranges = _band_ranges(steps, tile, out_start)
+        a0, len0 = ranges[0]
+        lo = max(a0, 0)
+        hi = min(a0 + len0, h_in)
+        cur = x_ref[:, :, lo:hi, :]
+        bn_i = 0
+        for si, step in enumerate(steps):
+            h_lvl, w_lvl = levels[si]
+            for op in step:
+                kind = op["op"]
+                if kind == "bn":
+                    scale = bn_refs[2 * bn_i][...]
+                    shift = bn_refs[2 * bn_i + 1][...]
+                    cur = cur * scale[None, :, None, None] + shift[None, :, None, None]
+                    bn_i += 1
+                elif kind == "relu":
+                    cur = jnp.maximum(cur, 0.0)
+                elif kind == "id":
+                    pass
+                elif kind == "pool":
+                    a, length = ranges[si]
+                    cur, lo = _apply_pool_banded(op, cur, lo, a, length, h_lvl, w_lvl)
+                else:
+                    raise ValueError(f"unknown op {kind}")
+        # cur now holds exactly rows [out_start, out_start + tile).
+        assert lo == out_start and cur.shape[2] == tile, (lo, out_start, cur.shape)
+        out_ref[:, :, out_start : out_start + tile, :] = cur
+
+
+def _elementwise_kernel(x_ref, o_ref, *, ops):
+    """Rank-2 (N, F) stacks are pure element-wise chains, banded over the
+    batch dimension by BlockSpec."""
+    cur = x_ref[...]
+    for op in ops:
+        kind = op["op"]
+        if kind == "relu":
+            cur = jnp.maximum(cur, 0.0)
+        elif kind == "id":
+            pass
+        else:
+            raise ValueError(f"unsupported rank-2 op {kind}")
+    o_ref[...] = cur
+
+
+def sequence_call(seq: dict, in_shape: tuple[int, ...], x, bn_params: list):
+    """Run one sequence as a pallas_call; returns (output, consumed_bn)."""
+    steps = seq["steps"]
+    tile = seq["tile_rows"]
+    if len(in_shape) == 2:
+        ops = [op for step in steps for op in step]
+        n, f = in_shape
+        band = min(tile, n)
+        grid = (-(-n // band),)
+        out = pl.pallas_call(
+            functools.partial(_elementwise_kernel, ops=ops),
+            grid=grid,
+            in_specs=[pl.BlockSpec((band, f), lambda b: (b, 0))],
+            out_specs=pl.BlockSpec((band, f), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+            interpret=True,
+        )(x)
+        return out, 0
+
+    n, c, h, w = in_shape
+    levels = _plan_levels(steps, h, w)
+    h_out, w_out = levels[-1]
+    tile = min(tile, h_out)
+    n_bn = sum(1 for step in steps for op in step if op["op"] == "bn")
+    consumed = bn_params[: 2 * n_bn]
+
+    if h_out <= tile:
+        # Single band covers the whole extent: banding adds only copies.
+        # §4.1's special case — "if a sequence only contains a single
+        # step, we iterate over the entire input data". Apply the op
+        # chain directly; XLA fuses it into one pass.
+        from . import ref  # sibling; no circular import
+
+        pairs = iter(list(zip(consumed[0::2], consumed[1::2])))
+        out = x
+        for step in steps:
+            for op in step:
+                out = ref.apply_op(op, out, pairs)
+        return out, 2 * n_bn
+
+    out = pl.pallas_call(
+        functools.partial(_sequence_kernel, steps=steps, levels=levels, tile=tile),
+        out_shape=jax.ShapeDtypeStruct((n, c, h_out, w_out), jnp.float32),
+        interpret=True,
+    )(x, *consumed)
+    return out, 2 * n_bn
+
+
+def run_stack_fused(request: dict, x, bn_param_list):
+    """Execute a full stack request: one pallas_call per sequence,
+    sequences chained through (conceptual) HBM."""
+    shape = tuple(request["in_shape"]["dims"])
+    params = list(bn_param_list)
+    for seq in request["sequences"]:
+        in_shape = tuple(seq["in_shape"]["dims"]) if "in_shape" in seq else shape
+        x, used = sequence_call(seq, in_shape, x, params)
+        params = params[used:]
+        shape = x.shape
+    assert not params, "unconsumed bn params"
+    return x
+
+
+def stack_fn(request: dict):
+    """Build the jittable stack function f(x, *bn_params) for AOT export."""
+
+    def fn(x, *bn_params):
+        return (run_stack_fused(request, x, list(bn_params)),)
+
+    return fn
+
+
+def vmem_estimate_bytes(request: dict) -> int:
+    """Static VMEM working-set estimate of the largest sequence band per
+    (batch, channel) plane — the §Perf L1 profile metric (mirrors rust
+    working_set_bytes)."""
+    worst = 0
+    for seq in request["sequences"]:
+        dims = tuple(seq["in_shape"]["dims"])
+        if len(dims) == 2:
+            worst = max(worst, 2 * seq["tile_rows"] * dims[1] * 4)
+            continue
+        _, _, h, w = dims
+        steps = seq["steps"]
+        levels = _plan_levels(steps, h, w)
+        tile = min(seq["tile_rows"], levels[-1][0])
+        ranges = _band_ranges(steps, tile, 0)
+        for i in range(len(steps)):
+            in_rows = ranges[i][1]
+            out_rows = ranges[i + 1][1]
+            w_in = levels[i][1]
+            w_out = levels[i + 1][1]
+            worst = max(worst, (in_rows * w_in + out_rows * w_out) * 4)
+    return worst

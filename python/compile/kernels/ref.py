@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for collapsed stacks.
+
+``run_stack_ref`` executes a stack *request* (the JSON the rust optimizer
+emits) op by op with the L2 layer library — no fusion, no tiling. The
+fused Pallas kernel in ``fused_stack.py`` must match this to float
+tolerance for every request; ``python/tests/test_kernel.py`` sweeps both
+hand-written and hypothesis-generated requests.
+"""
+
+from __future__ import annotations
+
+from .. import layers
+
+
+def iter_ops(request: dict):
+    """All ops of a stack request in execution order."""
+    for seq in request["sequences"]:
+        for step in seq["steps"]:
+            yield from step
+
+
+def num_bn_ops(request: dict) -> int:
+    return sum(1 for op in iter_ops(request) if op["op"] == "bn")
+
+
+def apply_op(op: dict, x, bn_pairs):
+    """Apply one stack op; ``bn_pairs`` is an iterator yielding
+    (scale, shift) in op order."""
+    kind = op["op"]
+    if kind == "bn":
+        scale, shift = next(bn_pairs)
+        return layers.bn_affine(x, scale, shift)
+    if kind == "relu":
+        return layers.relu(x)
+    if kind == "id":
+        return x
+    if kind == "pool":
+        kernel = tuple(op["kernel"])
+        stride = tuple(op["stride"])
+        pad = tuple(op["pad"])
+        if op["pool"] == "max":
+            return layers.max_pool2d(
+                x, kernel, stride, pad, ceil_mode=op.get("ceil_mode", False)
+            )
+        assert not op.get("ceil_mode", False), "ceil avg-pool not used by the zoo"
+        return layers.avg_pool2d(
+            x, kernel, stride, pad, count_include_pad=op.get("count_include_pad", True)
+        )
+    raise ValueError(f"unknown stack op {kind}")
+
+
+def run_stack_ref(request: dict, x, bn_param_list):
+    """Execute the whole stack breadth-first (reference semantics).
+
+    ``bn_param_list`` is a flat list [scale0, shift0, scale1, shift1, ...]
+    in op order — the same argument convention as the fused executable.
+    """
+    pairs = iter(list(zip(bn_param_list[0::2], bn_param_list[1::2])))
+    for op in iter_ops(request):
+        x = apply_op(op, x, pairs)
+    return x

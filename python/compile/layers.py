@@ -1,0 +1,138 @@
+"""L2 layer library: JAX implementations of every graph-IR layer.
+
+Semantics mirror PyTorch (and the rust shape inference in
+``rust/src/graph``): floor/ceil window arithmetic, max-pool padding with
+-inf, avg-pool ``count_include_pad``, inference-mode (folded) batch norm.
+These functions are both the breadth-first per-layer executables that
+``aot.py`` lowers and the building blocks of the pure-jnp oracle
+(``kernels/ref.py`` checks the fused Pallas kernel against them).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def conv_out_dim(inp: int, k: int, s: int, p: int) -> int:
+    """floor((in + 2p - k)/s) + 1 — PyTorch default."""
+    padded = inp + 2 * p
+    assert padded >= k, f"window {k} larger than padded input {padded}"
+    return (padded - k) // s + 1
+
+
+def ceil_out_dim(inp: int, k: int, s: int, p: int) -> int:
+    """PyTorch ceil_mode, with the last-window-must-start-inside-input
+    correction (mirrors rust ``ceil_out_dim``)."""
+    padded = inp + 2 * p
+    assert padded >= k
+    out = -((padded - k) // -s) + 1
+    if p > 0 and (out - 1) * s >= inp + p:
+        out -= 1
+    return out
+
+
+def conv2d(x, w, b=None, stride=(1, 1), pad=(0, 0)):
+    """NCHW conv with OIHW weights."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+def linear(x, w, b=None):
+    """(N, in) @ (in, out) + bias."""
+    out = x @ w
+    if b is not None:
+        out = out + b[None, :]
+    return out
+
+
+def _pool_dims(h, w, kernel, stride, pad, ceil_mode):
+    f = ceil_out_dim if ceil_mode else conv_out_dim
+    return (
+        f(h, kernel[0], stride[0], pad[0]),
+        f(w, kernel[1], stride[1], pad[1]),
+    )
+
+
+def max_pool2d(x, kernel, stride, pad=(0, 0), ceil_mode=False):
+    """Max pooling over NCHW with -inf padding (PyTorch semantics)."""
+    n, c, h, w = x.shape
+    oh, ow = _pool_dims(h, w, kernel, stride, pad, ceil_mode)
+    # Right/bottom extension so a VALID reduce emits exactly (oh, ow).
+    eh = (oh - 1) * stride[0] + kernel[0] - (h + 2 * pad[0])
+    ew = (ow - 1) * stride[1] + kernel[1] - (w + 2 * pad[1])
+    neg = jnp.finfo(x.dtype).min
+    out = jax.lax.reduce_window(
+        x,
+        neg,
+        jax.lax.max,
+        window_dimensions=(1, 1, kernel[0], kernel[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=[(0, 0), (0, 0), (pad[0], pad[0] + max(eh, 0)), (pad[1], pad[1] + max(ew, 0))],
+    )
+    assert out.shape == (n, c, oh, ow), (out.shape, (n, c, oh, ow))
+    return out
+
+
+def avg_pool2d(x, kernel, stride, pad=(0, 0), count_include_pad=True):
+    """Average pooling (floor mode only, as the evaluated networks use)."""
+    n, c, h, w = x.shape
+    oh, ow = _pool_dims(h, w, kernel, stride, pad, False)
+    summed = jax.lax.reduce_window(
+        x,
+        jnp.array(0.0, x.dtype),
+        jax.lax.add,
+        window_dimensions=(1, 1, kernel[0], kernel[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=[(0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])],
+    )
+    if count_include_pad:
+        out = summed / np.float32(kernel[0] * kernel[1])
+    else:
+        ones = jnp.ones_like(x)
+        counts = jax.lax.reduce_window(
+            ones,
+            jnp.array(0.0, x.dtype),
+            jax.lax.add,
+            window_dimensions=(1, 1, kernel[0], kernel[1]),
+            window_strides=(1, 1, stride[0], stride[1]),
+            padding=[(0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])],
+        )
+        out = summed / counts
+    assert out.shape == (n, c, oh, ow)
+    return out
+
+
+def adaptive_avg_pool2d(x, out_hw):
+    """Adaptive average pooling for dividing extents (as rust enforces)."""
+    n, c, h, w = x.shape
+    oh, ow = out_hw
+    assert h % oh == 0 and w % ow == 0, (x.shape, out_hw)
+    kh, kw = h // oh, w // ow
+    return x.reshape(n, c, oh, kh, ow, kw).mean(axis=(3, 5))
+
+
+def bn_affine(x, scale, shift):
+    """Folded inference batch-norm: per-channel affine on NCHW."""
+    return x * scale[None, :, None, None] + shift[None, :, None, None]
+
+
+def fold_bn(gamma, beta, mean, var, eps):
+    """(gamma, beta, mean, var) -> (scale, shift); mirrors rust
+    ``ParamStore::bn_folded``."""
+    scale = gamma / np.sqrt(var + np.float32(eps))
+    shift = beta - mean * scale
+    return scale.astype(np.float32), shift.astype(np.float32)
+
+
+def relu(x):
+    return jnp.maximum(x, 0)

@@ -1,0 +1,137 @@
+"""L2: JAX model execution from exported graph JSON.
+
+The rust zoo is the single source of truth for topology; this module
+*interprets* an exported graph (``brainslug dot --json`` / the oracle
+entries of ``requests.json``) as a JAX computation, with parameters drawn
+from the shared deterministic RNG. It is the breadth-first reference the
+integration tests compare the rust scheduler against, and it exercises
+the same layer library the per-layer executables are lowered from.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import detrng, layers
+
+
+def param_tags(node: dict) -> list[tuple[str, str, str]]:
+    """(tag, kind, role) triples for a node — mirrors rust
+    ``node_param_tags`` ordering."""
+    kind = node["kind"]
+    name = node["name"]
+    if kind in ("conv2d", "linear"):
+        tags = [(f"{name}:weight", "weight", "weight")]
+        if node["bias"]:
+            tags.append((f"{name}:bias", "bias", "bias"))
+        return tags
+    if kind == "batchnorm":
+        return [
+            (f"{name}:bn_gamma", "bn_gamma", "gamma"),
+            (f"{name}:bn_beta", "bn_beta", "beta"),
+            (f"{name}:bn_mean", "bn_mean", "mean"),
+            (f"{name}:bn_var", "bn_var", "var"),
+        ]
+    return []
+
+
+def param_shape(node: dict, in_dims: list[int], role: str) -> tuple[int, ...]:
+    kind = node["kind"]
+    if kind == "conv2d":
+        if role == "weight":
+            return (node["out_channels"], in_dims[1], node["kernel"][0], node["kernel"][1])
+        return (node["out_channels"],)
+    if kind == "linear":
+        if role == "weight":
+            return (in_dims[1], node["out_features"])
+        return (node["out_features"],)
+    if kind == "batchnorm":
+        return (in_dims[1],)
+    raise ValueError(f"{kind} has no params")
+
+
+def make_params(graph: dict, seed: int) -> dict[str, np.ndarray]:
+    """All parameters of a graph, keyed by tag."""
+    out: dict[str, np.ndarray] = {}
+    nodes = graph["nodes"]
+    for node in nodes:
+        if not node["inputs"]:
+            continue
+        in_dims = nodes[node["inputs"][0]]["shape"]["dims"]
+        for tag, kind, role in param_tags(node):
+            shape = param_shape(node, in_dims, role)
+            s = detrng.tensor_seed(seed, tag)
+            out[tag] = detrng.fill_param(s, int(np.prod(shape)), kind).reshape(shape)
+    return out
+
+
+def synthetic_input(graph: dict, seed: int) -> np.ndarray:
+    """The deterministic input batch (mirrors Executor::synthetic_input)."""
+    dims = graph["nodes"][0]["shape"]["dims"]
+    s = detrng.tensor_seed(seed, "input")
+    return detrng.fill_param(s, int(np.prod(dims)), "activation").reshape(dims)
+
+
+def apply_node(node: dict, inputs: list, params: dict[str, np.ndarray]):
+    """Execute one graph node on already-computed input values."""
+    kind = node["kind"]
+    name = node["name"]
+    if kind == "conv2d":
+        w = params[f"{name}:weight"]
+        b = params.get(f"{name}:bias") if node["bias"] else None
+        return layers.conv2d(
+            inputs[0], w, b, stride=tuple(node["stride"]), pad=tuple(node["pad"])
+        )
+    if kind == "linear":
+        w = params[f"{name}:weight"]
+        b = params.get(f"{name}:bias") if node["bias"] else None
+        return layers.linear(inputs[0], w, b)
+    if kind in ("maxpool", "avgpool"):
+        kernel = tuple(node["kernel"])
+        stride = tuple(node["stride"])
+        pad = tuple(node["pad"])
+        if node["pool"] == "max":
+            return layers.max_pool2d(
+                inputs[0], kernel, stride, pad, ceil_mode=node["ceil_mode"]
+            )
+        assert not node["ceil_mode"]
+        return layers.avg_pool2d(
+            inputs[0], kernel, stride, pad, count_include_pad=node["count_include_pad"]
+        )
+    if kind == "adaptiveavgpool":
+        return layers.adaptive_avg_pool2d(inputs[0], tuple(node["out_hw"]))
+    if kind == "batchnorm":
+        scale, shift = layers.fold_bn(
+            params[f"{name}:bn_gamma"],
+            params[f"{name}:bn_beta"],
+            params[f"{name}:bn_mean"],
+            params[f"{name}:bn_var"],
+            node["eps"],
+        )
+        return layers.bn_affine(inputs[0], scale, shift)
+    if kind == "relu":
+        return layers.relu(inputs[0])
+    if kind == "dropout":
+        return inputs[0]
+    if kind == "flatten":
+        x = inputs[0]
+        return x.reshape(x.shape[0], -1)
+    if kind == "add":
+        return inputs[0] + inputs[1]
+    if kind == "concat":
+        return jnp.concatenate(inputs, axis=1)
+    raise ValueError(f"unknown node kind {kind}")
+
+
+def run_graph(graph: dict, x, params: dict[str, np.ndarray]):
+    """Breadth-first execution of the whole graph (the oracle)."""
+    nodes = graph["nodes"]
+    values: dict[int, object] = {0: x}
+    for node in nodes[1:]:
+        inputs = [values[i] for i in node["inputs"]]
+        values[node["id"]] = apply_node(node, inputs, params)
+    out = values[graph["output"]]
+    expect = tuple(nodes[graph["output"]]["shape"]["dims"])
+    assert out.shape == expect, (out.shape, expect)
+    return out

@@ -1,0 +1,10 @@
+fn main() {
+    let v = brainslug::rng::fill_f32(0x5EED_2026, 8);
+    println!("fill_f32: {v:?}");
+    let s = brainslug::rng::tensor_seed(0x5EED_2026, "features.0.conv:weight");
+    println!("tensor_seed: {s}");
+    let w = brainslug::rng::fill_param(s, 4, brainslug::rng::ParamKind::Weight);
+    println!("weight: {w:?}");
+    let var = brainslug::rng::fill_param(7, 4, brainslug::rng::ParamKind::BnVar);
+    println!("var: {var:?}");
+}

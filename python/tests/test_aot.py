@@ -1,0 +1,81 @@
+"""AOT path tests: request -> HLO lowering works for every request kind
+and the emitted text is loadable HLO (contains an ENTRY computation)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _requests():
+    path = os.path.join(ARTIFACTS, "requests.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/requests.json not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_layer_fn_builds_for_every_request_kind():
+    reqs = _requests()
+    seen = set()
+    for r in reqs["layers"]:
+        if r["kind"] in seen:
+            continue
+        seen.add(r["kind"])
+        fn, specs = aot.layer_fn_and_specs(r)
+        assert len(specs) >= 1
+    assert "conv2d" in seen and "relu" in seen
+
+
+def test_stack_fn_builds_and_lowers(tmp_path):
+    reqs = _requests()
+    stack = reqs["stacks"][0]
+    fn, specs = aot.stack_fn_and_specs(stack)
+    entry = aot.lower_one(stack["name"], fn, specs, str(tmp_path))
+    text = (tmp_path / entry["path"]).read_text()
+    assert "ENTRY" in text
+    assert entry["output"]["dims"] == stack["out_shape"]["dims"]
+
+
+def test_lower_one_manifest_entry_shapes(tmp_path):
+    reqs = _requests()
+    conv = next(r for r in reqs["layers"] if r["kind"] == "conv2d")
+    fn, specs = aot.layer_fn_and_specs(conv)
+    entry = aot.lower_one(conv["name"], fn, specs, str(tmp_path))
+    assert entry["inputs"][0]["dims"] == conv["in_shapes"][0]["dims"]
+    assert entry["output"]["dims"] == conv["out_shape"]["dims"]
+
+
+def test_manifest_covers_all_requests():
+    manifest_path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("manifest not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    built = {e["name"] for e in manifest["executables"]}
+    reqs = _requests()
+    wanted = {r["name"] for r in reqs["layers"]} | {r["name"] for r in reqs["stacks"]}
+    assert wanted <= built
+    # Every artifact file exists.
+    for e in manifest["executables"]:
+        assert os.path.exists(os.path.join(ARTIFACTS, e["path"])), e["name"]
+
+
+def test_oracle_files_exist_and_sized():
+    manifest_path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("manifest not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["oracles"], "no oracles recorded"
+    for o in manifest["oracles"]:
+        import numpy as np
+
+        for key, path_key in (("input", "input_path"), ("output", "output_path")):
+            path = os.path.join(ARTIFACTS, o[path_key])
+            n = int(np.prod(o[key]["dims"]))
+            assert os.path.getsize(path) == 4 * n, o["tag"]

@@ -1,0 +1,242 @@
+"""CORE correctness signal: the fused depth-first Pallas kernel vs the
+pure-jnp oracle, across hand-written stack structures and a hypothesis
+sweep over shapes/tiles/op-chains."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import fused_stack, ref
+
+
+def shape_dict(dims):
+    return {"dims": list(dims), "dtype": "f32"}
+
+
+def mk_request(in_dims, sequences):
+    """Build a stack request; recomputes each sequence's in_shape."""
+    dims = list(in_dims)
+    out = {"in_shape": shape_dict(in_dims), "sequences": []}
+    for tile, steps in sequences:
+        out["sequences"].append(
+            {"tile_rows": tile, "in_shape": shape_dict(dims), "steps": steps}
+        )
+        for step in steps:
+            for op in step:
+                if op["op"] == "pool":
+                    f = (
+                        layers.ceil_out_dim
+                        if op.get("ceil_mode", False)
+                        else layers.conv_out_dim
+                    )
+                    dims = [
+                        dims[0],
+                        dims[1],
+                        f(dims[2], op["kernel"][0], op["stride"][0], op["pad"][0]),
+                        f(dims[3], op["kernel"][1], op["stride"][1], op["pad"][1]),
+                    ]
+    return out
+
+
+def pool(kind="max", k=3, s=1, p=1, ceil=False, cip=True):
+    return {
+        "op": "pool",
+        "pool": kind,
+        "kernel": [k, k],
+        "stride": [s, s],
+        "pad": [p, p],
+        "ceil_mode": ceil,
+        "count_include_pad": cip,
+    }
+
+
+BN = {"op": "bn", "eps": 1e-5}
+RELU = {"op": "relu"}
+ID = {"op": "id"}
+
+
+def check(request, seed=0, atol=1e-5):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(*request["in_shape"]["dims"]).astype(np.float32))
+    c = request["in_shape"]["dims"][1] if len(request["in_shape"]["dims"]) == 4 else 0
+    n_bn = ref.num_bn_ops(request)
+    bn = [jnp.asarray(rng.randn(c).astype(np.float32)) for _ in range(2 * n_bn)]
+    want = ref.run_stack_ref(request, x, bn)
+    got = fused_stack.run_stack_fused(request, x, bn)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol, rtol=1e-5)
+
+
+# ---- hand-written structures -------------------------------------------------
+
+
+def test_fig10_block():
+    # <MaxPool 3x3/1/1, BN, ReLU> — the Figure 10 block.
+    req = mk_request((2, 4, 16, 16), [(4, [[pool(), BN, RELU]])])
+    check(req)
+
+
+def test_multi_block_single_sequence():
+    steps = [[pool(), BN, RELU] for _ in range(4)]
+    req = mk_request((1, 3, 20, 20), [(5, steps)])
+    check(req)
+
+
+def test_multi_sequence_spill():
+    req = mk_request(
+        (2, 3, 16, 16),
+        [
+            (3, [[pool(), BN, RELU], [pool("avg", k=2, s=2, p=0), BN]]),
+            (2, [[RELU, pool(k=3, s=2, p=0, ceil=True)]]),
+        ],
+    )
+    check(req)
+
+
+def test_strided_max_pool_vgg():
+    req = mk_request((2, 4, 16, 16), [(4, [[BN, RELU, pool(k=2, s=2, p=0)]])])
+    check(req)
+
+
+def test_avg_pool_densenet_transition():
+    req = mk_request((1, 6, 12, 12), [(3, [[BN, RELU], [pool("avg", k=2, s=2, p=0)]])])
+    check(req)
+
+
+def test_avg_pool_inception_branch():
+    req = mk_request((1, 4, 9, 9), [(3, [[pool("avg", k=3, s=1, p=1)]])])
+    check(req)
+
+
+def test_avg_pool_no_count_include_pad():
+    req = mk_request((1, 2, 8, 8), [(2, [[pool("avg", k=3, s=1, p=1, cip=False)]])])
+    check(req)
+
+
+def test_ceil_mode_squeezenet_pool():
+    req = mk_request((1, 3, 13, 13), [(2, [[pool(k=3, s=2, p=0, ceil=True)]])])
+    check(req)
+
+
+def test_elementwise_only_rank4():
+    req = mk_request((2, 3, 8, 8), [(4, [[BN, RELU, ID, RELU]])])
+    check(req)
+
+
+def test_rank2_elementwise():
+    req = {
+        "in_shape": shape_dict((6, 32)),
+        "sequences": [
+            {"tile_rows": 4, "in_shape": shape_dict((6, 32)), "steps": [[RELU, ID]]}
+        ],
+    }
+    check(req)
+
+
+def test_tile_rows_one():
+    req = mk_request((1, 2, 9, 9), [(1, [[pool(), BN, RELU]])])
+    check(req)
+
+
+def test_tile_not_dividing_height():
+    # H_out = 7, tile 3: last band recomputes overlap rows.
+    req = mk_request((1, 2, 7, 7), [(3, [[pool(), RELU]])])
+    check(req)
+
+
+def test_negative_values_through_max_padding():
+    # All-negative input exercises -inf padding correctness at borders.
+    req = mk_request((1, 1, 5, 5), [(2, [[pool()]])])
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(-np.abs(rng.randn(1, 1, 5, 5)).astype(np.float32) - 1.0)
+    want = ref.run_stack_ref(req, x, [])
+    got = fused_stack.run_stack_fused(req, x, [])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_bn_after_pool_no_inf_leak():
+    # BN with negative scale after a max pool: if the kernel leaked -inf
+    # padding rows between steps, they would flip to +inf and corrupt the
+    # next pool. Construct exactly that chain.
+    req = mk_request((1, 2, 10, 10), [(2, [[pool(), BN], [pool(), BN]])])
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(1, 2, 10, 10).astype(np.float32))
+    bn = [
+        jnp.asarray(np.array([-1.0, -0.5], np.float32)),  # negative scales
+        jnp.asarray(np.array([0.1, -0.1], np.float32)),
+        jnp.asarray(np.array([-2.0, -1.5], np.float32)),
+        jnp.asarray(np.array([0.0, 0.2], np.float32)),
+    ]
+    want = ref.run_stack_ref(req, x, bn)
+    got = fused_stack.run_stack_fused(req, x, bn)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_vmem_estimate_positive_and_monotone():
+    shallow = mk_request((1, 4, 32, 32), [(4, [[pool(), BN, RELU]])])
+    deep = mk_request(
+        (1, 4, 32, 32), [(4, [[pool(), BN, RELU] for _ in range(5)])]
+    )
+    a = fused_stack.vmem_estimate_bytes(shallow)
+    b = fused_stack.vmem_estimate_bytes(deep)
+    assert 0 < a <= b
+
+
+# ---- hypothesis sweep --------------------------------------------------------
+
+op_st = st.sampled_from(
+    [
+        BN,
+        RELU,
+        ID,
+        pool(),  # max 3x3/1/1
+        pool(k=2, s=2, p=0),  # max 2x2/2
+        pool("avg", k=2, s=2, p=0),  # avg 2x2/2
+        pool("avg", k=3, s=1, p=1),  # avg 3x3/1/1
+        pool(k=3, s=2, p=1),  # max 3x3/2/1
+    ]
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 4),
+    h=st.integers(8, 24),
+    tile=st.integers(1, 6),
+    ops=st.lists(op_st, min_size=1, max_size=6),
+    data=st.data(),
+)
+def test_hypothesis_stacks(n, c, h, tile, ops, data):
+    # Group ops into steps (<=1 pool per step), mirroring the collapser.
+    steps, step = [], []
+    for op in ops:
+        if op["op"] == "pool" and any(o["op"] == "pool" for o in step):
+            steps.append(step)
+            step = []
+        step.append(op)
+    if step:
+        steps.append(step)
+    # Drop structures that shrink below 1 pixel.
+    dims = [n, c, h, h]
+    for s_ in steps:
+        for op in s_:
+            if op["op"] == "pool":
+                hh = dims[2] + 2 * op["pad"][0]
+                if hh < op["kernel"][0]:
+                    return  # invalid structure, skip
+                dims[2] = layers.conv_out_dim(
+                    dims[2], op["kernel"][0], op["stride"][0], op["pad"][0]
+                )
+                dims[3] = dims[2]
+    # Optionally split into two sequences at a random step boundary.
+    if len(steps) > 1 and data.draw(st.booleans()):
+        cut = data.draw(st.integers(1, len(steps) - 1))
+        seqs = [(tile, steps[:cut]), (tile, steps[cut:])]
+    else:
+        seqs = [(tile, steps)]
+    req = mk_request((n, c, h, h), seqs)
+    check(req, seed=h * 31 + c)

@@ -1,0 +1,105 @@
+"""Layer-library semantics tests: PyTorch-equivalent window arithmetic,
+padding values, count_include_pad, ceil_mode — checked against
+hand-computed cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+
+
+def test_conv_out_dims():
+    assert layers.conv_out_dim(32, 3, 1, 1) == 32
+    assert layers.conv_out_dim(224, 11, 4, 2) == 55
+    assert layers.ceil_out_dim(14, 3, 2, 0) == 7
+    # ceil correction: last window must start inside input+pad.
+    assert layers.ceil_out_dim(3, 2, 2, 1) == 2
+    assert layers.ceil_out_dim(4, 2, 2, 1) == 3
+
+
+def test_max_pool_padding_is_neg_inf():
+    # 2x2 input, 3x3 pool stride 1 pad 1: every output = max of the
+    # in-range cells only (padding must never win).
+    x = jnp.asarray(np.array([[[[-5.0, -6.0], [-7.0, -8.0]]]], dtype=np.float32))
+    out = layers.max_pool2d(x, (3, 3), (1, 1), (1, 1))
+    assert out.shape == (1, 1, 2, 2)
+    np.testing.assert_array_equal(np.asarray(out)[0, 0], [[-5, -5], [-5, -5]])
+
+
+def test_max_pool_ceil_mode_shape():
+    # 3x3/2 pool on 112: floor -> 55, ceil -> 56.
+    x = jnp.zeros((1, 2, 112, 112), dtype=jnp.float32)
+    assert layers.max_pool2d(x, (3, 3), (2, 2), (0, 0), ceil_mode=False).shape[2] == 55
+    assert layers.max_pool2d(x, (3, 3), (2, 2), (0, 0), ceil_mode=True).shape[2] == 56
+
+
+def test_avg_pool_count_include_pad():
+    x = jnp.ones((1, 1, 2, 2), dtype=jnp.float32)
+    # 3x3 pool pad 1: window at corner sees 4 ones + 5 pad zeros.
+    cip = layers.avg_pool2d(x, (3, 3), (1, 1), (1, 1), count_include_pad=True)
+    np.testing.assert_allclose(np.asarray(cip)[0, 0, 0, 0], 4.0 / 9.0, rtol=1e-6)
+    nip = layers.avg_pool2d(x, (3, 3), (1, 1), (1, 1), count_include_pad=False)
+    np.testing.assert_allclose(np.asarray(nip)[0, 0, 0, 0], 1.0, rtol=1e-6)
+
+
+def test_avg_pool_basic():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 1, 4, 4))
+    out = layers.avg_pool2d(x, (2, 2), (2, 2))
+    np.testing.assert_allclose(
+        np.asarray(out)[0, 0], [[2.5, 4.5], [10.5, 12.5]], rtol=1e-6
+    )
+
+
+def test_adaptive_avg_pool():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 1, 4, 4))
+    gap = layers.adaptive_avg_pool2d(x, (1, 1))
+    np.testing.assert_allclose(np.asarray(gap)[0, 0, 0, 0], 7.5, rtol=1e-6)
+    two = layers.adaptive_avg_pool2d(x, (2, 2))
+    np.testing.assert_allclose(np.asarray(two)[0, 0], [[2.5, 4.5], [10.5, 12.5]])
+    with pytest.raises(AssertionError):
+        layers.adaptive_avg_pool2d(x, (3, 3))
+
+
+def test_conv2d_identity_kernel():
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 3, 8, 8).astype(np.float32))
+    # 1x1 identity conv: w[o,i] = delta(o,i).
+    w = jnp.asarray(np.eye(3, dtype=np.float32).reshape(3, 3, 1, 1))
+    out = layers.conv2d(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+
+def test_conv2d_stride_pad_shape():
+    x = jnp.zeros((1, 3, 32, 32), dtype=jnp.float32)
+    w = jnp.zeros((16, 3, 3, 3), dtype=jnp.float32)
+    assert layers.conv2d(x, w, stride=(2, 2), pad=(1, 1)).shape == (1, 16, 16, 16)
+
+
+def test_linear_and_bias():
+    x = jnp.asarray([[1.0, 2.0]], dtype=jnp.float32)
+    w = jnp.asarray([[1.0, 0.0, 1.0], [0.0, 1.0, 1.0]], dtype=jnp.float32)
+    b = jnp.asarray([0.5, -0.5, 0.0], dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(layers.linear(x, w, b)), [[1.5, 1.5, 3.0]], rtol=1e-6
+    )
+
+
+def test_bn_fold_matches_definition():
+    rng = np.random.RandomState(1)
+    gamma = rng.randn(4).astype(np.float32)
+    beta = rng.randn(4).astype(np.float32)
+    mean = rng.randn(4).astype(np.float32)
+    var = np.abs(rng.randn(4)).astype(np.float32) + 0.5
+    eps = 1e-5
+    scale, shift = layers.fold_bn(gamma, beta, mean, var, eps)
+    x = jnp.asarray(rng.randn(2, 4, 3, 3).astype(np.float32))
+    folded = layers.bn_affine(x, jnp.asarray(scale), jnp.asarray(shift))
+    direct = (np.asarray(x) - mean[None, :, None, None]) / np.sqrt(
+        var[None, :, None, None] + eps
+    ) * gamma[None, :, None, None] + beta[None, :, None, None]
+    np.testing.assert_allclose(np.asarray(folded), direct, rtol=1e-4, atol=1e-5)
+
+
+def test_relu():
+    x = jnp.asarray([-1.0, 0.0, 2.0], dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(layers.relu(x)), [0.0, 0.0, 2.0])

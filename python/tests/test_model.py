@@ -1,0 +1,82 @@
+"""Graph-JSON interpreter tests: shape agreement with the rust exporter
+(via the checked-in requests.json oracles) and basic semantics."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import detrng, model
+
+REQUESTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "requests.json")
+
+
+def _oracle_graphs():
+    if not os.path.exists(REQUESTS):
+        pytest.skip("artifacts/requests.json not built (run `make artifacts`)")
+    with open(REQUESTS) as f:
+        return json.load(f)["oracles"]
+
+
+def test_oracle_graphs_run_and_match_exported_shapes():
+    for entry in _oracle_graphs():
+        graph = entry["graph"]
+        params = model.make_params(graph, entry["seed"])
+        x = model.synthetic_input(graph, entry["seed"])
+        out = model.run_graph(graph, jnp.asarray(x), params)
+        want = tuple(graph["nodes"][graph["output"]]["shape"]["dims"])
+        assert out.shape == want, entry["tag"]
+
+
+def test_params_deterministic_across_calls():
+    graphs = _oracle_graphs()
+    g = graphs[0]["graph"]
+    p1 = model.make_params(g, 7)
+    p2 = model.make_params(g, 7)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_param_tags_follow_rust_convention():
+    node = {"kind": "conv2d", "name": "features.0.conv", "bias": True}
+    tags = [t for t, _, _ in model.param_tags(node)]
+    assert tags == ["features.0.conv:weight", "features.0.conv:bias"]
+    bn = {"kind": "batchnorm", "name": "bn1"}
+    kinds = [k for _, k, _ in model.param_tags(bn)]
+    assert kinds == ["bn_gamma", "bn_beta", "bn_mean", "bn_var"]
+
+
+def test_tiny_handwritten_graph():
+    graph = {
+        "name": "tiny",
+        "output": 3,
+        "nodes": [
+            {"id": 0, "name": "input", "kind": "input", "inputs": [],
+             "shape": {"dims": [1, 2, 4, 4], "dtype": "f32"}},
+            {"id": 1, "name": "relu", "kind": "relu", "inputs": [0],
+             "shape": {"dims": [1, 2, 4, 4], "dtype": "f32"}},
+            {"id": 2, "name": "flat", "kind": "flatten", "inputs": [1],
+             "shape": {"dims": [1, 32], "dtype": "f32"}},
+            {"id": 3, "name": "fc", "kind": "linear", "inputs": [2], "bias": False,
+             "out_features": 3, "shape": {"dims": [1, 3], "dtype": "f32"}},
+        ],
+    }
+    params = model.make_params(graph, 1)
+    assert set(params) == {"fc:weight"}
+    assert params["fc:weight"].shape == (32, 3)
+    x = jnp.asarray(np.full((1, 2, 4, 4), -1.0, np.float32))
+    out = model.run_graph(graph, x, params)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((1, 3), np.float32))
+
+
+def test_synthetic_input_matches_rust_seed_path():
+    graphs = _oracle_graphs()
+    g = graphs[0]["graph"]
+    seed = graphs[0]["seed"]
+    x = model.synthetic_input(g, seed)
+    # Same derivation as rust Executor::synthetic_input.
+    s = detrng.tensor_seed(seed, "input")
+    want = detrng.fill_param(s, x.size, "activation").reshape(x.shape)
+    np.testing.assert_array_equal(x, want)

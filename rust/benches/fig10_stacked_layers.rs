@@ -1,0 +1,91 @@
+//! Figure 10: stacked-layer acceleration on synthetic
+//! <MaxPool 3×3/1/1, BN, ReLU> block networks, 1..40 blocks, under the
+//! three collapse strategies (1 step/seq, 5 steps/seq, unrestricted).
+//!
+//! Paper-scale sweep runs on the memsim time model for both paper
+//! devices (the paper's absolute hardware is unavailable; the *shape* —
+//! BrainSlug ≫ baseline, 5-step > 1-step, unrestricted degrading past
+//! the cache limit with spill artifacts — is the reproduction target).
+//! A measured wall-clock section runs the same structures end-to-end on
+//! the PJRT runtime when artifacts are present.
+
+use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::optimize;
+use brainslug::runtime::Runtime;
+use brainslug::scheduler::Executor;
+
+fn simulated(device: &DeviceSpec) {
+    println!("\n## Figure 10 (simulated) — device={}, batch=32, 32ch 112x112", device.name);
+    let mut table = Table::new(&[
+        "blocks", "baseline", "1step", "5step", "unrestr", "seqs-unr", "speedup-5step",
+    ]);
+    let mut prev_seqs = 0usize;
+    for blocks in [1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 36, 40] {
+        let g = bench::block_net(blocks, 32, 32, 112);
+        let base = simulate_baseline(&g, device);
+        let mut cells = vec![blocks.to_string(), fmt_time(base.total_s)];
+        let mut t5 = f64::NAN;
+        let mut seqs_unr = 0;
+        for (name, opts) in bench::fig10_strategies() {
+            let plan = optimize(&g, device, &opts);
+            let sim = simulate_plan(&g, &plan, device);
+            cells.push(fmt_time(sim.total_s));
+            if name == "5step" {
+                t5 = sim.total_s;
+            }
+            if name == "unrestricted" {
+                seqs_unr = sim.num_sequences;
+            }
+        }
+        let artifact = if seqs_unr > prev_seqs && prev_seqs > 0 {
+            format!("{seqs_unr} (spill!)")
+        } else {
+            seqs_unr.to_string()
+        };
+        prev_seqs = seqs_unr;
+        cells.push(artifact);
+        cells.push(fmt_pct(speedup_pct(base.total_s, t5)));
+        table.row(cells);
+    }
+    table.print();
+}
+
+fn measured() {
+    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+        println!("\n(measured section skipped: run `make artifacts`)");
+        return;
+    };
+    println!("\n## Figure 10 (measured wall-clock, XLA-CPU, batch=4, 8ch 32x32)");
+    let device = bench::measured_device();
+    let mut table = Table::new(&["blocks", "baseline", "1step", "5step", "unrestr", "best-speedup"]);
+    for &blocks in bench::fig10_measured_blocks() {
+        let g = bench::block_net(blocks, 4, 8, 32);
+        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
+        let input = exec.synthetic_input();
+        let t_base = bench::measure(2, 5, || {
+            exec.run_baseline(input.clone()).unwrap();
+        });
+        let mut cells = vec![blocks.to_string(), fmt_time(t_base)];
+        let mut best = f64::INFINITY;
+        for (_, opts) in bench::fig10_strategies() {
+            let plan = optimize(&g, &device, &opts);
+            let t = bench::measure(2, 5, || {
+                exec.run_plan(&plan, input.clone()).unwrap();
+            });
+            best = best.min(t);
+            cells.push(fmt_time(t));
+        }
+        cells.push(fmt_pct(speedup_pct(t_base, best)));
+        table.row(cells);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("# Figure 10 — Stacked Layers Acceleration");
+    simulated(&DeviceSpec::paper_gpu());
+    simulated(&DeviceSpec::paper_cpu());
+    measured();
+}

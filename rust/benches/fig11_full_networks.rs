@@ -1,0 +1,74 @@
+//! Figures 11–14: full-network execution time (11: CPU, 12: GPU) and
+//! relative speed-up over the baseline (13: CPU, 14: GPU) for all 21
+//! TorchVision networks at batch 128.
+//!
+//! Paper scale via the memsim time model; a measured wall-clock section
+//! covers the reduced-scale subset on the PJRT runtime.
+
+use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::runtime::Runtime;
+use brainslug::scheduler::Executor;
+use brainslug::zoo;
+
+fn simulated(device: &DeviceSpec) {
+    println!(
+        "\n## Fig {} (times) + Fig {} (speedups) — device={}, batch=128 (simulated)",
+        if device.name.contains("xeon") { 11 } else { 12 },
+        if device.name.contains("xeon") { 13 } else { 14 },
+        device.name
+    );
+    let mut table = Table::new(&["network", "baseline", "brainslug", "speedup"]);
+    for name in zoo::ALL_NETWORKS {
+        let g = zoo::build(name, zoo::paper_config(name, 128));
+        let plan = optimize(&g, device, &CollapseOptions::default());
+        let base = simulate_baseline(&g, device);
+        let bs = simulate_plan(&g, &plan, device);
+        table.row(vec![
+            name.to_string(),
+            fmt_time(base.total_s),
+            fmt_time(bs.total_s),
+            fmt_pct(speedup_pct(base.total_s, bs.total_s)),
+        ]);
+    }
+    table.print();
+}
+
+fn measured() {
+    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+        println!("\n(measured section skipped: run `make artifacts`)");
+        return;
+    };
+    let batch = *bench::measured_batches().last().unwrap();
+    println!("\n## Measured wall-clock (XLA-CPU, reduced scale, batch={batch})");
+    let device = bench::measured_device();
+    let mut table = Table::new(&["network", "baseline", "brainslug", "speedup"]);
+    for &name in bench::measured_networks() {
+        let g = zoo::build(name, zoo::small_config(name, batch));
+        let plan = optimize(&g, &device, &bench::measured_opts());
+        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
+        let input = exec.synthetic_input();
+        let t_base = bench::measure(2, 9, || {
+            exec.run_baseline(input.clone()).unwrap();
+        });
+        let t_bs = bench::measure(2, 9, || {
+            exec.run_plan(&plan, input.clone()).unwrap();
+        });
+        table.row(vec![
+            name.to_string(),
+            fmt_time(t_base),
+            fmt_time(t_bs),
+            fmt_pct(speedup_pct(t_base, t_bs)),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("# Figures 11-14 — Full Network Acceleration");
+    simulated(&DeviceSpec::paper_cpu());
+    simulated(&DeviceSpec::paper_gpu());
+    measured();
+}

@@ -1,0 +1,44 @@
+//! L3 hot-path microbenchmarks (§Perf): the optimizer itself (graph walk
+//! + collapse) on the largest networks, graph construction, and the
+//! scheduler's non-execute bookkeeping. The paper's compile phase runs
+//! once per network, but a dynamic-graph front-end (PyTorch, §4.3)
+//! re-optimizes on graph changes, so `optimize` latency matters.
+
+use brainslug::bench::{self, fmt_time, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::zoo;
+
+fn main() {
+    println!("# Optimizer hot path");
+    let device = DeviceSpec::paper_gpu();
+    let mut table = Table::new(&["network", "build-graph", "optimize", "stacks"]);
+    for name in ["alexnet", "resnet152", "densenet201", "inception_v3"] {
+        let cfg = zoo::paper_config(name, 128);
+        let t_build = bench::measure(3, 10, || {
+            let g = zoo::build(name, cfg);
+            std::hint::black_box(&g);
+        });
+        let g = zoo::build(name, cfg);
+        let t_opt = bench::measure(3, 10, || {
+            let plan = optimize(&g, &device, &CollapseOptions::default());
+            std::hint::black_box(&plan);
+        });
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        table.row(vec![
+            name.to_string(),
+            fmt_time(t_build),
+            fmt_time(t_opt),
+            plan.num_stacks().to_string(),
+        ]);
+    }
+    table.print();
+
+    // Collapse-only microbench on a deep synthetic chain.
+    let g = bench::block_net(40, 128, 32, 112);
+    let t = bench::measure(3, 20, || {
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        std::hint::black_box(&plan);
+    });
+    println!("\nblock_net(40) optimize: {}", fmt_time(t));
+}

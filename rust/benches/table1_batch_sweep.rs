@@ -1,0 +1,41 @@
+//! Table 1: BrainSlug total speed-up vs the baseline for all 21 networks
+//! across batch sizes 1..256, GPU (left half) and CPU (right half).
+//!
+//! Reproduction targets (shape, not absolute values): GPU negative at
+//! batch 1-4 for several networks, positive from batch >= 8 except
+//! ResNet-101/152; CPU positive everywhere with the largest values for
+//! SqueezeNets at small batch (the Listing-4 pooling-parallelism bug).
+
+use brainslug::bench::fmt_pct;
+use brainslug::bench::Table;
+use brainslug::device::DeviceSpec;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::zoo;
+
+const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+fn sweep(device: &DeviceSpec) {
+    println!("\n## Table 1 — device={} (simulated)", device.name);
+    let mut table = Table::new(&[
+        "network", "1", "2", "4", "8", "16", "32", "64", "128", "256",
+    ]);
+    for name in zoo::ALL_NETWORKS {
+        let mut cells = vec![name.to_string()];
+        for &b in &BATCHES {
+            let g = zoo::build(name, zoo::paper_config(name, b));
+            let plan = optimize(&g, device, &CollapseOptions::default());
+            let base = simulate_baseline(&g, device);
+            let bs = simulate_plan(&g, &plan, device);
+            cells.push(fmt_pct(speedup_pct(base.total_s, bs.total_s)));
+        }
+        table.row(cells);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("# Table 1 — Full speed-up grid");
+    sweep(&DeviceSpec::paper_gpu());
+    sweep(&DeviceSpec::paper_cpu());
+}

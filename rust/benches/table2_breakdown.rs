@@ -1,0 +1,88 @@
+//! Table 2: per-network breakdown at batch 128 — layer counts, how many
+//! BrainSlug optimizes, stack counts, optimizable-layer speed-up, the
+//! optimizable fraction of total time, and total speed-up.
+//!
+//! The structural columns (layers/opt/stacks) come straight from the
+//! optimizer; the timing columns from the memsim model on both paper
+//! devices. A measured section reports the same breakdown from actual
+//! per-segment wall-clock on the PJRT runtime.
+
+use brainslug::bench::{self, fmt_pct, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::runtime::Runtime;
+use brainslug::scheduler::Executor;
+use brainslug::zoo;
+
+fn simulated(device: &DeviceSpec) {
+    println!("\n## Table 2 — device={}, batch=128 (simulated)", device.name);
+    let mut table = Table::new(&[
+        "network",
+        "layers",
+        "opt",
+        "stacks",
+        "uniq",
+        "opt-speedup",
+        "%-of-time",
+        "total-speedup",
+    ]);
+    for name in zoo::ALL_NETWORKS {
+        let g = zoo::build(name, zoo::paper_config(name, 128));
+        let plan = optimize(&g, device, &CollapseOptions::default());
+        let base = simulate_baseline(&g, device);
+        let bs = simulate_plan(&g, &plan, device);
+        table.row(vec![
+            name.to_string(),
+            g.num_layers().to_string(),
+            plan.num_optimized_layers().to_string(),
+            plan.num_stacks().to_string(),
+            plan.num_unique_stacks().to_string(),
+            fmt_pct(speedup_pct(base.optimizable_s, bs.stack_s)),
+            format!("{:.1}", base.optimizable_s / base.total_s * 100.0),
+            fmt_pct(speedup_pct(base.total_s, bs.total_s)),
+        ]);
+    }
+    table.print();
+}
+
+fn measured() {
+    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+        println!("\n(measured section skipped: run `make artifacts`)");
+        return;
+    };
+    let batch = *bench::measured_batches().last().unwrap();
+    println!("\n## Table 2 (measured, XLA-CPU, reduced scale, batch={batch})");
+    let device = bench::measured_device();
+    let mut table = Table::new(&[
+        "network", "layers", "opt", "stacks", "opt-speedup", "%-of-time", "total-speedup",
+    ]);
+    for &name in bench::measured_networks() {
+        let g = zoo::build(name, zoo::small_config(name, batch));
+        let plan = optimize(&g, &device, &bench::measured_opts());
+        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
+        let input = exec.synthetic_input();
+        // Warm, then take per-segment stats from the best run.
+        exec.run_baseline(input.clone()).unwrap();
+        exec.run_plan(&plan, input.clone()).unwrap();
+        let (_, base) = exec.run_baseline(input.clone()).unwrap();
+        let (_, bs) = exec.run_plan(&plan, input.clone()).unwrap();
+        table.row(vec![
+            name.to_string(),
+            g.num_layers().to_string(),
+            plan.num_optimized_layers().to_string(),
+            plan.num_stacks().to_string(),
+            fmt_pct(speedup_pct(base.optimizable_s(), bs.optimizable_s())),
+            format!("{:.1}", base.optimizable_s() / base.total_s * 100.0),
+            fmt_pct(speedup_pct(base.total_s, bs.total_s)),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("# Table 2 — Detailed Performance Analysis");
+    simulated(&DeviceSpec::paper_cpu());
+    simulated(&DeviceSpec::paper_gpu());
+    measured();
+}

@@ -1,0 +1,126 @@
+//! Canonical experiment definitions shared by `emit-requests`, the
+//! benches, the examples, and the integration tests.
+//!
+//! Whatever appears here determines which artifacts `make artifacts`
+//! compiles — the request emitter, the scheduler, and the benches all go
+//! through these functions, so names always line up.
+
+use crate::device::DeviceSpec;
+use crate::graph::{Graph, Layer, PoolKind, Shape, Window2d};
+use crate::optimizer::CollapseOptions;
+
+/// Artifact directory (relative to the repo root / cwd).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Seed for all deterministic parameters/inputs in measured experiments.
+pub fn oracle_seed() -> u64 {
+    0x5EED_2026
+}
+
+/// Networks in the *measured* (wall-clock, PJRT CPU) experiment set —
+/// one per family, at reduced scale. The remaining 17 networks are
+/// covered at paper scale by the memsim benches.
+pub fn measured_networks() -> &'static [&'static str] {
+    &["alexnet", "resnet18", "vgg11_bn", "squeezenet1_1"]
+}
+
+/// Batch sizes for measured experiments.
+pub fn measured_batches() -> &'static [usize] {
+    &[1, 8]
+}
+
+/// Device model whose budget drives collapse decisions in measured mode.
+/// The TPU-core profile exercises the Pallas/VMEM tiling path described
+/// in DESIGN.md §Hardware-Adaptation.
+pub fn measured_device() -> DeviceSpec {
+    DeviceSpec::tpu_core()
+}
+
+/// Collapse options for measured experiments.
+pub fn measured_opts() -> CollapseOptions {
+    CollapseOptions::default()
+}
+
+/// The Figure-10 synthetic block network: `blocks` repetitions of
+/// <MaxPool 3×3/1/1, BatchNorm, ReLU> over a `c`-channel `h×h` input.
+pub fn block_net(blocks: usize, batch: usize, c: usize, h: usize) -> Graph {
+    let mut g = Graph::new(
+        format!("blocks{blocks}"),
+        Shape::nchw(batch, c, h, h),
+    );
+    for i in 0..blocks {
+        g.push(
+            format!("b{i}.pool"),
+            Layer::Pool2d {
+                kind: PoolKind::Max,
+                window: Window2d::square(3, 1, 1),
+                ceil_mode: false,
+                count_include_pad: true,
+            },
+        );
+        g.push(format!("b{i}.bn"), Layer::BatchNorm2d { eps: 1e-5 });
+        g.push(format!("b{i}.relu"), Layer::Relu);
+    }
+    g
+}
+
+/// The three collapse strategies evaluated in Figure 10.
+pub fn fig10_strategies() -> Vec<(&'static str, CollapseOptions)> {
+    vec![
+        (
+            "1step",
+            CollapseOptions {
+                max_steps_per_sequence: Some(1),
+                ..Default::default()
+            },
+        ),
+        (
+            "5step",
+            CollapseOptions {
+                max_steps_per_sequence: Some(5),
+                ..Default::default()
+            },
+        ),
+        ("unrestricted", CollapseOptions::default()),
+    ]
+}
+
+/// Measured Figure-10 block counts (paper sweeps 1..40 at full scale; the
+/// memsim bench covers that range, the measured bench a subset).
+pub fn fig10_measured_blocks() -> &'static [usize] {
+    &[1, 2, 4, 8]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::optimize;
+
+    #[test]
+    fn block_net_is_fully_optimizable() {
+        let g = block_net(3, 2, 8, 32);
+        g.validate().unwrap();
+        assert_eq!(g.num_layers(), 9);
+        let plan = optimize(&g, &measured_device(), &measured_opts());
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.num_stacks(), 1); // one maximal chain
+        assert_eq!(plan.num_optimized_layers(), 9);
+    }
+
+    #[test]
+    fn strategies_differ_in_sequence_count() {
+        let g = block_net(6, 1, 8, 32);
+        let dev = measured_device();
+        let counts: Vec<usize> = fig10_strategies()
+            .iter()
+            .map(|(_, opts)| {
+                let plan = optimize(&g, &dev, opts);
+                plan.stacks().map(|s| s.sequences.len()).sum()
+            })
+            .collect();
+        // 1-step: 6 sequences; 5-step: 2; unrestricted: <= 2.
+        assert_eq!(counts[0], 6);
+        assert!(counts[1] <= 2);
+        assert!(counts[2] <= counts[1]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Shared benchmark harness: timing helpers, table rendering, and the
+//! canonical experiment sets used by `emit-requests`, the criterion-style
+//! benches, and the examples.
+//!
+//! The build environment has no criterion crate, so `measure` implements
+//! the paper's own methodology directly: N timed repetitions, report the
+//! *minimum* (§5: "we take the minimum execution time for both PyTorch
+//! and BrainSlug results").
+
+pub mod experiments;
+
+pub use experiments::{
+    block_net, fig10_measured_blocks, fig10_strategies, measured_batches, measured_device,
+    measured_networks, measured_opts, oracle_seed, ARTIFACT_DIR,
+};
+
+use std::time::Instant;
+
+/// Run `f` `warmup + iters` times; return the minimum of the timed iters
+/// in seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Simple fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                // Right-align numeric-looking cells, left-align text.
+                let numeric = cell
+                    .chars()
+                    .all(|ch| ch.is_ascii_digit() || "+-.%x".contains(ch));
+                if numeric && !cell.is_empty() {
+                    line.push_str(&format!("{:>w$}", cell, w = widths[c]));
+                } else {
+                    line.push_str(&format!("{:<w$}", cell, w = widths[c]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds adaptively (µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Format a speed-up percentage in the paper's convention.
+pub fn fmt_pct(p: f64) -> String {
+    format!("{p:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_min() {
+        let mut calls = 0;
+        let t = measure(1, 3, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 4);
+        assert!(t >= 0.0 && t < 1.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["net", "speedup"]);
+        t.row(vec!["alexnet".into(), "+5.3%".into()]);
+        t.row(vec!["densenet121".into(), "+15.2%".into()]);
+        let r = t.render();
+        assert!(r.contains("alexnet"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(5e-6), "5.0us");
+        assert_eq!(fmt_time(2.5e-3), "2.50ms");
+        assert_eq!(fmt_time(1.5), "1.500s");
+        assert_eq!(fmt_pct(5.25), "+5.2%");
+        assert_eq!(fmt_pct(-3.0), "-3.0%");
+    }
+}

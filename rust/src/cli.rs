@@ -1,0 +1,137 @@
+//! Minimal CLI argument parser (offline environment has no clap).
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with typed
+//! accessors and an error on unknown flags, which is all the `brainslug`
+//! binary needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one subcommand, flags, key-values, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// Flags consumed via accessors (for unknown-flag detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or boolean `--key`.
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            positional,
+            known: Default::default(),
+        })
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.known.borrow_mut().push(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}: bad number '{v}': {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any flag was provided that no accessor asked about.
+    /// Call after all `get*` calls.
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let known = self.known.borrow();
+        for k in self.flags.keys() {
+            if !known.iter().any(|x| x == k) {
+                anyhow::bail!("unknown flag --{k} for command '{}'", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_forms() {
+        // NB: a bare boolean flag greedily consumes a following
+        // non-flag token, so positionals go before boolean flags (or use
+        // `--flag=true`). None of the binary's commands mix them.
+        let a = parse(&["run", "pos1", "--net", "resnet18", "--batch=8", "--verbose"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("net"), Some("resnet18"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["x", "--oops", "1"]);
+        let _ = a.get("fine");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--flag", "--other", "v"]);
+        assert!(a.get_bool("flag"));
+        assert_eq!(a.get("other"), Some("v"));
+    }
+}

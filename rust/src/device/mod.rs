@@ -1,0 +1,172 @@
+//! Device models: the hardware parameters the collapser packs sequences
+//! against (§4.1 step 3 — "the Collapser retrieves device specs from the
+//! back-end(s), e.g. cache sizes") and the cost parameters the
+//! memory-traffic simulator uses.
+//!
+//! Three presets mirror the paper's testbed plus the TPU adaptation:
+//! * [`DeviceSpec::paper_cpu`] — Intel Xeon E5-2690v4 (Broadwell, 14C,
+//!   AVX2, 32 KiB L1d per core).
+//! * [`DeviceSpec::paper_gpu`] — NVIDIA GTX 1080 Ti (28 SMs; the paper
+//!   deliberately budgets only 16 KiB of the 96 KiB shared memory and 128
+//!   threads per block, §4.4).
+//! * [`DeviceSpec::tpu_core`] — a TPU-v4-like core for the Pallas/VMEM
+//!   sizing (§Hardware-Adaptation in DESIGN.md).
+
+/// Kind of device, selecting cost-model behaviours in `memsim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Tpu,
+}
+
+/// Hardware description consumed by the collapser and the cost models.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Fast-memory budget *per concurrent work unit* in bytes: usable L1d
+    /// on CPU, the shared-memory budget per thread block on GPU, the VMEM
+    /// tile budget on TPU. This is the paper's `device.resourceLimit()`.
+    pub fast_mem_bytes: usize,
+    /// SIMD lanes that share one fast memory (8 for AVX2 f32, 128 CUDA
+    /// threads per block, 8×128 VPU sublanes×lanes on TPU).
+    pub simd_lanes: usize,
+    /// Independent work units (cores / resident blocks / cores).
+    pub parallel_units: usize,
+    /// Peak main-memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Fast-tier (cache/smem/VMEM) bandwidth, bytes/s (aggregate).
+    pub cache_bw: f64,
+    /// Peak f32 FLOP/s.
+    pub peak_flops: f64,
+    /// Fixed overhead per kernel/executable launch, seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's CPU testbed: Xeon E5-2690v4 — 14 cores @ 2.6 GHz,
+    /// AVX2 (8-wide f32 FMA), 32 KiB L1d, ~76 GB/s DDR4-2400.
+    pub fn paper_cpu() -> Self {
+        DeviceSpec {
+            name: "xeon-e5-2690v4".into(),
+            kind: DeviceKind::Cpu,
+            // Half of L1d usable for the working set (rest: code, stack,
+            // streaming buffers) — the collapser's budget.
+            fast_mem_bytes: 16 * 1024,
+            simd_lanes: 8,
+            parallel_units: 14,
+            mem_bw: 76.8e9,
+            cache_bw: 14.0 * 100.0e9, // ~100 GB/s L1 per core
+            peak_flops: 14.0 * 2.6e9 * 8.0 * 2.0, // FMA
+            launch_overhead_s: 2.0e-6,
+        }
+    }
+
+    /// The paper's GPU testbed: GTX 1080 Ti — 28 SMs, 484 GB/s GDDR5X,
+    /// ~11.3 TFLOP/s f32. The paper limits each block to 16 KiB shared
+    /// memory and 128 threads (§4.4).
+    pub fn paper_gpu() -> Self {
+        DeviceSpec {
+            name: "gtx-1080ti".into(),
+            kind: DeviceKind::Gpu,
+            fast_mem_bytes: 16 * 1024,
+            simd_lanes: 128,
+            parallel_units: 28 * 4, // resident blocks for latency hiding
+            mem_bw: 484.0e9,
+            cache_bw: 28.0 * 128.0e9, // aggregate smem bandwidth
+            peak_flops: 11.3e12,
+            launch_overhead_s: 5.0e-6,
+        }
+    }
+
+    /// TPU-like core used for the Pallas/VMEM adaptation: ~16 MiB VMEM,
+    /// 8×128 VPU lanes; budget a 128 KiB working tile so many tiles are
+    /// in flight (double-buffering + pipelining).
+    pub fn tpu_core() -> Self {
+        DeviceSpec {
+            name: "tpu-core".into(),
+            kind: DeviceKind::Tpu,
+            fast_mem_bytes: 128 * 1024,
+            simd_lanes: 8 * 128,
+            parallel_units: 2,
+            mem_bw: 1.2e12,
+            cache_bw: 8.0e12,
+            peak_flops: 275.0e12 / 2.0, // MXU bf16; VPU f32 far lower
+            launch_overhead_s: 1.0e-6,
+        }
+    }
+
+    /// The host this repo actually measures on (container CPU, XLA:CPU
+    /// backend). Used by the measured-mode harness for tile sizing.
+    pub fn host_cpu() -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        DeviceSpec {
+            name: "host-cpu".into(),
+            kind: DeviceKind::Cpu,
+            fast_mem_bytes: 16 * 1024,
+            simd_lanes: 8,
+            parallel_units: cores,
+            mem_bw: 20.0e9,
+            cache_bw: cores as f64 * 80.0e9,
+            peak_flops: cores as f64 * 3.0e9 * 8.0 * 2.0,
+            launch_overhead_s: 10.0e-6,
+        }
+    }
+
+    /// Look up a preset by name (CLI `--device`).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "paper-cpu" | "cpu" => Some(Self::paper_cpu()),
+            "paper-gpu" | "gpu" => Some(Self::paper_gpu()),
+            "tpu" => Some(Self::tpu_core()),
+            "host" => Some(Self::host_cpu()),
+            _ => None,
+        }
+    }
+
+    /// `resourceLimit()` of Listing 1: bytes one work unit may keep
+    /// resident in the fast tier.
+    pub fn resource_limit(&self) -> usize {
+        self.fast_mem_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for n in ["paper-cpu", "paper-gpu", "tpu", "host", "cpu", "gpu"] {
+            assert!(DeviceSpec::preset(n).is_some(), "{n}");
+        }
+        assert!(DeviceSpec::preset("fpga").is_none());
+    }
+
+    #[test]
+    fn paper_budgets_match_section_4_4() {
+        let gpu = DeviceSpec::paper_gpu();
+        assert_eq!(gpu.fast_mem_bytes, 16 * 1024);
+        assert_eq!(gpu.simd_lanes, 128);
+        let cpu = DeviceSpec::paper_cpu();
+        assert_eq!(cpu.simd_lanes, 8); // AVX2 f32
+    }
+
+    #[test]
+    fn sane_magnitudes() {
+        for d in [
+            DeviceSpec::paper_cpu(),
+            DeviceSpec::paper_gpu(),
+            DeviceSpec::tpu_core(),
+            DeviceSpec::host_cpu(),
+        ] {
+            assert!(d.mem_bw > 1e9 && d.mem_bw < 1e13, "{}", d.name);
+            assert!(d.cache_bw > d.mem_bw, "{}", d.name);
+            assert!(d.peak_flops > 1e10, "{}", d.name);
+            assert!(d.fast_mem_bytes >= 4096, "{}", d.name);
+        }
+    }
+}

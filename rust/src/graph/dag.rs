@@ -1,0 +1,336 @@
+//! The network DAG: nodes in topological order with shape inference.
+//!
+//! Graphs are built append-only (every node's inputs must already exist),
+//! so the node vector *is* a topological order — the same invariant the
+//! paper's Network Analyzer relies on when walking the network layer by
+//! layer (§4.1 step 2).
+
+use std::collections::HashMap;
+
+use super::layer::Layer;
+use super::shape::Shape;
+
+/// Node identifier: index into `Graph::nodes`.
+pub type NodeId = usize;
+
+/// One node of the network DAG.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Human-readable name, e.g. `features.3.conv`.
+    pub name: String,
+    pub layer: Layer,
+    /// Producer nodes, in argument order.
+    pub inputs: Vec<NodeId>,
+    /// Inferred output shape.
+    pub shape: Shape,
+}
+
+/// A neural network as a DAG of layers.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Network name, e.g. `resnet18`.
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// The single output node (all evaluated networks have one output).
+    pub output: NodeId,
+}
+
+impl Graph {
+    /// Start a new graph with an input placeholder node.
+    pub fn new(name: impl Into<String>, input_shape: Shape) -> Self {
+        let input = Node {
+            id: 0,
+            name: "input".into(),
+            layer: Layer::Input {
+                shape: input_shape.clone(),
+            },
+            inputs: vec![],
+            shape: input_shape,
+        };
+        Graph {
+            name: name.into(),
+            nodes: vec![input],
+            output: 0,
+        }
+    }
+
+    /// Append a layer consuming `inputs`; returns the new node id and
+    /// updates the graph output to it.
+    pub fn add(&mut self, name: impl Into<String>, layer: Layer, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "input {i} does not exist yet (node {id})");
+        }
+        let in_shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+        let shape = layer
+            .infer_shape(&in_shapes)
+            .unwrap_or_else(|e| panic!("shape inference failed at node {id} ({}): {e}", self.name));
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            layer,
+            inputs: inputs.to_vec(),
+            shape,
+        });
+        self.output = id;
+        id
+    }
+
+    /// Convenience: append a unary layer consuming the current output.
+    pub fn push(&mut self, name: impl Into<String>, layer: Layer) -> NodeId {
+        let prev = self.output;
+        self.add(name, layer, &[prev])
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn input_shape(&self) -> &Shape {
+        &self.nodes[0].shape
+    }
+
+    pub fn output_shape(&self) -> &Shape {
+        &self.nodes[self.output].shape
+    }
+
+    /// Number of layers excluding the input placeholder (the paper's
+    /// "Layers" column counts operations, not the input).
+    pub fn num_layers(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Consumers of each node (computed on demand).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                cons[i].push(n.id);
+            }
+        }
+        cons
+    }
+
+    /// Nodes with exactly one consumer (eligible to sit inside a stack:
+    /// a fan-out edge forces the intermediate into main memory).
+    pub fn single_consumer(&self) -> Vec<bool> {
+        self.consumers().iter().map(|c| c.len() == 1).collect()
+    }
+
+    /// Validate structural invariants; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".into());
+        }
+        if !matches!(self.nodes[0].layer, Layer::Input { .. }) {
+            return Err("node 0 must be the input placeholder".into());
+        }
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if n.id != idx {
+                return Err(format!("node {idx} has mismatched id {}", n.id));
+            }
+            for &i in &n.inputs {
+                if i >= idx {
+                    return Err(format!("node {idx} has non-topological input {i}"));
+                }
+            }
+            if idx > 0 && matches!(n.layer, Layer::Input { .. }) {
+                return Err(format!("interior input node at {idx}"));
+            }
+            let in_shapes: Vec<&Shape> = n.inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+            if idx > 0 {
+                let inferred = n.layer.infer_shape(&in_shapes)?;
+                if inferred != n.shape {
+                    return Err(format!(
+                        "node {idx}: stored shape {} != inferred {}",
+                        n.shape, inferred
+                    ));
+                }
+            }
+        }
+        if self.output >= self.nodes.len() {
+            return Err("output id out of range".into());
+        }
+        // Every non-output node must be consumed.
+        let cons = self.consumers();
+        for n in &self.nodes {
+            if n.id != self.output && cons[n.id].is_empty() {
+                return Err(format!("dangling node {} ({})", n.id, n.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Histogram of layer kinds (for reports and Table 2's layer counts).
+    pub fn kind_histogram(&self) -> HashMap<&'static str, usize> {
+        let mut h = HashMap::new();
+        for n in self.nodes.iter().skip(1) {
+            *h.entry(n.layer.kind_name()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Total parameter count of the network.
+    pub fn num_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let input = n.inputs.first().map(|&i| &self.nodes[i].shape);
+                match input {
+                    Some(s) => n.layer.param_shapes(s).iter().map(|p| p.numel()).sum(),
+                    None => 0,
+                }
+            })
+            .sum()
+    }
+
+    /// Rebuild this graph with a different batch size (shapes re-inferred).
+    pub fn with_batch(&self, batch: usize) -> Graph {
+        let mut dims = self.input_shape().dims.clone();
+        dims[0] = batch;
+        let mut g = Graph::new(
+            self.name.clone(),
+            Shape::new(dims, self.input_shape().dtype),
+        );
+        for n in self.nodes.iter().skip(1) {
+            g.add(n.name.clone(), n.layer.clone(), &n.inputs);
+        }
+        g.output = self.output;
+        g
+    }
+
+    /// GraphViz DOT rendering (debug/diagnostics).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for n in &self.nodes {
+            let color = if n.layer.is_optimizable() {
+                "lightblue"
+            } else {
+                "lightgray"
+            };
+            s.push_str(&format!(
+                "  n{} [label=\"{}\\n{}\\n{}\" style=filled fillcolor={}];\n",
+                n.id,
+                n.name,
+                n.layer.kind_name(),
+                n.shape,
+                color
+            ));
+            for &i in &n.inputs {
+                s.push_str(&format!("  n{} -> n{};\n", i, n.id));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{PoolKind, Window2d};
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", Shape::nchw(1, 3, 8, 8));
+        g.push(
+            "conv1",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        g.push("bn1", Layer::BatchNorm2d { eps: 1e-5 });
+        g.push("relu1", Layer::Relu);
+        g.push(
+            "pool1",
+            Layer::Pool2d {
+                kind: PoolKind::Max,
+                window: Window2d::square(2, 2, 0),
+                ceil_mode: false,
+                count_include_pad: true,
+            },
+        );
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert_eq!(g.num_layers(), 4);
+        assert_eq!(g.output_shape(), &Shape::nchw(1, 4, 4, 4));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_add_graph() {
+        let mut g = Graph::new("res", Shape::nchw(1, 4, 8, 8));
+        let x = g.output;
+        let c = g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        g.add("add", Layer::Add, &[c, x]);
+        g.push("relu", Layer::Relu);
+        g.validate().unwrap();
+        let cons = g.consumers();
+        assert_eq!(cons[x], vec![c, c + 1]); // input feeds conv and add
+    }
+
+    #[test]
+    fn single_consumer_flags() {
+        let mut g = Graph::new("fan", Shape::nchw(1, 4, 8, 8));
+        let x = g.output;
+        let a = g.add("relu_a", Layer::Relu, &[x]);
+        let b = g.add("relu_b", Layer::Relu, &[x]);
+        g.add("add", Layer::Add, &[a, b]);
+        let sc = g.single_consumer();
+        assert!(!sc[x]); // two consumers
+        assert!(sc[a] && sc[b]);
+    }
+
+    #[test]
+    fn with_batch_rebuilds_shapes() {
+        let g = tiny().with_batch(16);
+        assert_eq!(g.input_shape().batch(), 16);
+        assert_eq!(g.output_shape(), &Shape::nchw(16, 4, 4, 4));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_dangling() {
+        let mut g = tiny();
+        // Add a node not connected to the output.
+        let id = g.add("stray", Layer::Relu, &[1]);
+        g.output = id - 1; // restore old output, leaving `stray` dangling...
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn kind_histogram_counts() {
+        let h = tiny().kind_histogram();
+        assert_eq!(h["conv2d"], 1);
+        assert_eq!(h["batchnorm"], 1);
+        assert_eq!(h["relu"], 1);
+        assert_eq!(h["maxpool"], 1);
+    }
+
+    #[test]
+    fn num_params() {
+        let g = tiny();
+        // conv 4*3*3*3 = 108, bn 4*4 = 16
+        assert_eq!(g.num_params(), 108 + 16);
+    }
+
+    #[test]
+    fn dot_renders() {
+        let dot = tiny().to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("maxpool"));
+    }
+}

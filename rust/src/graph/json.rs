@@ -1,0 +1,289 @@
+//! Graph ⇄ JSON interop with the python compile path.
+//!
+//! The rust zoo is the single source of truth for network topology: the
+//! `brainslug emit-requests` command exports graphs in this JSON form and
+//! `python/compile/model.py` *interprets* them as JAX computations — the
+//! python side never re-defines an architecture, so the two layers cannot
+//! drift. The schema is stable and covered by golden tests on both sides.
+
+use crate::json::Json;
+
+use super::dag::{Graph, Node};
+use super::layer::{Layer, PoolKind, Window2d};
+use super::shape::{DType, Shape};
+
+fn shape_json(s: &Shape) -> Json {
+    let mut o = Json::object();
+    o.set(
+        "dims",
+        Json::Arr(s.dims.iter().map(|&d| Json::from_usize(d)).collect()),
+    );
+    o.set("dtype", Json::Str(s.dtype.name().to_string()));
+    o
+}
+
+fn shape_from_json(j: &Json) -> anyhow::Result<Shape> {
+    let dims = j.req("dims")?.usize_vec()?;
+    let dtype = match j.str_field("dtype")?.as_str() {
+        "f32" => DType::F32,
+        "bf16" => DType::BF16,
+        other => anyhow::bail!("unknown dtype {other}"),
+    };
+    Ok(Shape::new(dims, dtype))
+}
+
+fn pair(j: (usize, usize)) -> Json {
+    Json::Arr(vec![Json::from_usize(j.0), Json::from_usize(j.1)])
+}
+
+fn pair_from(j: &Json) -> anyhow::Result<(usize, usize)> {
+    let v = j.usize_vec()?;
+    if v.len() != 2 {
+        anyhow::bail!("expected pair, got {} elems", v.len());
+    }
+    Ok((v[0], v[1]))
+}
+
+fn window_json(o: &mut Json, w: &Window2d) {
+    o.set("kernel", pair(w.kernel));
+    o.set("stride", pair(w.stride));
+    o.set("pad", pair(w.pad));
+}
+
+fn window_from(j: &Json) -> anyhow::Result<Window2d> {
+    Ok(Window2d {
+        kernel: pair_from(j.req("kernel")?)?,
+        stride: pair_from(j.req("stride")?)?,
+        pad: pair_from(j.req("pad")?)?,
+    })
+}
+
+/// Serialize one layer's kind + parameters into an object (shared by the
+/// graph exporter and the compile-request emitter).
+pub fn layer_fields_into(o: &mut Json, layer: &Layer) {
+    o.set("kind", Json::Str(layer.kind_name().to_string()));
+    match layer {
+        Layer::Input { shape } => {
+            o.set("shape", shape_json(shape));
+        }
+        Layer::Conv2d {
+            out_channels,
+            window,
+            bias,
+        } => {
+            o.set("out_channels", Json::from_usize(*out_channels));
+            window_json(o, window);
+            o.set("bias", Json::Bool(*bias));
+        }
+        Layer::Linear { out_features, bias } => {
+            o.set("out_features", Json::from_usize(*out_features));
+            o.set("bias", Json::Bool(*bias));
+        }
+        Layer::Pool2d {
+            kind,
+            window,
+            ceil_mode,
+            count_include_pad,
+        } => {
+            o.set(
+                "pool",
+                Json::Str(
+                    match kind {
+                        PoolKind::Max => "max",
+                        PoolKind::Avg => "avg",
+                    }
+                    .to_string(),
+                ),
+            );
+            window_json(o, window);
+            o.set("ceil_mode", Json::Bool(*ceil_mode));
+            o.set("count_include_pad", Json::Bool(*count_include_pad));
+        }
+        Layer::AdaptiveAvgPool { out_hw } => {
+            o.set("out_hw", pair(*out_hw));
+        }
+        Layer::BatchNorm2d { eps } => {
+            o.set("eps", Json::Num(*eps as f64));
+        }
+        Layer::Dropout { p } => {
+            o.set("p", Json::Num(*p as f64));
+        }
+        Layer::Relu | Layer::Flatten | Layer::Add | Layer::Concat => {}
+    }
+}
+
+fn layer_from_json(j: &Json) -> anyhow::Result<Layer> {
+    let kind = j.str_field("kind")?;
+    Ok(match kind.as_str() {
+        "input" => Layer::Input {
+            shape: shape_from_json(j.req("shape")?)?,
+        },
+        "conv2d" => Layer::Conv2d {
+            out_channels: j.usize_field("out_channels")?,
+            window: window_from(j)?,
+            bias: j.bool_field("bias")?,
+        },
+        "linear" => Layer::Linear {
+            out_features: j.usize_field("out_features")?,
+            bias: j.bool_field("bias")?,
+        },
+        "maxpool" | "avgpool" => Layer::Pool2d {
+            kind: match j.str_field("pool")?.as_str() {
+                "max" => PoolKind::Max,
+                "avg" => PoolKind::Avg,
+                other => anyhow::bail!("bad pool kind {other}"),
+            },
+            window: window_from(j)?,
+            ceil_mode: j.bool_field("ceil_mode")?,
+            count_include_pad: j.bool_field("count_include_pad")?,
+        },
+        "adaptiveavgpool" => Layer::AdaptiveAvgPool {
+            out_hw: pair_from(j.req("out_hw")?)?,
+        },
+        "batchnorm" => Layer::BatchNorm2d {
+            eps: j.f64_field("eps")? as f32,
+        },
+        "relu" => Layer::Relu,
+        "dropout" => Layer::Dropout {
+            p: j.f64_field("p")? as f32,
+        },
+        "flatten" => Layer::Flatten,
+        "add" => Layer::Add,
+        "concat" => Layer::Concat,
+        other => anyhow::bail!("unknown layer kind {other}"),
+    })
+}
+
+/// Serialize a graph (topology + shapes) to JSON.
+pub fn graph_to_json(g: &Graph) -> Json {
+    let mut root = Json::object();
+    root.set("name", Json::Str(g.name.clone()));
+    root.set("output", Json::from_usize(g.output));
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut o = Json::object();
+            o.set("id", Json::from_usize(n.id));
+            o.set("name", Json::Str(n.name.clone()));
+            o.set(
+                "inputs",
+                Json::Arr(n.inputs.iter().map(|&i| Json::from_usize(i)).collect()),
+            );
+            o.set("shape", shape_json(&n.shape));
+            layer_fields_into(&mut o, &n.layer);
+            o
+        })
+        .collect();
+    root.set("nodes", Json::Arr(nodes));
+    root
+}
+
+/// Parse a graph back from JSON (shape inference re-checks every node).
+pub fn graph_from_json(j: &Json) -> anyhow::Result<Graph> {
+    let name = j.str_field("name")?;
+    let nodes = j.arr_field("nodes")?;
+    if nodes.is_empty() {
+        anyhow::bail!("graph has no nodes");
+    }
+    let first = &nodes[0];
+    let input_shape = shape_from_json(first.req("shape")?)?;
+    let mut g = Graph::new(name, input_shape);
+    for nj in &nodes[1..] {
+        let layer = layer_from_json(nj)?;
+        let inputs = nj.req("inputs")?.usize_vec()?;
+        let node_name = nj.str_field("name")?;
+        let id = g.add(node_name, layer, &inputs);
+        // Cross-check stored shape against inference.
+        let stored = shape_from_json(nj.req("shape")?)?;
+        if g.node(id).shape != stored {
+            anyhow::bail!(
+                "node {id}: shape mismatch (stored {}, inferred {})",
+                stored,
+                g.node(id).shape
+            );
+        }
+    }
+    g.output = j.usize_field("output")?;
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+/// Parameter manifest of a node: stable (name, kind, shape) triples the
+/// runtime and the python oracle both generate with detrng.
+pub fn node_param_tags(graph: &Graph, node: &Node) -> Vec<(String, &'static str, Shape)> {
+    let input = match node.inputs.first() {
+        Some(&i) => &graph.node(i).shape,
+        None => return vec![],
+    };
+    let shapes = node.layer.param_shapes(input);
+    let kinds: Vec<&'static str> = match &node.layer {
+        Layer::Conv2d { bias, .. } | Layer::Linear { bias, .. } => {
+            if *bias {
+                vec!["weight", "bias"]
+            } else {
+                vec!["weight"]
+            }
+        }
+        Layer::BatchNorm2d { .. } => vec!["bn_gamma", "bn_beta", "bn_mean", "bn_var"],
+        _ => vec![],
+    };
+    assert_eq!(shapes.len(), kinds.len(), "param bookkeeping mismatch");
+    kinds
+        .into_iter()
+        .zip(shapes)
+        .map(|(k, s)| (format!("{}:{}", node.name, k), k, s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_networks() {
+        for name in zoo::ALL_NETWORKS {
+            let g = zoo::build(name, zoo::small_config(name, 2));
+            let j = graph_to_json(&g);
+            let back = graph_from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back.nodes.len(), g.nodes.len(), "{name}");
+            assert_eq!(back.output, g.output, "{name}");
+            for (a, b) in back.nodes.iter().zip(&g.nodes) {
+                assert_eq!(a.layer, b.layer, "{name}: node {}", a.id);
+                assert_eq!(a.shape, b.shape, "{name}: node {}", a.id);
+                assert_eq!(a.inputs, b.inputs, "{name}: node {}", a.id);
+            }
+        }
+    }
+
+    #[test]
+    fn json_is_parseable_text() {
+        let g = zoo::build("alexnet", zoo::small_config("alexnet", 1));
+        let text = graph_to_json(&g).to_string_pretty();
+        let j = crate::json::parse(&text).unwrap();
+        graph_from_json(&j).unwrap();
+    }
+
+    #[test]
+    fn param_tags_stable() {
+        let g = zoo::build("vgg11_bn", zoo::small_config("vgg11_bn", 1));
+        let conv = g.nodes.iter().find(|n| n.name == "features.0.conv").unwrap();
+        let tags = node_param_tags(&g, conv);
+        assert_eq!(tags.len(), 2);
+        assert_eq!(tags[0].0, "features.0.conv:weight");
+        assert_eq!(tags[1].0, "features.0.conv:bias");
+        let bn = g.nodes.iter().find(|n| n.name == "features.1.bn").unwrap();
+        let tags = node_param_tags(&g, bn);
+        assert_eq!(tags.len(), 4);
+        assert_eq!(tags[2].1, "bn_mean");
+    }
+
+    #[test]
+    fn corrupted_json_rejected() {
+        let g = zoo::build("alexnet", zoo::small_config("alexnet", 1));
+        let mut j = graph_to_json(&g);
+        j.set("output", Json::from_usize(99999));
+        assert!(graph_from_json(&j).is_err());
+    }
+}

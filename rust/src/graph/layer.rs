@@ -1,0 +1,436 @@
+//! Layer definitions for the graph IR.
+//!
+//! The set covers everything the 21 evaluated TorchVision architectures
+//! need (AlexNet, VGG±BN, ResNet, DenseNet, SqueezeNet, Inception-V3):
+//! convolutions, linear layers, max/avg pooling, batch-norm, ReLU,
+//! dropout, flatten, residual add and channel concat.
+//!
+//! `Layer::is_optimizable` encodes the paper's §3.2 criterion: a layer can
+//! join a depth-first stack iff it operates on a local sub-region of its
+//! input — element-wise layers (BN, ReLU, dropout) and pooling layers.
+//! Convolution and linear layers are explicitly excluded (§7 Limitations),
+//! and multi-input joins (add/concat) break stacks structurally.
+
+use super::shape::{conv_out_dim, Shape};
+
+/// 2-D window parameters shared by pooling layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Window2d {
+    pub kernel: (usize, usize),
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+}
+
+impl Window2d {
+    pub fn square(kernel: usize, stride: usize, pad: usize) -> Self {
+        Window2d {
+            kernel: (kernel, kernel),
+            stride: (stride, stride),
+            pad: (pad, pad),
+        }
+    }
+
+    /// Output spatial dims for an input of `(h, w)`.
+    pub fn out_hw(&self, h: usize, w: usize, ceil_mode: bool) -> (usize, usize) {
+        if ceil_mode {
+            (
+                ceil_out_dim(h, self.kernel.0, self.stride.0, self.pad.0),
+                ceil_out_dim(w, self.kernel.1, self.stride.1, self.pad.1),
+            )
+        } else {
+            (
+                conv_out_dim(h, self.kernel.0, self.stride.0, self.pad.0),
+                conv_out_dim(w, self.kernel.1, self.stride.1, self.pad.1),
+            )
+        }
+    }
+
+    /// Signature fragment, e.g. `k3x3s1p1`.
+    pub fn sig(&self) -> String {
+        format!(
+            "k{}x{}s{}x{}p{}x{}",
+            self.kernel.0, self.kernel.1, self.stride.0, self.stride.1, self.pad.0, self.pad.1
+        )
+    }
+}
+
+/// Ceil-mode output extent (PyTorch `ceil_mode=True`, used by SqueezeNet's
+/// max-pools). PyTorch additionally forbids windows that start entirely in
+/// the right/bottom padding; that correction is applied here.
+pub fn ceil_out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    let padded = input + 2 * pad;
+    assert!(padded >= kernel, "window larger than padded input");
+    let mut out = (padded - kernel).div_ceil(stride) + 1;
+    // Last window must start inside the (left-padded) input.
+    if pad > 0 && (out - 1) * stride >= input + pad {
+        out -= 1;
+    }
+    out
+}
+
+/// Pooling aggregation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// A single layer (graph node operation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Input placeholder; carries the network's input shape.
+    Input { shape: Shape },
+    /// 2-D convolution, NCHW, OIHW weights.
+    Conv2d {
+        out_channels: usize,
+        window: Window2d,
+        bias: bool,
+    },
+    /// Fully-connected layer over flattened features.
+    Linear { out_features: usize, bias: bool },
+    /// Max or average pooling.
+    Pool2d {
+        kind: PoolKind,
+        window: Window2d,
+        /// PyTorch `ceil_mode` (SqueezeNet max-pools use true).
+        ceil_mode: bool,
+        /// For avg pooling: whether padded zeros count in the divisor
+        /// (PyTorch default true).
+        count_include_pad: bool,
+    },
+    /// Adaptive average pooling to a fixed output size (maps onto a plain
+    /// avg-pool whose kernel/stride are derived from the input extent).
+    AdaptiveAvgPool { out_hw: (usize, usize) },
+    /// Inference-mode batch normalization: per-channel affine
+    /// `y = (x - mean) / sqrt(var + eps) * gamma + beta`.
+    BatchNorm2d { eps: f32 },
+    /// Rectified linear unit.
+    Relu,
+    /// Dropout — identity at inference time; kept in the graph because the
+    /// paper's layer counts include it and it participates in stacks.
+    Dropout { p: f32 },
+    /// Collapse CHW to features.
+    Flatten,
+    /// Element-wise residual addition of two inputs.
+    Add,
+    /// Channel-axis concatenation of N inputs.
+    Concat,
+}
+
+impl Layer {
+    /// §3.2: can this layer be absorbed into a depth-first stack?
+    pub fn is_optimizable(&self) -> bool {
+        matches!(
+            self,
+            Layer::Pool2d { .. } | Layer::BatchNorm2d { .. } | Layer::Relu | Layer::Dropout { .. }
+        )
+    }
+
+    /// Element-wise layers never change shape and can always join a step;
+    /// pooling is optimizable but *not* element-wise (one per step).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            Layer::BatchNorm2d { .. } | Layer::Relu | Layer::Dropout { .. }
+        )
+    }
+
+    /// Does this layer carry learned parameters, and what are their shapes
+    /// given the input shape? Order matches the python side (`model.py`).
+    pub fn param_shapes(&self, input: &Shape) -> Vec<Shape> {
+        match self {
+            Layer::Conv2d {
+                out_channels,
+                window,
+                bias,
+            } => {
+                let mut v = vec![Shape::new(
+                    vec![
+                        *out_channels,
+                        input.channels(),
+                        window.kernel.0,
+                        window.kernel.1,
+                    ],
+                    input.dtype,
+                )];
+                if *bias {
+                    v.push(Shape::new(vec![*out_channels], input.dtype));
+                }
+                v
+            }
+            Layer::Linear { out_features, bias } => {
+                let mut v = vec![Shape::new(
+                    vec![input.channels(), *out_features],
+                    input.dtype,
+                )];
+                if *bias {
+                    v.push(Shape::new(vec![*out_features], input.dtype));
+                }
+                v
+            }
+            Layer::BatchNorm2d { .. } => {
+                let c = input.channels();
+                // gamma, beta, running_mean, running_var
+                (0..4)
+                    .map(|_| Shape::new(vec![c], input.dtype))
+                    .collect()
+            }
+            _ => vec![],
+        }
+    }
+
+    /// Infer the output shape from input shapes (most layers are unary).
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> Result<Shape, String> {
+        let unary = || -> Result<&Shape, String> {
+            if inputs.len() == 1 {
+                Ok(inputs[0])
+            } else {
+                Err(format!("{self:?} expects 1 input, got {}", inputs.len()))
+            }
+        };
+        match self {
+            Layer::Input { shape } => Ok(shape.clone()),
+            Layer::Conv2d {
+                out_channels,
+                window,
+                ..
+            } => {
+                let i = unary()?;
+                if i.rank() != 4 {
+                    return Err(format!("conv2d needs rank-4 input, got {i}"));
+                }
+                let (oh, ow) = window.out_hw(i.height(), i.width(), false);
+                Ok(Shape::new(
+                    vec![i.batch(), *out_channels, oh, ow],
+                    i.dtype,
+                ))
+            }
+            Layer::Linear { out_features, .. } => {
+                let i = unary()?;
+                if i.rank() != 2 {
+                    return Err(format!("linear needs rank-2 input, got {i}"));
+                }
+                Ok(Shape::new(vec![i.batch(), *out_features], i.dtype))
+            }
+            Layer::Pool2d {
+                window, ceil_mode, ..
+            } => {
+                let i = unary()?;
+                if i.rank() != 4 {
+                    return Err(format!("pool2d needs rank-4 input, got {i}"));
+                }
+                let (oh, ow) = window.out_hw(i.height(), i.width(), *ceil_mode);
+                Ok(Shape::new(
+                    vec![i.batch(), i.channels(), oh, ow],
+                    i.dtype,
+                ))
+            }
+            Layer::AdaptiveAvgPool { out_hw } => {
+                let i = unary()?;
+                if i.rank() != 4 {
+                    return Err(format!("adaptive pool needs rank-4 input, got {i}"));
+                }
+                if i.height() % out_hw.0 != 0 || i.width() % out_hw.1 != 0 {
+                    return Err(format!(
+                        "adaptive pool {}x{} does not divide input {}x{}",
+                        out_hw.0,
+                        out_hw.1,
+                        i.height(),
+                        i.width()
+                    ));
+                }
+                Ok(Shape::new(
+                    vec![i.batch(), i.channels(), out_hw.0, out_hw.1],
+                    i.dtype,
+                ))
+            }
+            Layer::BatchNorm2d { .. } | Layer::Relu | Layer::Dropout { .. } => {
+                Ok(unary()?.clone())
+            }
+            Layer::Flatten => {
+                let i = unary()?;
+                Ok(Shape::new(
+                    vec![i.batch(), i.numel() / i.batch()],
+                    i.dtype,
+                ))
+            }
+            Layer::Add => {
+                if inputs.len() != 2 {
+                    return Err(format!("add expects 2 inputs, got {}", inputs.len()));
+                }
+                if inputs[0] != inputs[1] {
+                    return Err(format!(
+                        "add shape mismatch: {} vs {}",
+                        inputs[0], inputs[1]
+                    ));
+                }
+                Ok(inputs[0].clone())
+            }
+            Layer::Concat => {
+                if inputs.len() < 2 {
+                    return Err("concat expects >=2 inputs".into());
+                }
+                let first = inputs[0];
+                let mut channels = 0;
+                for i in inputs {
+                    if i.rank() != 4 {
+                        return Err(format!("concat needs rank-4 inputs, got {i}"));
+                    }
+                    if i.batch() != first.batch()
+                        || i.height() != first.height()
+                        || i.width() != first.width()
+                    {
+                        return Err(format!("concat mismatch: {first} vs {i}"));
+                    }
+                    channels += i.channels();
+                }
+                Ok(Shape::new(
+                    vec![first.batch(), channels, first.height(), first.width()],
+                    first.dtype,
+                ))
+            }
+        }
+    }
+
+    /// Short kind tag used in signatures and reports.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Layer::Input { .. } => "input",
+            Layer::Conv2d { .. } => "conv2d",
+            Layer::Linear { .. } => "linear",
+            Layer::Pool2d {
+                kind: PoolKind::Max,
+                ..
+            } => "maxpool",
+            Layer::Pool2d {
+                kind: PoolKind::Avg,
+                ..
+            } => "avgpool",
+            Layer::AdaptiveAvgPool { .. } => "adaptiveavgpool",
+            Layer::BatchNorm2d { .. } => "batchnorm",
+            Layer::Relu => "relu",
+            Layer::Dropout { .. } => "dropout",
+            Layer::Flatten => "flatten",
+            Layer::Add => "add",
+            Layer::Concat => "concat",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(n: usize, c: usize, h: usize, w: usize) -> Shape {
+        Shape::nchw(n, c, h, w)
+    }
+
+    #[test]
+    fn optimizable_classification() {
+        assert!(Layer::Relu.is_optimizable());
+        assert!(Layer::BatchNorm2d { eps: 1e-5 }.is_optimizable());
+        assert!(Layer::Dropout { p: 0.5 }.is_optimizable());
+        let pool = Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 1, 1),
+            ceil_mode: false,
+            count_include_pad: true,
+        };
+        assert!(pool.is_optimizable());
+        assert!(!pool.is_elementwise());
+        assert!(Layer::Relu.is_elementwise());
+        assert!(!Layer::Conv2d {
+            out_channels: 8,
+            window: Window2d::square(3, 1, 1),
+            bias: true
+        }
+        .is_optimizable());
+        assert!(!Layer::Add.is_optimizable());
+        assert!(!Layer::Concat.is_optimizable());
+        assert!(!Layer::Flatten.is_optimizable());
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let conv = Layer::Conv2d {
+            out_channels: 16,
+            window: Window2d::square(3, 2, 1),
+            bias: false,
+        };
+        let out = conv.infer_shape(&[&s(4, 3, 32, 32)]).unwrap();
+        assert_eq!(out, s(4, 16, 16, 16));
+    }
+
+    #[test]
+    fn pool_shape_inference_floor_and_ceil() {
+        let mk = |ceil| Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 2, 0),
+            ceil_mode: ceil,
+            count_include_pad: true,
+        };
+        // floor: (13-3)/2+1 = 6 ; ceil: ceil((13-3)/2)+1 = 6? (10/2=5)+1=6 both.
+        assert_eq!(mk(false).infer_shape(&[&s(1, 8, 13, 13)]).unwrap(), s(1, 8, 6, 6));
+        // 14: floor (11/2=5)+1=6? (14-3)/2+1 = 6 ; ceil = ceil(11/2)+1 = 7.
+        assert_eq!(mk(false).infer_shape(&[&s(1, 8, 14, 14)]).unwrap(), s(1, 8, 6, 6));
+        assert_eq!(mk(true).infer_shape(&[&s(1, 8, 14, 14)]).unwrap(), s(1, 8, 7, 7));
+    }
+
+    #[test]
+    fn ceil_mode_pad_correction() {
+        // input 4, k2 s2 p1: padded 6, ceil((6-2)/2)+1 = 3, last window
+        // starts at 4 >= input+pad=5? no (4 < 5) -> stays 3.
+        assert_eq!(ceil_out_dim(4, 2, 2, 1), 3);
+        // input 3, k2 s2 p1: padded 5, ceil(3/2)+1 = 3, last start 4 >= 3+1=4
+        // -> corrected to 2.
+        assert_eq!(ceil_out_dim(3, 2, 2, 1), 2);
+    }
+
+    #[test]
+    fn add_concat_inference() {
+        let a = s(2, 8, 16, 16);
+        let b = s(2, 24, 16, 16);
+        assert_eq!(Layer::Add.infer_shape(&[&a, &a]).unwrap(), a);
+        assert!(Layer::Add.infer_shape(&[&a, &b]).is_err());
+        assert_eq!(
+            Layer::Concat.infer_shape(&[&a, &b]).unwrap(),
+            s(2, 32, 16, 16)
+        );
+    }
+
+    #[test]
+    fn param_shapes() {
+        let conv = Layer::Conv2d {
+            out_channels: 16,
+            window: Window2d::square(3, 1, 1),
+            bias: true,
+        };
+        let ps = conv.param_shapes(&s(1, 8, 32, 32));
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].dims, vec![16, 8, 3, 3]);
+        assert_eq!(ps[1].dims, vec![16]);
+        let bn = Layer::BatchNorm2d { eps: 1e-5 };
+        assert_eq!(bn.param_shapes(&s(1, 8, 32, 32)).len(), 4);
+        assert!(Layer::Relu.param_shapes(&s(1, 8, 32, 32)).is_empty());
+    }
+
+    #[test]
+    fn adaptive_pool() {
+        let l = Layer::AdaptiveAvgPool { out_hw: (1, 1) };
+        assert_eq!(l.infer_shape(&[&s(2, 64, 8, 8)]).unwrap(), s(2, 64, 1, 1));
+        assert!(l.infer_shape(&[&s(2, 64, 8, 8)]).is_ok());
+        let l7 = Layer::AdaptiveAvgPool { out_hw: (7, 7) };
+        assert!(l7.infer_shape(&[&s(2, 64, 8, 8)]).is_err());
+    }
+
+    #[test]
+    fn flatten_linear() {
+        let f = Layer::Flatten.infer_shape(&[&s(2, 64, 4, 4)]).unwrap();
+        assert_eq!(f, Shape::nf(2, 1024));
+        let l = Layer::Linear {
+            out_features: 10,
+            bias: true,
+        };
+        assert_eq!(l.infer_shape(&[&f]).unwrap(), Shape::nf(2, 10));
+    }
+}

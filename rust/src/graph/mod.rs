@@ -1,0 +1,18 @@
+//! Graph IR: tensors, layers, and the network DAG.
+//!
+//! This is the common abstraction the paper's front-ends produce (§4,
+//! Figure 7): every framework-specific network is parsed into this form
+//! before the optimizer runs. Here the "front-end" role is played by the
+//! model zoo builders ([`crate::zoo`]) and by the python exporter
+//! (`python/compile/zoo.py`), which must agree — see the golden-file
+//! tests in `rust/tests/`.
+
+pub mod dag;
+pub mod json;
+pub mod layer;
+pub mod shape;
+
+pub use dag::{Graph, Node, NodeId};
+pub use json::{graph_from_json, graph_to_json, node_param_tags};
+pub use layer::{ceil_out_dim, Layer, PoolKind, Window2d};
+pub use shape::{conv_out_dim, DType, Shape};

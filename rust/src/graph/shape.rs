@@ -1,0 +1,166 @@
+//! Tensor shapes and dtypes for the graph IR.
+//!
+//! All activation tensors in the evaluated networks are rank-4 `NCHW`
+//! (batch, channels, height, width) or rank-2 `NF` (batch, features)
+//! after flattening, so we model shapes as a small owned dim vector with
+//! NCHW helpers rather than a general tensor algebra.
+
+/// Element type of a tensor. The paper evaluates f32 end-to-end; bf16 is
+/// carried for the TPU-profile VMEM sizing in the collapser/memsim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::BF16 => 2,
+        }
+    }
+
+    /// Name as used in artifact signatures (stable across rust/python).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+        }
+    }
+}
+
+/// Shape of an activation or parameter tensor.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Shape {
+    pub fn new(dims: Vec<usize>, dtype: DType) -> Self {
+        Shape { dims, dtype }
+    }
+
+    /// Rank-4 NCHW activation shape (f32).
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Shape::new(vec![n, c, h, w], DType::F32)
+    }
+
+    /// Rank-2 (batch, features) shape (f32).
+    pub fn nf(n: usize, f: usize) -> Self {
+        Shape::new(vec![n, f], DType::F32)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Total size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Channel count for NCHW, feature count for NF.
+    pub fn channels(&self) -> usize {
+        assert!(self.rank() >= 2, "channels() on rank-{} shape", self.rank());
+        self.dims[1]
+    }
+
+    pub fn height(&self) -> usize {
+        assert_eq!(self.rank(), 4, "height() on rank-{} shape", self.rank());
+        self.dims[2]
+    }
+
+    pub fn width(&self) -> usize {
+        assert_eq!(self.rank(), 4, "width() on rank-{} shape", self.rank());
+        self.dims[3]
+    }
+
+    /// Signature fragment used in artifact names: `1x64x32x32f32`.
+    pub fn sig(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}{}", dims.join("x"), self.dtype.name())
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.sig())
+    }
+}
+
+/// Output spatial extent of a conv/pool window:
+/// `floor((in + 2*pad - kernel) / stride) + 1`.
+///
+/// Matches PyTorch's default (floor) mode, which TorchVision networks use.
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(stride > 0, "stride must be positive");
+    let padded = input + 2 * pad;
+    assert!(
+        padded >= kernel,
+        "window {kernel} larger than padded input {padded}"
+    );
+    (padded - kernel) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = Shape::nchw(2, 3, 4, 5);
+        assert_eq!(s.numel(), 120);
+        assert_eq!(s.bytes(), 480);
+        let b = Shape::new(vec![2, 3], DType::BF16);
+        assert_eq!(b.bytes(), 12);
+    }
+
+    #[test]
+    fn accessors() {
+        let s = Shape::nchw(8, 16, 32, 33);
+        assert_eq!(
+            (s.batch(), s.channels(), s.height(), s.width()),
+            (8, 16, 32, 33)
+        );
+        let f = Shape::nf(8, 100);
+        assert_eq!((f.batch(), f.channels()), (8, 100));
+    }
+
+    #[test]
+    fn sig_format() {
+        assert_eq!(Shape::nchw(1, 64, 32, 32).sig(), "1x64x32x32f32");
+        assert_eq!(Shape::new(vec![4, 8], DType::BF16).sig(), "4x8bf16");
+    }
+
+    #[test]
+    fn conv_out_dims() {
+        // 3x3 stride 1 pad 1 keeps size ("same").
+        assert_eq!(conv_out_dim(32, 3, 1, 1), 32);
+        // 3x3 stride 2 pad 1 halves (ceil).
+        assert_eq!(conv_out_dim(32, 3, 2, 1), 16);
+        // 2x2 stride 2 pad 0 halves exactly.
+        assert_eq!(conv_out_dim(32, 2, 2, 0), 16);
+        // AlexNet-style 11x11 stride 4 pad 2 on 224.
+        assert_eq!(conv_out_dim(224, 11, 4, 2), 55);
+        // floor mode: 7x7 pool on 6+2*0 is invalid; on 7 it's 1.
+        assert_eq!(conv_out_dim(7, 7, 1, 0), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_out_dim_window_too_large() {
+        conv_out_dim(4, 7, 1, 0);
+    }
+}

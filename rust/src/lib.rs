@@ -1,0 +1,31 @@
+//! # BrainSlug-RS
+//!
+//! Reproduction of *BrainSlug: Transparent Acceleration of Deep Learning
+//! Through Depth-First Parallelism* (Weber, Schmidt, Niepert, Huici —
+//! NEC Laboratories Europe, 2018) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The paper's contribution — detecting runs of element-wise + pooling
+//! layers in a network DAG and *collapsing* them into fused, cache-tiled
+//! depth-first kernels — lives in [`optimizer`]. The networks it operates
+//! on are built by [`zoo`] over the [`graph`] IR; [`device`] models the
+//! hardware the collapser packs against; [`memsim`] is the memory-traffic
+//! substrate that regenerates the paper's tables and figures at paper
+//! scale; [`runtime`] + [`scheduler`] execute optimized plans on the PJRT
+//! CPU backend using artifacts AOT-compiled from JAX/Pallas; [`server`]
+//! is the batching inference front-end used by the end-to-end example.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod device;
+pub mod graph;
+pub mod json;
+pub mod memsim;
+pub mod optimizer;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod zoo;

@@ -1,0 +1,350 @@
+//! `brainslug` — leader binary of the BrainSlug reproduction.
+//!
+//! Commands:
+//! * `emit-requests` — run the optimizer over the experiment set and
+//!   write `artifacts/requests.json` for the python AOT path.
+//! * `analyze`       — per-network optimizer/memsim report (Table 2).
+//! * `simulate`      — paper-scale simulated experiments (Tables 1–2,
+//!   Figures 10–15); see the benches for the full harnesses.
+//! * `run`           — execute a network on the PJRT runtime, baseline
+//!   vs BrainSlug, and verify numerics.
+//! * `serve`         — batching-server demo.
+//! * `dot`           — GraphViz dump of a network.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::cli::Args;
+use brainslug::device::DeviceSpec;
+use brainslug::graph::graph_to_json;
+use brainslug::json::Json;
+use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
+use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::runtime::{RequestSet, Runtime};
+use brainslug::scheduler::Executor;
+use brainslug::server::Server;
+use brainslug::zoo;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_str() {
+        "emit-requests" => cmd_emit_requests(&args),
+        "analyze" => cmd_analyze(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "dot" => cmd_dot(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "brainslug — depth-first neural network acceleration (paper reproduction)
+
+USAGE: brainslug <command> [flags]
+
+  emit-requests [--out artifacts/requests.json]
+  analyze       [--net NAME | --all] [--device paper-cpu|paper-gpu|tpu] [--batch N]
+  simulate      --exp table1|table2 [--device ...]
+  run           --net NAME [--batch N] [--mode both|baseline|brainslug] [--artifacts DIR]
+  serve         --net NAME [--requests N] [--brainslug] [--artifacts DIR]
+  dot           --net NAME [--batch N] [--small] [--json]
+"
+    );
+}
+
+/// Resolve a zoo network at measured (small) scale.
+fn small_graph(name: &str, batch: usize) -> Result<brainslug::graph::Graph> {
+    zoo::try_build(name, zoo::small_config(name, batch))
+        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}' (see `analyze --all`)"))
+}
+
+fn cmd_emit_requests(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "artifacts/requests.json").to_string();
+    args.reject_unknown()?;
+
+    let device = bench::measured_device();
+    let opts = bench::measured_opts();
+    let mut rs = RequestSet::new();
+
+    // Full networks: baseline + plan executables + oracle per batch.
+    for &name in bench::measured_networks() {
+        for &batch in bench::measured_batches() {
+            let g = small_graph(name, batch)?;
+            let plan = optimize(&g, &device, &opts);
+            plan.validate(&g).map_err(|e| anyhow::anyhow!(e))?;
+            rs.add_baseline(&g);
+            rs.add_plan(&g, &plan);
+            if batch == bench::measured_batches()[0] {
+                rs.add_oracle(&format!("{name}_b{batch}"), &g, bench::oracle_seed());
+            }
+        }
+    }
+
+    // Figure-10 block networks under each collapse strategy.
+    for &blocks in bench::fig10_measured_blocks() {
+        let g = bench::block_net(blocks, 4, 8, 32);
+        rs.add_baseline(&g);
+        for (_, opts) in bench::fig10_strategies() {
+            let plan = optimize(&g, &device, &opts);
+            rs.add_plan(&g, &plan);
+        }
+        if blocks == 2 {
+            rs.add_oracle("blocks2_b4", &g, bench::oracle_seed());
+        }
+    }
+
+    let json = rs.to_json();
+    if let Some(dir) = Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!(
+        "wrote {out}: {} layer executables, {} stack executables",
+        rs.num_layers(),
+        rs.num_stacks()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let device = DeviceSpec::preset(args.get_or("device", "paper-gpu"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+    let batch = args.get_usize("batch", 128)?;
+    let all = args.get_bool("all");
+    let one = args.get("net").map(|s| s.to_string());
+    args.reject_unknown()?;
+
+    let names: Vec<&str> = if all || one.is_none() {
+        zoo::ALL_NETWORKS.to_vec()
+    } else {
+        vec![one.as_deref().unwrap()]
+    };
+
+    let mut table = Table::new(&[
+        "network", "layers", "opt", "stacks", "uniq", "opt-speedup", "%time", "total-speedup",
+    ]);
+    for name in names {
+        let g = zoo::build(name, zoo::paper_config(name, batch));
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        let base = simulate_baseline(&g, &device);
+        let bs = simulate_plan(&g, &plan, &device);
+        let opt_speedup = speedup_pct(base.optimizable_s, bs.stack_s);
+        let pct_time = base.optimizable_s / base.total_s * 100.0;
+        let total = speedup_pct(base.total_s, bs.total_s);
+        table.row(vec![
+            name.to_string(),
+            g.num_layers().to_string(),
+            plan.num_optimized_layers().to_string(),
+            plan.num_stacks().to_string(),
+            plan.num_unique_stacks().to_string(),
+            fmt_pct(opt_speedup),
+            format!("{pct_time:.1}"),
+            fmt_pct(total),
+        ]);
+    }
+    println!(
+        "# Table-2 style analysis — device={} batch={batch} (simulated)",
+        device.name
+    );
+    table.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "table1").to_string();
+    let device = DeviceSpec::preset(args.get_or("device", "paper-gpu"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+    args.reject_unknown()?;
+    match exp.as_str() {
+        "table1" => {
+            let batches = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+            let mut table = Table::new(&[
+                "network", "1", "2", "4", "8", "16", "32", "64", "128", "256",
+            ]);
+            for name in zoo::ALL_NETWORKS {
+                let mut cells = vec![name.to_string()];
+                for &b in &batches {
+                    let g = zoo::build(name, zoo::paper_config(name, b));
+                    let plan = optimize(&g, &device, &CollapseOptions::default());
+                    let base = simulate_baseline(&g, &device);
+                    let bs = simulate_plan(&g, &plan, &device);
+                    cells.push(fmt_pct(speedup_pct(base.total_s, bs.total_s)));
+                }
+                table.row(cells);
+            }
+            println!(
+                "# Table 1 — total speed-up, device={} (simulated)",
+                device.name
+            );
+            table.print();
+        }
+        "table2" => {
+            let fwd = Args::parse(
+                ["analyze", "--all", "--device", &device.name]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )?;
+            return cmd_analyze(&fwd);
+        }
+        other => bail!("unknown experiment '{other}' (table1|table2)"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?
+        .to_string();
+    let batch = args.get_usize("batch", bench::measured_batches()[0])?;
+    let mode = args.get_or("mode", "both").to_string();
+    let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
+    args.reject_unknown()?;
+
+    let g = small_graph(&name, batch)?;
+    let device = bench::measured_device();
+    let plan = optimize(&g, &device, &bench::measured_opts());
+    let runtime = Runtime::new(Path::new(&artifacts))?;
+    let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
+    let input = exec.synthetic_input();
+
+    println!(
+        "network={name} batch={batch} layers={} optimizable={} stacks={} unique_stacks={}",
+        g.num_layers(),
+        plan.num_optimized_layers(),
+        plan.num_stacks(),
+        plan.num_unique_stacks()
+    );
+
+    let mut t_base = None;
+    let mut t_plan = None;
+    let mut out_base = None;
+    if mode == "both" || mode == "baseline" {
+        let (out, stats) = exec.run_baseline(input.clone())?;
+        println!("baseline:  total={}", fmt_time(stats.total_s));
+        for (kind, s) in stats.by_kind().iter().take(5) {
+            println!("  {kind:<12} {}", fmt_time(*s));
+        }
+        t_base = Some(stats.total_s);
+        out_base = Some(out);
+    }
+    if mode == "both" || mode == "brainslug" {
+        let (out, stats) = exec.run_plan(&plan, input.clone())?;
+        println!("brainslug: total={}", fmt_time(stats.total_s));
+        t_plan = Some(stats.total_s);
+        if let Some(b) = &out_base {
+            let diff = b.max_abs_diff(&out);
+            println!("max |baseline - brainslug| = {diff:.2e}");
+            if !b.allclose(&out, 1e-4, 1e-4) {
+                bail!("numerics mismatch between baseline and brainslug");
+            }
+        }
+    }
+    if let (Some(b), Some(p)) = (t_base, t_plan) {
+        println!(
+            "speedup (first run, incl. executable compile): {}",
+            fmt_pct(speedup_pct(b, p))
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?
+        .to_string();
+    let n_requests = args.get_usize("requests", 32)?;
+    let brainslug_mode = args.get_bool("brainslug");
+    let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
+    args.reject_unknown()?;
+
+    let batch = *bench::measured_batches().last().unwrap();
+    let g = Arc::new(small_graph(&name, batch)?);
+    let device = bench::measured_device();
+    let plan = brainslug_mode.then(|| Arc::new(optimize(&g, &device, &bench::measured_opts())));
+    let server = Server::start(
+        Path::new(&artifacts).to_path_buf(),
+        g.clone(),
+        plan,
+        bench::oracle_seed(),
+        Duration::from_millis(5),
+    )?;
+    let handle = server.handle();
+    let image_elems = handle.image_shape().numel();
+
+    let t0 = std::time::Instant::now();
+    let workers: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let img = brainslug::rng::fill_f32(i as u64, image_elems);
+                h.infer(img).map(|t| t.data[0])
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    for w in workers {
+        if w.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n_requests} requests in {} ({:.1} req/s), mean latency {:.2}ms, batch occupancy {:.0}%",
+        fmt_time(wall),
+        ok as f64 / wall,
+        server.stats.mean_latency_ms(),
+        server.stats.occupancy(batch) * 100.0
+    );
+    server.stop();
+    Ok(())
+}
+
+fn cmd_dot(args: &Args) -> Result<()> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?
+        .to_string();
+    let batch = args.get_usize("batch", 1)?;
+    let small = args.get_bool("small");
+    let json_out = args.get_bool("json");
+    args.reject_unknown()?;
+    let cfg = if small {
+        zoo::small_config(&name, batch)
+    } else {
+        zoo::paper_config(&name, batch)
+    };
+    let g = zoo::try_build(&name, cfg)
+        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?;
+    if json_out {
+        let j: Json = graph_to_json(&g);
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!("{}", g.to_dot());
+    }
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Memory-hierarchy simulation substrate.
+//!
+//! The paper's evaluation ran on a Xeon E5-2690v4 and a GTX 1080 Ti;
+//! neither is available here, so per DESIGN.md §Substitutions the
+//! paper-scale experiments (Figures 10–15, Tables 1–2) are regenerated
+//! on an analytic model of exactly the quantity the paper's speed-ups
+//! derive from — bytes moved between main memory and the fast tier —
+//! plus the documented baseline pathologies (un-vectorized CPU kernels,
+//! the Listing-4 pooling parallelism bug, per-kernel launch overheads).
+//!
+//! * [`traffic`] — FLOP and byte accounting per layer (breadth-first)
+//!   and per collapsed sequence (depth-first, halo-aware).
+//! * [`perfmodel`] — the time model and plan simulation.
+//! * [`cache`] — a set-associative LRU cache simulator that validates
+//!   the locality claim on raw address traces, independent of the
+//!   analytic model's calibration.
+
+pub mod cache;
+pub mod perfmodel;
+pub mod traffic;
+
+pub use cache::{compare_schedules, Cache};
+pub use perfmodel::{
+    baseline_layer_time, simulate_baseline, simulate_plan, speedup_pct, stack_time, BaselineSim,
+    LayerTime, ModelParams, PlanSim,
+};
+pub use traffic::{graph_cost_bf, layer_cost_bf, layer_flops, sequence_cost_df, UnitCost};

@@ -1,0 +1,351 @@
+//! Analytic execution-time model: PyTorch-style breadth-first baseline
+//! vs. BrainSlug depth-first plans on the paper's device models.
+//!
+//! The model is deliberately simple — `time = launch_overhead +
+//! max(compute, memory)` per executed unit — plus the three *documented*
+//! behaviours of the paper's baseline that drive its results:
+//!
+//! 1. **CPU element-wise/pooling kernels are not vectorized** (§5.1:
+//!    "the current PyTorch implementation ... does not use any explicit
+//!    vector processing instructions"), so their compute rate is the
+//!    scalar rate. BrainSlug's ISPC kernels run vectorized.
+//! 2. **CPU pooling parallelizes only over the batch dimension**
+//!    (Listing 4's nested `omp parallel for` bug), so at batch < cores
+//!    the baseline pooling uses `batch` cores. BrainSlug iterates over
+//!    `batch × channels` and always uses all cores (§5.2).
+//! 3. **Every baseline layer is a separate kernel launch**, while a
+//!    collapsed sequence is one launch; BrainSlug adds a fixed per-stack
+//!    scheduling overhead (gathering tensors, allocating outputs through
+//!    the framework, §4.2), which is what makes small GPU batches
+//!    slightly *slower* — exactly the paper's Table 1 left columns.
+//!
+//! Calibration constants live in [`ModelParams`]; EXPERIMENTS.md compares
+//! the resulting table/figure shapes against the paper.
+
+use crate::device::{DeviceKind, DeviceSpec};
+use crate::graph::{Graph, Layer, Node};
+use crate::optimizer::{Plan, Segment, Stack};
+
+use super::traffic::{layer_cost_bf, layer_flops, sequence_cost_df};
+
+/// Calibration constants of the time model.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    /// Compute efficiency of tuned GEMM/conv libraries (cuDNN/MKL).
+    pub conv_eff: f64,
+    /// Compute efficiency of baseline element-wise/pool kernels.
+    pub simple_eff: f64,
+    /// Compute efficiency of BrainSlug generated kernels.
+    pub stack_eff: f64,
+    /// Fixed per-stack scheduler overhead (gather, allocate, dispatch).
+    pub stack_overhead_s: f64,
+    /// Fraction of peak memory bandwidth tuned kernels (GEMM libraries,
+    /// BrainSlug's generated vectorized kernels) achieve.
+    pub mem_eff: f64,
+    /// Fraction of peak memory bandwidth the *baseline's* element-wise /
+    /// pooling kernels achieve. On the paper's PyTorch 0.3 CPU path these
+    /// are scalar, non-streaming loops (§5.1) — far off the roofline; on
+    /// GPU they are ordinary CUDA kernels that stream reasonably well.
+    pub simple_mem_eff: f64,
+}
+
+impl ModelParams {
+    pub fn for_device(device: &DeviceSpec) -> Self {
+        match device.kind {
+            DeviceKind::Cpu => ModelParams {
+                // PyTorch-0.3-era CPU convolutions were im2col+GEMM
+                // (THNN), far below MKL's roofline.
+                conv_eff: 0.22,
+                simple_eff: 0.9,
+                stack_eff: 0.5,
+                stack_overhead_s: 4.0e-6,
+                mem_eff: 0.85,
+                simple_mem_eff: 0.18,
+            },
+            DeviceKind::Gpu => ModelParams {
+                conv_eff: 0.60,
+                simple_eff: 0.30,
+                stack_eff: 0.30,
+                // The paper's scheduler goes through the framework for
+                // gathering/allocation on every stack execution.
+                stack_overhead_s: 22.0e-6,
+                mem_eff: 0.80,
+                simple_mem_eff: 0.62,
+            },
+            DeviceKind::Tpu => ModelParams {
+                conv_eff: 0.55,
+                simple_eff: 0.30,
+                stack_eff: 0.40,
+                stack_overhead_s: 3.0e-6,
+                mem_eff: 0.90,
+                simple_mem_eff: 0.70,
+            },
+        }
+    }
+}
+
+/// Simulated time of one baseline layer.
+#[derive(Debug, Clone)]
+pub struct LayerTime {
+    pub node: usize,
+    pub name: String,
+    pub kind: &'static str,
+    pub seconds: f64,
+    pub optimizable: bool,
+}
+
+/// Baseline (breadth-first, PyTorch-style) simulation result.
+#[derive(Debug, Clone)]
+pub struct BaselineSim {
+    pub per_layer: Vec<LayerTime>,
+    pub total_s: f64,
+    /// Time spent in optimizable layers.
+    pub optimizable_s: f64,
+}
+
+/// BrainSlug plan simulation result.
+#[derive(Debug, Clone)]
+pub struct PlanSim {
+    pub total_s: f64,
+    /// Time spent executing collapsed stacks (incl. stack overheads).
+    pub stack_s: f64,
+    /// Time spent in untouched layers.
+    pub rest_s: f64,
+    pub num_stacks: usize,
+    pub num_sequences: usize,
+}
+
+/// Is this layer served by a tuned GEMM library in the baseline?
+fn is_gemm(layer: &Layer) -> bool {
+    matches!(layer, Layer::Conv2d { .. } | Layer::Linear { .. })
+}
+
+/// Baseline time of a single layer on `device`.
+pub fn baseline_layer_time(
+    graph: &Graph,
+    node: &Node,
+    device: &DeviceSpec,
+    p: &ModelParams,
+) -> f64 {
+    if matches!(node.layer, Layer::Input { .. } | Layer::Flatten) {
+        return 0.0;
+    }
+    let cost = layer_cost_bf(graph, node);
+    let flops = layer_flops(graph, node);
+
+    let (compute_rate, mem_rate) = match device.kind {
+        DeviceKind::Cpu => {
+            let scalar_peak = device.peak_flops / device.simd_lanes as f64;
+            if is_gemm(&node.layer) {
+                (device.peak_flops * p.conv_eff, device.mem_bw * p.mem_eff)
+            } else if matches!(node.layer, Layer::Pool2d { .. } | Layer::AdaptiveAvgPool { .. }) {
+                // Listing 4: pooling parallelises over batch only.
+                let batch = node.shape.batch().min(device.parallel_units);
+                let frac = batch as f64 / device.parallel_units as f64;
+                (
+                    scalar_peak * p.simple_eff * frac,
+                    device.mem_bw * p.simple_mem_eff
+                        * frac.max(1.0 / device.parallel_units as f64),
+                )
+            } else {
+                // Element-wise: parallel over all cores but scalar code.
+                (scalar_peak * p.simple_eff, device.mem_bw * p.simple_mem_eff)
+            }
+        }
+        DeviceKind::Gpu | DeviceKind::Tpu => {
+            if is_gemm(&node.layer) {
+                (device.peak_flops * p.conv_eff, device.mem_bw * p.mem_eff)
+            } else {
+                (
+                    device.peak_flops * p.simple_eff,
+                    device.mem_bw * p.simple_mem_eff,
+                )
+            }
+        }
+    };
+
+    let t_compute = if flops > 0.0 { flops / compute_rate } else { 0.0 };
+    let t_mem = cost.main_bytes / mem_rate;
+    device.launch_overhead_s + t_compute.max(t_mem)
+}
+
+/// Simulate the whole network breadth-first.
+pub fn simulate_baseline(graph: &Graph, device: &DeviceSpec) -> BaselineSim {
+    let p = ModelParams::for_device(device);
+    let mut per_layer = Vec::with_capacity(graph.nodes.len());
+    let mut total = 0.0;
+    let mut opt = 0.0;
+    for node in graph.nodes.iter().skip(1) {
+        let t = baseline_layer_time(graph, node, device, &p);
+        total += t;
+        if node.layer.is_optimizable() {
+            opt += t;
+        }
+        per_layer.push(LayerTime {
+            node: node.id,
+            name: node.name.clone(),
+            kind: node.layer.kind_name(),
+            seconds: t,
+            optimizable: node.layer.is_optimizable(),
+        });
+    }
+    BaselineSim {
+        per_layer,
+        total_s: total,
+        optimizable_s: opt,
+    }
+}
+
+/// Time of one collapsed stack (all its sequences + stack overhead).
+pub fn stack_time(graph: &Graph, stack: &Stack, device: &DeviceSpec, p: &ModelParams) -> f64 {
+    let mut t = p.stack_overhead_s;
+    for seq in &stack.sequences {
+        let cost = sequence_cost_df(graph, seq);
+        // BrainSlug kernels: vectorized, full parallelism (batch×channels
+        // ×bands on every device).
+        let t_compute = cost.flops / (device.peak_flops * p.stack_eff);
+        let t_main = cost.main_bytes / (device.mem_bw * p.mem_eff);
+        let t_cache = cost.cache_bytes / device.cache_bw;
+        t += device.launch_overhead_s + t_compute.max(t_main).max(t_cache);
+    }
+    t
+}
+
+/// Simulate a BrainSlug plan: stacks depth-first, the rest unchanged.
+pub fn simulate_plan(graph: &Graph, plan: &Plan, device: &DeviceSpec) -> PlanSim {
+    let p = ModelParams::for_device(device);
+    let mut stack_s = 0.0;
+    let mut rest_s = 0.0;
+    let mut n_stacks = 0;
+    let mut n_seqs = 0;
+    for seg in &plan.segments {
+        match seg {
+            Segment::Single(id) => {
+                rest_s += baseline_layer_time(graph, graph.node(*id), device, &p);
+            }
+            Segment::Stack(st) => {
+                stack_s += stack_time(graph, st, device, &p);
+                n_stacks += 1;
+                n_seqs += st.sequences.len();
+            }
+        }
+    }
+    PlanSim {
+        total_s: stack_s + rest_s,
+        stack_s,
+        rest_s,
+        num_stacks: n_stacks,
+        num_sequences: n_seqs,
+    }
+}
+
+/// Speed-up in the paper's convention: `(t_base / t_bs - 1) * 100%`.
+pub fn speedup_pct(t_base: f64, t_bs: f64) -> f64 {
+    (t_base / t_bs - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{optimize, CollapseOptions};
+    use crate::zoo;
+
+    fn sim(name: &str, batch: usize, device: &DeviceSpec) -> (f64, f64) {
+        let g = zoo::build(name, zoo::paper_config(name, batch));
+        let base = simulate_baseline(&g, device);
+        let plan = optimize(&g, device, &CollapseOptions::default());
+        let bs = simulate_plan(&g, &plan, device);
+        (base.total_s, bs.total_s)
+    }
+
+    #[test]
+    fn cpu_always_wins_at_batch_128() {
+        let cpu = DeviceSpec::paper_cpu();
+        for name in ["alexnet", "resnet18", "vgg16_bn", "squeezenet1_0", "densenet121"] {
+            let (b, s) = sim(name, 128, &cpu);
+            assert!(
+                speedup_pct(b, s) > 0.0,
+                "{name}: cpu speedup {:.1}% not positive",
+                speedup_pct(b, s)
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_small_batch_can_regress_large_batch_wins() {
+        let gpu = DeviceSpec::paper_gpu();
+        // Table 1 (GPU): ResNet-18 at batch 1 is negative, at 32 positive.
+        let (b1, s1) = sim("resnet18", 1, &gpu);
+        let (b32, s32) = sim("resnet18", 32, &gpu);
+        assert!(
+            speedup_pct(b1, s1) < speedup_pct(b32, s32),
+            "gpu speedup must grow with batch"
+        );
+        assert!(speedup_pct(b32, s32) > 0.0);
+    }
+
+    #[test]
+    fn bn_vgg_gains_more_than_plain_vgg() {
+        // Figure 13/14: VGG+BN gains exceed plain VGG because the BN
+        // layers collapse for free.
+        for device in [DeviceSpec::paper_cpu(), DeviceSpec::paper_gpu()] {
+            let (b, s) = sim("vgg16", 128, &device);
+            let (bb, sb) = sim("vgg16_bn", 128, &device);
+            assert!(
+                speedup_pct(bb, sb) > speedup_pct(b, s),
+                "{}: vgg16_bn {:.1}% <= vgg16 {:.1}%",
+                device.name,
+                speedup_pct(bb, sb),
+                speedup_pct(b, s)
+            );
+        }
+    }
+
+    #[test]
+    fn densenet_among_top_gainers_on_gpu() {
+        let gpu = DeviceSpec::paper_gpu();
+        let (bd, sd) = sim("densenet121", 128, &gpu);
+        let (br, sr) = sim("resnet152", 128, &gpu);
+        assert!(
+            speedup_pct(bd, sd) > speedup_pct(br, sr),
+            "densenet121 {:.1}% should beat resnet152 {:.1}%",
+            speedup_pct(bd, sd),
+            speedup_pct(br, sr)
+        );
+    }
+
+    #[test]
+    fn cpu_batch1_pooling_bug_gives_large_gains() {
+        // §5.2: the Listing-4 bug makes baseline pooling single-core at
+        // batch 1, so SqueezeNet (pool-heavy) shows large CPU gains.
+        let cpu = DeviceSpec::paper_cpu();
+        let (b, s) = sim("squeezenet1_0", 1, &cpu);
+        let pct = speedup_pct(b, s);
+        assert!(pct > 15.0, "squeezenet1_0 cpu batch1 speedup {pct:.1}% too low");
+    }
+
+    #[test]
+    fn optimizable_fraction_larger_on_gpu_than_cpu() {
+        // Table 2: % of total time for optimizable layers is much larger
+        // on GPU (13.7-47.4%) than on CPU (2.5-16.9%)? Note: CPU numbers
+        // are lower because un-vectorized pooling inflates ... actually
+        // the paper's CPU % is lower because convs are relatively slower
+        // on CPU. Verify the GPU fraction exceeds the CPU fraction for
+        // densenets.
+        let g = zoo::build("densenet121", zoo::paper_config("densenet121", 128));
+        let cpu = simulate_baseline(&g, &DeviceSpec::paper_cpu());
+        let gpu = simulate_baseline(&g, &DeviceSpec::paper_gpu());
+        let cpu_frac = cpu.optimizable_s / cpu.total_s;
+        let gpu_frac = gpu.optimizable_s / gpu.total_s;
+        assert!(
+            gpu_frac > cpu_frac,
+            "gpu opt fraction {gpu_frac:.2} <= cpu {cpu_frac:.2}"
+        );
+    }
+
+    #[test]
+    fn speedup_pct_convention() {
+        assert!((speedup_pct(2.0, 1.0) - 100.0).abs() < 1e-12);
+        assert!((speedup_pct(1.0, 2.0) + 50.0).abs() < 1e-12);
+    }
+}

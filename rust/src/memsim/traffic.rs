@@ -1,0 +1,230 @@
+//! Per-layer FLOP and main-memory traffic accounting.
+//!
+//! Breadth-first execution materializes every layer's output: each layer
+//! reads its inputs and parameters from main memory and writes its output
+//! back. Depth-first execution of a collapsed sequence reads the sequence
+//! input once (times the halo redundancy factor) and writes only the
+//! sequence output; all intermediates stay in the fast tier. These byte
+//! counts are the quantity the paper's speed-ups derive from, and they
+//! feed the [`super::perfmodel`] time model.
+
+use crate::graph::{Graph, Layer, Node, PoolKind, Shape};
+use crate::optimizer::Sequence;
+
+/// FLOPs and byte movement of one executed unit (layer or sequence).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UnitCost {
+    /// Floating-point operations (multiply-accumulate counted as 2).
+    pub flops: f64,
+    /// Bytes read from + written to main memory.
+    pub main_bytes: f64,
+    /// Bytes moved through the fast tier (cache/smem/VMEM) beyond the
+    /// main-memory traffic (depth-first intermediates).
+    pub cache_bytes: f64,
+}
+
+impl UnitCost {
+    pub fn add(&mut self, other: &UnitCost) {
+        self.flops += other.flops;
+        self.main_bytes += other.main_bytes;
+        self.cache_bytes += other.cache_bytes;
+    }
+}
+
+/// Parameter bytes of a node (conv weights, BN stats, ...).
+fn param_bytes(graph: &Graph, node: &Node) -> f64 {
+    let input = match node.inputs.first() {
+        Some(&i) => &graph.node(i).shape,
+        None => return 0.0,
+    };
+    node.layer
+        .param_shapes(input)
+        .iter()
+        .map(|s| s.bytes() as f64)
+        .sum()
+}
+
+/// FLOPs of one layer.
+pub fn layer_flops(graph: &Graph, node: &Node) -> f64 {
+    let out = &node.shape;
+    let input = node.inputs.first().map(|&i| &graph.node(i).shape);
+    match &node.layer {
+        Layer::Input { .. } => 0.0,
+        Layer::Conv2d { window, bias, .. } => {
+            let cin = input.expect("conv input").channels() as f64;
+            let mac = out.numel() as f64 * cin * (window.kernel.0 * window.kernel.1) as f64;
+            2.0 * mac + if *bias { out.numel() as f64 } else { 0.0 }
+        }
+        Layer::Linear { bias, .. } => {
+            let cin = input.expect("linear input").channels() as f64;
+            2.0 * out.numel() as f64 * cin + if *bias { out.numel() as f64 } else { 0.0 }
+        }
+        Layer::Pool2d { window, kind, .. } => {
+            let per_out = (window.kernel.0 * window.kernel.1) as f64
+                + if matches!(kind, PoolKind::Avg) { 1.0 } else { 0.0 };
+            out.numel() as f64 * per_out
+        }
+        Layer::AdaptiveAvgPool { .. } => {
+            input.map(|i| i.numel() as f64).unwrap_or(0.0) + out.numel() as f64
+        }
+        // Folded inference BN: one multiply + one add per element.
+        Layer::BatchNorm2d { .. } => 2.0 * out.numel() as f64,
+        Layer::Relu => out.numel() as f64,
+        Layer::Add => out.numel() as f64,
+        Layer::Dropout { .. } | Layer::Flatten | Layer::Concat => 0.0,
+    }
+}
+
+/// Breadth-first cost of one layer: read inputs + params, write output.
+pub fn layer_cost_bf(graph: &Graph, node: &Node) -> UnitCost {
+    if matches!(node.layer, Layer::Input { .. }) {
+        return UnitCost::default();
+    }
+    let in_bytes: f64 = node
+        .inputs
+        .iter()
+        .map(|&i| graph.node(i).shape.bytes() as f64)
+        .sum();
+    // Flatten is a metadata-only reshape in every framework.
+    if matches!(node.layer, Layer::Flatten) {
+        return UnitCost::default();
+    }
+    UnitCost {
+        flops: layer_flops(graph, node),
+        main_bytes: in_bytes + node.shape.bytes() as f64 + param_bytes(graph, node),
+        cache_bytes: 0.0,
+    }
+}
+
+/// Depth-first cost of one collapsed sequence: input (with halo
+/// redundancy) + params in, output out; intermediates through the fast
+/// tier only. FLOPs also scale with the halo factor — overlapping bands
+/// recompute halo values (§7 Limitations discusses exactly this
+/// redundancy).
+pub fn sequence_cost_df(graph: &Graph, seq: &Sequence) -> UnitCost {
+    let halo = seq.halo_overlap_factor();
+    let in_bytes = seq.in_shape().bytes() as f64;
+    let out_bytes = seq.out_shape().bytes() as f64;
+
+    let mut flops = 0.0;
+    let mut params = 0.0;
+    let mut inter_bytes = 0.0;
+    let all_ops: Vec<_> = seq.steps.iter().flat_map(|s| &s.ops).collect();
+    for (i, op) in all_ops.iter().enumerate() {
+        let node = graph.node(op.node);
+        flops += layer_flops(graph, node);
+        params += param_bytes(graph, node);
+        // Every op boundary except the last writes an intermediate into
+        // the fast tier (and the next op reads it back).
+        if i + 1 < all_ops.len() {
+            inter_bytes += 2.0 * op.out_shape.bytes() as f64;
+        }
+    }
+    UnitCost {
+        flops: flops * halo,
+        main_bytes: in_bytes * halo + out_bytes + params,
+        cache_bytes: inter_bytes * halo + (in_bytes + out_bytes) * halo.max(1.0),
+    }
+}
+
+/// Whole-network breadth-first totals.
+pub fn graph_cost_bf(graph: &Graph) -> UnitCost {
+    let mut total = UnitCost::default();
+    for node in graph.nodes.iter().skip(1) {
+        total.add(&layer_cost_bf(graph, node));
+    }
+    total
+}
+
+/// Shape helper used by reports.
+pub fn activation_bytes(shape: &Shape) -> f64 {
+    shape.bytes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::graph::{Layer, Window2d};
+    use crate::optimizer::{optimize, CollapseOptions, Segment};
+
+    fn stacked_net(blocks: usize, c: usize, h: usize) -> Graph {
+        let mut g = Graph::new("blocks", Shape::nchw(1, c, h, h));
+        for i in 0..blocks {
+            g.push(
+                format!("b{i}.pool"),
+                Layer::Pool2d {
+                    kind: PoolKind::Max,
+                    window: Window2d::square(3, 1, 1),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+            );
+            g.push(format!("b{i}.bn"), Layer::BatchNorm2d { eps: 1e-5 });
+            g.push(format!("b{i}.relu"), Layer::Relu);
+        }
+        g
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut g = Graph::new("c", Shape::nchw(1, 3, 8, 8));
+        g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 16,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        let node = g.node(1);
+        // 2 * (1*16*8*8) * 3 * 9
+        assert_eq!(layer_flops(&g, node), 2.0 * 1024.0 * 27.0);
+    }
+
+    #[test]
+    fn df_moves_fewer_main_bytes_than_bf() {
+        let g = stacked_net(5, 16, 64);
+        let plan = optimize(&g, &DeviceSpec::paper_gpu(), &CollapseOptions::default());
+        let bf = graph_cost_bf(&g);
+        let mut df = UnitCost::default();
+        for seg in &plan.segments {
+            match seg {
+                Segment::Stack(st) => {
+                    for seq in &st.sequences {
+                        df.add(&sequence_cost_df(&g, seq));
+                    }
+                }
+                Segment::Single(id) => df.add(&layer_cost_bf(&g, g.node(*id))),
+            }
+        }
+        assert!(
+            df.main_bytes < bf.main_bytes * 0.5,
+            "df {} vs bf {}",
+            df.main_bytes,
+            bf.main_bytes
+        );
+        // But the intermediates now travel through the fast tier.
+        assert!(df.cache_bytes > 0.0);
+    }
+
+    #[test]
+    fn bf_totals_scale_with_batch() {
+        let g1 = stacked_net(2, 8, 32);
+        let g4 = g1.with_batch(4);
+        let c1 = graph_cost_bf(&g1);
+        let c4 = graph_cost_bf(&g4);
+        assert!((c4.flops / c1.flops - 4.0).abs() < 1e-9);
+        // bytes scale slightly sub-4x because params are batch-invariant.
+        assert!(c4.main_bytes < 4.0 * c1.main_bytes);
+        assert!(c4.main_bytes > 3.5 * c1.main_bytes);
+    }
+
+    #[test]
+    fn flatten_and_dropout_are_free() {
+        let mut g = Graph::new("f", Shape::nchw(1, 4, 4, 4));
+        g.push("flatten", Layer::Flatten);
+        let n = g.node(1);
+        assert_eq!(layer_cost_bf(&g, n), UnitCost::default());
+    }
+}

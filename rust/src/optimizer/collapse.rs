@@ -1,0 +1,529 @@
+//! The collapse process (§4.1, Figure 9, Listing 1): group a stack's
+//! operations into *steps* (at most one non-element-wise op per step) and
+//! pack steps into *sequences* whose depth-first working set fits the
+//! device's fast-memory budget.
+//!
+//! ## Tiling model
+//!
+//! Depth-first execution processes one *band* of `tile_rows` output rows
+//! (full width, one (batch, channel) plane) through all steps of a
+//! sequence before touching the next band — the Pallas kernel's grid is
+//! `(batch·channels, n_bands)`. Working backwards through the steps, a
+//! band of `r` output rows at step `i` needs `(r-1)·stride_h + kernel_h`
+//! input rows, so earlier steps hold progressively taller bands (the halo
+//! growth that produces Figure 10's spill artifacts). The working set of
+//! a sequence is the largest adjacent in+out band pair (two VMEM/cache
+//! buffers, ping-pong per §4.4), plus resident per-channel parameters.
+
+use crate::device::DeviceSpec;
+use crate::graph::Shape;
+
+use super::ops::{OpKind, Operation};
+
+/// Band geometry of a tensor: (rows, elements per row). Rank-4 NCHW
+/// tensors band over H within one (batch, channel) plane; rank-2 (N, F)
+/// tensors band over the batch dimension (pure element-wise stacks in
+/// classifier heads).
+fn row_geometry(shape: &Shape) -> (usize, usize) {
+    match shape.rank() {
+        4 => (shape.height(), shape.width()),
+        2 => (shape.batch(), shape.channels()),
+        r => panic!("unsupported rank {r} in collapse"),
+    }
+}
+
+/// A step: a run of element-wise ops with at most one pooling op.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub ops: Vec<Operation>,
+}
+
+impl Step {
+    pub fn new() -> Self {
+        Step { ops: Vec::new() }
+    }
+
+    /// Listing 1's `onlyElementwise()`.
+    pub fn only_elementwise(&self) -> bool {
+        self.ops.iter().all(|o| o.kind.is_elementwise())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The pooling op of this step, if any.
+    pub fn pool(&self) -> Option<&Operation> {
+        self.ops.iter().find(|o| !o.kind.is_elementwise())
+    }
+
+    /// Shape entering / leaving the step (full-tensor).
+    pub fn in_shape(&self) -> &Shape {
+        &self.ops.first().expect("empty step").in_shape
+    }
+
+    pub fn out_shape(&self) -> &Shape {
+        &self.ops.last().expect("empty step").out_shape
+    }
+
+    /// (kernel_h, stride_h) of the step's spatial reduction (1,1 if pure
+    /// element-wise). Used for band back-propagation.
+    pub fn row_window(&self) -> (usize, usize) {
+        match self.pool().map(|p| &p.kind) {
+            Some(OpKind::Pool { window, .. }) => (window.kernel.0, window.stride.0),
+            _ => (1, 1),
+        }
+    }
+
+    /// Input rows required to produce `rows` output rows.
+    pub fn in_rows(&self, rows: usize) -> usize {
+        let (k, s) = self.row_window();
+        (rows - 1) * s + k
+    }
+
+    /// Per-channel parameter bytes resident while this step runs.
+    pub fn param_bytes_per_channel(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|o| o.kind.param_bytes_per_channel())
+            .sum()
+    }
+
+    pub fn sig(&self) -> String {
+        self.ops
+            .iter()
+            .map(|o| o.kind.sig())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl Default for Step {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A sequence: consecutive steps whose depth-first working set fits the
+/// device budget. Sequence boundaries synchronize through main memory.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub steps: Vec<Step>,
+    /// Output rows per depth-first band (chosen by [`collapse`]).
+    pub tile_rows: usize,
+}
+
+impl Sequence {
+    pub fn in_shape(&self) -> &Shape {
+        self.steps.first().expect("empty sequence").in_shape()
+    }
+
+    pub fn out_shape(&self) -> &Shape {
+        self.steps.last().expect("empty sequence").out_shape()
+    }
+
+    /// Input rows of the *first* step needed for one band of `rows`
+    /// final-output rows — the halo-grown extent.
+    pub fn in_rows_for(&self, rows: usize) -> usize {
+        let mut r = rows;
+        for step in self.steps.iter().rev() {
+            r = step.in_rows(r);
+        }
+        r
+    }
+
+    /// Working-set bytes for a band of `rows` output rows: the largest
+    /// (input band + output band) pair across steps, plus resident
+    /// per-channel params. Matches the two-buffer ping-pong execution.
+    pub fn working_set_bytes(&self, rows: usize) -> usize {
+        // Band heights entering each step (and leaving the last).
+        let mut heights = Vec::with_capacity(self.steps.len() + 1);
+        let mut r = rows;
+        heights.push(r);
+        for step in self.steps.iter().rev() {
+            r = step.in_rows(r);
+            heights.push(r);
+        }
+        heights.reverse(); // heights[i] = rows entering step i; last = out
+        let mut worst = 0usize;
+        let mut params = 0usize;
+        for (i, step) in self.steps.iter().enumerate() {
+            let in_shape = step.in_shape();
+            let out_shape = step.out_shape();
+            let (_, in_row_elems) = row_geometry(in_shape);
+            let (_, out_row_elems) = row_geometry(out_shape);
+            let in_bytes = heights[i] * in_row_elems * in_shape.dtype.bytes();
+            let out_bytes = heights[i + 1] * out_row_elems * out_shape.dtype.bytes();
+            worst = worst.max(in_bytes + out_bytes);
+            params += step.param_bytes_per_channel();
+        }
+        worst + params
+    }
+
+    /// Total steps' ops count.
+    pub fn num_ops(&self) -> usize {
+        self.steps.iter().map(|s| s.ops.len()).sum()
+    }
+
+    pub fn sig(&self) -> String {
+        self.steps
+            .iter()
+            .map(|s| s.sig())
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Redundancy factor of the halo: input rows actually read per band
+    /// divided by the rows a non-overlapping decomposition would read.
+    /// 1.0 = no redundancy. Drives the memsim traffic model.
+    pub fn halo_overlap_factor(&self) -> f64 {
+        let (out_h, _) = row_geometry(self.out_shape());
+        let rows = self.tile_rows.min(out_h);
+        let n_bands = out_h.div_ceil(rows);
+        let read_rows = (n_bands * self.in_rows_for(rows)) as f64;
+        let (in_h, _) = row_geometry(self.in_shape());
+        (read_rows / in_h as f64).max(1.0)
+    }
+}
+
+/// Collapse strategy: Figure 10 evaluates 1-step, 5-step and unrestricted
+/// sequences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollapseOptions {
+    /// Maximum steps per sequence (`None` = unrestricted).
+    pub max_steps_per_sequence: Option<usize>,
+    /// Minimum output rows per band (keep SIMD lanes busy).
+    pub min_tile_rows: usize,
+}
+
+impl Default for CollapseOptions {
+    fn default() -> Self {
+        CollapseOptions {
+            max_steps_per_sequence: None,
+            min_tile_rows: 1,
+        }
+    }
+}
+
+/// Listing 1 steps #3 and #4: group operations into steps, then pack
+/// steps into sequences against `device.resource_limit()`, choosing each
+/// sequence's band height.
+pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) -> Vec<Sequence> {
+    assert!(!ops.is_empty(), "collapse() on empty op list");
+
+    // #3: group operations in steps — an op joins the current step unless
+    // it is non-element-wise and the step already has one.
+    let mut steps: Vec<Step> = Vec::new();
+    let mut step = Step::new();
+    for op in ops {
+        if !op.kind.is_elementwise() && !step.only_elementwise() {
+            steps.push(step);
+            step = Step::new();
+        }
+        step.ops.push(op.clone());
+    }
+    if !step.is_empty() {
+        steps.push(step);
+    }
+
+    // #4: group steps in sequences subject to the working-set budget.
+    let budget = device.resource_limit();
+    let mut sequences: Vec<Sequence> = Vec::new();
+    let mut current: Vec<Step> = Vec::new();
+    for st in steps {
+        current.push(st);
+        let over_len = opts
+            .max_steps_per_sequence
+            .is_some_and(|m| current.len() > m);
+        let probe = Sequence {
+            steps: current.clone(),
+            tile_rows: opts.min_tile_rows,
+        };
+        let over_mem = probe.working_set_bytes(opts.min_tile_rows) > budget;
+        if (over_len || over_mem) && current.len() > 1 {
+            let st = current.pop().unwrap();
+            sequences.push(seal(current, device, opts));
+            current = vec![st];
+        }
+    }
+    if !current.is_empty() {
+        sequences.push(seal(current, device, opts));
+    }
+    sequences
+}
+
+/// Finalize a sequence: grow the band height while the working set fits
+/// (§4.1: "in the case that the cache size limit is not reached, we
+/// increase [the tile] so that each SIMD unit may calculate multiple
+/// output values").
+fn seal(steps: Vec<Step>, device: &DeviceSpec, opts: &CollapseOptions) -> Sequence {
+    let (out_h, _) = row_geometry(steps.last().expect("empty sequence").out_shape());
+    let budget = device.resource_limit();
+    let mut seq = Sequence {
+        steps,
+        tile_rows: opts.min_tile_rows,
+    };
+    let mut rows = opts.min_tile_rows.min(out_h.max(1));
+    while rows < out_h && seq.working_set_bytes(rows + 1) <= budget {
+        rows += 1;
+    }
+    seq.tile_rows = rows;
+    seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Layer, PoolKind, Window2d};
+
+    fn mk_ops(spec: &[(&str, usize)], c: usize, h: usize) -> Vec<Operation> {
+        // spec: sequence of ("bn"|"relu"|"id"|"max3s1p1"|"max2s2") ops.
+        let mut ops = Vec::new();
+        let mut shape = Shape::nchw(1, c, h, h);
+        for (i, (kind, _)) in spec.iter().enumerate() {
+            let layer = match *kind {
+                "bn" => Layer::BatchNorm2d { eps: 1e-5 },
+                "relu" => Layer::Relu,
+                "id" => Layer::Dropout { p: 0.5 },
+                "max3s1p1" => Layer::Pool2d {
+                    kind: PoolKind::Max,
+                    window: Window2d::square(3, 1, 1),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+                "max2s2" => Layer::Pool2d {
+                    kind: PoolKind::Max,
+                    window: Window2d::square(2, 2, 0),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+                other => panic!("unknown {other}"),
+            };
+            let out = layer.infer_shape(&[&shape]).unwrap();
+            ops.push(
+                Operation::from_layer(i + 1, &format!("op{i}"), &layer, &shape, &out).unwrap(),
+            );
+            shape = out;
+        }
+        ops
+    }
+
+    fn dev(budget: usize) -> DeviceSpec {
+        DeviceSpec {
+            fast_mem_bytes: budget,
+            ..DeviceSpec::paper_gpu()
+        }
+    }
+
+    #[test]
+    fn step_grouping_one_pool_per_step() {
+        // Element-wise ops always join the current step; a pooling op
+        // joins only if the step has none yet (Listing 1 #3). So
+        // bn,relu,max,bn,relu,max groups as [bn,relu,max,bn,relu],[max].
+        let ops = mk_ops(
+            &[
+                ("bn", 0),
+                ("relu", 0),
+                ("max3s1p1", 0),
+                ("bn", 0),
+                ("relu", 0),
+                ("max3s1p1", 0),
+            ],
+            8,
+            32,
+        );
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        let steps: Vec<&Step> = seqs.iter().flat_map(|s| &s.steps).collect();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].sig(), "bn,relu,maxpool_k3x3s1x1p1x1,bn,relu");
+        assert_eq!(steps[1].sig(), "maxpool_k3x3s1x1p1x1");
+        // Fig 10's block order <MaxPool,BN,ReLU> groups one block per step.
+        let ops = mk_ops(
+            &[
+                ("max3s1p1", 0),
+                ("bn", 0),
+                ("relu", 0),
+                ("max3s1p1", 0),
+                ("bn", 0),
+                ("relu", 0),
+            ],
+            8,
+            32,
+        );
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        let steps: Vec<&Step> = seqs.iter().flat_map(|s| &s.steps).collect();
+        assert_eq!(steps.len(), 2);
+        for s in steps {
+            assert_eq!(s.sig(), "maxpool_k3x3s1x1p1x1,bn,relu");
+        }
+    }
+
+    #[test]
+    fn trailing_elementwise_joins_pool_step() {
+        let ops = mk_ops(&[("max3s1p1", 0), ("bn", 0), ("relu", 0)], 8, 32);
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        assert_eq!(seqs.len(), 1);
+        assert_eq!(seqs[0].steps.len(), 1);
+        assert_eq!(seqs[0].steps[0].sig(), "maxpool_k3x3s1x1p1x1,bn,relu");
+    }
+
+    #[test]
+    fn band_backprop_through_strided_pool() {
+        let ops = mk_ops(&[("max2s2", 0), ("max2s2", 0)], 4, 32);
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        let seq = &seqs[0];
+        // 1 output row needs 2 rows mid, 4 rows input.
+        assert_eq!(seq.in_rows_for(1), 4);
+        assert_eq!(seq.in_rows_for(2), 8);
+    }
+
+    #[test]
+    fn halo_growth_with_stacked_same_pools() {
+        // k3 s1 p1 pools: each step adds 2 rows of halo.
+        let ops = mk_ops(
+            &[("max3s1p1", 0), ("max3s1p1", 0), ("max3s1p1", 0)],
+            4,
+            32,
+        );
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        assert_eq!(seqs.len(), 1);
+        assert_eq!(seqs[0].in_rows_for(1), 7); // 1 + 2*3
+    }
+
+    #[test]
+    fn memory_budget_splits_sequences() {
+        // Huge images + tiny budget force per-step sequences.
+        let ops = mk_ops(
+            &[
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+            ],
+            32,
+            224,
+        );
+        let tiny = dev(4 * 1024);
+        let unrestricted = collapse(&ops, &tiny, &CollapseOptions::default());
+        assert!(unrestricted.len() > 1, "tiny budget must split");
+        let big = dev(64 * 1024 * 1024);
+        let merged = collapse(&ops, &big, &CollapseOptions::default());
+        assert_eq!(merged.len(), 1, "huge budget keeps one sequence");
+    }
+
+    #[test]
+    fn max_steps_strategy() {
+        let ops = mk_ops(
+            &[
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+            ],
+            8,
+            32,
+        );
+        let one = collapse(
+            &ops,
+            &dev(1 << 24),
+            &CollapseOptions {
+                max_steps_per_sequence: Some(1),
+                ..Default::default()
+            },
+        );
+        assert_eq!(one.len(), 5);
+        let two = collapse(
+            &ops,
+            &dev(1 << 24),
+            &CollapseOptions {
+                max_steps_per_sequence: Some(2),
+                ..Default::default()
+            },
+        );
+        assert_eq!(two.len(), 3);
+    }
+
+    #[test]
+    fn ops_partition_exactly_across_sequences() {
+        let ops = mk_ops(
+            &[
+                ("bn", 0),
+                ("relu", 0),
+                ("max3s1p1", 0),
+                ("bn", 0),
+                ("max2s2", 0),
+                ("relu", 0),
+            ],
+            16,
+            64,
+        );
+        for budget in [2 * 1024, 16 * 1024, 1 << 22] {
+            let seqs = collapse(&ops, &dev(budget), &CollapseOptions::default());
+            let flat: Vec<&Operation> = seqs
+                .iter()
+                .flat_map(|s| &s.steps)
+                .flat_map(|st| &st.ops)
+                .collect();
+            assert_eq!(flat.len(), ops.len(), "budget {budget}");
+            for (a, b) in flat.iter().zip(ops.iter()) {
+                assert_eq!(a.node, b.node, "budget {budget}");
+            }
+            // Shapes chain across sequence boundaries.
+            for w in seqs.windows(2) {
+                assert_eq!(w[0].out_shape(), w[1].in_shape());
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rows_grow_with_budget() {
+        let ops = mk_ops(&[("bn", 0), ("relu", 0)], 8, 64);
+        let small = collapse(&ops, &dev(2 * 1024), &CollapseOptions::default());
+        let large = collapse(&ops, &dev(64 * 1024), &CollapseOptions::default());
+        assert!(large[0].tile_rows >= small[0].tile_rows);
+        // And the chosen tile respects the budget.
+        for s in [&small[0], &large[0]] {
+            assert!(s.working_set_bytes(s.tile_rows) <= 64 * 1024);
+        }
+    }
+
+    #[test]
+    fn halo_overlap_factor_increases_with_depth() {
+        let shallow = collapse(
+            &mk_ops(&[("max3s1p1", 0)], 4, 64),
+            &dev(4 * 1024),
+            &CollapseOptions::default(),
+        );
+        let deep = collapse(
+            &mk_ops(
+                &[
+                    ("max3s1p1", 0),
+                    ("max3s1p1", 0),
+                    ("max3s1p1", 0),
+                    ("max3s1p1", 0),
+                    ("max3s1p1", 0),
+                    ("max3s1p1", 0),
+                ],
+                4,
+                64,
+            ),
+            &dev(4 * 1024),
+            &CollapseOptions::default(),
+        );
+        // Deep single sequence (if it fits) must have a worse halo factor
+        // than the shallow one.
+        if deep.len() == 1 {
+            assert!(deep[0].halo_overlap_factor() >= shallow[0].halo_overlap_factor());
+        }
+    }
+
+    #[test]
+    fn elementwise_only_stack_single_step() {
+        let ops = mk_ops(&[("bn", 0), ("relu", 0), ("id", 0), ("relu", 0)], 8, 32);
+        let seqs = collapse(&ops, &dev(16 * 1024), &CollapseOptions::default());
+        assert_eq!(seqs.len(), 1);
+        assert_eq!(seqs[0].steps.len(), 1);
+        assert!(seqs[0].steps[0].only_elementwise());
+    }
+}

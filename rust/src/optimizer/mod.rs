@@ -1,0 +1,24 @@
+//! The BrainSlug optimizer — the paper's compile phase (§4.1).
+//!
+//! * [`ops`] — maps optimizable layers onto basic computational
+//!   operations (Listing 1 step #2).
+//! * [`collapse`] — groups operations into steps and packs steps into
+//!   sequences against the device's fast-memory budget (steps #3, #4),
+//!   choosing the depth-first band height per sequence.
+//! * [`plan`] — the Network Analyzer: detects maximal optimizable chains
+//!   (step #1), collapses each into a [`Stack`], dedups identical stacks,
+//!   and emits the [`Plan`] the scheduler executes (step #5).
+//!
+//! Code generation (the paper's step 5 proper) happens on the python side
+//! from the same stack signatures: `brainslug emit-requests` serializes
+//! every unique stack, `python/compile/aot.py` lowers one fused Pallas
+//! kernel per signature to an HLO artifact, and the scheduler binds them
+//! back by name at load time.
+
+pub mod collapse;
+pub mod ops;
+pub mod plan;
+
+pub use collapse::{collapse, CollapseOptions, Sequence, Step};
+pub use ops::{OpKind, Operation};
+pub use plan::{fnv64_hex, optimize, Plan, Segment, Stack};

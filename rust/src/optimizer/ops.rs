@@ -1,0 +1,172 @@
+//! Mapping from graph layers to the collapser's basic computational
+//! operations (§4.1 "Collapse Process", step 2 of Listing 1).
+//!
+//! Optimizable layers map 1:1 onto operations here: element-wise layers
+//! (batch-norm, ReLU, dropout) become [`OpKind`] element-wise ops, pooling
+//! layers become window ops. Inference-mode batch normalization is a
+//! per-channel affine transform, so it is represented (and code-generated)
+//! as `y = x * scale[c] + shift[c]` with `scale`/`shift` precomputed from
+//! (gamma, beta, mean, var) — the same folding the paper's code generator
+//! performs.
+
+use crate::graph::{Layer, NodeId, PoolKind, Shape, Window2d};
+
+/// The computational kind of one collapsed operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Per-channel affine (folded inference batch-norm).
+    BnAffine { eps: f32 },
+    /// max(x, 0).
+    Relu,
+    /// Identity (inference-mode dropout). Kept so layer accounting and
+    /// signatures match the network structure.
+    Identity,
+    /// 2-D window reduction.
+    Pool {
+        kind: PoolKind,
+        window: Window2d,
+        ceil_mode: bool,
+        count_include_pad: bool,
+    },
+}
+
+impl OpKind {
+    pub fn is_elementwise(&self) -> bool {
+        !matches!(self, OpKind::Pool { .. })
+    }
+
+    /// Stable signature fragment (must match python/compile/stacks.py).
+    pub fn sig(&self) -> String {
+        match self {
+            OpKind::BnAffine { .. } => "bn".into(),
+            OpKind::Relu => "relu".into(),
+            OpKind::Identity => "id".into(),
+            OpKind::Pool {
+                kind,
+                window,
+                ceil_mode,
+                count_include_pad,
+            } => {
+                let k = match kind {
+                    PoolKind::Max => "max",
+                    PoolKind::Avg => "avg",
+                };
+                let mut s = format!("{}pool_{}", k, window.sig());
+                if *ceil_mode {
+                    s.push_str("_ceil");
+                }
+                if matches!(kind, PoolKind::Avg) && !*count_include_pad {
+                    s.push_str("_nip");
+                }
+                s
+            }
+        }
+    }
+
+    /// Bytes of per-channel parameters this op keeps resident per channel
+    /// (folded BN: scale + shift).
+    pub fn param_bytes_per_channel(&self) -> usize {
+        match self {
+            OpKind::BnAffine { .. } => 2 * 4,
+            _ => 0,
+        }
+    }
+}
+
+/// One operation inside a stack, tied back to its originating graph node.
+#[derive(Debug, Clone)]
+pub struct Operation {
+    pub node: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+}
+
+impl Operation {
+    /// Build the operation for an optimizable layer; `None` otherwise.
+    pub fn from_layer(node: NodeId, name: &str, layer: &Layer, in_shape: &Shape, out_shape: &Shape) -> Option<Operation> {
+        let kind = match layer {
+            Layer::BatchNorm2d { eps } => OpKind::BnAffine { eps: *eps },
+            Layer::Relu => OpKind::Relu,
+            Layer::Dropout { .. } => OpKind::Identity,
+            Layer::Pool2d {
+                kind,
+                window,
+                ceil_mode,
+                count_include_pad,
+            } => OpKind::Pool {
+                kind: *kind,
+                window: *window,
+                ceil_mode: *ceil_mode,
+                count_include_pad: *count_include_pad,
+            },
+            _ => return None,
+        };
+        Some(Operation {
+            node,
+            name: name.to_string(),
+            kind,
+            in_shape: in_shape.clone(),
+            out_shape: out_shape.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_classification() {
+        assert!(OpKind::Relu.is_elementwise());
+        assert!(OpKind::BnAffine { eps: 1e-5 }.is_elementwise());
+        assert!(OpKind::Identity.is_elementwise());
+        let pool = OpKind::Pool {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 1, 1),
+            ceil_mode: false,
+            count_include_pad: true,
+        };
+        assert!(!pool.is_elementwise());
+    }
+
+    #[test]
+    fn signatures() {
+        assert_eq!(OpKind::Relu.sig(), "relu");
+        assert_eq!(OpKind::BnAffine { eps: 1e-3 }.sig(), "bn");
+        let pool = OpKind::Pool {
+            kind: PoolKind::Avg,
+            window: Window2d::square(2, 2, 0),
+            ceil_mode: false,
+            count_include_pad: false,
+        };
+        assert_eq!(pool.sig(), "avgpool_k2x2s2x2p0x0_nip");
+        let mp = OpKind::Pool {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 2, 0),
+            ceil_mode: true,
+            count_include_pad: true,
+        };
+        assert_eq!(mp.sig(), "maxpool_k3x3s2x2p0x0_ceil");
+    }
+
+    #[test]
+    fn from_layer_filters_nonoptimizable() {
+        let s = Shape::nchw(1, 4, 8, 8);
+        assert!(Operation::from_layer(1, "relu", &Layer::Relu, &s, &s).is_some());
+        assert!(Operation::from_layer(
+            1,
+            "conv",
+            &Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: false
+            },
+            &s,
+            &s
+        )
+        .is_none());
+        assert!(Operation::from_layer(1, "add", &Layer::Add, &s, &s).is_none());
+    }
+}

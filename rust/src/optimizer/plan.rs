@@ -1,0 +1,382 @@
+//! Network analysis and plan construction (§4.1 steps 1, 2, 5 of
+//! Listing 1): walk the DAG, gather maximal runs of optimizable layers
+//! into [`Stack`]s, collapse each stack into sequences, and emit an
+//! execution [`Plan`] where stacks are replaced by fused-kernel segments
+//! — the paper's "special BrainSlug layer".
+
+use std::collections::HashMap;
+
+use crate::device::DeviceSpec;
+use crate::graph::{Graph, NodeId, Shape};
+
+use super::collapse::{collapse, CollapseOptions, Sequence};
+use super::ops::Operation;
+
+/// A detected stack: a maximal chain of consecutive optimizable layers,
+/// collapsed into sequences.
+#[derive(Debug, Clone)]
+pub struct Stack {
+    /// Graph nodes absorbed, in execution order.
+    pub nodes: Vec<NodeId>,
+    pub sequences: Vec<Sequence>,
+    /// Canonical structure signature (dedup + artifact naming).
+    pub signature: String,
+}
+
+impl Stack {
+    pub fn in_shape(&self) -> &Shape {
+        self.sequences.first().expect("empty stack").in_shape()
+    }
+
+    pub fn out_shape(&self) -> &Shape {
+        self.sequences.last().expect("empty stack").out_shape()
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.sequences.iter().map(|s| s.num_ops()).sum()
+    }
+
+    /// Artifact name for this stack's fused executable.
+    pub fn artifact_name(&self) -> String {
+        format!("stack_{}", fnv64_hex(&self.signature))
+    }
+}
+
+/// One schedulable unit of the optimized network.
+#[derive(Debug, Clone)]
+pub enum Segment {
+    /// A layer executed as-is (conv, linear, add, concat, flatten, or an
+    /// optimizable layer the analyzer chose not to stack).
+    Single(NodeId),
+    /// A collapsed stack executed by the fused depth-first kernel.
+    Stack(Stack),
+}
+
+/// The optimized execution plan for one network at one batch size.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub network: String,
+    pub device: String,
+    pub segments: Vec<Segment>,
+    /// Stacks deduplicated by signature → representative index in
+    /// `segments` (the paper generates code once per distinct stack).
+    pub unique_stacks: HashMap<String, usize>,
+}
+
+impl Plan {
+    pub fn num_stacks(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| matches!(s, Segment::Stack(_)))
+            .count()
+    }
+
+    pub fn num_unique_stacks(&self) -> usize {
+        self.unique_stacks.len()
+    }
+
+    /// Number of graph layers absorbed into stacks (Table 2 "Opt.").
+    pub fn num_optimized_layers(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match s {
+                Segment::Stack(st) => st.nodes.len(),
+                Segment::Single(_) => 0,
+            })
+            .sum()
+    }
+
+    /// All stacks in execution order.
+    pub fn stacks(&self) -> impl Iterator<Item = &Stack> {
+        self.segments.iter().filter_map(|s| match s {
+            Segment::Stack(st) => Some(st),
+            Segment::Single(_) => None,
+        })
+    }
+
+    /// Every node of the graph appears in exactly one segment; verify.
+    pub fn validate(&self, graph: &Graph) -> Result<(), String> {
+        let mut seen = vec![false; graph.nodes.len()];
+        seen[0] = true; // input placeholder is implicit
+        let mut mark = |id: NodeId| -> Result<(), String> {
+            if seen[id] {
+                return Err(format!("node {id} appears twice in plan"));
+            }
+            seen[id] = true;
+            Ok(())
+        };
+        for seg in &self.segments {
+            match seg {
+                Segment::Single(id) => mark(*id)?,
+                Segment::Stack(st) => {
+                    for &id in &st.nodes {
+                        mark(id)?;
+                    }
+                    // Stack nodes must form a consecutive unary chain.
+                    for w in st.nodes.windows(2) {
+                        let node = graph.node(w[1]);
+                        if node.inputs != [w[0]] {
+                            return Err(format!(
+                                "stack chain broken between {} and {}",
+                                w[0], w[1]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            return Err(format!("node {missing} missing from plan"));
+        }
+        Ok(())
+    }
+}
+
+/// Analyzer + collapse: produce the optimized plan for `graph` on
+/// `device`.
+///
+/// A chain joins a stack while: the layer is optimizable, it consumes the
+/// previous chain node, and the previous chain node has a single consumer
+/// (fan-out forces materialization — the tail of a stack may fan out, the
+/// middle may not).
+pub fn optimize(graph: &Graph, device: &DeviceSpec, opts: &CollapseOptions) -> Plan {
+    let single = graph.single_consumer();
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut chain: Vec<NodeId> = Vec::new();
+
+    let flush = |chain: &mut Vec<NodeId>, segments: &mut Vec<Segment>| {
+        if chain.is_empty() {
+            return;
+        }
+        let ops: Vec<Operation> = chain
+            .iter()
+            .map(|&id| {
+                let n = graph.node(id);
+                let in_shape = &graph.node(n.inputs[0]).shape;
+                Operation::from_layer(id, &n.name, &n.layer, in_shape, &n.shape)
+                    .expect("chain node must be optimizable")
+            })
+            .collect();
+        let sequences = collapse(&ops, device, opts);
+        // The signature captures everything codegen depends on: input
+        // shape, per-sequence op structure AND the chosen band height
+        // (tile_rows changes the generated kernel's grid).
+        let signature = format!(
+            "in:{}|{}",
+            sequences[0].in_shape().sig(),
+            sequences
+                .iter()
+                .map(|s| format!("{}@t{}", s.sig(), s.tile_rows))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        segments.push(Segment::Stack(Stack {
+            nodes: std::mem::take(chain),
+            sequences,
+            signature,
+        }));
+    };
+
+    for node in graph.nodes.iter().skip(1) {
+        let extends_chain = node.layer.is_optimizable()
+            && node.inputs.len() == 1
+            && chain
+                .last()
+                .is_none_or(|&last| node.inputs[0] == last && single[last]);
+        if extends_chain {
+            if chain.is_empty() {
+                // A new chain can start anywhere (its input comes from
+                // main memory regardless).
+            }
+            chain.push(node.id);
+        } else {
+            flush(&mut chain, &mut segments);
+            if node.layer.is_optimizable() && node.inputs.len() == 1 {
+                // Starts a fresh chain (previous chain was broken by
+                // fan-out or non-adjacency).
+                chain.push(node.id);
+            } else {
+                segments.push(Segment::Single(node.id));
+            }
+        }
+    }
+    flush(&mut chain, &mut segments);
+
+    let mut unique = HashMap::new();
+    for (i, seg) in segments.iter().enumerate() {
+        if let Segment::Stack(st) = seg {
+            unique.entry(st.signature.clone()).or_insert(i);
+        }
+    }
+
+    Plan {
+        network: graph.name.clone(),
+        device: device.name.clone(),
+        segments,
+        unique_stacks: unique,
+    }
+}
+
+/// FNV-1a 64-bit hex digest (stable across rust/python; mirrored in
+/// `python/compile/stacks.py`).
+pub fn fnv64_hex(s: &str) -> String {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Layer, PoolKind, Window2d};
+    use crate::zoo;
+
+    fn device() -> DeviceSpec {
+        DeviceSpec::paper_gpu()
+    }
+
+    fn simple_net() -> Graph {
+        let mut g = Graph::new("t", Shape::nchw(1, 8, 32, 32));
+        g.push(
+            "conv1",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        g.push("bn1", Layer::BatchNorm2d { eps: 1e-5 });
+        g.push("relu1", Layer::Relu);
+        g.push(
+            "pool1",
+            Layer::Pool2d {
+                kind: PoolKind::Max,
+                window: Window2d::square(2, 2, 0),
+                ceil_mode: false,
+                count_include_pad: true,
+            },
+        );
+        g.push(
+            "conv2",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        g.push("relu2", Layer::Relu);
+        g
+    }
+
+    #[test]
+    fn detects_bn_relu_pool_stack() {
+        let g = simple_net();
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.num_stacks(), 2); // [bn relu pool] and [relu2]
+        assert_eq!(plan.num_optimized_layers(), 4);
+        let first = plan.stacks().next().unwrap();
+        assert_eq!(first.sequences[0].sig(), "bn,relu,maxpool_k2x2s2x2p0x0");
+    }
+
+    #[test]
+    fn fanout_breaks_chains() {
+        // residual: relu output feeds both conv and add.
+        let mut g = Graph::new("res", Shape::nchw(1, 8, 16, 16));
+        g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        let r = g.push("relu", Layer::Relu);
+        let c = g.add(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+            &[r],
+        );
+        g.add("add", Layer::Add, &[c, r]);
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        // bn+relu stack ends at relu (fan-out at its OUTPUT is fine since
+        // the stack result is materialized); conv and add are singles.
+        let st = plan.stacks().next().unwrap();
+        assert_eq!(st.nodes.len(), 2);
+    }
+
+    #[test]
+    fn fanout_inside_chain_splits() {
+        // bn -> relu(fan-out) -> dropout: relu's output is consumed by
+        // dropout AND add, so dropout cannot join bn+relu's stack.
+        let mut g = Graph::new("fan", Shape::nchw(1, 8, 16, 16));
+        g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        let r = g.push("relu", Layer::Relu);
+        let d = g.add("dropout", Layer::Dropout { p: 0.1 }, &[r]);
+        g.add("add", Layer::Add, &[d, r]);
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        let stacks: Vec<&Stack> = plan.stacks().collect();
+        assert_eq!(stacks.len(), 2);
+        assert_eq!(stacks[0].nodes.len(), 2); // bn, relu
+        assert_eq!(stacks[1].nodes.len(), 1); // dropout alone
+    }
+
+    #[test]
+    fn identical_stacks_dedup() {
+        // Two identical conv->relu->pool blocks: both relu+pool stacks
+        // share one signature.
+        let mut g = Graph::new("dup", Shape::nchw(1, 8, 32, 32));
+        for i in 0..2 {
+            g.push(
+                format!("conv{i}"),
+                Layer::Conv2d {
+                    out_channels: 8,
+                    window: Window2d::square(3, 1, 1),
+                    bias: false,
+                },
+            );
+            g.push(format!("relu{i}"), Layer::Relu);
+        }
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        assert_eq!(plan.num_stacks(), 2);
+        assert_eq!(plan.num_unique_stacks(), 1);
+    }
+
+    #[test]
+    fn zoo_plans_validate_and_match_table2_regime() {
+        for name in ["alexnet", "resnet18", "densenet121", "vgg16_bn", "squeezenet1_0"] {
+            let g = zoo::build(name, zoo::paper_config(name, 1));
+            let plan = optimize(&g, &device(), &CollapseOptions::default());
+            plan.validate(&g).unwrap();
+            let frac = plan.num_optimized_layers() as f64 / g.num_layers() as f64;
+            // Paper Table 2: 44-64% of layers are optimizable.
+            assert!(
+                (0.25..0.75).contains(&frac),
+                "{name}: optimized fraction {frac:.2} out of regime"
+            );
+            assert!(plan.num_unique_stacks() <= plan.num_stacks());
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv64_hex(""), "cbf29ce484222325");
+        assert_eq!(fnv64_hex("a"), "af63dc4c8601ec8c");
+        // Regression pin: stack signatures hash deterministically.
+        let h1 = fnv64_hex("in:1x8x32x32f32|bn,relu");
+        assert_eq!(h1, fnv64_hex("in:1x8x32x32f32|bn,relu"));
+    }
+
+    #[test]
+    fn batch_change_changes_signature_but_not_structure() {
+        let g = simple_net();
+        let p1 = optimize(&g, &device(), &CollapseOptions::default());
+        let p8 = optimize(&g.with_batch(8), &device(), &CollapseOptions::default());
+        assert_eq!(p1.num_stacks(), p8.num_stacks());
+        let s1 = p1.stacks().next().unwrap();
+        let s8 = p8.stacks().next().unwrap();
+        assert_ne!(s1.signature, s8.signature); // shape is in signature
+    }
+}

@@ -1,0 +1,119 @@
+//! Deterministic parameter/data generation shared with the python side.
+//!
+//! Network parameters (conv weights, BN statistics, …) and synthetic
+//! inputs must be *identical* in the rust runtime and in the python
+//! oracle so that scheduler outputs can be cross-checked numerically.
+//! Both sides implement the same SplitMix64 stream → f32 mapping; see
+//! `python/compile/detrng.py` and the golden-file test
+//! `rust/tests/detrng_golden.rs`.
+
+/// SplitMix64 step (Steele et al.): advances the state and returns the
+/// mixed output.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Map a SplitMix64 output to f32 uniform in [-1, 1): the top 24 bits
+/// become a fraction of 2^23, offset by -1. Exactly representable, so the
+/// python mirror reproduces it bit-for-bit.
+#[inline]
+pub fn u64_to_f32(x: u64) -> f32 {
+    ((x >> 40) as f32) / (1u32 << 23) as f32 - 1.0
+}
+
+/// Fill a fresh vector with `n` deterministic f32 values for `seed`.
+pub fn fill_f32(seed: u64, n: usize) -> Vec<f32> {
+    let mut state = seed;
+    (0..n).map(|_| u64_to_f32(splitmix64(&mut state))).collect()
+}
+
+/// Derive a per-tensor seed from a network seed and a stable tag (node
+/// name + param index). FNV-1a over the tag, mixed with the base seed.
+pub fn tensor_seed(base: u64, tag: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h ^ base.rotate_left(17)
+}
+
+/// Deterministic "plausible" parameter fill: uniform [-1,1) scaled down
+/// for weights; BN running-var is shifted positive. `kind` selects the
+/// post-processing and must match `python/compile/detrng.py`.
+pub fn fill_param(seed: u64, n: usize, kind: ParamKind) -> Vec<f32> {
+    let raw = fill_f32(seed, n);
+    match kind {
+        ParamKind::Weight => raw.iter().map(|v| v * 0.1).collect(),
+        ParamKind::Bias => raw.iter().map(|v| v * 0.01).collect(),
+        ParamKind::BnGamma => raw.iter().map(|v| 1.0 + v * 0.1).collect(),
+        ParamKind::BnBeta => raw.iter().map(|v| v * 0.01).collect(),
+        ParamKind::BnMean => raw.iter().map(|v| v * 0.1).collect(),
+        // strictly positive, well away from eps
+        ParamKind::BnVar => raw.iter().map(|v| 0.55 + v * 0.45).collect(),
+        ParamKind::Activation => raw,
+    }
+}
+
+/// Parameter post-processing kinds (mirrored in python).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Weight,
+    Bias,
+    BnGamma,
+    BnBeta,
+    BnMean,
+    BnVar,
+    Activation,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed 0 (reference vector from the SplitMix64
+        // paper implementation).
+        let mut s = 0u64;
+        assert_eq!(splitmix64(&mut s), 0xE220A8397B1DCDAF);
+        assert_eq!(splitmix64(&mut s), 0x6E789E6AA1B965F4);
+        assert_eq!(splitmix64(&mut s), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn f32_mapping_range() {
+        for v in fill_f32(42, 10_000) {
+            assert!((-1.0..1.0).contains(&v));
+        }
+        assert_eq!(u64_to_f32(0), -1.0);
+        // max 24-bit fraction: (2^24 - 1)/2^23 - 1 just below 1.
+        assert!(u64_to_f32(u64::MAX) < 1.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fill_f32(7, 100), fill_f32(7, 100));
+        assert_ne!(fill_f32(7, 100), fill_f32(8, 100));
+    }
+
+    #[test]
+    fn tensor_seed_stable_and_distinct() {
+        let a = tensor_seed(1, "conv1.w0");
+        assert_eq!(a, tensor_seed(1, "conv1.w0"));
+        assert_ne!(a, tensor_seed(1, "conv1.w1"));
+        assert_ne!(a, tensor_seed(2, "conv1.w0"));
+    }
+
+    #[test]
+    fn bn_var_strictly_positive() {
+        for v in fill_param(3, 1000, ParamKind::BnVar) {
+            assert!(v > 0.05, "var {v} too small");
+        }
+    }
+}

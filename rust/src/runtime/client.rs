@@ -1,0 +1,230 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts, compile them on
+//! the CPU PJRT client once, cache the executables, and execute them with
+//! host tensors.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids the bundled xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids — see DESIGN.md and
+//! `/opt/xla-example/README.md`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{DType, Shape};
+use crate::json::{parse, Json};
+
+use super::tensor::HostTensor;
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifact dir.
+    pub path: String,
+    pub input_shapes: Vec<Shape>,
+    pub output_shape: Shape,
+}
+
+fn shape_from_json(j: &Json) -> Result<Shape> {
+    let dims = j.req("dims")?.usize_vec()?;
+    let dtype = match j.str_field("dtype")?.as_str() {
+        "f32" => DType::F32,
+        "bf16" => DType::BF16,
+        other => bail!("unknown dtype {other}"),
+    };
+    Ok(Shape::new(dims, dtype))
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut entries = HashMap::new();
+        for e in j.arr_field("executables")? {
+            let name = e.str_field("name")?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path: e.str_field("path")?,
+                input_shapes: e
+                    .arr_field("inputs")?
+                    .iter()
+                    .map(shape_from_json)
+                    .collect::<Result<_>>()?,
+                output_shape: shape_from_json(e.req("output")?)?,
+            };
+            entries.insert(name, spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative executable-compile time (perf accounting).
+    pub compile_seconds: Mutex<f64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of loaded (compiled) executables.
+    pub fn loaded_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.dir.join(&spec.path);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let exe = std::sync::Arc::new(exe);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every manifest entry (serving warm-up).
+    pub fn preload_all(&self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute artifact `name` on `inputs`; returns the single output.
+    ///
+    /// Shapes are validated against the manifest before dispatch so a
+    /// mismatched call fails with a readable error instead of an XLA
+    /// abort.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.input_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            if &t.shape != s {
+                bail!("{name}: input {i} shape {} != expected {}", t.shape, s);
+            }
+        }
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.shape.dims,
+                    &bytes,
+                )
+                .map_err(|e| anyhow!("literal for {name}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple result of {name}: {e:?}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read result of {name}: {e:?}"))?;
+        if data.len() != spec.output_shape.numel() {
+            bail!(
+                "{name}: output has {} elements, manifest says {}",
+                data.len(),
+                spec.output_shape.numel()
+            );
+        }
+        Ok(HostTensor::new(spec.output_shape.clone(), data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn manifest_parses_entries() {
+        let dir = std::env::temp_dir().join("bs_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"executables":[{"name":"relu_in1x2f32","path":"relu.hlo.txt",
+                "inputs":[{"dims":[1,2],"dtype":"f32"}],
+                "output":{"dims":[1,2],"dtype":"f32"}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("relu_in1x2f32").unwrap();
+        assert_eq!(spec.input_shapes.len(), 1);
+        assert_eq!(spec.output_shape.dims, vec![1, 2]);
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime: PJRT client wrapper, artifact manifest, host tensors,
+//! deterministic parameters, and the compile-request bridge to the
+//! python AOT path. Python never runs here — the scheduler executes
+//! pre-compiled HLO artifacts only.
+
+pub mod client;
+pub mod naming;
+pub mod params;
+pub mod requests;
+pub mod tensor;
+
+pub use client::{ArtifactSpec, Manifest, Runtime};
+pub use naming::{layer_exec_name, stack_exec_name};
+pub use params::ParamStore;
+pub use requests::RequestSet;
+pub use tensor::HostTensor;

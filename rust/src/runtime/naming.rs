@@ -1,0 +1,121 @@
+//! Canonical executable names shared between the request emitter, the
+//! scheduler, and `python/compile/aot.py`. One name = one AOT-compiled
+//! HLO artifact; identical layers/stacks across networks share artifacts
+//! (the paper's "only generates the code once" dedup, §4.3).
+
+use crate::graph::{Graph, Layer, Node, PoolKind};
+use crate::optimizer::Stack;
+
+/// Executable name for a non-stacked layer. Layers with no runtime
+/// compute (input, dropout, flatten) return `None` — the scheduler
+/// handles them natively.
+pub fn layer_exec_name(graph: &Graph, node: &Node) -> Option<String> {
+    let in_sig = |i: usize| graph.node(node.inputs[i]).shape.sig();
+    Some(match &node.layer {
+        Layer::Input { .. } | Layer::Dropout { .. } | Layer::Flatten => return None,
+        Layer::Conv2d {
+            out_channels,
+            window,
+            bias,
+        } => format!(
+            "conv2d_oc{}_{}{}_in{}",
+            out_channels,
+            window.sig(),
+            if *bias { "_bias" } else { "" },
+            in_sig(0)
+        ),
+        Layer::Linear { out_features, bias } => format!(
+            "linear_of{}{}_in{}",
+            out_features,
+            if *bias { "_bias" } else { "" },
+            in_sig(0)
+        ),
+        Layer::Pool2d {
+            kind,
+            window,
+            ceil_mode,
+            count_include_pad,
+        } => {
+            let k = match kind {
+                PoolKind::Max => "max",
+                PoolKind::Avg => "avg",
+            };
+            let mut s = format!("{}pool_{}", k, window.sig());
+            if *ceil_mode {
+                s.push_str("_ceil");
+            }
+            if matches!(kind, PoolKind::Avg) && !*count_include_pad {
+                s.push_str("_nip");
+            }
+            format!("{}_in{}", s, in_sig(0))
+        }
+        Layer::AdaptiveAvgPool { out_hw } => {
+            format!("gap_{}x{}_in{}", out_hw.0, out_hw.1, in_sig(0))
+        }
+        Layer::BatchNorm2d { .. } => format!("bn_in{}", in_sig(0)),
+        Layer::Relu => format!("relu_in{}", in_sig(0)),
+        Layer::Add => format!("add_in{}", in_sig(0)),
+        Layer::Concat => {
+            let sigs: Vec<String> = (0..node.inputs.len()).map(in_sig).collect();
+            format!("concat_in{}", sigs.join("+"))
+        }
+    })
+}
+
+/// Executable name for a collapsed stack.
+pub fn stack_exec_name(stack: &Stack) -> String {
+    stack.artifact_name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Shape, Window2d};
+
+    #[test]
+    fn names_are_shape_qualified() {
+        let mut g = Graph::new("t", Shape::nchw(2, 3, 8, 8));
+        let c = g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: true,
+            },
+        );
+        assert_eq!(
+            layer_exec_name(&g, g.node(c)).unwrap(),
+            "conv2d_oc4_k3x3s1x1p1x1_bias_in2x3x8x8f32"
+        );
+        let r = g.push("relu", Layer::Relu);
+        assert_eq!(
+            layer_exec_name(&g, g.node(r)).unwrap(),
+            "relu_in2x4x8x8f32"
+        );
+        let f = g.push("flatten", Layer::Flatten);
+        assert!(layer_exec_name(&g, g.node(f)).is_none());
+        let l = g.push(
+            "fc",
+            Layer::Linear {
+                out_features: 10,
+                bias: false,
+            },
+        );
+        assert_eq!(
+            layer_exec_name(&g, g.node(l)).unwrap(),
+            "linear_of10_in2x256f32"
+        );
+    }
+
+    #[test]
+    fn concat_name_lists_all_inputs() {
+        let mut g = Graph::new("t", Shape::nchw(1, 2, 4, 4));
+        let a = g.push("r1", Layer::Relu);
+        let b = g.add("r2", Layer::Relu, &[0]);
+        let c = g.add("cat", Layer::Concat, &[a, b]);
+        assert_eq!(
+            layer_exec_name(&g, g.node(c)).unwrap(),
+            "concat_in1x2x4x4f32+1x2x4x4f32"
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! Deterministic parameter store.
+//!
+//! Network parameters are generated (not trained) from the shared
+//! SplitMix64 stream keyed by `(network seed, node name, param kind)` —
+//! identically in `python/compile/detrng.py` — so the rust scheduler and
+//! the python oracle compute over the same weights. Inference batch-norm
+//! is folded here into per-channel `scale`/`shift` exactly as the python
+//! side folds it.
+
+use std::collections::HashMap;
+
+use crate::graph::{node_param_tags, Graph, Layer, NodeId, Shape};
+use crate::rng::{fill_param, tensor_seed, ParamKind};
+
+use super::tensor::HostTensor;
+
+/// Lazily generated, cached parameters for one graph instance.
+pub struct ParamStore<'g> {
+    graph: &'g Graph,
+    seed: u64,
+    cache: HashMap<(NodeId, &'static str), HostTensor>,
+}
+
+fn kind_of(tag_kind: &str) -> ParamKind {
+    match tag_kind {
+        "weight" => ParamKind::Weight,
+        "bias" => ParamKind::Bias,
+        "bn_gamma" => ParamKind::BnGamma,
+        "bn_beta" => ParamKind::BnBeta,
+        "bn_mean" => ParamKind::BnMean,
+        "bn_var" => ParamKind::BnVar,
+        other => panic!("unknown param kind {other}"),
+    }
+}
+
+impl<'g> ParamStore<'g> {
+    pub fn new(graph: &'g Graph, seed: u64) -> Self {
+        ParamStore {
+            graph,
+            seed,
+            cache: HashMap::new(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Raw parameter tensor of `node` by kind name (e.g. "weight").
+    pub fn raw(&mut self, node: NodeId, want: &'static str) -> HostTensor {
+        if let Some(t) = self.cache.get(&(node, want)) {
+            return t.clone();
+        }
+        let n = self.graph.node(node);
+        let tags = node_param_tags(self.graph, n);
+        let (tag, kind, shape) = tags
+            .into_iter()
+            .find(|(_, k, _)| *k == want)
+            .unwrap_or_else(|| panic!("node {} has no param '{want}'", n.name));
+        let s = tensor_seed(self.seed, &tag);
+        let t = HostTensor::new(shape.clone(), fill_param(s, shape.numel(), kind_of(kind)));
+        self.cache.insert((node, want), t.clone());
+        t
+    }
+
+    /// Folded batch-norm (scale, shift):
+    /// `scale = gamma / sqrt(var + eps)`, `shift = beta - mean * scale`.
+    pub fn bn_folded(&mut self, node: NodeId) -> (HostTensor, HostTensor) {
+        let eps = match &self.graph.node(node).layer {
+            Layer::BatchNorm2d { eps } => *eps,
+            other => panic!("bn_folded on {other:?}"),
+        };
+        let gamma = self.raw(node, "bn_gamma");
+        let beta = self.raw(node, "bn_beta");
+        let mean = self.raw(node, "bn_mean");
+        let var = self.raw(node, "bn_var");
+        let c = gamma.data.len();
+        let mut scale = Vec::with_capacity(c);
+        let mut shift = Vec::with_capacity(c);
+        for i in 0..c {
+            let s = gamma.data[i] / (var.data[i] + eps).sqrt();
+            scale.push(s);
+            shift.push(beta.data[i] - mean.data[i] * s);
+        }
+        let shape = Shape::new(vec![c], gamma.shape.dtype);
+        (
+            HostTensor::new(shape.clone(), scale),
+            HostTensor::new(shape, shift),
+        )
+    }
+
+    /// Runtime inputs for a layer executable, in artifact argument order:
+    /// conv/linear → [weight, (bias)]; bn → [scale, shift]; others → [].
+    pub fn exec_params(&mut self, node: NodeId) -> Vec<HostTensor> {
+        match &self.graph.node(node).layer {
+            Layer::Conv2d { bias, .. } | Layer::Linear { bias, .. } => {
+                let mut v = vec![self.raw(node, "weight")];
+                if *bias {
+                    v.push(self.raw(node, "bias"));
+                }
+                v
+            }
+            Layer::BatchNorm2d { .. } => {
+                let (s, b) = self.bn_folded(node);
+                vec![s, b]
+            }
+            _ => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Window2d;
+
+    fn bn_graph() -> Graph {
+        let mut g = Graph::new("t", Shape::nchw(1, 4, 8, 8));
+        g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: true,
+            },
+        );
+        g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        g
+    }
+
+    #[test]
+    fn deterministic_and_cached() {
+        let g = bn_graph();
+        let mut p1 = ParamStore::new(&g, 99);
+        let mut p2 = ParamStore::new(&g, 99);
+        assert_eq!(p1.raw(1, "weight"), p2.raw(1, "weight"));
+        let mut p3 = ParamStore::new(&g, 100);
+        assert_ne!(p1.raw(1, "weight").data, p3.raw(1, "weight").data);
+    }
+
+    #[test]
+    fn bn_folding_math() {
+        let g = bn_graph();
+        let mut p = ParamStore::new(&g, 7);
+        let gamma = p.raw(2, "bn_gamma");
+        let beta = p.raw(2, "bn_beta");
+        let mean = p.raw(2, "bn_mean");
+        let var = p.raw(2, "bn_var");
+        let (scale, shift) = p.bn_folded(2);
+        for i in 0..4 {
+            let s = gamma.data[i] / (var.data[i] + 1e-5).sqrt();
+            assert!((scale.data[i] - s).abs() < 1e-7);
+            assert!((shift.data[i] - (beta.data[i] - mean.data[i] * s)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn exec_params_order() {
+        let g = bn_graph();
+        let mut p = ParamStore::new(&g, 7);
+        let conv = p.exec_params(1);
+        assert_eq!(conv.len(), 2); // weight, bias
+        assert_eq!(conv[0].shape.dims, vec![4, 4, 3, 3]);
+        assert_eq!(conv[1].shape.dims, vec![4]);
+        let bn = p.exec_params(2);
+        assert_eq!(bn.len(), 2); // scale, shift
+        let relu_params = {
+            let mut g2 = bn_graph();
+            g2.push("relu", Layer::Relu);
+            let mut p2 = ParamStore::new(&g2, 7);
+            p2.exec_params(3)
+        };
+        assert!(relu_params.is_empty());
+    }
+}

@@ -1,0 +1,265 @@
+//! Compile-request emission: the bridge from the rust optimizer to the
+//! python AOT path.
+//!
+//! `brainslug emit-requests` runs the optimizer over the experiment set
+//! and serializes every *distinct* executable the scheduler will need —
+//! per-layer executables (the breadth-first baseline and un-stacked plan
+//! segments) and fused per-stack executables (the depth-first kernels) —
+//! into `artifacts/requests.json`. `python/compile/aot.py` lowers each
+//! request to an HLO-text artifact and writes `artifacts/manifest.json`.
+//! Python never decides *what* to compile; the optimizer does (the
+//! paper's Code Generator, §4.1 step 5).
+
+use std::collections::BTreeMap;
+
+use crate::graph::{graph_to_json, Graph};
+use crate::json::Json;
+use crate::optimizer::{OpKind, Plan, Segment, Stack};
+
+use super::naming::{layer_exec_name, stack_exec_name};
+
+/// Accumulates deduplicated compile requests across experiments.
+#[derive(Debug, Default)]
+pub struct RequestSet {
+    layers: BTreeMap<String, Json>,
+    stacks: BTreeMap<String, Json>,
+    oracles: BTreeMap<String, Json>,
+}
+
+fn shape_json(s: &crate::graph::Shape) -> Json {
+    let mut o = Json::object();
+    o.set(
+        "dims",
+        Json::Arr(s.dims.iter().map(|&d| Json::from_usize(d)).collect()),
+    );
+    o.set("dtype", Json::Str(s.dtype.name().to_string()));
+    o
+}
+
+fn op_json(kind: &OpKind) -> Json {
+    let mut o = Json::object();
+    match kind {
+        OpKind::BnAffine { eps } => {
+            o.set("op", Json::Str("bn".into()));
+            o.set("eps", Json::Num(*eps as f64));
+        }
+        OpKind::Relu => {
+            o.set("op", Json::Str("relu".into()));
+        }
+        OpKind::Identity => {
+            o.set("op", Json::Str("id".into()));
+        }
+        OpKind::Pool {
+            kind,
+            window,
+            ceil_mode,
+            count_include_pad,
+        } => {
+            o.set("op", Json::Str("pool".into()));
+            o.set(
+                "pool",
+                Json::Str(
+                    match kind {
+                        crate::graph::PoolKind::Max => "max",
+                        crate::graph::PoolKind::Avg => "avg",
+                    }
+                    .into(),
+                ),
+            );
+            o.set(
+                "kernel",
+                Json::Arr(vec![
+                    Json::from_usize(window.kernel.0),
+                    Json::from_usize(window.kernel.1),
+                ]),
+            );
+            o.set(
+                "stride",
+                Json::Arr(vec![
+                    Json::from_usize(window.stride.0),
+                    Json::from_usize(window.stride.1),
+                ]),
+            );
+            o.set(
+                "pad",
+                Json::Arr(vec![
+                    Json::from_usize(window.pad.0),
+                    Json::from_usize(window.pad.1),
+                ]),
+            );
+            o.set("ceil_mode", Json::Bool(*ceil_mode));
+            o.set("count_include_pad", Json::Bool(*count_include_pad));
+        }
+    }
+    o
+}
+
+fn stack_json(stack: &Stack) -> Json {
+    let mut o = Json::object();
+    o.set("name", Json::Str(stack_exec_name(stack)));
+    o.set("signature", Json::Str(stack.signature.clone()));
+    o.set("in_shape", shape_json(stack.in_shape()));
+    o.set("out_shape", shape_json(stack.out_shape()));
+    let seqs: Vec<Json> = stack
+        .sequences
+        .iter()
+        .map(|seq| {
+            let mut sj = Json::object();
+            sj.set("tile_rows", Json::from_usize(seq.tile_rows));
+            sj.set("in_shape", shape_json(seq.in_shape()));
+            sj.set("out_shape", shape_json(seq.out_shape()));
+            let steps: Vec<Json> = seq
+                .steps
+                .iter()
+                .map(|step| Json::Arr(step.ops.iter().map(|op| op_json(&op.kind)).collect()))
+                .collect();
+            sj.set("steps", Json::Arr(steps));
+            sj
+        })
+        .collect();
+    o.set("sequences", Json::Arr(seqs));
+    o
+}
+
+impl RequestSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register every executable a breadth-first (baseline) run of
+    /// `graph` needs: one per distinct layer signature.
+    pub fn add_baseline(&mut self, graph: &Graph) {
+        for node in graph.nodes.iter().skip(1) {
+            if let Some(name) = layer_exec_name(graph, node) {
+                self.layers.entry(name.clone()).or_insert_with(|| {
+                    let mut o = Json::object();
+                    o.set("name", Json::Str(name));
+                    let in_shapes: Vec<Json> = node
+                        .inputs
+                        .iter()
+                        .map(|&i| shape_json(&graph.node(i).shape))
+                        .collect();
+                    o.set("in_shapes", Json::Arr(in_shapes));
+                    o.set("out_shape", shape_json(&node.shape));
+                    crate::graph::json::layer_fields_into(&mut o, &node.layer);
+                    o
+                });
+            }
+        }
+    }
+
+    /// Register the executables a BrainSlug plan needs: fused stacks plus
+    /// the single layers it leaves untouched.
+    pub fn add_plan(&mut self, graph: &Graph, plan: &Plan) {
+        for seg in &plan.segments {
+            match seg {
+                Segment::Single(id) => {
+                    let node = graph.node(*id);
+                    if let Some(name) = layer_exec_name(graph, node) {
+                        self.layers.entry(name.clone()).or_insert_with(|| {
+                            let mut o = Json::object();
+                            o.set("name", Json::Str(name));
+                            let in_shapes: Vec<Json> = node
+                                .inputs
+                                .iter()
+                                .map(|&i| shape_json(&graph.node(i).shape))
+                                .collect();
+                            o.set("in_shapes", Json::Arr(in_shapes));
+                            o.set("out_shape", shape_json(&node.shape));
+                            crate::graph::json::layer_fields_into(&mut o, &node.layer);
+                            o
+                        });
+                    }
+                }
+                Segment::Stack(st) => {
+                    self.stacks
+                        .entry(stack_exec_name(st))
+                        .or_insert_with(|| stack_json(st));
+                }
+            }
+        }
+    }
+
+    /// Register a numerics-oracle request: python will run `graph` with
+    /// detrng parameters (seed) on a detrng input and dump input/output
+    /// tensors for the rust integration tests.
+    pub fn add_oracle(&mut self, tag: &str, graph: &Graph, seed: u64) {
+        let mut o = Json::object();
+        o.set("tag", Json::Str(tag.to_string()));
+        o.set("seed", Json::from_usize(seed as usize));
+        o.set("graph", graph_to_json(graph));
+        self.oracles.insert(tag.to_string(), o);
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn num_stacks(&self) -> usize {
+        self.stacks.len()
+    }
+
+    /// Serialize the full request set.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::object();
+        root.set(
+            "layers",
+            Json::Arr(self.layers.values().cloned().collect()),
+        );
+        root.set(
+            "stacks",
+            Json::Arr(self.stacks.values().cloned().collect()),
+        );
+        root.set(
+            "oracles",
+            Json::Arr(self.oracles.values().cloned().collect()),
+        );
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::optimizer::{optimize, CollapseOptions};
+    use crate::zoo;
+
+    #[test]
+    fn dedup_across_networks() {
+        let mut rs = RequestSet::new();
+        let g16 = zoo::build("vgg16", zoo::small_config("vgg16", 2));
+        let g19 = zoo::build("vgg19", zoo::small_config("vgg19", 2));
+        rs.add_baseline(&g16);
+        let after_16 = rs.num_layers();
+        rs.add_baseline(&g19);
+        // VGG-19 shares nearly all layer signatures with VGG-16.
+        assert!(rs.num_layers() < after_16 + 6);
+    }
+
+    #[test]
+    fn plan_requests_contain_stacks() {
+        let mut rs = RequestSet::new();
+        let g = zoo::build("vgg11_bn", zoo::small_config("vgg11_bn", 2));
+        let plan = optimize(&g, &DeviceSpec::tpu_core(), &CollapseOptions::default());
+        rs.add_plan(&g, &plan);
+        assert!(rs.num_stacks() >= 1);
+        let j = rs.to_json();
+        let stacks = j.arr_field("stacks").unwrap();
+        let s0 = &stacks[0];
+        assert!(s0.str_field("name").unwrap().starts_with("stack_"));
+        assert!(!s0.arr_field("sequences").unwrap().is_empty());
+    }
+
+    #[test]
+    fn request_json_roundtrips_through_parser() {
+        let mut rs = RequestSet::new();
+        let g = zoo::build("alexnet", zoo::small_config("alexnet", 1));
+        rs.add_baseline(&g);
+        rs.add_oracle("alexnet_small_b1", &g, 42);
+        let text = rs.to_json().to_string_pretty();
+        let parsed = crate::json::parse(&text).unwrap();
+        assert_eq!(parsed.arr_field("oracles").unwrap().len(), 1);
+        assert!(parsed.arr_field("layers").unwrap().len() > 5);
+    }
+}

@@ -1,0 +1,139 @@
+//! Host-side f32 tensors: the scheduler's activation/parameter values.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::graph::Shape;
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Deterministic fill from the shared SplitMix64 stream.
+    pub fn from_seed(shape: Shape, seed: u64, kind: crate::rng::ParamKind) -> Self {
+        let n = shape.numel();
+        HostTensor {
+            shape,
+            data: crate::rng::fill_param(seed, n, kind),
+        }
+    }
+
+    /// Metadata-only reshape (same element count).
+    pub fn reshape(mut self, shape: Shape) -> Self {
+        assert_eq!(shape.numel(), self.data.len(), "reshape numel mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in compare");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// allclose with combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &HostTensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Write as raw little-endian f32 (shape carried externally).
+    pub fn write_f32_file(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        let bytes: Vec<u8> = self.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Read raw little-endian f32 with a known shape.
+    pub fn read_f32_file(path: &Path, shape: Shape) -> anyhow::Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() != shape.numel() * 4 {
+            anyhow::bail!(
+                "{}: {} bytes but shape {} needs {}",
+                path.display(),
+                bytes.len(),
+                shape,
+                shape.numel() * 4
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(HostTensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::ParamKind;
+
+    #[test]
+    fn roundtrip_file() {
+        let t = HostTensor::from_seed(Shape::nchw(2, 3, 4, 5), 7, ParamKind::Activation);
+        let dir = std::env::temp_dir().join("bs_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.f32");
+        t.write_f32_file(&p).unwrap();
+        let back = HostTensor::read_f32_file(&p, t.shape.clone()).unwrap();
+        assert_eq!(t, back);
+        // Wrong shape errors.
+        assert!(HostTensor::read_f32_file(&p, Shape::nf(1, 3)).is_err());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = HostTensor::new(Shape::nf(1, 3), vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        b.data[1] += 1e-6;
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+        assert!(a.allclose(&b, 0.0, 1e-5));
+        // f32 rounding: 2.0 + 1e-6 lands on the nearest representable.
+        assert!((a.max_abs_diff(&b) - 1e-6).abs() < 1e-7);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = HostTensor::zeros(Shape::nchw(1, 2, 3, 4));
+        let r = t.reshape(Shape::nf(1, 24));
+        assert_eq!(r.shape, Shape::nf(1, 24));
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_numel_panics() {
+        HostTensor::zeros(Shape::nchw(1, 2, 3, 4)).reshape(Shape::nf(1, 25));
+    }
+}

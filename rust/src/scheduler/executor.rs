@@ -1,0 +1,214 @@
+//! The plan executor.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{Graph, Layer, NodeId, Shape};
+use crate::optimizer::{OpKind, Plan, Segment, Stack};
+use crate::runtime::{layer_exec_name, stack_exec_name, HostTensor, ParamStore, Runtime};
+
+use super::metrics::ExecStats;
+
+/// Executes a fixed graph instance against a [`Runtime`], with
+/// deterministic parameters from seed.
+pub struct Executor<'r, 'g> {
+    runtime: &'r Runtime,
+    graph: &'g Graph,
+    params: ParamStore<'g>,
+    /// Remaining-consumer counts template (computed once).
+    consumers: Vec<usize>,
+}
+
+impl<'r, 'g> Executor<'r, 'g> {
+    pub fn new(runtime: &'r Runtime, graph: &'g Graph, seed: u64) -> Self {
+        let consumers = graph.consumers().iter().map(|c| c.len()).collect();
+        Executor {
+            runtime,
+            graph,
+            params: ParamStore::new(graph, seed),
+            consumers,
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        self.graph
+    }
+
+    /// Deterministic synthetic input for this graph (the "image batch").
+    pub fn synthetic_input(&self) -> HostTensor {
+        let seed = crate::rng::tensor_seed(self.params.seed(), "input");
+        HostTensor::from_seed(
+            self.graph.input_shape().clone(),
+            seed,
+            crate::rng::ParamKind::Activation,
+        )
+    }
+
+    fn take_input(
+        &self,
+        values: &mut HashMap<NodeId, HostTensor>,
+        remaining: &mut [usize],
+        id: NodeId,
+    ) -> Result<HostTensor> {
+        let v = values
+            .get(&id)
+            .ok_or_else(|| anyhow!("value for node {id} not computed yet"))?;
+        remaining[id] -= 1;
+        if remaining[id] == 0 {
+            Ok(values.remove(&id).unwrap())
+        } else {
+            Ok(v.clone())
+        }
+    }
+
+    /// Execute one non-stacked layer.
+    fn run_single(
+        &mut self,
+        values: &mut HashMap<NodeId, HostTensor>,
+        remaining: &mut [usize],
+        id: NodeId,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        let node = self.graph.node(id);
+        let t0 = std::time::Instant::now();
+        let out = match &node.layer {
+            Layer::Input { .. } => unreachable!("input node is pre-seeded"),
+            // Scheduler-native ops: no kernel needed.
+            Layer::Dropout { .. } => {
+                let x = self.take_input(values, remaining, node.inputs[0])?;
+                stats.push(
+                    format!("native:{}", node.name),
+                    "dropout".into(),
+                    t0.elapsed().as_secs_f64(),
+                    true,
+                );
+                values.insert(id, x);
+                return Ok(());
+            }
+            Layer::Flatten => {
+                let x = self.take_input(values, remaining, node.inputs[0])?;
+                let out = x.reshape(node.shape.clone());
+                stats.push(
+                    format!("native:{}", node.name),
+                    "flatten".into(),
+                    t0.elapsed().as_secs_f64(),
+                    false,
+                );
+                values.insert(id, out);
+                return Ok(());
+            }
+            _ => {
+                let name = layer_exec_name(self.graph, node)
+                    .expect("non-native layer must have an executable");
+                let acts: Vec<HostTensor> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| self.take_input(values, remaining, i))
+                    .collect::<Result<_>>()?;
+                let params = self.params.exec_params(id);
+                let mut args: Vec<&HostTensor> = acts.iter().collect();
+                args.extend(params.iter());
+                let out = self.runtime.execute(&name, &args)?;
+                stats.push(
+                    name,
+                    node.layer.kind_name().into(),
+                    t0.elapsed().as_secs_f64(),
+                    node.layer.is_optimizable(),
+                );
+                out
+            }
+        };
+        values.insert(id, out);
+        Ok(())
+    }
+
+    /// Execute a collapsed stack through its fused executable.
+    fn run_stack(
+        &mut self,
+        values: &mut HashMap<NodeId, HostTensor>,
+        remaining: &mut [usize],
+        stack: &Stack,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let first = self.graph.node(stack.nodes[0]);
+        let x = self.take_input(values, remaining, first.inputs[0])?;
+        // Gather folded BN params for every bn op, in op order (§4.2:
+        // "the front-end gathers all necessary data and parameter
+        // tensors").
+        let mut bn_params: Vec<HostTensor> = Vec::new();
+        for seq in &stack.sequences {
+            for step in &seq.steps {
+                for op in &step.ops {
+                    if matches!(op.kind, OpKind::BnAffine { .. }) {
+                        let (s, b) = self.params.bn_folded(op.node);
+                        bn_params.push(s);
+                        bn_params.push(b);
+                    }
+                }
+            }
+        }
+        let name = stack_exec_name(stack);
+        let mut args: Vec<&HostTensor> = vec![&x];
+        args.extend(bn_params.iter());
+        let out = self.runtime.execute(&name, &args)?;
+        // Interior nodes were never materialized; mark their consumers
+        // as satisfied (they are all internal to the stack except the
+        // last node's).
+        let last = *stack.nodes.last().unwrap();
+        for &id in &stack.nodes {
+            if id != last {
+                remaining[id] = 0;
+            }
+        }
+        stats.push(name, "stack".into(), t0.elapsed().as_secs_f64(), true);
+        values.insert(last, out);
+        Ok(())
+    }
+
+    /// Run breadth-first (baseline): every layer its own executable.
+    pub fn run_baseline(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        self.check_input(&input)?;
+        let mut stats = ExecStats::default();
+        let mut values = HashMap::new();
+        let mut remaining = self.consumers.clone();
+        values.insert(0usize, input);
+        for id in 1..self.graph.nodes.len() {
+            self.run_single(&mut values, &mut remaining, id, &mut stats)?;
+        }
+        let out = values
+            .remove(&self.graph.output)
+            .ok_or_else(|| anyhow!("output not computed"))?;
+        Ok((out, stats))
+    }
+
+    /// Run a BrainSlug plan: stacks fused, the rest as in the baseline.
+    pub fn run_plan(&mut self, plan: &Plan, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        self.check_input(&input)?;
+        let mut stats = ExecStats::default();
+        let mut values = HashMap::new();
+        let mut remaining = self.consumers.clone();
+        values.insert(0usize, input);
+        for seg in &plan.segments {
+            match seg {
+                Segment::Single(id) => {
+                    self.run_single(&mut values, &mut remaining, *id, &mut stats)?
+                }
+                Segment::Stack(st) => self.run_stack(&mut values, &mut remaining, st, &mut stats)?,
+            }
+        }
+        let out = values
+            .remove(&self.graph.output)
+            .ok_or_else(|| anyhow!("output not computed"))?;
+        Ok((out, stats))
+    }
+
+    fn check_input(&self, input: &HostTensor) -> Result<()> {
+        let want: &Shape = self.graph.input_shape();
+        if &input.shape != want {
+            anyhow::bail!("input shape {} != network input {}", input.shape, want);
+        }
+        Ok(())
+    }
+}

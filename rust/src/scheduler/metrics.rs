@@ -1,0 +1,70 @@
+//! Per-segment execution metrics.
+
+/// Timing record of one executed unit (layer or stack).
+#[derive(Debug, Clone)]
+pub struct SegmentStat {
+    /// Executable name (or `native:<kind>` for scheduler-native ops).
+    pub name: String,
+    /// Layer kind, or "stack".
+    pub kind: String,
+    pub seconds: f64,
+    /// True if this unit is (or consists of) optimizable layers.
+    pub optimizable: bool,
+}
+
+/// Aggregated stats of one network execution.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub segments: Vec<SegmentStat>,
+    pub total_s: f64,
+}
+
+impl ExecStats {
+    pub fn push(&mut self, name: String, kind: String, seconds: f64, optimizable: bool) {
+        self.total_s += seconds;
+        self.segments.push(SegmentStat {
+            name,
+            kind,
+            seconds,
+            optimizable,
+        });
+    }
+
+    /// Time spent in optimizable layers / stacks.
+    pub fn optimizable_s(&self) -> f64 {
+        self.segments
+            .iter()
+            .filter(|s| s.optimizable)
+            .map(|s| s.seconds)
+            .sum()
+    }
+
+    /// Time per layer kind (descending).
+    pub fn by_kind(&self) -> Vec<(String, f64)> {
+        let mut map = std::collections::BTreeMap::new();
+        for s in &self.segments {
+            *map.entry(s.kind.clone()).or_insert(0.0) += s.seconds;
+        }
+        let mut v: Vec<(String, f64)> = map.into_iter().collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation() {
+        let mut st = ExecStats::default();
+        st.push("conv_x".into(), "conv2d".into(), 0.5, false);
+        st.push("relu_x".into(), "relu".into(), 0.2, true);
+        st.push("conv_y".into(), "conv2d".into(), 0.3, false);
+        assert!((st.total_s - 1.0).abs() < 1e-12);
+        assert!((st.optimizable_s() - 0.2).abs() < 1e-12);
+        let by = st.by_kind();
+        assert_eq!(by[0].0, "conv2d");
+        assert!((by[0].1 - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Execution phase (§4.2): run a network through the PJRT runtime,
+//! either breadth-first (the PyTorch-style baseline — one executable per
+//! layer, every intermediate through main memory) or as a BrainSlug
+//! [`Plan`] (collapsed stacks through their fused depth-first kernels,
+//! everything else unchanged).
+//!
+//! The scheduler owns buffer lifetime (activations are dropped as soon as
+//! their last consumer ran) and per-segment timing, which the measured
+//! benchmarks aggregate into the paper's table rows.
+
+pub mod executor;
+pub mod metrics;
+
+pub use executor::Executor;
+pub use metrics::{ExecStats, SegmentStat};

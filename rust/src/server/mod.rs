@@ -1,0 +1,267 @@
+//! Batching inference server — the L3 coordination front-end used by the
+//! end-to-end example.
+//!
+//! Executables are AOT-compiled for a fixed batch size `B`, so the
+//! batcher gathers up to `B` single-image requests (or closes a batch
+//! after `max_wait`), pads the batch with zeros, runs the scheduler once,
+//! and scatters the per-image outputs back to the callers. This is the
+//! standard fixed-shape dynamic-batching pattern (vLLM-style routers do
+//! the same against compiled engines).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::{Graph, Shape};
+use crate::optimizer::Plan;
+use crate::runtime::{HostTensor, Runtime};
+use crate::scheduler::Executor;
+
+/// One inference request: a single image (batch dim 1) and a reply
+/// channel.
+struct Request {
+    image: Vec<f32>,
+    reply: Sender<HostTensor>,
+    enqueued: Instant,
+}
+
+/// Channel message: a request, or an explicit shutdown signal (cloned
+/// handles may outlive the server, so channel-closure alone cannot end
+/// the loop).
+enum Msg {
+    Infer(Request),
+    Shutdown,
+}
+
+/// Server statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    /// Sum of per-request latency in microseconds.
+    pub latency_us_sum: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_us_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    pub fn occupancy(&self, batch: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        let total_slots = b * batch as u64;
+        1.0 - self.padded_slots.load(Ordering::Relaxed) as f64 / total_slots as f64
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    image_shape: Shape,
+}
+
+impl ServerHandle {
+    /// Submit one image; blocks until the result is available.
+    pub fn infer(&self, image: Vec<f32>) -> Result<HostTensor> {
+        anyhow::ensure!(
+            image.len() == self.image_shape.numel(),
+            "image has {} elements, expected {}",
+            image.len(),
+            self.image_shape.numel()
+        );
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Infer(Request {
+                image,
+                reply: tx,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn image_shape(&self) -> &Shape {
+        &self.image_shape
+    }
+}
+
+/// The batching server. Owns the scheduler thread.
+pub struct Server {
+    handle: ServerHandle,
+    pub stats: Arc<ServerStats>,
+    join: Option<std::thread::JoinHandle<()>>,
+    shutdown: Sender<Msg>,
+}
+
+impl Server {
+    /// Start a server over `graph` (whose batch dim is the compiled batch
+    /// size). `plan = None` serves breadth-first; `Some` serves the
+    /// BrainSlug plan.
+    ///
+    /// The PJRT runtime is `!Send` (Rc-based internals), so it is created
+    /// *inside* the scheduler thread from `artifact_dir`; startup errors
+    /// are reported through the returned `Result`.
+    pub fn start(
+        artifact_dir: PathBuf,
+        graph: Arc<Graph>,
+        plan: Option<Arc<Plan>>,
+        seed: u64,
+        max_wait: Duration,
+    ) -> Result<Server> {
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(ServerStats::default());
+        let image_shape = {
+            let mut dims = graph.input_shape().dims.clone();
+            dims[0] = 1;
+            Shape::new(dims, graph.input_shape().dtype)
+        };
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            image_shape: image_shape.clone(),
+        };
+        let stats2 = stats.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::spawn(move || {
+            let runtime = match Runtime::new(&artifact_dir) {
+                Ok(r) => {
+                    let _ = ready_tx.send(Ok(()));
+                    r
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            batch_loop(runtime, graph, plan, seed, rx, stats2, max_wait);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread died during startup"))??;
+        Ok(Server {
+            handle,
+            stats,
+            join: Some(join),
+            shutdown: tx,
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the server and join the scheduler thread. Cloned handles
+    /// become inert (their sends fail) once the loop exits.
+    pub fn stop(mut self) {
+        let _ = self.shutdown.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn batch_loop(
+    runtime: Runtime,
+    graph: Arc<Graph>,
+    plan: Option<Arc<Plan>>,
+    seed: u64,
+    rx: Receiver<Msg>,
+    stats: Arc<ServerStats>,
+    max_wait: Duration,
+) {
+    let batch = graph.input_shape().batch();
+    let image_elems = graph.input_shape().numel() / batch;
+    let mut executor = Executor::new(&runtime, &graph, seed);
+    // Collect-until-full-or-timeout loop.
+    loop {
+        let first = match rx.recv() {
+            Ok(Msg::Infer(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        let mut shutdown_after = false;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Infer(r)) => pending.push(r),
+                Ok(Msg::Shutdown) => {
+                    shutdown_after = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        // Assemble the padded batch tensor.
+        let mut data = vec![0.0f32; graph.input_shape().numel()];
+        for (i, r) in pending.iter().enumerate() {
+            data[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
+        }
+        let input = HostTensor::new(graph.input_shape().clone(), data);
+        let result = match &plan {
+            Some(p) => executor.run_plan(p, input),
+            None => executor.run_baseline(input),
+        };
+        let (out, _stats) = match result {
+            Ok(v) => v,
+            Err(e) => {
+                log::error!("batch execution failed: {e:#}");
+                if shutdown_after {
+                    return;
+                }
+                continue; // reply channels drop → callers see an error
+            }
+        };
+        let out_elems = out.shape.numel() / batch;
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .padded_slots
+            .fetch_add((batch - pending.len()) as u64, Ordering::Relaxed);
+        let mut out_dims = out.shape.dims.clone();
+        out_dims[0] = 1;
+        for (i, r) in pending.iter().enumerate() {
+            let slice = out.data[i * out_elems..(i + 1) * out_elems].to_vec();
+            let t = HostTensor::new(Shape::new(out_dims.clone(), out.shape.dtype), slice);
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.latency_us_sum.fetch_add(
+                r.enqueued.elapsed().as_micros() as u64,
+                Ordering::Relaxed,
+            );
+            let _ = r.reply.send(t);
+        }
+        if shutdown_after {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = ServerStats::default();
+        s.requests.store(4, Ordering::Relaxed);
+        s.latency_us_sum.store(8000, Ordering::Relaxed);
+        s.batches.store(2, Ordering::Relaxed);
+        s.padded_slots.store(4, Ordering::Relaxed);
+        assert!((s.mean_latency_ms() - 2.0).abs() < 1e-9);
+        assert!((s.occupancy(4) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,122 @@
+//! AlexNet (Krizhevsky et al., 2012), TorchVision layout.
+//!
+//! The classifier's hidden width (4096) scales with the config's width
+//! multiplier; the first linear layer's input size is derived from the
+//! actual flattened feature extent so any admissible input resolution
+//! works (the stem needs input ≥ 63 so the final pool is non-degenerate).
+
+use crate::graph::{Graph, Layer, Shape, Window2d};
+
+use super::util::{conv, maxpool, relu};
+use super::ZooConfig;
+
+pub fn alexnet(cfg: ZooConfig) -> Graph {
+    let mut g = Graph::new("alexnet", Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+
+    conv(
+        &mut g,
+        "features.0.conv",
+        cfg.ch(64),
+        Window2d {
+            kernel: (11, 11),
+            stride: (4, 4),
+            pad: (2, 2),
+        },
+        true,
+    );
+    relu(&mut g, "features.1.relu");
+    maxpool(&mut g, "features.2.maxpool", 3, 2, 0);
+
+    conv(
+        &mut g,
+        "features.3.conv",
+        cfg.ch(192),
+        Window2d::square(5, 1, 2),
+        true,
+    );
+    relu(&mut g, "features.4.relu");
+    maxpool(&mut g, "features.5.maxpool", 3, 2, 0);
+
+    conv(
+        &mut g,
+        "features.6.conv",
+        cfg.ch(384),
+        Window2d::square(3, 1, 1),
+        true,
+    );
+    relu(&mut g, "features.7.relu");
+    conv(
+        &mut g,
+        "features.8.conv",
+        cfg.ch(256),
+        Window2d::square(3, 1, 1),
+        true,
+    );
+    relu(&mut g, "features.9.relu");
+    conv(
+        &mut g,
+        "features.10.conv",
+        cfg.ch(256),
+        Window2d::square(3, 1, 1),
+        true,
+    );
+    relu(&mut g, "features.11.relu");
+    maxpool(&mut g, "features.12.maxpool", 3, 2, 0);
+
+    g.push("flatten", Layer::Flatten);
+    let hidden = cfg.ch(4096);
+    g.push("classifier.0.dropout", Layer::Dropout { p: 0.5 });
+    g.push(
+        "classifier.1.fc",
+        Layer::Linear {
+            out_features: hidden,
+            bias: true,
+        },
+    );
+    g.push("classifier.2.relu", Layer::Relu);
+    g.push("classifier.3.dropout", Layer::Dropout { p: 0.5 });
+    g.push(
+        "classifier.4.fc",
+        Layer::Linear {
+            out_features: hidden,
+            bias: true,
+        },
+    );
+    g.push("classifier.5.relu", Layer::Relu);
+    g.push(
+        "classifier.6.fc",
+        Layer::Linear {
+            out_features: cfg.num_classes,
+            bias: true,
+        },
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn paper_scale_shapes() {
+        let g = alexnet(paper_config("alexnet", 128));
+        // 224 -> conv11s4p2 -> 55 -> pool -> 27 -> conv5p2 -> 27 -> pool
+        // -> 13 -> 3x conv3p1 -> 13 -> pool -> 6.
+        let feat = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "features.12.maxpool")
+            .unwrap();
+        assert_eq!(feat.shape.dims, vec![128, 256, 6, 6]);
+        assert_eq!(g.output_shape().dims, vec![128, 1000]);
+    }
+
+    #[test]
+    fn dropout_counts() {
+        let g = alexnet(paper_config("alexnet", 1));
+        assert_eq!(g.kind_histogram()["dropout"], 2);
+        assert_eq!(g.kind_histogram()["conv2d"], 5);
+        assert_eq!(g.kind_histogram()["maxpool"], 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! DenseNet-121/161/169/201 (Huang et al., 2017), TorchVision layout.
+//!
+//! Dense layer: BN → ReLU → 1×1 conv (4·growth) → BN → ReLU → 3×3 conv
+//! (growth), concatenated with its input. Transition: BN → ReLU → 1×1
+//! conv (half) → 2×2/2 avg-pool. These BN→ReLU prefixes are exactly the
+//! consecutive optimizable runs that give DenseNets the largest gains in
+//! the paper (Figures 13/14).
+
+use crate::graph::{Graph, Layer, NodeId, Shape, Window2d};
+
+use super::util::{avgpool, bn, conv, global_avgpool, maxpool, relu};
+use super::ZooConfig;
+
+fn dense_layer(g: &mut Graph, prefix: &str, input: NodeId, growth: usize) -> NodeId {
+    g.add(
+        format!("{prefix}.norm1"),
+        Layer::BatchNorm2d { eps: 1e-5 },
+        &[input],
+    );
+    relu(g, &format!("{prefix}.relu1"));
+    conv(
+        g,
+        &format!("{prefix}.conv1"),
+        4 * growth,
+        Window2d::square(1, 1, 0),
+        false,
+    );
+    bn(g, &format!("{prefix}.norm2"));
+    relu(g, &format!("{prefix}.relu2"));
+    let new = conv(
+        g,
+        &format!("{prefix}.conv2"),
+        growth,
+        Window2d::square(3, 1, 1),
+        false,
+    );
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[input, new])
+}
+
+fn transition(g: &mut Graph, prefix: &str, out_channels: usize) {
+    bn(g, &format!("{prefix}.norm"));
+    relu(g, &format!("{prefix}.relu"));
+    conv(
+        g,
+        &format!("{prefix}.conv"),
+        out_channels,
+        Window2d::square(1, 1, 0),
+        false,
+    );
+    avgpool(g, &format!("{prefix}.pool"), 2, 2, 0);
+}
+
+pub fn densenet(
+    cfg: ZooConfig,
+    name: &str,
+    init_features: usize,
+    growth: usize,
+    block_config: &[usize],
+) -> Graph {
+    let mut g = Graph::new(name, Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+    let init = cfg.ch(init_features);
+    let growth = cfg.ch(growth);
+
+    // Stem.
+    conv(
+        &mut g,
+        "features.conv0",
+        init,
+        Window2d {
+            kernel: (7, 7),
+            stride: (2, 2),
+            pad: (3, 3),
+        },
+        false,
+    );
+    bn(&mut g, "features.norm0");
+    relu(&mut g, "features.relu0");
+    maxpool(&mut g, "features.pool0", 3, 2, 1);
+
+    let mut channels = init;
+    for (bi, &n_layers) in block_config.iter().enumerate() {
+        for li in 0..n_layers {
+            let input = g.output;
+            dense_layer(
+                &mut g,
+                &format!("features.denseblock{}.denselayer{}", bi + 1, li + 1),
+                input,
+                growth,
+            );
+            channels += growth;
+        }
+        if bi + 1 != block_config.len() {
+            channels /= 2;
+            transition(
+                &mut g,
+                &format!("features.transition{}", bi + 1),
+                channels,
+            );
+        }
+    }
+
+    // Final norm + relu then classifier.
+    bn(&mut g, "features.norm5");
+    relu(&mut g, "features.relu5");
+    global_avgpool(&mut g, "avgpool");
+    g.push("flatten", Layer::Flatten);
+    g.push(
+        "classifier",
+        Layer::Linear {
+            out_features: cfg.num_classes,
+            bias: true,
+        },
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn densenet121_channel_bookkeeping() {
+        let g = densenet(
+            paper_config("densenet121", 1),
+            "densenet121",
+            64,
+            32,
+            &[6, 12, 24, 16],
+        );
+        // Final feature channels: ((64+6*32)/2 + 12*32)/2 ... = 1024.
+        let norm5 = g.nodes.iter().find(|n| n.name == "features.norm5").unwrap();
+        assert_eq!(norm5.shape.channels(), 1024);
+        assert_eq!(norm5.shape.height(), 7);
+    }
+
+    #[test]
+    fn densenet161_uses_growth_48() {
+        let g = densenet(
+            paper_config("densenet161", 1),
+            "densenet161",
+            96,
+            48,
+            &[6, 12, 36, 24],
+        );
+        let norm5 = g.nodes.iter().find(|n| n.name == "features.norm5").unwrap();
+        assert_eq!(norm5.shape.channels(), 2208);
+    }
+
+    #[test]
+    fn dense_layers_have_concat_fanout() {
+        let g = densenet(
+            paper_config("densenet121", 1),
+            "densenet121",
+            64,
+            32,
+            &[6, 12, 24, 16],
+        );
+        let h = g.kind_histogram();
+        assert_eq!(h["concat"], 6 + 12 + 24 + 16);
+        // two convs per dense layer + stem + 3 transitions.
+        assert_eq!(h["conv2d"], 2 * 58 + 1 + 3);
+    }
+}

@@ -1,0 +1,228 @@
+//! Inception-V3 (Szegedy et al., 2015), TorchVision layout (eval mode:
+//! no auxiliary classifier).
+//!
+//! Every conv is a `BasicConv2d` = conv(bias=false) → BN → ReLU, so the
+//! network is dense in optimizable BN→ReLU pairs — the paper optimizes
+//! 203 of its 316 layers (Table 2).
+
+use crate::graph::{Graph, Layer, NodeId, PoolKind, Shape, Window2d};
+
+use super::util::{global_avgpool, maxpool};
+use super::ZooConfig;
+
+/// conv → BN → ReLU starting from an explicit input node; returns output.
+fn basic(g: &mut Graph, prefix: &str, input: NodeId, out: usize, window: Window2d) -> NodeId {
+    let c = g.add(
+        format!("{prefix}.conv"),
+        Layer::Conv2d {
+            out_channels: out,
+            window,
+            bias: false,
+        },
+        &[input],
+    );
+    let b = g.add(format!("{prefix}.bn"), Layer::BatchNorm2d { eps: 1e-3 }, &[c]);
+    g.add(format!("{prefix}.relu"), Layer::Relu, &[b])
+}
+
+fn sq(k: usize, s: usize, p: usize) -> Window2d {
+    Window2d::square(k, s, p)
+}
+
+fn rect(kh: usize, kw: usize, ph: usize, pw: usize) -> Window2d {
+    Window2d {
+        kernel: (kh, kw),
+        stride: (1, 1),
+        pad: (ph, pw),
+    }
+}
+
+/// 3×3/1/1 average pool used by the pooled branches.
+fn branch_avgpool(g: &mut Graph, prefix: &str, input: NodeId) -> NodeId {
+    g.add(
+        format!("{prefix}.pool"),
+        Layer::Pool2d {
+            kind: PoolKind::Avg,
+            window: Window2d::square(3, 1, 1),
+            ceil_mode: false,
+            count_include_pad: true,
+        },
+        &[input],
+    )
+}
+
+fn inception_a(g: &mut Graph, prefix: &str, cfg: &ZooConfig, pool_features: usize) {
+    let input = g.output;
+    let b1 = basic(g, &format!("{prefix}.branch1x1"), input, cfg.ch(64), sq(1, 1, 0));
+    let b5 = basic(g, &format!("{prefix}.branch5x5_1"), input, cfg.ch(48), sq(1, 1, 0));
+    let b5 = basic(g, &format!("{prefix}.branch5x5_2"), b5, cfg.ch(64), sq(5, 1, 2));
+    let b3 = basic(g, &format!("{prefix}.branch3x3dbl_1"), input, cfg.ch(64), sq(1, 1, 0));
+    let b3 = basic(g, &format!("{prefix}.branch3x3dbl_2"), b3, cfg.ch(96), sq(3, 1, 1));
+    let b3 = basic(g, &format!("{prefix}.branch3x3dbl_3"), b3, cfg.ch(96), sq(3, 1, 1));
+    let bp = branch_avgpool(g, &format!("{prefix}.branch_pool"), input);
+    let bp = basic(
+        g,
+        &format!("{prefix}.branch_pool_conv"),
+        bp,
+        cfg.ch(pool_features),
+        sq(1, 1, 0),
+    );
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[b1, b5, b3, bp]);
+}
+
+fn inception_b(g: &mut Graph, prefix: &str, cfg: &ZooConfig) {
+    let input = g.output;
+    let b3 = basic(g, &format!("{prefix}.branch3x3"), input, cfg.ch(384), sq(3, 2, 0));
+    let bd = basic(g, &format!("{prefix}.branch3x3dbl_1"), input, cfg.ch(64), sq(1, 1, 0));
+    let bd = basic(g, &format!("{prefix}.branch3x3dbl_2"), bd, cfg.ch(96), sq(3, 1, 1));
+    let bd = basic(g, &format!("{prefix}.branch3x3dbl_3"), bd, cfg.ch(96), sq(3, 2, 0));
+    let bp = g.add(
+        format!("{prefix}.branch_pool"),
+        Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 2, 0),
+            ceil_mode: false,
+            count_include_pad: true,
+        },
+        &[input],
+    );
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[b3, bd, bp]);
+}
+
+fn inception_c(g: &mut Graph, prefix: &str, cfg: &ZooConfig, c7: usize) {
+    let input = g.output;
+    let c7 = cfg.ch(c7);
+    let out = cfg.ch(192);
+    let b1 = basic(g, &format!("{prefix}.branch1x1"), input, out, sq(1, 1, 0));
+    let b7 = basic(g, &format!("{prefix}.branch7x7_1"), input, c7, sq(1, 1, 0));
+    let b7 = basic(g, &format!("{prefix}.branch7x7_2"), b7, c7, rect(1, 7, 0, 3));
+    let b7 = basic(g, &format!("{prefix}.branch7x7_3"), b7, out, rect(7, 1, 3, 0));
+    let bd = basic(g, &format!("{prefix}.branch7x7dbl_1"), input, c7, sq(1, 1, 0));
+    let bd = basic(g, &format!("{prefix}.branch7x7dbl_2"), bd, c7, rect(7, 1, 3, 0));
+    let bd = basic(g, &format!("{prefix}.branch7x7dbl_3"), bd, c7, rect(1, 7, 0, 3));
+    let bd = basic(g, &format!("{prefix}.branch7x7dbl_4"), bd, c7, rect(7, 1, 3, 0));
+    let bd = basic(g, &format!("{prefix}.branch7x7dbl_5"), bd, out, rect(1, 7, 0, 3));
+    let bp = branch_avgpool(g, &format!("{prefix}.branch_pool"), input);
+    let bp = basic(g, &format!("{prefix}.branch_pool_conv"), bp, out, sq(1, 1, 0));
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[b1, b7, bd, bp]);
+}
+
+fn inception_d(g: &mut Graph, prefix: &str, cfg: &ZooConfig) {
+    let input = g.output;
+    let b3 = basic(g, &format!("{prefix}.branch3x3_1"), input, cfg.ch(192), sq(1, 1, 0));
+    let b3 = basic(g, &format!("{prefix}.branch3x3_2"), b3, cfg.ch(320), sq(3, 2, 0));
+    let b7 = basic(g, &format!("{prefix}.branch7x7x3_1"), input, cfg.ch(192), sq(1, 1, 0));
+    let b7 = basic(g, &format!("{prefix}.branch7x7x3_2"), b7, cfg.ch(192), rect(1, 7, 0, 3));
+    let b7 = basic(g, &format!("{prefix}.branch7x7x3_3"), b7, cfg.ch(192), rect(7, 1, 3, 0));
+    let b7 = basic(g, &format!("{prefix}.branch7x7x3_4"), b7, cfg.ch(192), sq(3, 2, 0));
+    let bp = g.add(
+        format!("{prefix}.branch_pool"),
+        Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 2, 0),
+            ceil_mode: false,
+            count_include_pad: true,
+        },
+        &[input],
+    );
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[b3, b7, bp]);
+}
+
+fn inception_e(g: &mut Graph, prefix: &str, cfg: &ZooConfig) {
+    let input = g.output;
+    let b1 = basic(g, &format!("{prefix}.branch1x1"), input, cfg.ch(320), sq(1, 1, 0));
+    let b3 = basic(g, &format!("{prefix}.branch3x3_1"), input, cfg.ch(384), sq(1, 1, 0));
+    let b3a = basic(g, &format!("{prefix}.branch3x3_2a"), b3, cfg.ch(384), rect(1, 3, 0, 1));
+    let b3b = basic(g, &format!("{prefix}.branch3x3_2b"), b3, cfg.ch(384), rect(3, 1, 1, 0));
+    let b3 = g.add(format!("{prefix}.branch3x3_concat"), Layer::Concat, &[b3a, b3b]);
+    let bd = basic(g, &format!("{prefix}.branch3x3dbl_1"), input, cfg.ch(448), sq(1, 1, 0));
+    let bd = basic(g, &format!("{prefix}.branch3x3dbl_2"), bd, cfg.ch(384), sq(3, 1, 1));
+    let bda = basic(g, &format!("{prefix}.branch3x3dbl_3a"), bd, cfg.ch(384), rect(1, 3, 0, 1));
+    let bdb = basic(g, &format!("{prefix}.branch3x3dbl_3b"), bd, cfg.ch(384), rect(3, 1, 1, 0));
+    let bd = g.add(
+        format!("{prefix}.branch3x3dbl_concat"),
+        Layer::Concat,
+        &[bda, bdb],
+    );
+    let bp = branch_avgpool(g, &format!("{prefix}.branch_pool"), input);
+    let bp = basic(g, &format!("{prefix}.branch_pool_conv"), bp, cfg.ch(192), sq(1, 1, 0));
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[b1, b3, bd, bp]);
+}
+
+pub fn inception_v3(cfg: ZooConfig) -> Graph {
+    let mut g = Graph::new(
+        "inception_v3",
+        Shape::nchw(cfg.batch, 3, cfg.input, cfg.input),
+    );
+
+    // Stem.
+    let x = g.output;
+    let x = basic(&mut g, "Conv2d_1a_3x3", x, cfg.ch(32), sq(3, 2, 0));
+    let x = basic(&mut g, "Conv2d_2a_3x3", x, cfg.ch(32), sq(3, 1, 0));
+    let _ = basic(&mut g, "Conv2d_2b_3x3", x, cfg.ch(64), sq(3, 1, 1));
+    maxpool(&mut g, "maxpool1", 3, 2, 0);
+    let x = g.output;
+    let x = basic(&mut g, "Conv2d_3b_1x1", x, cfg.ch(80), sq(1, 1, 0));
+    let _ = basic(&mut g, "Conv2d_4a_3x3", x, cfg.ch(192), sq(3, 1, 0));
+    maxpool(&mut g, "maxpool2", 3, 2, 0);
+
+    inception_a(&mut g, "Mixed_5b", &cfg, 32);
+    inception_a(&mut g, "Mixed_5c", &cfg, 64);
+    inception_a(&mut g, "Mixed_5d", &cfg, 64);
+    inception_b(&mut g, "Mixed_6a", &cfg);
+    inception_c(&mut g, "Mixed_6b", &cfg, 128);
+    inception_c(&mut g, "Mixed_6c", &cfg, 160);
+    inception_c(&mut g, "Mixed_6d", &cfg, 160);
+    inception_c(&mut g, "Mixed_6e", &cfg, 192);
+    inception_d(&mut g, "Mixed_7a", &cfg);
+    inception_e(&mut g, "Mixed_7b", &cfg);
+    inception_e(&mut g, "Mixed_7c", &cfg);
+
+    global_avgpool(&mut g, "avgpool");
+    g.push("dropout", Layer::Dropout { p: 0.5 });
+    g.push("flatten", Layer::Flatten);
+    g.push(
+        "fc",
+        Layer::Linear {
+            out_features: cfg.num_classes,
+            bias: true,
+        },
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn paper_scale_extents() {
+        let g = inception_v3(paper_config("inception_v3", 1));
+        // 299 -> 149 -> 147 -> 147 -> 73 -> 73 -> 71 -> 35.
+        let m5b_in = g.nodes.iter().find(|n| n.name == "maxpool2").unwrap();
+        assert_eq!(m5b_in.shape.dims, vec![1, 192, 35, 35]);
+        // Mixed_5b output: 64+64+96+32 = 256 channels.
+        let m5b = g.nodes.iter().find(|n| n.name == "Mixed_5b.concat").unwrap();
+        assert_eq!(m5b.shape.channels(), 256);
+        // Mixed_6e output: 768 @ 17x17.
+        let m6e = g.nodes.iter().find(|n| n.name == "Mixed_6e.concat").unwrap();
+        assert_eq!(m6e.shape.dims, vec![1, 768, 17, 17]);
+        // Mixed_7c output: 2048 @ 8x8.
+        let m7c = g.nodes.iter().find(|n| n.name == "Mixed_7c.concat").unwrap();
+        assert_eq!(m7c.shape.dims, vec![1, 2048, 8, 8]);
+        assert_eq!(g.output_shape().dims, vec![1, 1000]);
+    }
+
+    #[test]
+    fn layer_count_in_table2_regime() {
+        let g = inception_v3(paper_config("inception_v3", 1));
+        // Paper reports 316 layers; our module tally differs slightly but
+        // must land in the same regime.
+        let n = g.num_layers();
+        assert!(
+            (250..400).contains(&n),
+            "inception layer count {n} out of regime"
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! ResNet-18/34 (BasicBlock) and ResNet-50/101/152 (Bottleneck), He et
+//! al. 2016, TorchVision layout.
+
+use crate::graph::{Graph, Layer, NodeId, Shape, Window2d};
+
+use super::util::{bn, conv, global_avgpool, maxpool, relu};
+use super::ZooConfig;
+
+/// Stem shared by every ResNet: 7×7/2 conv → BN → ReLU → 3×3/2 max-pool.
+fn stem(g: &mut Graph, cfg: &ZooConfig) {
+    conv(
+        g,
+        "conv1",
+        cfg.ch(64),
+        Window2d {
+            kernel: (7, 7),
+            stride: (2, 2),
+            pad: (3, 3),
+        },
+        false,
+    );
+    bn(g, "bn1");
+    relu(g, "relu1");
+    maxpool(g, "maxpool", 3, 2, 1);
+}
+
+/// BasicBlock: 3×3 conv-BN-ReLU, 3×3 conv-BN, residual add, ReLU.
+fn basic_block(g: &mut Graph, prefix: &str, planes: usize, stride: usize, downsample: bool) {
+    let identity = g.output;
+    conv(
+        g,
+        &format!("{prefix}.conv1"),
+        planes,
+        Window2d::square(3, stride, 1),
+        false,
+    );
+    bn(g, &format!("{prefix}.bn1"));
+    relu(g, &format!("{prefix}.relu1"));
+    conv(
+        g,
+        &format!("{prefix}.conv2"),
+        planes,
+        Window2d::square(3, 1, 1),
+        false,
+    );
+    let main = bn(g, &format!("{prefix}.bn2"));
+    let skip = shortcut(g, prefix, identity, planes, stride, downsample);
+    g.add(format!("{prefix}.add"), Layer::Add, &[main, skip]);
+    relu(g, &format!("{prefix}.relu2"));
+}
+
+/// Bottleneck: 1×1 reduce, 3×3, 1×1 expand (×4), residual add, ReLU.
+fn bottleneck_block(g: &mut Graph, prefix: &str, planes: usize, stride: usize, downsample: bool) {
+    let identity = g.output;
+    conv(
+        g,
+        &format!("{prefix}.conv1"),
+        planes,
+        Window2d::square(1, 1, 0),
+        false,
+    );
+    bn(g, &format!("{prefix}.bn1"));
+    relu(g, &format!("{prefix}.relu1"));
+    conv(
+        g,
+        &format!("{prefix}.conv2"),
+        planes,
+        Window2d::square(3, stride, 1),
+        false,
+    );
+    bn(g, &format!("{prefix}.bn2"));
+    relu(g, &format!("{prefix}.relu2"));
+    conv(
+        g,
+        &format!("{prefix}.conv3"),
+        planes * 4,
+        Window2d::square(1, 1, 0),
+        false,
+    );
+    let main = bn(g, &format!("{prefix}.bn3"));
+    let skip = shortcut(g, prefix, identity, planes * 4, stride, downsample);
+    g.add(format!("{prefix}.add"), Layer::Add, &[main, skip]);
+    relu(g, &format!("{prefix}.relu3"));
+}
+
+/// Identity or 1×1-conv+BN projection shortcut.
+fn shortcut(
+    g: &mut Graph,
+    prefix: &str,
+    identity: NodeId,
+    out_planes: usize,
+    stride: usize,
+    downsample: bool,
+) -> NodeId {
+    if !downsample {
+        return identity;
+    }
+    let c = g.add(
+        format!("{prefix}.downsample.conv"),
+        Layer::Conv2d {
+            out_channels: out_planes,
+            window: Window2d::square(1, stride, 0),
+            bias: false,
+        },
+        &[identity],
+    );
+    g.add(
+        format!("{prefix}.downsample.bn"),
+        Layer::BatchNorm2d { eps: 1e-5 },
+        &[c],
+    )
+}
+
+fn head(g: &mut Graph, cfg: &ZooConfig) {
+    global_avgpool(g, "avgpool");
+    g.push("flatten", Layer::Flatten);
+    g.push(
+        "fc",
+        Layer::Linear {
+            out_features: cfg.num_classes,
+            bias: true,
+        },
+    );
+}
+
+pub fn resnet_basic(cfg: ZooConfig, name: &str, blocks: &[usize; 4]) -> Graph {
+    let mut g = Graph::new(name, Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+    stem(&mut g, &cfg);
+    let mut in_planes = cfg.ch(64);
+    for (stage, &n) in blocks.iter().enumerate() {
+        let planes = cfg.ch(64 << stage);
+        let stride = if stage == 0 { 1 } else { 2 };
+        for b in 0..n {
+            let prefix = format!("layer{}.{}", stage + 1, b);
+            let (s, down) = if b == 0 {
+                (stride, stride != 1 || in_planes != planes)
+            } else {
+                (1, false)
+            };
+            basic_block(&mut g, &prefix, planes, s, down);
+        }
+        in_planes = planes;
+    }
+    head(&mut g, &cfg);
+    g
+}
+
+pub fn resnet_bottleneck(cfg: ZooConfig, name: &str, blocks: &[usize; 4]) -> Graph {
+    let mut g = Graph::new(name, Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+    stem(&mut g, &cfg);
+    let mut in_planes = cfg.ch(64);
+    for (stage, &n) in blocks.iter().enumerate() {
+        let planes = cfg.ch(64 << stage);
+        let stride = if stage == 0 { 1 } else { 2 };
+        for b in 0..n {
+            let prefix = format!("layer{}.{}", stage + 1, b);
+            let (s, down) = if b == 0 {
+                (stride, true) // expansion always forces a projection at b=0
+            } else {
+                (1, false)
+            };
+            bottleneck_block(&mut g, &prefix, planes, s, down);
+        }
+        in_planes = planes * 4;
+    }
+    let _ = in_planes;
+    head(&mut g, &cfg);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet_basic(paper_config("resnet18", 1), "resnet18", &[2, 2, 2, 2]);
+        let h = g.kind_histogram();
+        // 1 stem + 8 blocks * 2 + 3 downsample projections = 20 convs.
+        assert_eq!(h["conv2d"], 20);
+        assert_eq!(h["add"], 8);
+        assert_eq!(g.output_shape().dims, vec![1, 1000]);
+    }
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet_bottleneck(paper_config("resnet50", 1), "resnet50", &[3, 4, 6, 3]);
+        let h = g.kind_histogram();
+        // stem 1 + 16 blocks * 3 + 4 projections = 53 convs.
+        assert_eq!(h["conv2d"], 53);
+        assert_eq!(h["add"], 16);
+        // stage extents: 224 -> 112 -> 56 (pool) -> 56,28,14,7.
+        let last_relu = g.nodes.iter().rev().find(|n| n.name.contains("relu3")).unwrap();
+        assert_eq!(last_relu.shape.dims, vec![1, 2048, 7, 7]);
+    }
+
+    #[test]
+    fn downsample_on_first_block_of_each_later_stage() {
+        let g = resnet_basic(paper_config("resnet18", 1), "resnet18", &[2, 2, 2, 2]);
+        let n_down = g
+            .nodes
+            .iter()
+            .filter(|n| n.name.contains("downsample.conv"))
+            .count();
+        assert_eq!(n_down, 3); // stages 2..4
+    }
+}

@@ -1,0 +1,148 @@
+//! SqueezeNet 1.0 / 1.1 (Iandola et al., 2016), TorchVision layout.
+//!
+//! Fire module: 1×1 squeeze conv + ReLU, then parallel 1×1 and 3×3
+//! expand convs (each + ReLU) concatenated on the channel axis. The
+//! classifier is conv-based: dropout → 1×1 conv(num_classes) → ReLU →
+//! global avg-pool.
+
+use crate::graph::{Graph, Layer, Shape, Window2d};
+
+use super::util::{conv, global_avgpool, maxpool_ceil, relu};
+use super::ZooConfig;
+
+fn fire(g: &mut Graph, prefix: &str, squeeze: usize, e1x1: usize, e3x3: usize) {
+    conv(
+        g,
+        &format!("{prefix}.squeeze"),
+        squeeze,
+        Window2d::square(1, 1, 0),
+        true,
+    );
+    let s = relu(g, &format!("{prefix}.squeeze_relu"));
+    let a = g.add(
+        format!("{prefix}.expand1x1"),
+        Layer::Conv2d {
+            out_channels: e1x1,
+            window: Window2d::square(1, 1, 0),
+            bias: true,
+        },
+        &[s],
+    );
+    let a = g.add(format!("{prefix}.expand1x1_relu"), Layer::Relu, &[a]);
+    let b = g.add(
+        format!("{prefix}.expand3x3"),
+        Layer::Conv2d {
+            out_channels: e3x3,
+            window: Window2d::square(3, 1, 1),
+            bias: true,
+        },
+        &[s],
+    );
+    let b = g.add(format!("{prefix}.expand3x3_relu"), Layer::Relu, &[b]);
+    g.add(format!("{prefix}.concat"), Layer::Concat, &[a, b]);
+}
+
+pub fn squeezenet(cfg: ZooConfig, version: &str) -> Graph {
+    let name = format!("squeezenet{version}");
+    let mut g = Graph::new(name, Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+    let c = |x: usize| cfg.ch(x);
+
+    match version {
+        "1_0" => {
+            conv(
+                &mut g,
+                "features.0.conv",
+                c(96),
+                Window2d::square(7, 2, 0),
+                true,
+            );
+            relu(&mut g, "features.1.relu");
+            maxpool_ceil(&mut g, "features.2.maxpool", 3, 2);
+            fire(&mut g, "features.3", c(16), c(64), c(64));
+            fire(&mut g, "features.4", c(16), c(64), c(64));
+            fire(&mut g, "features.5", c(32), c(128), c(128));
+            maxpool_ceil(&mut g, "features.6.maxpool", 3, 2);
+            fire(&mut g, "features.7", c(32), c(128), c(128));
+            fire(&mut g, "features.8", c(48), c(192), c(192));
+            fire(&mut g, "features.9", c(48), c(192), c(192));
+            fire(&mut g, "features.10", c(64), c(256), c(256));
+            maxpool_ceil(&mut g, "features.11.maxpool", 3, 2);
+            fire(&mut g, "features.12", c(64), c(256), c(256));
+        }
+        "1_1" => {
+            conv(
+                &mut g,
+                "features.0.conv",
+                c(64),
+                Window2d::square(3, 2, 0),
+                true,
+            );
+            relu(&mut g, "features.1.relu");
+            maxpool_ceil(&mut g, "features.2.maxpool", 3, 2);
+            fire(&mut g, "features.3", c(16), c(64), c(64));
+            fire(&mut g, "features.4", c(16), c(64), c(64));
+            maxpool_ceil(&mut g, "features.5.maxpool", 3, 2);
+            fire(&mut g, "features.6", c(32), c(128), c(128));
+            fire(&mut g, "features.7", c(32), c(128), c(128));
+            maxpool_ceil(&mut g, "features.8.maxpool", 3, 2);
+            fire(&mut g, "features.9", c(48), c(192), c(192));
+            fire(&mut g, "features.10", c(48), c(192), c(192));
+            fire(&mut g, "features.11", c(64), c(256), c(256));
+            fire(&mut g, "features.12", c(64), c(256), c(256));
+        }
+        _ => panic!("unknown squeezenet version {version}"),
+    }
+
+    // Conv classifier.
+    g.push("classifier.0.dropout", Layer::Dropout { p: 0.5 });
+    conv(
+        &mut g,
+        "classifier.1.conv",
+        cfg.num_classes,
+        Window2d::square(1, 1, 0),
+        true,
+    );
+    relu(&mut g, "classifier.2.relu");
+    global_avgpool(&mut g, "classifier.3.avgpool");
+    g.push("flatten", Layer::Flatten);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn v10_structure() {
+        let g = squeezenet(paper_config("squeezenet1_0", 1), "1_0");
+        let h = g.kind_histogram();
+        // 8 fires * 3 convs + stem + classifier = 26 convs.
+        assert_eq!(h["conv2d"], 26);
+        assert_eq!(h["concat"], 8);
+        assert_eq!(h["maxpool"], 3);
+        assert_eq!(g.output_shape().dims, vec![1, 1000]);
+    }
+
+    #[test]
+    fn v11_final_channels() {
+        let g = squeezenet(paper_config("squeezenet1_1", 1), "1_1");
+        let last_fire = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "features.12.concat")
+            .unwrap();
+        assert_eq!(last_fire.shape.channels(), 512);
+    }
+
+    #[test]
+    fn ceil_mode_pools_present() {
+        let g = squeezenet(paper_config("squeezenet1_0", 1), "1_0");
+        let pools = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.layer, Layer::Pool2d { ceil_mode: true, .. }))
+            .count();
+        assert_eq!(pools, 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! VGG-11/13/16/19 with and without batch normalization (Simonyan &
+//! Zisserman, 2014), TorchVision layout.
+
+use crate::graph::{Graph, Layer, Shape, Window2d};
+
+use super::util::{bn, conv, maxpool, relu};
+use super::ZooConfig;
+
+/// Stage spec: `C(n)` = 3×3 conv with `n` output channels, `M` = 2×2/2
+/// max-pool. These are TorchVision's cfgs A/B/D/E.
+#[derive(Debug, Clone, Copy)]
+pub enum Item {
+    C(usize),
+    M,
+}
+
+use Item::{C, M};
+
+pub const CFG_A: &[Item] = &[
+    C(64), M, C(128), M, C(256), C(256), M, C(512), C(512), M, C(512), C(512), M,
+];
+pub const CFG_B: &[Item] = &[
+    C(64), C(64), M, C(128), C(128), M, C(256), C(256), M, C(512), C(512), M, C(512), C(512), M,
+];
+pub const CFG_D: &[Item] = &[
+    C(64), C(64), M, C(128), C(128), M, C(256), C(256), C(256), M, C(512), C(512), C(512), M,
+    C(512), C(512), C(512), M,
+];
+pub const CFG_E: &[Item] = &[
+    C(64), C(64), M, C(128), C(128), M, C(256), C(256), C(256), C(256), M, C(512), C(512),
+    C(512), C(512), M, C(512), C(512), C(512), C(512), M,
+];
+
+pub fn vgg(cfg: ZooConfig, name: &str, items: &[Item], batch_norm: bool) -> Graph {
+    let mut g = Graph::new(name, Shape::nchw(cfg.batch, 3, cfg.input, cfg.input));
+    let mut idx = 0;
+    for item in items {
+        match item {
+            C(ch) => {
+                conv(
+                    &mut g,
+                    &format!("features.{idx}.conv"),
+                    cfg.ch(*ch),
+                    Window2d::square(3, 1, 1),
+                    // TorchVision VGG convs keep bias even with BN.
+                    true,
+                );
+                idx += 1;
+                if batch_norm {
+                    bn(&mut g, &format!("features.{idx}.bn"));
+                    idx += 1;
+                }
+                relu(&mut g, &format!("features.{idx}.relu"));
+                idx += 1;
+            }
+            M => {
+                maxpool(&mut g, &format!("features.{idx}.maxpool"), 2, 2, 0);
+                idx += 1;
+            }
+        }
+    }
+    g.push("flatten", Layer::Flatten);
+    let hidden = cfg.ch(4096);
+    g.push(
+        "classifier.0.fc",
+        Layer::Linear {
+            out_features: hidden,
+            bias: true,
+        },
+    );
+    g.push("classifier.1.relu", Layer::Relu);
+    g.push("classifier.2.dropout", Layer::Dropout { p: 0.5 });
+    g.push(
+        "classifier.3.fc",
+        Layer::Linear {
+            out_features: hidden,
+            bias: true,
+        },
+    );
+    g.push("classifier.4.relu", Layer::Relu);
+    g.push("classifier.5.dropout", Layer::Dropout { p: 0.5 });
+    g.push(
+        "classifier.6.fc",
+        Layer::Linear {
+            out_features: cfg.num_classes,
+            bias: true,
+        },
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::paper_config;
+
+    #[test]
+    fn conv_counts_match_names() {
+        let cases: &[(&str, &[Item], usize)] = &[
+            ("vgg11", CFG_A, 8),
+            ("vgg13", CFG_B, 10),
+            ("vgg16", CFG_D, 13),
+            ("vgg19", CFG_E, 16),
+        ];
+        for (name, items, n_convs) in cases {
+            let g = vgg(paper_config(name, 1), name, items, false);
+            assert_eq!(g.kind_histogram()["conv2d"], *n_convs, "{name}");
+        }
+    }
+
+    #[test]
+    fn bn_variant_adds_bn_per_conv() {
+        let g = vgg(paper_config("vgg16_bn", 1), "vgg16_bn", CFG_D, true);
+        assert_eq!(g.kind_histogram()["batchnorm"], 13);
+        // 224 / 2^5 = 7 final extent.
+        let flat = g.nodes.iter().find(|n| n.name == "flatten").unwrap();
+        assert_eq!(flat.shape.dims, vec![1, 512 * 7 * 7]);
+    }
+}

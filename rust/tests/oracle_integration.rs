@@ -1,0 +1,165 @@
+//! Integration: the rust scheduler executing real AOT artifacts must
+//! reproduce the python oracle bit-for-bit (same detrng parameters, same
+//! XLA backend) in BOTH execution modes, and the two modes must agree
+//! with each other — the paper's core "transparent, same results"
+//! guarantee (§1: "does not change the actual results").
+//!
+//! Requires `make artifacts`; tests skip (with a message) if missing.
+
+use std::path::Path;
+
+use brainslug::bench;
+use brainslug::graph::{graph_from_json, Graph};
+use brainslug::json::parse;
+use brainslug::optimizer::optimize;
+use brainslug::runtime::{HostTensor, Runtime};
+use brainslug::scheduler::Executor;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+struct Oracle {
+    tag: String,
+    seed: u64,
+    graph: Graph,
+    input: HostTensor,
+    output: HostTensor,
+}
+
+fn load_oracles(dir: &Path) -> Vec<Oracle> {
+    let requests = parse(&std::fs::read_to_string(dir.join("requests.json")).unwrap()).unwrap();
+    let manifest = parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
+    let mut out = Vec::new();
+    for entry in manifest.arr_field("oracles").unwrap() {
+        let tag = entry.str_field("tag").unwrap();
+        let req = requests
+            .arr_field("oracles")
+            .unwrap()
+            .iter()
+            .find(|o| o.str_field("tag").unwrap() == tag)
+            .unwrap_or_else(|| panic!("oracle {tag} not in requests.json"));
+        let graph = graph_from_json(req.req("graph").unwrap()).unwrap();
+        let in_shape = graph.input_shape().clone();
+        let out_shape = graph.output_shape().clone();
+        let input = HostTensor::read_f32_file(
+            &dir.join(entry.str_field("input_path").unwrap()),
+            in_shape,
+        )
+        .unwrap();
+        let output = HostTensor::read_f32_file(
+            &dir.join(entry.str_field("output_path").unwrap()),
+            out_shape,
+        )
+        .unwrap();
+        out.push(Oracle {
+            tag,
+            seed: entry.usize_field("seed").unwrap() as u64,
+            graph,
+            input,
+            output,
+        });
+    }
+    assert!(!out.is_empty(), "no oracles recorded");
+    out
+}
+
+#[test]
+fn scheduler_matches_python_oracle_both_modes() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = Runtime::new(dir).unwrap();
+    let device = bench::measured_device();
+    for oracle in load_oracles(dir) {
+        let mut exec = Executor::new(&runtime, &oracle.graph, oracle.seed);
+
+        // The deterministic input must match the python-side dump.
+        let synth = exec.synthetic_input();
+        assert_eq!(
+            synth, oracle.input,
+            "{}: synthetic input drifted from python",
+            oracle.tag
+        );
+
+        let (base_out, _) = exec.run_baseline(oracle.input.clone()).unwrap();
+        assert!(
+            base_out.allclose(&oracle.output, 1e-3, 1e-3),
+            "{}: baseline deviates from oracle (max diff {})",
+            oracle.tag,
+            base_out.max_abs_diff(&oracle.output)
+        );
+
+        let plan = optimize(&oracle.graph, &device, &bench::measured_opts());
+        plan.validate(&oracle.graph).unwrap();
+        let (plan_out, _) = exec.run_plan(&plan, oracle.input.clone()).unwrap();
+        assert!(
+            plan_out.allclose(&oracle.output, 1e-3, 1e-3),
+            "{}: brainslug deviates from oracle (max diff {})",
+            oracle.tag,
+            plan_out.max_abs_diff(&oracle.output)
+        );
+        // And the two modes agree tightly with each other.
+        assert!(
+            plan_out.allclose(&base_out, 1e-4, 1e-4),
+            "{}: modes diverge (max diff {})",
+            oracle.tag,
+            plan_out.max_abs_diff(&base_out)
+        );
+        println!(
+            "{}: oracle OK (baseline diff {:.1e}, plan diff {:.1e})",
+            oracle.tag,
+            base_out.max_abs_diff(&oracle.output),
+            plan_out.max_abs_diff(&oracle.output)
+        );
+    }
+}
+
+#[test]
+fn fig10_strategies_agree_numerically() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = Runtime::new(dir).unwrap();
+    let device = bench::measured_device();
+    let g = bench::block_net(2, 4, 8, 32);
+    let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
+    let input = exec.synthetic_input();
+    let (base, _) = exec.run_baseline(input.clone()).unwrap();
+    for (name, opts) in bench::fig10_strategies() {
+        let plan = optimize(&g, &device, &opts);
+        let (out, _) = exec.run_plan(&plan, input.clone()).unwrap();
+        assert!(
+            out.allclose(&base, 1e-4, 1e-4),
+            "strategy {name} diverges (max diff {})",
+            out.max_abs_diff(&base)
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_fails_cleanly() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = Runtime::new(dir).unwrap();
+    let err = runtime.execute("does_not_exist", &[]).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn shape_mismatch_fails_cleanly() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = Runtime::new(dir).unwrap();
+    // Grab any manifest entry and call it with a wrong-shaped tensor.
+    let name = runtime
+        .manifest()
+        .entries
+        .keys()
+        .find(|n| n.starts_with("relu_"))
+        .expect("some relu executable")
+        .clone();
+    let bad = HostTensor::zeros(brainslug::graph::Shape::nf(1, 1));
+    let err = runtime.execute(&name, &[&bad]).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}

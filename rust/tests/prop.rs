@@ -1,0 +1,266 @@
+//! Property-based tests over the optimizer and memory model.
+//!
+//! The offline build has no proptest crate, so these are seeded
+//! randomized sweeps driven by the in-tree SplitMix64 generator: 200+
+//! random network structures per property, deterministic across runs
+//! (failures reproduce by seed, printed on panic).
+
+use brainslug::device::DeviceSpec;
+use brainslug::graph::{Graph, Layer, PoolKind, Shape, Window2d};
+use brainslug::memsim::{graph_cost_bf, sequence_cost_df, simulate_baseline, simulate_plan};
+use brainslug::optimizer::{optimize, CollapseOptions, Segment};
+use brainslug::rng::splitmix64;
+
+/// Deterministic random usize in [lo, hi].
+fn rand_in(state: &mut u64, lo: usize, hi: usize) -> usize {
+    lo + (splitmix64(state) as usize) % (hi - lo + 1)
+}
+
+/// Generate a random single-chain network of optimizable + conv layers.
+fn random_chain(seed: u64) -> Graph {
+    let mut st = seed;
+    let c = rand_in(&mut st, 1, 16);
+    let h = rand_in(&mut st, 8, 48);
+    let mut g = Graph::new(format!("rand{seed}"), Shape::nchw(rand_in(&mut st, 1, 4), c, h, h));
+    let n_layers = rand_in(&mut st, 1, 24);
+    for i in 0..n_layers {
+        let cur_h = g.output_shape().height();
+        match rand_in(&mut st, 0, 5) {
+            0 => {
+                g.push(format!("bn{i}"), Layer::BatchNorm2d { eps: 1e-5 });
+            }
+            1 => {
+                g.push(format!("relu{i}"), Layer::Relu);
+            }
+            2 => {
+                g.push(format!("drop{i}"), Layer::Dropout { p: 0.5 });
+            }
+            3 if cur_h >= 4 => {
+                let k = rand_in(&mut st, 2, 3);
+                let s = rand_in(&mut st, 1, 2);
+                let p = rand_in(&mut st, 0, k / 2);
+                g.push(
+                    format!("pool{i}"),
+                    Layer::Pool2d {
+                        kind: if rand_in(&mut st, 0, 1) == 0 {
+                            PoolKind::Max
+                        } else {
+                            PoolKind::Avg
+                        },
+                        window: Window2d::square(k, s, p),
+                        ceil_mode: false,
+                        count_include_pad: true,
+                    },
+                );
+            }
+            4 if cur_h >= 3 => {
+                g.push(
+                    format!("conv{i}"),
+                    Layer::Conv2d {
+                        out_channels: rand_in(&mut st, 1, 16),
+                        window: Window2d::square(3, 1, 1),
+                        bias: rand_in(&mut st, 0, 1) == 0,
+                    },
+                );
+            }
+            _ => {
+                g.push(format!("relu_b{i}"), Layer::Relu);
+            }
+        }
+    }
+    g
+}
+
+fn random_device(seed: u64) -> DeviceSpec {
+    let mut st = seed ^ 0xDEAD;
+    let mut d = match rand_in(&mut st, 0, 2) {
+        0 => DeviceSpec::paper_cpu(),
+        1 => DeviceSpec::paper_gpu(),
+        _ => DeviceSpec::tpu_core(),
+    };
+    d.fast_mem_bytes = 1usize << rand_in(&mut st, 10, 20);
+    d
+}
+
+#[test]
+fn plan_partitions_every_node_exactly_once() {
+    for seed in 0..250 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        plan.validate(&g)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn stack_ops_preserve_topological_order() {
+    for seed in 0..250 {
+        let g = random_chain(seed);
+        let plan = optimize(&g, &random_device(seed), &CollapseOptions::default());
+        for stack in plan.stacks() {
+            let flat: Vec<usize> = stack
+                .sequences
+                .iter()
+                .flat_map(|s| &s.steps)
+                .flat_map(|st| &st.ops)
+                .map(|o| o.node)
+                .collect();
+            assert_eq!(flat, stack.nodes, "seed {seed}: op order != node order");
+        }
+    }
+}
+
+#[test]
+fn multi_step_sequences_respect_budget() {
+    // Sequences with >1 step fit the budget at their chosen tile; a
+    // single-step sequence may exceed it (degenerate whole-input case).
+    for seed in 0..250 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        for stack in plan.stacks() {
+            for seq in &stack.sequences {
+                if seq.steps.len() > 1 {
+                    let ws = seq.working_set_bytes(1);
+                    assert!(
+                        ws <= device.resource_limit(),
+                        "seed {seed}: min working set {ws} > budget {}",
+                        device.resource_limit()
+                    );
+                }
+                assert!(seq.tile_rows >= 1, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn depth_first_never_moves_more_main_bytes() {
+    // Holds for realistic fast-memory budgets (>= 16 KiB). With
+    // pathologically small budgets the band height collapses to a few
+    // rows and the pooling halo redundancy can exceed the intermediate
+    // savings — the same effect the paper documents for convolutions
+    // (§7 Limitations) and that Figure 10's "unrestricted" curve shows
+    // when sequences outgrow the cache.
+    for seed in 0..250 {
+        let g = random_chain(seed);
+        let mut device = random_device(seed);
+        device.fast_mem_bytes = device.fast_mem_bytes.max(16 * 1024);
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        let bf = graph_cost_bf(&g);
+        let mut df_main = 0.0;
+        for seg in &plan.segments {
+            match seg {
+                Segment::Stack(st) => {
+                    for seq in &st.sequences {
+                        df_main += sequence_cost_df(&g, seq).main_bytes;
+                    }
+                }
+                Segment::Single(id) => {
+                    df_main += brainslug::memsim::layer_cost_bf(&g, g.node(*id)).main_bytes;
+                }
+            }
+        }
+        // Halo redundancy can add bytes, but removing intermediates must
+        // dominate: allow 5% slack for degenerate tiny stacks.
+        assert!(
+            df_main <= bf.main_bytes * 1.05,
+            "seed {seed}: df {df_main} > bf {}",
+            bf.main_bytes
+        );
+    }
+}
+
+#[test]
+fn identical_signatures_imply_identical_structure() {
+    use std::collections::HashMap;
+    for seed in 0..120 {
+        let g = random_chain(seed);
+        let plan = optimize(&g, &random_device(seed), &CollapseOptions::default());
+        let mut by_sig: HashMap<&str, (usize, usize, Vec<usize>)> = HashMap::new();
+        for stack in plan.stacks() {
+            let key = stack.signature.as_str();
+            let shape = (
+                stack.sequences.len(),
+                stack.num_ops(),
+                stack.sequences.iter().map(|s| s.tile_rows).collect(),
+            );
+            if let Some(prev) = by_sig.get(key) {
+                assert_eq!(prev, &shape, "seed {seed}: signature collision");
+            } else {
+                by_sig.insert(key, shape);
+            }
+        }
+    }
+}
+
+#[test]
+fn strategy_restriction_never_reduces_sequence_count() {
+    for seed in 0..120 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let count = |max: Option<usize>| -> usize {
+            let plan = optimize(
+                &g,
+                &device,
+                &CollapseOptions {
+                    max_steps_per_sequence: max,
+                    ..Default::default()
+                },
+            );
+            plan.stacks().map(|s| s.sequences.len()).sum()
+        };
+        let one = count(Some(1));
+        let five = count(Some(5));
+        let unrestricted = count(None);
+        assert!(one >= five, "seed {seed}");
+        assert!(five >= unrestricted, "seed {seed}");
+    }
+}
+
+#[test]
+fn simulated_plan_time_is_finite_and_positive() {
+    for seed in 0..120 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        let base = simulate_baseline(&g, &device);
+        let bs = simulate_plan(&g, &plan, &device);
+        assert!(base.total_s.is_finite() && base.total_s > 0.0, "seed {seed}");
+        assert!(bs.total_s.is_finite() && bs.total_s > 0.0, "seed {seed}");
+    }
+}
+
+#[test]
+fn batch_rebuild_preserves_plan_structure() {
+    for seed in 0..60 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let p1 = optimize(&g, &device, &CollapseOptions::default());
+        let p2 = optimize(&g.with_batch(7), &device, &CollapseOptions::default());
+        assert_eq!(p1.num_stacks(), p2.num_stacks(), "seed {seed}");
+        assert_eq!(
+            p1.num_optimized_layers(),
+            p2.num_optimized_layers(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn cache_sim_df_never_worse_across_random_configs() {
+    use brainslug::memsim::compare_schedules;
+    for seed in 0..60 {
+        let mut st = seed;
+        let elems = 256 << rand_in(&mut st, 0, 6);
+        let depth = rand_in(&mut st, 1, 8);
+        let band = 64 << rand_in(&mut st, 0, 3);
+        let cache = 1024 << rand_in(&mut st, 0, 6);
+        let (bf, df) = compare_schedules(elems, depth, band, cache);
+        assert!(
+            df <= bf,
+            "seed {seed}: df {df} > bf {bf} (elems {elems} depth {depth} band {band} cache {cache})"
+        );
+    }
+}
