@@ -1,39 +1,38 @@
 //! End-to-end driver: the full system on a real (small) serving
 //! workload, proving all layers compose — rust batching server →
-//! scheduler → PJRT runtime → AOT-compiled XLA/Pallas artifacts.
+//! `Engine` facade → scheduler → PJRT runtime → AOT-compiled XLA/Pallas
+//! artifacts.
 //!
 //! Loads the reduced-scale VGG-11+BN, serves a synthetic trace of
 //! single-image requests through the dynamic batcher in BOTH modes
 //! (breadth-first baseline, BrainSlug depth-first plan), reports
 //! latency/throughput for each, and cross-checks numerics between modes.
-//! Recorded in EXPERIMENTS.md §End-to-end.
+//! The server is configured with a `ServerConfig` over an
+//! `EngineBuilder`; swap `.artifacts(...)` for `.sim()` to serve without
+//! artifacts. Recorded in EXPERIMENTS.md §End-to-end.
 //!
 //!   cargo run --release --example e2e_serve [-- <num_requests>]
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use brainslug::bench;
-use brainslug::optimizer::optimize;
+use brainslug::engine::Mode;
 use brainslug::rng::fill_f32;
-use brainslug::server::Server;
-use brainslug::zoo;
+use brainslug::server::ServerConfig;
 
 fn serve_trace(
     plan_mode: bool,
     n_requests: usize,
 ) -> anyhow::Result<(f64, f64, f64, Vec<f32>)> {
     let batch = *bench::measured_batches().last().unwrap();
-    let g = Arc::new(zoo::build("vgg11_bn", zoo::small_config("vgg11_bn", batch)));
-    let device = bench::measured_device();
-    let plan = plan_mode.then(|| Arc::new(optimize(&g, &device, &bench::measured_opts())));
-    let server = Server::start(
-        std::path::PathBuf::from(bench::ARTIFACT_DIR),
-        g.clone(),
-        plan,
-        bench::oracle_seed(),
-        Duration::from_millis(3),
-    )?;
+    let engine = bench::measured_engine("vgg11_bn", batch).mode(if plan_mode {
+        Mode::BrainSlug(bench::measured_opts())
+    } else {
+        Mode::Baseline
+    });
+    let server = ServerConfig::new(engine)
+        .max_wait(Duration::from_millis(3))
+        .start()?;
     let handle = server.handle();
     let image_elems = handle.image_shape().numel();
 
@@ -59,7 +58,7 @@ fn serve_trace(
     let wall = t0.elapsed().as_secs_f64();
     let throughput = n_requests as f64 / wall;
     let latency = server.stats.mean_latency_ms();
-    let occupancy = server.stats.occupancy(batch);
+    let occupancy = server.occupancy();
     server.stop();
     Ok((throughput, latency, occupancy, firsts))
 }
@@ -96,6 +95,6 @@ fn main() -> anyhow::Result<()> {
         (thr_p / thr_b - 1.0) * 100.0,
         (lat_p / lat_b - 1.0) * 100.0
     );
-    println!("OK: full stack (server -> scheduler -> PJRT -> Pallas artifacts) composes");
+    println!("OK: full stack (server -> engine -> scheduler -> PJRT -> Pallas artifacts) composes");
     Ok(())
 }

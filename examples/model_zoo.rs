@@ -1,6 +1,6 @@
-//! Sweep the full 21-network TorchVision zoo through the optimizer and
-//! the paper-device simulators — a compact reproduction of the paper's
-//! whole evaluation section in one command:
+//! Sweep the full 21-network TorchVision zoo through the `Engine`
+//! facade and the paper-device simulators — a compact reproduction of
+//! the paper's whole evaluation section in one command:
 //!
 //!   cargo run --release --example model_zoo
 //!
@@ -8,17 +8,15 @@
 //! GPU/CPU total speed-ups at batch 128 (Figures 13/14), and the batch-32
 //! GPU speed-up (the paper highlights DenseNet-201's 35.7% there).
 
-use brainslug::bench::{fmt_pct, Table};
+use brainslug::bench::{self, fmt_pct, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
 fn speedup(name: &str, batch: usize, device: &DeviceSpec) -> f64 {
-    let g = zoo::build(name, zoo::paper_config(name, batch));
-    let plan = optimize(&g, device, &CollapseOptions::default());
-    let base = simulate_baseline(&g, device);
-    let bs = simulate_plan(&g, &plan, device);
+    let engine = bench::paper_engine(name, batch, device).build().unwrap();
+    let base = engine.simulate_baseline();
+    let bs = engine.simulate_plan().unwrap();
     speedup_pct(base.total_s, bs.total_s)
 }
 
@@ -28,19 +26,19 @@ fn main() {
     let mut table = Table::new(&[
         "network", "layers", "opt", "stacks", "gpu@128", "cpu@128", "gpu@32",
     ]);
-    let mut best = ("", f64::MIN);
+    let mut best = (String::new(), f64::MIN);
     for name in zoo::ALL_NETWORKS {
-        let g = zoo::build(name, zoo::paper_config(name, 1));
-        let plan = optimize(&g, &gpu, &CollapseOptions::default());
+        let engine = bench::paper_engine(name, 1, &gpu).build().unwrap();
+        let plan = engine.plan().unwrap();
         let g128 = speedup(name, 128, &gpu);
         let c128 = speedup(name, 128, &cpu);
         let g32 = speedup(name, 32, &gpu);
         if g32 > best.1 {
-            best = (name, g32);
+            best = (name.to_string(), g32);
         }
         table.row(vec![
             name.to_string(),
-            g.num_layers().to_string(),
+            engine.graph().num_layers().to_string(),
             plan.num_optimized_layers().to_string(),
             plan.num_stacks().to_string(),
             fmt_pct(g128),

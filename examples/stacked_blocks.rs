@@ -1,15 +1,14 @@
 //! The Figure-10 scenario as a runnable example: how collapse strategy
 //! (1-step / 5-step / unrestricted sequences) changes the generated
 //! kernels and measured performance of a pure <MaxPool,BN,ReLU> block
-//! network, and where the cache budget forces a sequence spill.
+//! network, and where the cache budget forces a sequence spill. All plan
+//! inspection and execution goes through the `Engine` facade.
 //!
 //!   cargo run --release --example stacked_blocks
 
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::engine::Engine;
 use brainslug::memsim::{compare_schedules, speedup_pct};
-use brainslug::optimizer::optimize;
-use brainslug::runtime::Runtime;
-use brainslug::scheduler::Executor;
 
 fn main() -> anyhow::Result<()> {
     let device = bench::measured_device();
@@ -20,12 +19,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Collapse structure vs block count: watch the working set grow with
-    // the halo until a second sequence appears.
+    // the halo until a second sequence appears. The sim backend gives us
+    // the validated plan with no artifacts.
     println!("\n## Collapse structure (unrestricted strategy)");
     let mut t = Table::new(&["blocks", "sequences", "tile-rows", "working-set"]);
     for blocks in [1, 2, 4, 8, 16, 24, 32, 40] {
-        let g = bench::block_net(blocks, 4, 8, 32);
-        let plan = optimize(&g, &device, &bench::measured_opts());
+        let engine = Engine::builder()
+            .graph_owned(bench::block_net(blocks, 4, 8, 32))
+            .device(device.clone())
+            .brainslug(bench::measured_opts())
+            .sim()
+            .build()?;
+        let plan = engine.plan().expect("brainslug mode has a plan");
         let stack = plan.stacks().next().unwrap();
         let tiles: Vec<String> = stack
             .sequences
@@ -52,31 +57,34 @@ fn main() -> anyhow::Result<()> {
     let (bf, df) = compare_schedules(16384, 6, 512, 16 * 1024);
     println!("breadth-first misses: {bf}\ndepth-first  misses: {df} ({:.1}x fewer)", bf as f64 / df as f64);
 
-    // Measured wall-clock per strategy (needs artifacts).
-    match Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) {
-        Ok(runtime) => {
-            println!("\n## Measured (XLA-CPU, batch=4, 8ch 32x32)");
-            let mut t = Table::new(&["blocks", "baseline", "1step", "5step", "unrestr"]);
-            for &blocks in bench::fig10_measured_blocks() {
-                let g = bench::block_net(blocks, 4, 8, 32);
-                let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-                let input = exec.synthetic_input();
-                let base = bench::measure(2, 5, || {
-                    exec.run_baseline(input.clone()).unwrap();
-                });
-                let mut cells = vec![blocks.to_string(), fmt_time(base)];
-                for (_, opts) in bench::fig10_strategies() {
-                    let plan = optimize(&g, &device, &opts);
-                    let tt = bench::measure(2, 5, || {
-                        exec.run_plan(&plan, input.clone()).unwrap();
+    // Measured wall-clock per strategy (needs artifacts). One shared
+    // runtime keeps the executable cache warm across engines.
+    if let Some(runtime) = bench::measured_runtime() {
+        println!("\n## Measured (XLA-CPU, batch=4, 8ch 32x32)");
+        let mut t = Table::new(&["blocks", "baseline", "1step", "5step", "unrestr"]);
+        for &blocks in bench::fig10_measured_blocks() {
+            let mut cells = vec![blocks.to_string()];
+            let mut base = f64::NAN;
+            for (_, opts) in bench::fig10_strategies() {
+                let mut engine =
+                    bench::build_measured(bench::block_engine(blocks, 4, 8, 32, opts), &runtime)?;
+                let input = engine.synthetic_input();
+                if cells.len() == 1 {
+                    base = bench::measure(2, 5, || {
+                        engine.run_baseline(input.clone()).unwrap();
                     });
-                    cells.push(format!("{} ({})", fmt_time(tt), fmt_pct(speedup_pct(base, tt))));
+                    cells.push(fmt_time(base));
                 }
-                t.row(cells);
+                let tt = bench::measure(2, 5, || {
+                    engine.run(input.clone()).unwrap();
+                });
+                cells.push(format!("{} ({})", fmt_time(tt), fmt_pct(speedup_pct(base, tt))));
             }
-            t.print();
+            t.row(cells);
         }
-        Err(_) => println!("\n(measured section skipped: run `make artifacts`)"),
+        t.print();
+    } else {
+        println!("\n(measured section skipped: run `make artifacts`)");
     }
     Ok(())
 }

@@ -6,15 +6,14 @@
 //! devices (the paper's absolute hardware is unavailable; the *shape* —
 //! BrainSlug ≫ baseline, 5-step > 1-step, unrestricted degrading past
 //! the cache limit with spill artifacts — is the reproduction target).
-//! A measured wall-clock section runs the same structures end-to-end on
-//! the PJRT runtime when artifacts are present.
+//! A measured wall-clock section runs the same structures end-to-end
+//! through the `Engine` facade on the PJRT runtime when artifacts are
+//! present.
 
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::optimize;
-use brainslug::runtime::Runtime;
-use brainslug::scheduler::Executor;
+use brainslug::engine::Engine;
+use brainslug::memsim::speedup_pct;
 
 fn simulated(device: &DeviceSpec) {
     println!("\n## Figure 10 (simulated) — device={}, batch=32, 32ch 112x112", device.name);
@@ -23,14 +22,23 @@ fn simulated(device: &DeviceSpec) {
     ]);
     let mut prev_seqs = 0usize;
     for blocks in [1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 36, 40] {
-        let g = bench::block_net(blocks, 32, 32, 112);
-        let base = simulate_baseline(&g, device);
-        let mut cells = vec![blocks.to_string(), fmt_time(base.total_s)];
+        let mut cells = vec![blocks.to_string()];
         let mut t5 = f64::NAN;
         let mut seqs_unr = 0;
+        let mut base_s = f64::NAN;
         for (name, opts) in bench::fig10_strategies() {
-            let plan = optimize(&g, device, &opts);
-            let sim = simulate_plan(&g, &plan, device);
+            let engine = Engine::builder()
+                .graph_owned(bench::block_net(blocks, 32, 32, 112))
+                .device(device.clone())
+                .brainslug(opts)
+                .sim()
+                .build()
+                .unwrap();
+            if cells.len() == 1 {
+                base_s = engine.simulate_baseline().total_s;
+                cells.push(fmt_time(base_s));
+            }
+            let sim = engine.simulate_plan().unwrap();
             cells.push(fmt_time(sim.total_s));
             if name == "5step" {
                 t5 = sim.total_s;
@@ -46,33 +54,36 @@ fn simulated(device: &DeviceSpec) {
         };
         prev_seqs = seqs_unr;
         cells.push(artifact);
-        cells.push(fmt_pct(speedup_pct(base.total_s, t5)));
+        cells.push(fmt_pct(speedup_pct(base_s, t5)));
         table.row(cells);
     }
     table.print();
 }
 
 fn measured() {
-    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+    let Some(runtime) = bench::measured_runtime() else {
         println!("\n(measured section skipped: run `make artifacts`)");
         return;
     };
     println!("\n## Figure 10 (measured wall-clock, XLA-CPU, batch=4, 8ch 32x32)");
-    let device = bench::measured_device();
     let mut table = Table::new(&["blocks", "baseline", "1step", "5step", "unrestr", "best-speedup"]);
     for &blocks in bench::fig10_measured_blocks() {
-        let g = bench::block_net(blocks, 4, 8, 32);
-        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-        let input = exec.synthetic_input();
-        let t_base = bench::measure(2, 5, || {
-            exec.run_baseline(input.clone()).unwrap();
-        });
-        let mut cells = vec![blocks.to_string(), fmt_time(t_base)];
+        let mut cells = vec![blocks.to_string()];
+        let mut t_base = f64::NAN;
         let mut best = f64::INFINITY;
         for (_, opts) in bench::fig10_strategies() {
-            let plan = optimize(&g, &device, &opts);
+            let mut engine =
+                bench::build_measured(bench::block_engine(blocks, 4, 8, 32, opts), &runtime)
+                    .unwrap();
+            let input = engine.synthetic_input();
+            if cells.len() == 1 {
+                t_base = bench::measure(2, 5, || {
+                    engine.run_baseline(input.clone()).unwrap();
+                });
+                cells.push(fmt_time(t_base));
+            }
             let t = bench::measure(2, 5, || {
-                exec.run_plan(&plan, input.clone()).unwrap();
+                engine.run(input.clone()).unwrap();
             });
             best = best.min(t);
             cells.push(fmt_time(t));

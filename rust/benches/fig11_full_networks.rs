@@ -3,14 +3,13 @@
 //! TorchVision networks at batch 128.
 //!
 //! Paper scale via the memsim time model; a measured wall-clock section
-//! covers the reduced-scale subset on the PJRT runtime.
+//! covers the reduced-scale subset on the PJRT runtime. Both sections go
+//! through the `Engine` facade (`bench::paper_engine` /
+//! `bench::measured_engine`).
 
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::{optimize, CollapseOptions};
-use brainslug::runtime::Runtime;
-use brainslug::scheduler::Executor;
+use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
 fn simulated(device: &DeviceSpec) {
@@ -22,10 +21,9 @@ fn simulated(device: &DeviceSpec) {
     );
     let mut table = Table::new(&["network", "baseline", "brainslug", "speedup"]);
     for name in zoo::ALL_NETWORKS {
-        let g = zoo::build(name, zoo::paper_config(name, 128));
-        let plan = optimize(&g, device, &CollapseOptions::default());
-        let base = simulate_baseline(&g, device);
-        let bs = simulate_plan(&g, &plan, device);
+        let engine = bench::paper_engine(name, 128, device).build().unwrap();
+        let base = engine.simulate_baseline();
+        let bs = engine.simulate_plan().unwrap();
         table.row(vec![
             name.to_string(),
             fmt_time(base.total_s),
@@ -37,24 +35,22 @@ fn simulated(device: &DeviceSpec) {
 }
 
 fn measured() {
-    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+    let Some(runtime) = bench::measured_runtime() else {
         println!("\n(measured section skipped: run `make artifacts`)");
         return;
     };
     let batch = *bench::measured_batches().last().unwrap();
     println!("\n## Measured wall-clock (XLA-CPU, reduced scale, batch={batch})");
-    let device = bench::measured_device();
     let mut table = Table::new(&["network", "baseline", "brainslug", "speedup"]);
     for &name in bench::measured_networks() {
-        let g = zoo::build(name, zoo::small_config(name, batch));
-        let plan = optimize(&g, &device, &bench::measured_opts());
-        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-        let input = exec.synthetic_input();
+        let mut engine =
+            bench::build_measured(bench::measured_engine(name, batch), &runtime).unwrap();
+        let input = engine.synthetic_input();
         let t_base = bench::measure(2, 9, || {
-            exec.run_baseline(input.clone()).unwrap();
+            engine.run_baseline(input.clone()).unwrap();
         });
         let t_bs = bench::measure(2, 9, || {
-            exec.run_plan(&plan, input.clone()).unwrap();
+            engine.run(input.clone()).unwrap();
         });
         table.row(vec![
             name.to_string(),

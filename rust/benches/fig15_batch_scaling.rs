@@ -1,15 +1,11 @@
 //! Figure 15: scaling behaviour vs batch size — absolute execution time
 //! of baseline (Py) and BrainSlug (BS) for three selected networks.
 //! Both must scale with batch size, BrainSlug always below the baseline
-//! with the gap widening at larger batches.
+//! with the gap widening at larger batches. All sections drive the
+//! `Engine` facade.
 
 use brainslug::bench::{self, fmt_time, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan};
-use brainslug::optimizer::{optimize, CollapseOptions};
-use brainslug::runtime::Runtime;
-use brainslug::scheduler::Executor;
-use brainslug::zoo;
 
 const NETS: [&str; 3] = ["resnet18", "densenet121", "vgg16_bn"];
 const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
@@ -28,10 +24,9 @@ fn simulated(device: &DeviceSpec) {
     for &b in &BATCHES {
         let mut cells = vec![b.to_string()];
         for name in NETS {
-            let g = zoo::build(name, zoo::paper_config(name, b));
-            let plan = optimize(&g, device, &CollapseOptions::default());
-            let base = simulate_baseline(&g, device);
-            let bs = simulate_plan(&g, &plan, device);
+            let engine = bench::paper_engine(name, b, device).build().unwrap();
+            let base = engine.simulate_baseline();
+            let bs = engine.simulate_plan().unwrap();
             cells.push(fmt_time(base.total_s));
             cells.push(fmt_time(bs.total_s));
         }
@@ -41,23 +36,21 @@ fn simulated(device: &DeviceSpec) {
 }
 
 fn measured() {
-    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+    let Some(runtime) = bench::measured_runtime() else {
         println!("\n(measured section skipped: run `make artifacts`)");
         return;
     };
     println!("\n## Figure 15 (measured, XLA-CPU, resnet18 reduced scale)");
-    let device = bench::measured_device();
     let mut table = Table::new(&["batch", "baseline", "brainslug"]);
     for &b in bench::measured_batches() {
-        let g = zoo::build("resnet18", zoo::small_config("resnet18", b));
-        let plan = optimize(&g, &device, &bench::measured_opts());
-        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-        let input = exec.synthetic_input();
+        let mut engine =
+            bench::build_measured(bench::measured_engine("resnet18", b), &runtime).unwrap();
+        let input = engine.synthetic_input();
         let t_base = bench::measure(2, 9, || {
-            exec.run_baseline(input.clone()).unwrap();
+            engine.run_baseline(input.clone()).unwrap();
         });
         let t_bs = bench::measure(2, 9, || {
-            exec.run_plan(&plan, input.clone()).unwrap();
+            engine.run(input.clone()).unwrap();
         });
         table.row(vec![b.to_string(), fmt_time(t_base), fmt_time(t_bs)]);
     }

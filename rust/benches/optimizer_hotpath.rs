@@ -1,8 +1,10 @@
 //! L3 hot-path microbenchmarks (§Perf): the optimizer itself (graph walk
-//! + collapse) on the largest networks, graph construction, and the
-//! scheduler's non-execute bookkeeping. The paper's compile phase runs
-//! once per network, but a dynamic-graph front-end (PyTorch, §4.3)
-//! re-optimizes on graph changes, so `optimize` latency matters.
+//! + collapse) on the largest networks, graph construction, and the full
+//! `Engine` compile phase (resolve → optimize → validate → sim backend).
+//! The paper's compile phase runs once per network, but a dynamic-graph
+//! front-end (PyTorch, §4.3) re-optimizes on graph changes, so both
+//! `optimize` latency and end-to-end `EngineBuilder::build` latency
+//! matter.
 
 use brainslug::bench::{self, fmt_time, Table};
 use brainslug::device::DeviceSpec;
@@ -12,7 +14,7 @@ use brainslug::zoo;
 fn main() {
     println!("# Optimizer hot path");
     let device = DeviceSpec::paper_gpu();
-    let mut table = Table::new(&["network", "build-graph", "optimize", "stacks"]);
+    let mut table = Table::new(&["network", "build-graph", "optimize", "engine-build", "stacks"]);
     for name in ["alexnet", "resnet152", "densenet201", "inception_v3"] {
         let cfg = zoo::paper_config(name, 128);
         let t_build = bench::measure(3, 10, || {
@@ -24,12 +26,18 @@ fn main() {
             let plan = optimize(&g, &device, &CollapseOptions::default());
             std::hint::black_box(&plan);
         });
-        let plan = optimize(&g, &device, &CollapseOptions::default());
+        // The facade's whole compile phase, artifact-free.
+        let t_engine = bench::measure(3, 10, || {
+            let engine = bench::paper_engine(name, 128, &device).build().unwrap();
+            std::hint::black_box(&engine);
+        });
+        let engine = bench::paper_engine(name, 128, &device).build().unwrap();
         table.row(vec![
             name.to_string(),
             fmt_time(t_build),
             fmt_time(t_opt),
-            plan.num_stacks().to_string(),
+            fmt_time(t_engine),
+            engine.plan().unwrap().num_stacks().to_string(),
         ]);
     }
     table.print();

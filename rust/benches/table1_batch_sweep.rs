@@ -5,12 +5,11 @@
 //! batch 1-4 for several networks, positive from batch >= 8 except
 //! ResNet-101/152; CPU positive everywhere with the largest values for
 //! SqueezeNets at small batch (the Listing-4 pooling-parallelism bug).
+//! Each cell is one `bench::paper_engine` build + simulation.
 
-use brainslug::bench::fmt_pct;
-use brainslug::bench::Table;
+use brainslug::bench::{self, fmt_pct, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
 const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
@@ -23,10 +22,9 @@ fn sweep(device: &DeviceSpec) {
     for name in zoo::ALL_NETWORKS {
         let mut cells = vec![name.to_string()];
         for &b in &BATCHES {
-            let g = zoo::build(name, zoo::paper_config(name, b));
-            let plan = optimize(&g, device, &CollapseOptions::default());
-            let base = simulate_baseline(&g, device);
-            let bs = simulate_plan(&g, &plan, device);
+            let engine = bench::paper_engine(name, b, device).build().unwrap();
+            let base = engine.simulate_baseline();
+            let bs = engine.simulate_plan().unwrap();
             cells.push(fmt_pct(speedup_pct(base.total_s, bs.total_s)));
         }
         table.row(cells);

@@ -3,16 +3,13 @@
 //! optimizable fraction of total time, and total speed-up.
 //!
 //! The structural columns (layers/opt/stacks) come straight from the
-//! optimizer; the timing columns from the memsim model on both paper
-//! devices. A measured section reports the same breakdown from actual
-//! per-segment wall-clock on the PJRT runtime.
+//! engine's validated plan; the timing columns from the memsim model on
+//! both paper devices. A measured section reports the same breakdown
+//! from actual per-segment wall-clock on the PJRT backend.
 
 use brainslug::bench::{self, fmt_pct, Table};
 use brainslug::device::DeviceSpec;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::{optimize, CollapseOptions};
-use brainslug::runtime::Runtime;
-use brainslug::scheduler::Executor;
+use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
 fn simulated(device: &DeviceSpec) {
@@ -28,13 +25,13 @@ fn simulated(device: &DeviceSpec) {
         "total-speedup",
     ]);
     for name in zoo::ALL_NETWORKS {
-        let g = zoo::build(name, zoo::paper_config(name, 128));
-        let plan = optimize(&g, device, &CollapseOptions::default());
-        let base = simulate_baseline(&g, device);
-        let bs = simulate_plan(&g, &plan, device);
+        let engine = bench::paper_engine(name, 128, device).build().unwrap();
+        let plan = engine.plan().unwrap();
+        let base = engine.simulate_baseline();
+        let bs = engine.simulate_plan().unwrap();
         table.row(vec![
             name.to_string(),
-            g.num_layers().to_string(),
+            engine.graph().num_layers().to_string(),
             plan.num_optimized_layers().to_string(),
             plan.num_stacks().to_string(),
             plan.num_unique_stacks().to_string(),
@@ -47,29 +44,28 @@ fn simulated(device: &DeviceSpec) {
 }
 
 fn measured() {
-    let Ok(runtime) = Runtime::new(std::path::Path::new(bench::ARTIFACT_DIR)) else {
+    let Some(runtime) = bench::measured_runtime() else {
         println!("\n(measured section skipped: run `make artifacts`)");
         return;
     };
     let batch = *bench::measured_batches().last().unwrap();
     println!("\n## Table 2 (measured, XLA-CPU, reduced scale, batch={batch})");
-    let device = bench::measured_device();
     let mut table = Table::new(&[
         "network", "layers", "opt", "stacks", "opt-speedup", "%-of-time", "total-speedup",
     ]);
     for &name in bench::measured_networks() {
-        let g = zoo::build(name, zoo::small_config(name, batch));
-        let plan = optimize(&g, &device, &bench::measured_opts());
-        let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-        let input = exec.synthetic_input();
+        let mut engine =
+            bench::build_measured(bench::measured_engine(name, batch), &runtime).unwrap();
+        let input = engine.synthetic_input();
         // Warm, then take per-segment stats from the best run.
-        exec.run_baseline(input.clone()).unwrap();
-        exec.run_plan(&plan, input.clone()).unwrap();
-        let (_, base) = exec.run_baseline(input.clone()).unwrap();
-        let (_, bs) = exec.run_plan(&plan, input.clone()).unwrap();
+        engine.run_baseline(input.clone()).unwrap();
+        engine.run(input.clone()).unwrap();
+        let (_, base) = engine.run_baseline(input.clone()).unwrap();
+        let (_, bs) = engine.run(input).unwrap();
+        let plan = engine.plan().unwrap();
         table.row(vec![
             name.to_string(),
-            g.num_layers().to_string(),
+            engine.graph().num_layers().to_string(),
             plan.num_optimized_layers().to_string(),
             plan.num_stacks().to_string(),
             fmt_pct(speedup_pct(base.optimizable_s(), bs.optimizable_s())),

@@ -5,16 +5,82 @@
 //! compiles — the request emitter, the scheduler, and the benches all go
 //! through these functions, so names always line up.
 
+use std::rc::Rc;
+
 use crate::device::DeviceSpec;
+use crate::engine::{Backend, Engine, EngineBuilder, PjrtBackend};
 use crate::graph::{Graph, Layer, PoolKind, Shape, Window2d};
 use crate::optimizer::CollapseOptions;
+use crate::runtime::Runtime;
 
 /// Artifact directory (relative to the repo root / cwd).
-pub const ARTIFACT_DIR: &str = "artifacts";
+pub const ARTIFACT_DIR: &str = crate::engine::DEFAULT_ARTIFACT_DIR;
 
 /// Seed for all deterministic parameters/inputs in measured experiments.
 pub fn oracle_seed() -> u64 {
-    0x5EED_2026
+    crate::engine::DEFAULT_SEED
+}
+
+/// True when the AOT artifact manifest exists — the gate for every
+/// measured (wall-clock PJRT) bench section.
+pub fn artifacts_present() -> bool {
+    std::path::Path::new(ARTIFACT_DIR)
+        .join("manifest.json")
+        .exists()
+}
+
+/// One shared PJRT runtime over [`ARTIFACT_DIR`] for a measured bench
+/// section, or `None` (skip the section) when artifacts are absent.
+/// Sharing keeps the compiled-executable cache warm across the many
+/// engines a bench builds.
+pub fn measured_runtime() -> Option<Rc<Runtime>> {
+    Runtime::new(std::path::Path::new(ARTIFACT_DIR))
+        .ok()
+        .map(Rc::new)
+}
+
+/// Build `builder` against a shared measured runtime (see
+/// [`measured_runtime`]); the engine's backend reuses `runtime`'s
+/// executable cache instead of opening its own PJRT client.
+pub fn build_measured(builder: EngineBuilder, runtime: &Rc<Runtime>) -> anyhow::Result<Engine> {
+    let rt = runtime.clone();
+    builder.build_with(move |graph, _device, seed| {
+        Ok(Box::new(PjrtBackend::with_runtime(rt, graph.clone(), seed)) as Box<dyn Backend>)
+    })
+}
+
+/// [`EngineBuilder`] preconfigured for the measured experiment set: the
+/// named zoo network at reduced scale, measured device/options/seed, and
+/// the PJRT backend over [`ARTIFACT_DIR`].
+pub fn measured_engine(name: &str, batch: usize) -> EngineBuilder {
+    Engine::builder()
+        .zoo_small(name, batch)
+        .device(measured_device())
+        .brainslug(measured_opts())
+        .artifacts(ARTIFACT_DIR)
+        .seed(oracle_seed())
+}
+
+/// [`EngineBuilder`] for a paper-scale simulated experiment on `device`
+/// (default collapse options, sim backend — no artifacts needed).
+pub fn paper_engine(name: &str, batch: usize, device: &DeviceSpec) -> EngineBuilder {
+    Engine::builder()
+        .zoo_paper(name, batch)
+        .device(device.clone())
+        .brainslug(CollapseOptions::default())
+        .sim()
+        .seed(oracle_seed())
+}
+
+/// [`EngineBuilder`] over a measured-scale Figure-10 block network with
+/// explicit collapse options (PJRT backend).
+pub fn block_engine(blocks: usize, batch: usize, c: usize, h: usize, opts: CollapseOptions) -> EngineBuilder {
+    Engine::builder()
+        .graph_owned(block_net(blocks, batch, c, h))
+        .device(measured_device())
+        .brainslug(opts)
+        .artifacts(ARTIFACT_DIR)
+        .seed(oracle_seed())
 }
 
 /// Networks in the *measured* (wall-clock, PJRT CPU) experiment set —

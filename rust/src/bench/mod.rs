@@ -10,8 +10,9 @@
 pub mod experiments;
 
 pub use experiments::{
-    block_net, fig10_measured_blocks, fig10_strategies, measured_batches, measured_device,
-    measured_networks, measured_opts, oracle_seed, ARTIFACT_DIR,
+    artifacts_present, block_engine, block_net, build_measured, fig10_measured_blocks,
+    fig10_strategies, measured_batches, measured_device, measured_engine, measured_networks,
+    measured_opts, measured_runtime, oracle_seed, paper_engine, ARTIFACT_DIR,
 };
 
 use std::time::Instant;

@@ -1,0 +1,183 @@
+//! Execution backends behind the [`Engine`](super::Engine) facade.
+//!
+//! A [`Backend`] turns a [`Workload`] (graph + optional plan + seed) and
+//! an input batch into an output batch plus per-segment [`ExecStats`].
+//! Two implementations ship:
+//!
+//! * [`PjrtBackend`] — the real path: the PJRT runtime executing
+//!   AOT-compiled XLA/Pallas artifacts through the scheduler. Numerics
+//!   are identical to the pre-facade `Runtime` + `Executor` wiring.
+//! * [`SimBackend`] — the artifact-free path: drives the `memsim`
+//!   analytic perf model, reporting the simulated per-segment times as
+//!   `ExecStats` and synthesizing a deterministic output tensor. `run`,
+//!   `serve`, and the benches work end-to-end with no `artifacts/`
+//!   directory (batching behaviour, plan structure, and stats plumbing
+//!   are all real; only the tensor math is simulated).
+
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::device::DeviceSpec;
+use crate::graph::Graph;
+use crate::memsim::{baseline_layer_time, simulate_baseline, stack_time, ModelParams};
+use crate::optimizer::{Plan, Segment};
+use crate::runtime::{layer_exec_name, HostTensor, Runtime};
+use crate::scheduler::{ExecStats, Executor};
+
+/// Everything a backend needs to execute one network: the resolved
+/// graph, the validated plan (`None` = breadth-first baseline), and the
+/// deterministic parameter seed.
+#[derive(Clone)]
+pub struct Workload {
+    pub graph: Arc<Graph>,
+    pub plan: Option<Arc<Plan>>,
+    pub seed: u64,
+}
+
+/// An execution strategy for optimized (or baseline) workloads.
+pub trait Backend {
+    /// Short identifier ("pjrt", "sim") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute `work` on `input`, returning the output batch and
+    /// per-segment statistics.
+    fn run(&mut self, work: &Workload, input: HostTensor) -> Result<(HostTensor, ExecStats)>;
+}
+
+/// The PJRT backend: wraps today's [`Runtime`] + [`Executor`] pair. The
+/// executor (and its deterministic parameter cache) persists across
+/// `run` calls, so repeated measurements only pay for execution.
+///
+/// The backend is *bound* to one graph + seed at construction (that is
+/// what the executor's parameter cache is keyed on); `run` rejects a
+/// workload carrying a different graph or seed rather than silently
+/// executing the bound one.
+pub struct PjrtBackend {
+    runtime: Rc<Runtime>,
+    graph: Arc<Graph>,
+    seed: u64,
+    exec: Executor,
+}
+
+impl PjrtBackend {
+    /// Load the artifact manifest at `artifact_dir` and prepare an
+    /// executor for `graph`. Fails if the manifest is missing (run
+    /// `make artifacts`).
+    pub fn new(artifact_dir: &Path, graph: Arc<Graph>, seed: u64) -> Result<Self> {
+        let runtime = Rc::new(Runtime::new(artifact_dir)?);
+        Ok(Self::with_runtime(runtime, graph, seed))
+    }
+
+    /// Prepare an executor for `graph` over an existing runtime, so
+    /// several engines can share one compiled-executable cache (the
+    /// measured benches build many engines against one artifact dir).
+    pub fn with_runtime(runtime: Rc<Runtime>, graph: Arc<Graph>, seed: u64) -> Self {
+        let exec = Executor::new(runtime.clone(), graph.clone(), seed);
+        PjrtBackend {
+            runtime,
+            graph,
+            seed,
+            exec,
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&mut self, work: &Workload, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        anyhow::ensure!(
+            Arc::ptr_eq(&work.graph, &self.graph),
+            "PjrtBackend is bound to graph '{}'; rebuild the backend for a different network",
+            self.graph.name
+        );
+        anyhow::ensure!(
+            work.seed == self.seed,
+            "PjrtBackend is bound to seed {}; workload asks for {}",
+            self.seed,
+            work.seed
+        );
+        match &work.plan {
+            Some(p) => self.exec.run_plan(p, input),
+            None => self.exec.run_baseline(input),
+        }
+    }
+}
+
+/// The simulation backend: no artifacts, no PJRT. Per-segment times come
+/// from the `memsim` analytic model for the configured device; the
+/// output tensor is a deterministic function of the workload seed (and
+/// therefore identical between baseline and plan runs, which keeps the
+/// facade's numerics cross-checks trivially green).
+pub struct SimBackend {
+    device: DeviceSpec,
+    params: ModelParams,
+}
+
+impl SimBackend {
+    pub fn new(device: DeviceSpec) -> Self {
+        let params = ModelParams::for_device(&device);
+        SimBackend { device, params }
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(&mut self, work: &Workload, _input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        let graph = &*work.graph;
+        let mut stats = ExecStats::default();
+        match &work.plan {
+            None => {
+                let sim = simulate_baseline(graph, &self.device);
+                for lt in sim.per_layer {
+                    stats.push(lt.name, lt.kind.into(), lt.seconds, lt.optimizable);
+                }
+            }
+            Some(plan) => {
+                for seg in &plan.segments {
+                    match seg {
+                        Segment::Single(id) => {
+                            let node = graph.node(*id);
+                            let t = baseline_layer_time(graph, node, &self.device, &self.params);
+                            let name = layer_exec_name(graph, node)
+                                .unwrap_or_else(|| format!("native:{}", node.name));
+                            stats.push(
+                                name,
+                                node.layer.kind_name().into(),
+                                t,
+                                node.layer.is_optimizable(),
+                            );
+                        }
+                        Segment::Stack(st) => {
+                            let t = stack_time(graph, st, &self.device, &self.params);
+                            stats.push(st.artifact_name(), "stack".into(), t, true);
+                        }
+                    }
+                }
+            }
+        }
+        let out_seed = crate::rng::tensor_seed(work.seed, "sim:output");
+        let out = HostTensor::from_seed(
+            graph.output_shape().clone(),
+            out_seed,
+            crate::rng::ParamKind::Activation,
+        );
+        Ok((out, stats))
+    }
+}

@@ -1,0 +1,493 @@
+//! The `Engine` facade: one entry point for the whole
+//! graph → plan → execute pipeline.
+//!
+//! The paper's pitch is *transparency* — acceleration with "only tiny
+//! adjustments to the software" (§1) — so the public API should be one
+//! call, not seven. Before this module, every entry point hand-wired
+//! `zoo::try_build` → `DeviceSpec` → `optimize` → `plan.validate` →
+//! `Runtime::new` → `Executor::new` → `run_plan`. Now:
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use brainslug::engine::Engine;
+//!
+//! let mut engine = Engine::builder()
+//!     .zoo_small("vgg11_bn", 8)      // or .graph(my_graph)
+//!     .sim()                         // or .artifacts("artifacts")
+//!     .build()?;
+//! let input = engine.synthetic_input();
+//! let (output, stats) = engine.run(input)?;
+//! # Ok(()) }
+//! ```
+//!
+//! [`EngineBuilder`] owns the full lifecycle: network resolution (zoo
+//! name or [`Graph`]), device selection, optimization mode
+//! ([`Mode::Baseline`] | [`Mode::BrainSlug`]), plan validation, and
+//! backend construction. [`Backend`] is the execution seam: the
+//! [`PjrtBackend`] runs AOT artifacts for real, the [`SimBackend`]
+//! drives the `memsim` perf model with no artifacts at all. The builder
+//! is `Send` (the engine itself is not — PJRT internals are `Rc`-based),
+//! so servers ship the builder across threads and build in place.
+
+mod backend;
+
+pub use backend::{Backend, PjrtBackend, SimBackend, Workload};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::device::DeviceSpec;
+use crate::graph::Graph;
+use crate::memsim::{simulate_baseline, simulate_plan, BaselineSim, PlanSim};
+use crate::optimizer::{optimize, CollapseOptions, Plan};
+use crate::runtime::HostTensor;
+use crate::scheduler::ExecStats;
+use crate::zoo::{self, ZooConfig};
+
+/// Seed for deterministic parameters/inputs when none is given —
+/// the same stream the python AOT oracle uses.
+pub const DEFAULT_SEED: u64 = 0x5EED_2026;
+
+/// Default AOT artifact directory (relative to the repo root / cwd).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Where the network comes from.
+#[derive(Debug, Clone)]
+enum NetworkSource {
+    /// A model-zoo architecture by name (family aliases like "vgg"
+    /// resolve via [`zoo::resolve`]).
+    Zoo { name: String, config: ZooConfig },
+    /// A caller-built graph.
+    Graph(Arc<Graph>),
+}
+
+/// Optimization mode: run the network as-is, or collapse it depth-first.
+#[derive(Debug, Clone)]
+pub enum Mode {
+    /// Breadth-first, one executable per layer (the PyTorch-style
+    /// baseline).
+    Baseline,
+    /// Depth-first: detect stacks and collapse them with these options.
+    BrainSlug(CollapseOptions),
+}
+
+/// Which execution backend the engine builds.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// PJRT over AOT-compiled artifacts in this directory.
+    Pjrt { artifact_dir: PathBuf },
+    /// The `memsim` perf-model backend — no artifacts required.
+    Sim,
+}
+
+impl BackendKind {
+    /// Parse a CLI backend name ("pjrt" | "sim").
+    pub fn parse(name: &str, artifact_dir: &str) -> Result<BackendKind> {
+        match name {
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt {
+                artifact_dir: PathBuf::from(artifact_dir),
+            }),
+            "sim" => Ok(BackendKind::Sim),
+            other => bail!("unknown backend '{other}' (pjrt|sim)"),
+        }
+    }
+}
+
+/// Builder for [`Engine`]. `Send`, so it can be shipped to the thread
+/// that will own the (non-`Send`) engine — see [`crate::server`].
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    network: Option<NetworkSource>,
+    device: DeviceSpec,
+    mode: Mode,
+    backend: BackendKind,
+    seed: u64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            network: None,
+            device: DeviceSpec::tpu_core(),
+            mode: Mode::BrainSlug(CollapseOptions::default()),
+            backend: BackendKind::Pjrt {
+                artifact_dir: PathBuf::from(DEFAULT_ARTIFACT_DIR),
+            },
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Use a zoo architecture with an explicit [`ZooConfig`].
+    pub fn zoo(mut self, name: &str, config: ZooConfig) -> Self {
+        self.network = Some(NetworkSource::Zoo {
+            name: zoo::resolve(name).to_string(),
+            config,
+        });
+        self
+    }
+
+    /// Zoo architecture at reduced (measured wall-clock) scale.
+    pub fn zoo_small(self, name: &str, batch: usize) -> Self {
+        let cfg = zoo::small_config(name, batch);
+        self.zoo(name, cfg)
+    }
+
+    /// Zoo architecture at paper (ImageNet) scale.
+    pub fn zoo_paper(self, name: &str, batch: usize) -> Self {
+        let cfg = zoo::paper_config(name, batch);
+        self.zoo(name, cfg)
+    }
+
+    /// Use a caller-built graph.
+    pub fn graph(mut self, graph: Arc<Graph>) -> Self {
+        self.network = Some(NetworkSource::Graph(graph));
+        self
+    }
+
+    /// Use a caller-built graph by value.
+    pub fn graph_owned(self, graph: Graph) -> Self {
+        self.graph(Arc::new(graph))
+    }
+
+    /// Device whose budgets drive collapse decisions (and, on the sim
+    /// backend, the time model). Default: [`DeviceSpec::tpu_core`].
+    pub fn device(mut self, device: DeviceSpec) -> Self {
+        self.device = device;
+        self
+    }
+
+    /// Set the optimization mode explicitly.
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Shorthand for [`Mode::Baseline`].
+    pub fn baseline(self) -> Self {
+        self.mode(Mode::Baseline)
+    }
+
+    /// Shorthand for [`Mode::BrainSlug`] with `opts`.
+    pub fn brainslug(self, opts: CollapseOptions) -> Self {
+        self.mode(Mode::BrainSlug(opts))
+    }
+
+    /// Set the execution backend explicitly.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Shorthand for the PJRT backend over `artifact_dir`.
+    pub fn artifacts(self, artifact_dir: impl Into<PathBuf>) -> Self {
+        self.backend(BackendKind::Pjrt {
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    /// Shorthand for the artifact-free simulation backend.
+    pub fn sim(self) -> Self {
+        self.backend(BackendKind::Sim)
+    }
+
+    /// Seed for deterministic parameters and synthetic inputs.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Resolve the network and optimize + validate the plan — the
+    /// backend-independent half of `build`.
+    fn resolve(self) -> Result<(Arc<Graph>, Option<Arc<Plan>>, DeviceSpec, u64, BackendKind)> {
+        let graph: Arc<Graph> = match self.network {
+            None => bail!("EngineBuilder: no network set (use .zoo()/.graph())"),
+            Some(NetworkSource::Graph(g)) => g,
+            Some(NetworkSource::Zoo { name, config }) => Arc::new(
+                zoo::try_build(&name, config)
+                    .ok_or_else(|| anyhow!("unknown network '{name}' (see `analyze --all`)"))?,
+            ),
+        };
+        graph
+            .validate()
+            .map_err(|e| anyhow!("invalid graph '{}': {e}", graph.name))?;
+        let plan = match &self.mode {
+            Mode::Baseline => None,
+            Mode::BrainSlug(opts) => {
+                let p = optimize(&graph, &self.device, opts);
+                p.validate(&graph)
+                    .map_err(|e| anyhow!("plan validation for '{}': {e}", graph.name))?;
+                Some(Arc::new(p))
+            }
+        };
+        Ok((graph, plan, self.device, self.seed, self.backend))
+    }
+
+    /// Resolve the network, optimize + validate the plan, and construct
+    /// the backend from the configured [`BackendKind`].
+    pub fn build(self) -> Result<Engine> {
+        let (graph, plan, device, seed, kind) = self.resolve()?;
+        let backend: Box<dyn Backend> = match &kind {
+            BackendKind::Pjrt { artifact_dir } => {
+                Box::new(PjrtBackend::new(artifact_dir, graph.clone(), seed)?)
+            }
+            BackendKind::Sim => Box::new(SimBackend::new(device.clone())),
+        };
+        Ok(Engine {
+            graph,
+            plan,
+            device,
+            seed,
+            backend,
+        })
+    }
+
+    /// Like [`build`](Self::build), but with a caller-supplied backend
+    /// factory (receives the resolved graph, device, and seed). This is
+    /// how several engines share one PJRT runtime — and its compiled-
+    /// executable cache — across networks:
+    /// [`PjrtBackend::with_runtime`].
+    pub fn build_with<F>(self, make_backend: F) -> Result<Engine>
+    where
+        F: FnOnce(&Arc<Graph>, &DeviceSpec, u64) -> Result<Box<dyn Backend>>,
+    {
+        let (graph, plan, device, seed, _kind) = self.resolve()?;
+        let backend = make_backend(&graph, &device, seed)?;
+        Ok(Engine {
+            graph,
+            plan,
+            device,
+            seed,
+            backend,
+        })
+    }
+}
+
+/// The assembled pipeline: resolved graph, validated plan, and a live
+/// backend. Not `Send` (PJRT internals); build one per thread from a
+/// shared [`EngineBuilder`].
+pub struct Engine {
+    graph: Arc<Graph>,
+    plan: Option<Arc<Plan>>,
+    device: DeviceSpec,
+    seed: u64,
+    backend: Box<dyn Backend>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Shared handle to the resolved graph (e.g. for spawning more
+    /// engines over the same network).
+    pub fn graph_arc(&self) -> Arc<Graph> {
+        self.graph.clone()
+    }
+
+    /// The validated plan (`None` in [`Mode::Baseline`]).
+    pub fn plan(&self) -> Option<&Plan> {
+        self.plan.as_deref()
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Deterministic synthetic input batch (the shared rng stream the
+    /// python oracle also draws from).
+    pub fn synthetic_input(&self) -> HostTensor {
+        let seed = crate::rng::tensor_seed(self.seed, "input");
+        HostTensor::from_seed(
+            self.graph.input_shape().clone(),
+            seed,
+            crate::rng::ParamKind::Activation,
+        )
+    }
+
+    /// One-line structural summary for CLI/report output.
+    pub fn describe(&self) -> String {
+        match &self.plan {
+            Some(p) => format!(
+                "network={} backend={} layers={} optimizable={} stacks={} unique_stacks={}",
+                self.graph.name,
+                self.backend.name(),
+                self.graph.num_layers(),
+                p.num_optimized_layers(),
+                p.num_stacks(),
+                p.num_unique_stacks()
+            ),
+            None => format!(
+                "network={} backend={} layers={} mode=baseline",
+                self.graph.name,
+                self.backend.name(),
+                self.graph.num_layers()
+            ),
+        }
+    }
+
+    fn check_input(&self, input: &HostTensor) -> Result<()> {
+        let want = self.graph.input_shape();
+        if &input.shape != want {
+            bail!("input shape {} != network input {}", input.shape, want);
+        }
+        Ok(())
+    }
+
+    /// Execute in the configured mode (plan if [`Mode::BrainSlug`],
+    /// baseline otherwise).
+    pub fn run(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        self.check_input(&input)?;
+        let work = Workload {
+            graph: self.graph.clone(),
+            plan: self.plan.clone(),
+            seed: self.seed,
+        };
+        self.backend.run(&work, input)
+    }
+
+    /// Execute breadth-first regardless of the configured mode (the
+    /// comparison baseline of every experiment).
+    pub fn run_baseline(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        self.check_input(&input)?;
+        let work = Workload {
+            graph: self.graph.clone(),
+            plan: None,
+            seed: self.seed,
+        };
+        self.backend.run(&work, input)
+    }
+
+    /// Paper-scale baseline simulation on the engine's device (no
+    /// backend involved — pure `memsim`).
+    pub fn simulate_baseline(&self) -> BaselineSim {
+        simulate_baseline(&self.graph, &self.device)
+    }
+
+    /// Paper-scale plan simulation (`None` in baseline mode).
+    pub fn simulate_plan(&self) -> Option<PlanSim> {
+        self.plan
+            .as_ref()
+            .map(|p| simulate_plan(&self.graph, p, &self.device))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+
+    fn block_engine() -> EngineBuilder {
+        Engine::builder()
+            .graph_owned(bench::block_net(2, 2, 4, 16))
+            .device(DeviceSpec::tpu_core())
+            .sim()
+            .seed(7)
+    }
+
+    #[test]
+    fn builder_requires_network() {
+        let err = Engine::builder().sim().build().unwrap_err();
+        assert!(err.to_string().contains("no network"), "{err}");
+    }
+
+    #[test]
+    fn unknown_zoo_name_errors() {
+        let err = Engine::builder()
+            .zoo_small("nope", 1)
+            .sim()
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown network"), "{err}");
+    }
+
+    #[test]
+    fn zoo_alias_resolves_through_builder() {
+        let eng = Engine::builder().zoo_small("vgg", 1).sim().build().unwrap();
+        assert_eq!(eng.graph().name, "vgg16");
+        assert_eq!(eng.backend_name(), "sim");
+    }
+
+    #[test]
+    fn sim_engine_runs_both_modes_with_identical_outputs() {
+        let mut eng = block_engine().build().unwrap();
+        assert!(eng.plan().is_some());
+        let input = eng.synthetic_input();
+        let (out_base, stats_base) = eng.run_baseline(input.clone()).unwrap();
+        let (out_plan, stats_plan) = eng.run(input).unwrap();
+        // Sim outputs are a pure function of the seed: modes agree.
+        assert_eq!(out_base, out_plan);
+        assert_eq!(out_base.shape, *eng.graph().output_shape());
+        // Baseline stats: one entry per non-input layer.
+        assert_eq!(stats_base.segments.len(), eng.graph().num_layers());
+        // Plan stats: the whole block net collapses into one stack.
+        assert!(stats_plan.segments.iter().any(|s| s.kind == "stack"));
+        assert!(stats_base.total_s > 0.0 && stats_plan.total_s > 0.0);
+    }
+
+    #[test]
+    fn sim_stats_match_memsim_totals() {
+        let mut eng = block_engine().build().unwrap();
+        let input = eng.synthetic_input();
+        let (_, stats_base) = eng.run_baseline(input.clone()).unwrap();
+        let (_, stats_plan) = eng.run(input).unwrap();
+        let base = eng.simulate_baseline();
+        let plan = eng.simulate_plan().unwrap();
+        assert!((stats_base.total_s - base.total_s).abs() < 1e-12 * base.total_s.max(1.0));
+        assert!((stats_plan.total_s - plan.total_s).abs() < 1e-12 * plan.total_s.max(1.0));
+    }
+
+    #[test]
+    fn baseline_mode_has_no_plan() {
+        let eng = Engine::builder()
+            .graph_owned(bench::block_net(1, 1, 2, 8))
+            .baseline()
+            .sim()
+            .build()
+            .unwrap();
+        assert!(eng.plan().is_none());
+        assert!(eng.simulate_plan().is_none());
+        assert!(eng.describe().contains("mode=baseline"));
+    }
+
+    #[test]
+    fn engine_rejects_wrong_input_shape() {
+        let mut eng = block_engine().build().unwrap();
+        let bad = HostTensor::zeros(crate::graph::Shape::nf(1, 3));
+        assert!(eng.run(bad).is_err());
+    }
+
+    #[test]
+    fn builder_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<EngineBuilder>();
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert!(matches!(
+            BackendKind::parse("sim", "artifacts").unwrap(),
+            BackendKind::Sim
+        ));
+        assert!(matches!(
+            BackendKind::parse("pjrt", "x").unwrap(),
+            BackendKind::Pjrt { .. }
+        ));
+        assert!(BackendKind::parse("fpga", "x").is_err());
+    }
+}

@@ -15,11 +15,19 @@
 //! CPU backend using artifacts AOT-compiled from JAX/Pallas; [`server`]
 //! is the batching inference front-end used by the end-to-end example.
 //!
+//! [`engine`] is the public facade over all of the above: an
+//! [`engine::EngineBuilder`] resolves the network, runs the optimizer,
+//! validates the plan, and binds an [`engine::Backend`] (real PJRT
+//! execution or artifact-free `memsim` simulation), so callers write
+//! `Engine::builder().zoo_small("vgg11_bn", 8).build()?.run(input)`
+//! instead of wiring the pipeline by hand.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod bench;
 pub mod cli;
 pub mod device;
+pub mod engine;
 pub mod graph;
 pub mod json;
 pub mod memsim;

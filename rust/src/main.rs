@@ -1,18 +1,29 @@
 //! `brainslug` — leader binary of the BrainSlug reproduction.
 //!
+//! Every command goes through the [`brainslug::engine::Engine`] facade:
+//!
+//! ```text
+//! let mut engine = Engine::builder()
+//!     .zoo_small("vgg11_bn", 8)     // network: zoo name or Graph
+//!     .brainslug(opts)              // mode: Baseline | BrainSlug
+//!     .sim()                        // backend: pjrt (artifacts) | sim
+//!     .build()?;
+//! let (output, stats) = engine.run(engine.synthetic_input())?;
+//! ```
+//!
 //! Commands:
 //! * `emit-requests` — run the optimizer over the experiment set and
 //!   write `artifacts/requests.json` for the python AOT path.
 //! * `analyze`       — per-network optimizer/memsim report (Table 2).
 //! * `simulate`      — paper-scale simulated experiments (Tables 1–2,
 //!   Figures 10–15); see the benches for the full harnesses.
-//! * `run`           — execute a network on the PJRT runtime, baseline
-//!   vs BrainSlug, and verify numerics.
-//! * `serve`         — batching-server demo.
+//! * `run`           — execute a network (PJRT artifacts or the
+//!   artifact-free sim backend), baseline vs BrainSlug, and verify
+//!   numerics.
+//! * `serve`         — batching-server demo (either backend).
 //! * `dot`           — GraphViz dump of a network.
 
 use std::path::Path;
-use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -20,13 +31,12 @@ use anyhow::{bail, Result};
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::cli::Args;
 use brainslug::device::DeviceSpec;
+use brainslug::engine::{BackendKind, Engine, Mode};
 use brainslug::graph::graph_to_json;
 use brainslug::json::Json;
-use brainslug::memsim::{simulate_baseline, simulate_plan, speedup_pct};
-use brainslug::optimizer::{optimize, CollapseOptions};
-use brainslug::runtime::{RequestSet, Runtime};
-use brainslug::scheduler::Executor;
-use brainslug::server::Server;
+use brainslug::memsim::speedup_pct;
+use brainslug::runtime::RequestSet;
+use brainslug::server::ServerConfig;
 use brainslug::zoo;
 
 fn main() {
@@ -68,51 +78,75 @@ USAGE: brainslug <command> [flags]
   emit-requests [--out artifacts/requests.json]
   analyze       [--net NAME | --all] [--device paper-cpu|paper-gpu|tpu] [--batch N]
   simulate      --exp table1|table2 [--device ...]
-  run           --net NAME [--batch N] [--mode both|baseline|brainslug] [--artifacts DIR]
-  serve         --net NAME [--requests N] [--brainslug] [--artifacts DIR]
+  run           --net NAME [--batch N] [--mode both|baseline|brainslug]
+                [--backend pjrt|sim] [--artifacts DIR] [--device PRESET]
+  serve         --net NAME [--requests N] [--brainslug] [--backend pjrt|sim]
+                [--artifacts DIR]
   dot           --net NAME [--batch N] [--small] [--json]
+
+Network names accept family aliases (vgg, resnet, densenet, squeezenet,
+inception). `--backend sim` needs no artifacts directory at all.
+
+Library quickstart (the whole pipeline is one builder):
+
+  let mut engine = Engine::builder()
+      .zoo_small(\"vgg11_bn\", 8)   // zoo name (or .graph(...))
+      .brainslug(Default::default())
+      .sim()                        // or .artifacts(\"artifacts\")
+      .build()?;
+  let (out, stats) = engine.run(engine.synthetic_input())?;
 "
     );
 }
 
-/// Resolve a zoo network at measured (small) scale.
-fn small_graph(name: &str, batch: usize) -> Result<brainslug::graph::Graph> {
-    zoo::try_build(name, zoo::small_config(name, batch))
-        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}' (see `analyze --all`)"))
+/// `--backend` / `--artifacts` flags → a [`BackendKind`].
+fn backend_from_args(args: &Args) -> Result<BackendKind> {
+    let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
+    BackendKind::parse(args.get_or("backend", "pjrt"), &artifacts)
+}
+
+/// Optional `--device` preset, defaulting to the measured-mode device.
+fn device_from_args(args: &Args, default: DeviceSpec) -> Result<DeviceSpec> {
+    match args.get("device") {
+        None => Ok(default),
+        Some(d) => DeviceSpec::preset(d)
+            .ok_or_else(|| anyhow::anyhow!("unknown device preset '{d}' (paper-cpu|paper-gpu|tpu|host)")),
+    }
 }
 
 fn cmd_emit_requests(args: &Args) -> Result<()> {
     let out = args.get_or("out", "artifacts/requests.json").to_string();
     args.reject_unknown()?;
 
-    let device = bench::measured_device();
-    let opts = bench::measured_opts();
     let mut rs = RequestSet::new();
 
-    // Full networks: baseline + plan executables + oracle per batch.
+    // Full networks: baseline + plan executables + oracle per batch. The
+    // sim backend resolves the graph and validates the plan without
+    // needing the very artifacts this command is emitting requests for.
     for &name in bench::measured_networks() {
         for &batch in bench::measured_batches() {
-            let g = small_graph(name, batch)?;
-            let plan = optimize(&g, &device, &opts);
-            plan.validate(&g).map_err(|e| anyhow::anyhow!(e))?;
-            rs.add_baseline(&g);
-            rs.add_plan(&g, &plan);
+            let engine = bench::measured_engine(name, batch).sim().build()?;
+            let g = engine.graph();
+            let plan = engine.plan().expect("measured engines plan");
+            rs.add_baseline(g);
+            rs.add_plan(g, plan);
             if batch == bench::measured_batches()[0] {
-                rs.add_oracle(&format!("{name}_b{batch}"), &g, bench::oracle_seed());
+                rs.add_oracle(&format!("{name}_b{batch}"), g, engine.seed());
             }
         }
     }
 
     // Figure-10 block networks under each collapse strategy.
     for &blocks in bench::fig10_measured_blocks() {
-        let g = bench::block_net(blocks, 4, 8, 32);
-        rs.add_baseline(&g);
-        for (_, opts) in bench::fig10_strategies() {
-            let plan = optimize(&g, &device, &opts);
-            rs.add_plan(&g, &plan);
-        }
-        if blocks == 2 {
-            rs.add_oracle("blocks2_b4", &g, bench::oracle_seed());
+        for (i, (_, opts)) in bench::fig10_strategies().into_iter().enumerate() {
+            let engine = bench::block_engine(blocks, 4, 8, 32, opts).sim().build()?;
+            if i == 0 {
+                rs.add_baseline(engine.graph());
+                if blocks == 2 {
+                    rs.add_oracle("blocks2_b4", engine.graph(), engine.seed());
+                }
+            }
+            rs.add_plan(engine.graph(), engine.plan().expect("block engines plan"));
         }
     }
 
@@ -147,16 +181,16 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         "network", "layers", "opt", "stacks", "uniq", "opt-speedup", "%time", "total-speedup",
     ]);
     for name in names {
-        let g = zoo::build(name, zoo::paper_config(name, batch));
-        let plan = optimize(&g, &device, &CollapseOptions::default());
-        let base = simulate_baseline(&g, &device);
-        let bs = simulate_plan(&g, &plan, &device);
+        let engine = bench::paper_engine(name, batch, &device).build()?;
+        let plan = engine.plan().expect("paper engines plan");
+        let base = engine.simulate_baseline();
+        let bs = engine.simulate_plan().expect("plan simulation");
         let opt_speedup = speedup_pct(base.optimizable_s, bs.stack_s);
         let pct_time = base.optimizable_s / base.total_s * 100.0;
         let total = speedup_pct(base.total_s, bs.total_s);
         table.row(vec![
-            name.to_string(),
-            g.num_layers().to_string(),
+            engine.graph().name.clone(),
+            engine.graph().num_layers().to_string(),
             plan.num_optimized_layers().to_string(),
             plan.num_stacks().to_string(),
             plan.num_unique_stacks().to_string(),
@@ -187,10 +221,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             for name in zoo::ALL_NETWORKS {
                 let mut cells = vec![name.to_string()];
                 for &b in &batches {
-                    let g = zoo::build(name, zoo::paper_config(name, b));
-                    let plan = optimize(&g, &device, &CollapseOptions::default());
-                    let base = simulate_baseline(&g, &device);
-                    let bs = simulate_plan(&g, &plan, &device);
+                    let engine = bench::paper_engine(name, b, &device).build()?;
+                    let base = engine.simulate_baseline();
+                    let bs = engine.simulate_plan().expect("plan simulation");
                     cells.push(fmt_pct(speedup_pct(base.total_s, bs.total_s)));
                 }
                 table.row(cells);
@@ -221,29 +254,31 @@ fn cmd_run(args: &Args) -> Result<()> {
         .to_string();
     let batch = args.get_usize("batch", bench::measured_batches()[0])?;
     let mode = args.get_or("mode", "both").to_string();
-    let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
+    let backend = backend_from_args(args)?;
+    let device = device_from_args(args, bench::measured_device())?;
     args.reject_unknown()?;
 
-    let g = small_graph(&name, batch)?;
-    let device = bench::measured_device();
-    let plan = optimize(&g, &device, &bench::measured_opts());
-    let runtime = Runtime::new(Path::new(&artifacts))?;
-    let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-    let input = exec.synthetic_input();
+    let engine_mode = match mode.as_str() {
+        "baseline" => Mode::Baseline,
+        "both" | "brainslug" => Mode::BrainSlug(bench::measured_opts()),
+        other => bail!("unknown mode '{other}' (both|baseline|brainslug)"),
+    };
+    let mut engine = Engine::builder()
+        .zoo_small(&name, batch)
+        .device(device)
+        .mode(engine_mode)
+        .backend(backend)
+        .seed(bench::oracle_seed())
+        .build()?;
+    let input = engine.synthetic_input();
 
-    println!(
-        "network={name} batch={batch} layers={} optimizable={} stacks={} unique_stacks={}",
-        g.num_layers(),
-        plan.num_optimized_layers(),
-        plan.num_stacks(),
-        plan.num_unique_stacks()
-    );
+    println!("{} batch={batch}", engine.describe());
 
     let mut t_base = None;
     let mut t_plan = None;
     let mut out_base = None;
     if mode == "both" || mode == "baseline" {
-        let (out, stats) = exec.run_baseline(input.clone())?;
+        let (out, stats) = engine.run_baseline(input.clone())?;
         println!("baseline:  total={}", fmt_time(stats.total_s));
         for (kind, s) in stats.by_kind().iter().take(5) {
             println!("  {kind:<12} {}", fmt_time(*s));
@@ -252,7 +287,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         out_base = Some(out);
     }
     if mode == "both" || mode == "brainslug" {
-        let (out, stats) = exec.run_plan(&plan, input.clone())?;
+        let (out, stats) = engine.run(input.clone())?;
         println!("brainslug: total={}", fmt_time(stats.total_s));
         t_plan = Some(stats.total_s);
         if let Some(b) = &out_base {
@@ -279,20 +314,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .to_string();
     let n_requests = args.get_usize("requests", 32)?;
     let brainslug_mode = args.get_bool("brainslug");
-    let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
+    let backend = backend_from_args(args)?;
     args.reject_unknown()?;
 
     let batch = *bench::measured_batches().last().unwrap();
-    let g = Arc::new(small_graph(&name, batch)?);
-    let device = bench::measured_device();
-    let plan = brainslug_mode.then(|| Arc::new(optimize(&g, &device, &bench::measured_opts())));
-    let server = Server::start(
-        Path::new(&artifacts).to_path_buf(),
-        g.clone(),
-        plan,
-        bench::oracle_seed(),
-        Duration::from_millis(5),
-    )?;
+    let engine = Engine::builder()
+        .zoo_small(&name, batch)
+        .device(bench::measured_device())
+        .mode(if brainslug_mode {
+            Mode::BrainSlug(bench::measured_opts())
+        } else {
+            Mode::Baseline
+        })
+        .backend(backend)
+        .seed(bench::oracle_seed());
+    let server = ServerConfig::new(engine)
+        .max_wait(Duration::from_millis(5))
+        .start()?;
     let handle = server.handle();
     let image_elems = handle.image_shape().numel();
 
@@ -318,7 +356,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_time(wall),
         ok as f64 / wall,
         server.stats.mean_latency_ms(),
-        server.stats.occupancy(batch) * 100.0
+        server.occupancy() * 100.0
     );
     server.stop();
     Ok(())

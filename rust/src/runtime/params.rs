@@ -8,6 +8,7 @@
 //! side folds it.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::graph::{node_param_tags, Graph, Layer, NodeId, Shape};
 use crate::rng::{fill_param, tensor_seed, ParamKind};
@@ -15,8 +16,8 @@ use crate::rng::{fill_param, tensor_seed, ParamKind};
 use super::tensor::HostTensor;
 
 /// Lazily generated, cached parameters for one graph instance.
-pub struct ParamStore<'g> {
-    graph: &'g Graph,
+pub struct ParamStore {
+    graph: Arc<Graph>,
     seed: u64,
     cache: HashMap<(NodeId, &'static str), HostTensor>,
 }
@@ -33,8 +34,8 @@ fn kind_of(tag_kind: &str) -> ParamKind {
     }
 }
 
-impl<'g> ParamStore<'g> {
-    pub fn new(graph: &'g Graph, seed: u64) -> Self {
+impl ParamStore {
+    pub fn new(graph: Arc<Graph>, seed: u64) -> Self {
         ParamStore {
             graph,
             seed,
@@ -52,7 +53,7 @@ impl<'g> ParamStore<'g> {
             return t.clone();
         }
         let n = self.graph.node(node);
-        let tags = node_param_tags(self.graph, n);
+        let tags = node_param_tags(&self.graph, n);
         let (tag, kind, shape) = tags
             .into_iter()
             .find(|(_, k, _)| *k == want)
@@ -92,10 +93,14 @@ impl<'g> ParamStore<'g> {
     /// Runtime inputs for a layer executable, in artifact argument order:
     /// conv/linear → [weight, (bias)]; bn → [scale, shift]; others → [].
     pub fn exec_params(&mut self, node: NodeId) -> Vec<HostTensor> {
-        match &self.graph.node(node).layer {
+        // Clone the (small) layer descriptor first: matching on a borrow
+        // of `self.graph` would conflict with the `&mut self` raw/
+        // bn_folded calls below now that the store owns its graph.
+        let layer = self.graph.node(node).layer.clone();
+        match layer {
             Layer::Conv2d { bias, .. } | Layer::Linear { bias, .. } => {
                 let mut v = vec![self.raw(node, "weight")];
-                if *bias {
+                if bias {
                     v.push(self.raw(node, "bias"));
                 }
                 v
@@ -114,7 +119,7 @@ mod tests {
     use super::*;
     use crate::graph::Window2d;
 
-    fn bn_graph() -> Graph {
+    fn bn_graph() -> Arc<Graph> {
         let mut g = Graph::new("t", Shape::nchw(1, 4, 8, 8));
         g.push(
             "conv",
@@ -125,23 +130,23 @@ mod tests {
             },
         );
         g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
-        g
+        Arc::new(g)
     }
 
     #[test]
     fn deterministic_and_cached() {
         let g = bn_graph();
-        let mut p1 = ParamStore::new(&g, 99);
-        let mut p2 = ParamStore::new(&g, 99);
+        let mut p1 = ParamStore::new(g.clone(), 99);
+        let mut p2 = ParamStore::new(g.clone(), 99);
         assert_eq!(p1.raw(1, "weight"), p2.raw(1, "weight"));
-        let mut p3 = ParamStore::new(&g, 100);
+        let mut p3 = ParamStore::new(g, 100);
         assert_ne!(p1.raw(1, "weight").data, p3.raw(1, "weight").data);
     }
 
     #[test]
     fn bn_folding_math() {
         let g = bn_graph();
-        let mut p = ParamStore::new(&g, 7);
+        let mut p = ParamStore::new(g, 7);
         let gamma = p.raw(2, "bn_gamma");
         let beta = p.raw(2, "bn_beta");
         let mean = p.raw(2, "bn_mean");
@@ -157,7 +162,7 @@ mod tests {
     #[test]
     fn exec_params_order() {
         let g = bn_graph();
-        let mut p = ParamStore::new(&g, 7);
+        let mut p = ParamStore::new(g, 7);
         let conv = p.exec_params(1);
         assert_eq!(conv.len(), 2); // weight, bias
         assert_eq!(conv[0].shape.dims, vec![4, 4, 3, 3]);
@@ -165,9 +170,9 @@ mod tests {
         let bn = p.exec_params(2);
         assert_eq!(bn.len(), 2); // scale, shift
         let relu_params = {
-            let mut g2 = bn_graph();
+            let mut g2 = (*bn_graph()).clone();
             g2.push("relu", Layer::Relu);
-            let mut p2 = ParamStore::new(&g2, 7);
+            let mut p2 = ParamStore::new(Arc::new(g2), 7);
             p2.exec_params(3)
         };
         assert!(relu_params.is_empty());

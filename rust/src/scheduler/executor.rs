@@ -1,6 +1,8 @@
 //! The plan executor.
 
 use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -12,27 +14,32 @@ use super::metrics::ExecStats;
 
 /// Executes a fixed graph instance against a [`Runtime`], with
 /// deterministic parameters from seed.
-pub struct Executor<'r, 'g> {
-    runtime: &'r Runtime,
-    graph: &'g Graph,
-    params: ParamStore<'g>,
+///
+/// Owns shared handles (`Rc<Runtime>`, `Arc<Graph>`) rather than
+/// borrows so backends ([`crate::engine::PjrtBackend`]) can hold an
+/// executor alongside the runtime it executes on.
+pub struct Executor {
+    runtime: Rc<Runtime>,
+    graph: Arc<Graph>,
+    params: ParamStore,
     /// Remaining-consumer counts template (computed once).
     consumers: Vec<usize>,
 }
 
-impl<'r, 'g> Executor<'r, 'g> {
-    pub fn new(runtime: &'r Runtime, graph: &'g Graph, seed: u64) -> Self {
+impl Executor {
+    pub fn new(runtime: Rc<Runtime>, graph: Arc<Graph>, seed: u64) -> Self {
         let consumers = graph.consumers().iter().map(|c| c.len()).collect();
+        let params = ParamStore::new(graph.clone(), seed);
         Executor {
             runtime,
             graph,
-            params: ParamStore::new(graph, seed),
+            params,
             consumers,
         }
     }
 
     pub fn graph(&self) -> &Graph {
-        self.graph
+        &self.graph
     }
 
     /// Deterministic synthetic input for this graph (the "image batch").
@@ -99,7 +106,7 @@ impl<'r, 'g> Executor<'r, 'g> {
                 return Ok(());
             }
             _ => {
-                let name = layer_exec_name(self.graph, node)
+                let name = layer_exec_name(&self.graph, node)
                     .expect("non-native layer must have an executable");
                 let acts: Vec<HostTensor> = node
                     .inputs

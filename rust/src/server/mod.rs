@@ -3,12 +3,18 @@
 //!
 //! Executables are AOT-compiled for a fixed batch size `B`, so the
 //! batcher gathers up to `B` single-image requests (or closes a batch
-//! after `max_wait`), pads the batch with zeros, runs the scheduler once,
+//! after `max_wait`), pads the batch with zeros, runs the engine once,
 //! and scatters the per-image outputs back to the callers. This is the
 //! standard fixed-shape dynamic-batching pattern (vLLM-style routers do
 //! the same against compiled engines).
+//!
+//! The server is configured with a [`ServerConfig`] wrapping an
+//! [`EngineBuilder`]: the engine (and its non-`Send` PJRT runtime) is
+//! built *inside* the scheduler thread, so the same config drives real
+//! PJRT serving and artifact-free [`SimBackend`](crate::engine::SimBackend)
+//! serving — which is how the batching logic gets integration-tested
+//! below without any artifacts directory.
 
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -16,10 +22,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::graph::{Graph, Shape};
-use crate::optimizer::Plan;
-use crate::runtime::{HostTensor, Runtime};
-use crate::scheduler::Executor;
+use crate::engine::{Engine, EngineBuilder};
+use crate::graph::Shape;
+use crate::runtime::HostTensor;
 
 /// One inference request: a single image (batch dim 1) and a reply
 /// channel.
@@ -48,6 +53,8 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
+    /// Mean per-request latency; `0.0` (never NaN) before any request
+    /// completes.
     pub fn mean_latency_ms(&self) -> f64 {
         let n = self.requests.load(Ordering::Relaxed);
         if n == 0 {
@@ -56,12 +63,13 @@ impl ServerStats {
         self.latency_us_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
     }
 
+    /// Fraction of batch slots that carried real requests; `0.0` (never
+    /// NaN) before any batch ran or for a degenerate `batch` of zero.
     pub fn occupancy(&self, batch: usize) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
-        if b == 0 {
+        let total_slots = self.batches.load(Ordering::Relaxed) * batch as u64;
+        if total_slots == 0 {
             return 0.0;
         }
-        let total_slots = b * batch as u64;
         1.0 - self.padded_slots.load(Ordering::Relaxed) as f64 / total_slots as f64
     }
 }
@@ -98,61 +106,85 @@ impl ServerHandle {
     }
 }
 
+/// Configuration for [`Server::start`]: which engine to serve and how
+/// the batcher behaves.
+pub struct ServerConfig {
+    engine: EngineBuilder,
+    max_wait: Duration,
+}
+
+impl ServerConfig {
+    /// Serve the network described by `engine`. The builder's graph
+    /// batch dimension is the compiled batch size `B`; its mode decides
+    /// baseline vs BrainSlug serving; its backend decides PJRT vs sim.
+    pub fn new(engine: EngineBuilder) -> Self {
+        ServerConfig {
+            engine,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+
+    /// Maximum time the batcher waits to fill a batch before closing it
+    /// partially (default 5 ms).
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Start the server (see [`Server::start`]).
+    pub fn start(self) -> Result<Server> {
+        Server::start(self)
+    }
+}
+
 /// The batching server. Owns the scheduler thread.
 pub struct Server {
     handle: ServerHandle,
     pub stats: Arc<ServerStats>,
+    /// Compiled batch size `B` of the served network.
+    batch: usize,
     join: Option<std::thread::JoinHandle<()>>,
     shutdown: Sender<Msg>,
 }
 
 impl Server {
-    /// Start a server over `graph` (whose batch dim is the compiled batch
-    /// size). `plan = None` serves breadth-first; `Some` serves the
-    /// BrainSlug plan.
+    /// Start a server from `config`.
     ///
-    /// The PJRT runtime is `!Send` (Rc-based internals), so it is created
-    /// *inside* the scheduler thread from `artifact_dir`; startup errors
-    /// are reported through the returned `Result`.
-    pub fn start(
-        artifact_dir: PathBuf,
-        graph: Arc<Graph>,
-        plan: Option<Arc<Plan>>,
-        seed: u64,
-        max_wait: Duration,
-    ) -> Result<Server> {
+    /// PJRT engines are `!Send` (Rc-based internals), so the engine is
+    /// built *inside* the scheduler thread from the (Send) builder;
+    /// build errors are reported through the returned `Result`.
+    pub fn start(config: ServerConfig) -> Result<Server> {
+        let ServerConfig { engine, max_wait } = config;
         let (tx, rx) = channel::<Msg>();
         let stats = Arc::new(ServerStats::default());
-        let image_shape = {
-            let mut dims = graph.input_shape().dims.clone();
-            dims[0] = 1;
-            Shape::new(dims, graph.input_shape().dtype)
-        };
-        let handle = ServerHandle {
-            tx: tx.clone(),
-            image_shape: image_shape.clone(),
-        };
         let stats2 = stats.clone();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<Shape>>();
         let join = std::thread::spawn(move || {
-            let runtime = match Runtime::new(&artifact_dir) {
-                Ok(r) => {
-                    let _ = ready_tx.send(Ok(()));
-                    r
-                }
+            let mut engine = match engine.build() {
+                Ok(e) => e,
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            batch_loop(runtime, graph, plan, seed, rx, stats2, max_wait);
+            let input_shape = engine.graph().input_shape().clone();
+            let _ = ready_tx.send(Ok(input_shape));
+            batch_loop(&mut engine, rx, stats2, max_wait);
         });
-        ready_rx
+        let input_shape = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server thread died during startup"))??;
+        let batch = input_shape.batch();
+        let mut dims = input_shape.dims.clone();
+        dims[0] = 1;
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            image_shape: Shape::new(dims, input_shape.dtype),
+        };
         Ok(Server {
             handle,
             stats,
+            batch,
             join: Some(join),
             shutdown: tx,
         })
@@ -160,6 +192,16 @@ impl Server {
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
+    }
+
+    /// Compiled batch size `B` of the served network.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Batch occupancy over the server's own batch size.
+    pub fn occupancy(&self) -> f64 {
+        self.stats.occupancy(self.batch)
     }
 
     /// Stop the server and join the scheduler thread. Cloned handles
@@ -173,17 +215,14 @@ impl Server {
 }
 
 fn batch_loop(
-    runtime: Runtime,
-    graph: Arc<Graph>,
-    plan: Option<Arc<Plan>>,
-    seed: u64,
+    engine: &mut Engine,
     rx: Receiver<Msg>,
     stats: Arc<ServerStats>,
     max_wait: Duration,
 ) {
-    let batch = graph.input_shape().batch();
-    let image_elems = graph.input_shape().numel() / batch;
-    let mut executor = Executor::new(&runtime, &graph, seed);
+    let in_shape = engine.graph().input_shape().clone();
+    let batch = in_shape.batch();
+    let image_elems = in_shape.numel() / batch;
     // Collect-until-full-or-timeout loop.
     loop {
         let first = match rx.recv() {
@@ -208,16 +247,12 @@ fn batch_loop(
             }
         }
         // Assemble the padded batch tensor.
-        let mut data = vec![0.0f32; graph.input_shape().numel()];
+        let mut data = vec![0.0f32; in_shape.numel()];
         for (i, r) in pending.iter().enumerate() {
             data[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
         }
-        let input = HostTensor::new(graph.input_shape().clone(), data);
-        let result = match &plan {
-            Some(p) => executor.run_plan(p, input),
-            None => executor.run_baseline(input),
-        };
-        let (out, _stats) = match result {
+        let input = HostTensor::new(in_shape.clone(), data);
+        let (out, _stats) = match engine.run(input) {
             Ok(v) => v,
             Err(e) => {
                 log::error!("batch execution failed: {e:#}");
@@ -253,6 +288,10 @@ fn batch_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench;
+    use crate::device::DeviceSpec;
+    use crate::engine::Engine;
+    use crate::optimizer::CollapseOptions;
 
     #[test]
     fn stats_math() {
@@ -263,5 +302,115 @@ mod tests {
         s.padded_slots.store(4, Ordering::Relaxed);
         assert!((s.mean_latency_ms() - 2.0).abs() < 1e-9);
         assert!((s.occupancy(4) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_empty_server_is_nan_free() {
+        let s = ServerStats::default();
+        assert_eq!(s.mean_latency_ms(), 0.0);
+        assert_eq!(s.occupancy(4), 0.0);
+        // Degenerate batch size must not divide by zero either.
+        assert_eq!(s.occupancy(0), 0.0);
+        assert!(s.mean_latency_ms().is_finite());
+        assert!(s.occupancy(0).is_finite());
+    }
+
+    /// A sim-backed server over a tiny block network with batch `b`.
+    fn sim_server(b: usize, max_wait: Duration) -> Server {
+        let engine = Engine::builder()
+            .graph_owned(bench::block_net(1, b, 2, 8))
+            .device(DeviceSpec::tpu_core())
+            .brainslug(CollapseOptions::default())
+            .sim()
+            .seed(11);
+        ServerConfig::new(engine).max_wait(max_wait).start().unwrap()
+    }
+
+    fn spawn_requests(server: &Server, n: usize) -> Vec<std::thread::JoinHandle<Result<HostTensor>>> {
+        let elems = server.handle().image_shape().numel();
+        (0..n)
+            .map(|i| {
+                let h = server.handle();
+                std::thread::spawn(move || h.infer(vec![i as f32; elems]))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sim_batching_fills_to_capacity() {
+        let server = sim_server(4, Duration::from_secs(10));
+        let workers = spawn_requests(&server, 4);
+        for w in workers {
+            let out = w.join().unwrap().unwrap();
+            assert_eq!(out.shape.batch(), 1);
+        }
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 4);
+        assert_eq!(server.stats.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.padded_slots.load(Ordering::Relaxed), 0);
+        assert!((server.occupancy() - 1.0).abs() < 1e-9);
+        assert!(server.stats.mean_latency_ms().is_finite());
+        server.stop();
+    }
+
+    #[test]
+    fn sim_timeout_closes_partial_batch() {
+        let server = sim_server(4, Duration::from_millis(30));
+        let out = server.handle().infer(vec![1.0; server.handle().image_shape().numel()]);
+        assert!(out.is_ok());
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.batches.load(Ordering::Relaxed), 1);
+        // Three of four slots were zero-padding.
+        assert_eq!(server.stats.padded_slots.load(Ordering::Relaxed), 3);
+        assert!((server.occupancy() - 0.25).abs() < 1e-9);
+        server.stop();
+    }
+
+    #[test]
+    fn sim_padded_slot_accounting_across_batches() {
+        let b = 4;
+        let n = 5;
+        let server = sim_server(b, Duration::from_millis(100));
+        let workers = spawn_requests(&server, n);
+        for w in workers {
+            assert!(w.join().unwrap().is_ok());
+        }
+        let requests = server.stats.requests.load(Ordering::Relaxed);
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        let padded = server.stats.padded_slots.load(Ordering::Relaxed);
+        assert_eq!(requests, n as u64);
+        assert!(batches >= 2, "5 requests cannot fit one batch of 4");
+        // Conservation: every slot is either a request or padding.
+        assert_eq!(batches * b as u64, requests + padded);
+        server.stop();
+    }
+
+    #[test]
+    fn sim_clean_shutdown_with_cloned_handles() {
+        let server = sim_server(2, Duration::from_millis(10));
+        let h1 = server.handle();
+        let h2 = h1.clone();
+        assert!(h1.infer(vec![0.0; h1.image_shape().numel()]).is_ok());
+        server.stop();
+        // Cloned handles outlive the server but become inert.
+        let err = h2.infer(vec![0.0; h2.image_shape().numel()]).unwrap_err();
+        assert!(err.to_string().contains("server stopped"), "{err}");
+    }
+
+    #[test]
+    fn wrong_image_size_rejected_without_touching_server() {
+        let server = sim_server(2, Duration::from_millis(10));
+        let err = server.handle().infer(vec![0.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn pjrt_build_error_reported_through_start() {
+        let engine = Engine::builder()
+            .graph_owned(bench::block_net(1, 2, 2, 8))
+            .artifacts("/nonexistent/artifact/dir");
+        let err = ServerConfig::new(engine).start().unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
     }
 }

@@ -54,11 +54,26 @@ impl Default for ZooConfig {
     }
 }
 
+/// Resolve family aliases to canonical zoo names ("vgg" → "vgg16",
+/// "resnet" → "resnet18", …). Canonical names pass through unchanged, so
+/// every name-taking entry point can call this unconditionally.
+pub fn resolve(name: &str) -> &str {
+    match name {
+        "vgg" => "vgg16",
+        "vgg_bn" | "vgg-bn" => "vgg16_bn",
+        "resnet" => "resnet18",
+        "densenet" => "densenet121",
+        "squeezenet" => "squeezenet1_1",
+        "inception" => "inception_v3",
+        other => other,
+    }
+}
+
 /// Paper-scale config for a given network (224², or 299² for Inception).
 pub fn paper_config(name: &str, batch: usize) -> ZooConfig {
     ZooConfig {
         batch,
-        input: if name == "inception_v3" { 299 } else { 224 },
+        input: if resolve(name) == "inception_v3" { 299 } else { 224 },
         width_mult: 1.0,
         num_classes: 1000,
     }
@@ -70,7 +85,7 @@ pub fn paper_config(name: &str, batch: usize) -> ZooConfig {
 pub fn small_config(name: &str, batch: usize) -> ZooConfig {
     ZooConfig {
         batch,
-        input: if name == "inception_v3" { 96 } else { 64 },
+        input: if resolve(name) == "inception_v3" { 96 } else { 64 },
         width_mult: 0.25,
         num_classes: 10,
     }
@@ -107,9 +122,10 @@ pub fn build(name: &str, cfg: ZooConfig) -> Graph {
     try_build(name, cfg).unwrap_or_else(|| panic!("unknown network: {name}"))
 }
 
-/// Build a network by name, returning `None` for unknown names.
+/// Build a network by name (family aliases accepted), returning `None`
+/// for unknown names.
 pub fn try_build(name: &str, cfg: ZooConfig) -> Option<Graph> {
-    let g = match name {
+    let g = match resolve(name) {
         "alexnet" => alexnet::alexnet(cfg),
         "inception_v3" => inception::inception_v3(cfg),
         "densenet121" => densenet::densenet(cfg, "densenet121", 64, 32, &[6, 12, 24, 16]),
@@ -250,6 +266,18 @@ mod tests {
     #[test]
     fn unknown_network_is_none() {
         assert!(try_build("nope", ZooConfig::default()).is_none());
+    }
+
+    #[test]
+    fn family_aliases_resolve() {
+        assert_eq!(resolve("vgg"), "vgg16");
+        assert_eq!(resolve("resnet"), "resnet18");
+        assert_eq!(resolve("resnet50"), "resnet50"); // canonical passthrough
+        let g = try_build("vgg", small_config("vgg", 1)).unwrap();
+        assert_eq!(g.name, "vgg16");
+        // Alias-aware configs: "inception" gets the larger stem input.
+        assert_eq!(small_config("inception", 1).input, 96);
+        assert_eq!(paper_config("inception", 1).input, 299);
     }
 
     #[test]

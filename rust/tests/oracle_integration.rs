@@ -7,13 +7,13 @@
 //! Requires `make artifacts`; tests skip (with a message) if missing.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use brainslug::bench;
+use brainslug::engine::Engine;
 use brainslug::graph::{graph_from_json, Graph};
 use brainslug::json::parse;
-use brainslug::optimizer::optimize;
 use brainslug::runtime::{HostTensor, Runtime};
-use brainslug::scheduler::Executor;
 
 fn artifacts() -> Option<&'static Path> {
     let p = Path::new("artifacts");
@@ -73,20 +73,26 @@ fn load_oracles(dir: &Path) -> Vec<Oracle> {
 #[test]
 fn scheduler_matches_python_oracle_both_modes() {
     let Some(dir) = artifacts() else { return };
-    let runtime = Runtime::new(dir).unwrap();
-    let device = bench::measured_device();
+    let runtime = bench::measured_runtime().expect("manifest checked above");
     for oracle in load_oracles(dir) {
-        let mut exec = Executor::new(&runtime, &oracle.graph, oracle.seed);
+        // One engine per oracle over a shared runtime: the facade
+        // resolves, optimizes, validates, and binds the backend.
+        let builder = Engine::builder()
+            .graph(Arc::new(oracle.graph.clone()))
+            .device(bench::measured_device())
+            .brainslug(bench::measured_opts())
+            .seed(oracle.seed);
+        let mut engine = bench::build_measured(builder, &runtime).unwrap();
 
         // The deterministic input must match the python-side dump.
-        let synth = exec.synthetic_input();
+        let synth = engine.synthetic_input();
         assert_eq!(
             synth, oracle.input,
             "{}: synthetic input drifted from python",
             oracle.tag
         );
 
-        let (base_out, _) = exec.run_baseline(oracle.input.clone()).unwrap();
+        let (base_out, _) = engine.run_baseline(oracle.input.clone()).unwrap();
         assert!(
             base_out.allclose(&oracle.output, 1e-3, 1e-3),
             "{}: baseline deviates from oracle (max diff {})",
@@ -94,9 +100,7 @@ fn scheduler_matches_python_oracle_both_modes() {
             base_out.max_abs_diff(&oracle.output)
         );
 
-        let plan = optimize(&oracle.graph, &device, &bench::measured_opts());
-        plan.validate(&oracle.graph).unwrap();
-        let (plan_out, _) = exec.run_plan(&plan, oracle.input.clone()).unwrap();
+        let (plan_out, _) = engine.run(oracle.input.clone()).unwrap();
         assert!(
             plan_out.allclose(&oracle.output, 1e-3, 1e-3),
             "{}: brainslug deviates from oracle (max diff {})",
@@ -121,20 +125,21 @@ fn scheduler_matches_python_oracle_both_modes() {
 
 #[test]
 fn fig10_strategies_agree_numerically() {
-    let Some(dir) = artifacts() else { return };
-    let runtime = Runtime::new(dir).unwrap();
-    let device = bench::measured_device();
-    let g = bench::block_net(2, 4, 8, 32);
-    let mut exec = Executor::new(&runtime, &g, bench::oracle_seed());
-    let input = exec.synthetic_input();
-    let (base, _) = exec.run_baseline(input.clone()).unwrap();
+    if artifacts().is_none() {
+        return;
+    }
+    let runtime = bench::measured_runtime().expect("manifest checked above");
+    let mut base: Option<HostTensor> = None;
     for (name, opts) in bench::fig10_strategies() {
-        let plan = optimize(&g, &device, &opts);
-        let (out, _) = exec.run_plan(&plan, input.clone()).unwrap();
+        let mut engine =
+            bench::build_measured(bench::block_engine(2, 4, 8, 32, opts), &runtime).unwrap();
+        let input = engine.synthetic_input();
+        let base = base.get_or_insert_with(|| engine.run_baseline(input.clone()).unwrap().0);
+        let (out, _) = engine.run(input).unwrap();
         assert!(
-            out.allclose(&base, 1e-4, 1e-4),
+            out.allclose(base, 1e-4, 1e-4),
             "strategy {name} diverges (max diff {})",
-            out.max_abs_diff(&base)
+            out.max_abs_diff(base)
         );
     }
 }
