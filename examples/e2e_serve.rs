@@ -1,17 +1,19 @@
 //! End-to-end driver: the full system on a real (small) serving
-//! workload, proving all layers compose — rust batching server →
-//! `Engine` facade → scheduler → PJRT runtime → AOT-compiled XLA/Pallas
-//! artifacts.
+//! workload, proving all layers compose — rust batching server (worker
+//! pool) → `Engine` facade → scheduler → PJRT runtime → AOT-compiled
+//! XLA/Pallas artifacts.
 //!
 //! Loads the reduced-scale VGG-11+BN, serves a synthetic trace of
 //! single-image requests through the dynamic batcher in BOTH modes
 //! (breadth-first baseline, BrainSlug depth-first plan), reports
 //! latency/throughput for each, and cross-checks numerics between modes.
 //! The server is configured with a `ServerConfig` over an
-//! `EngineBuilder`; swap `.artifacts(...)` for `.sim()` to serve without
-//! artifacts. Recorded in EXPERIMENTS.md §End-to-end.
+//! `EngineBuilder`: each pool worker builds its own engine replica from
+//! the shared builder and pulls from one bounded dispatch queue; swap
+//! `.artifacts(...)` for `.sim()` to serve without artifacts. Recorded
+//! in EXPERIMENTS.md §End-to-end.
 //!
-//!   cargo run --release --example e2e_serve [-- <num_requests>]
+//!   cargo run --release --example e2e_serve [-- <num_requests> [<workers>]]
 
 use std::time::Duration;
 
@@ -23,6 +25,7 @@ use brainslug::server::ServerConfig;
 fn serve_trace(
     plan_mode: bool,
     n_requests: usize,
+    workers: usize,
 ) -> anyhow::Result<(f64, f64, f64, Vec<f32>)> {
     let batch = *bench::measured_batches().last().unwrap();
     let engine = bench::measured_engine("vgg11_bn", batch).mode(if plan_mode {
@@ -31,6 +34,8 @@ fn serve_trace(
         Mode::Baseline
     });
     let server = ServerConfig::new(engine)
+        .workers(workers)
+        .queue_depth(4 * batch)
         .max_wait(Duration::from_millis(3))
         .start()?;
     let handle = server.handle();
@@ -40,7 +45,7 @@ fn serve_trace(
     handle.infer(fill_f32(999, image_elems))?;
 
     let t0 = std::time::Instant::now();
-    let workers: Vec<_> = (0..n_requests)
+    let clients: Vec<_> = (0..n_requests)
         .map(|i| {
             let h = handle.clone();
             std::thread::spawn(move || {
@@ -52,8 +57,8 @@ fn serve_trace(
         })
         .collect();
     let mut firsts = Vec::new();
-    for w in workers {
-        firsts.push(w.join().unwrap()?);
+    for c in clients {
+        firsts.push(c.join().unwrap()?);
     }
     let wall = t0.elapsed().as_secs_f64();
     let throughput = n_requests as f64 / wall;
@@ -68,14 +73,20 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(48);
-    println!("# End-to-end serving: vgg11_bn, {n} requests, dynamic batching");
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    println!(
+        "# End-to-end serving: vgg11_bn, {n} requests, dynamic batching, {workers} worker(s)"
+    );
 
-    let (thr_b, lat_b, occ_b, out_b) = serve_trace(false, n)?;
+    let (thr_b, lat_b, occ_b, out_b) = serve_trace(false, n, workers)?;
     println!(
         "baseline : {thr_b:6.1} req/s, mean latency {lat_b:6.2} ms, occupancy {:.0}%",
         occ_b * 100.0
     );
-    let (thr_p, lat_p, occ_p, out_p) = serve_trace(true, n)?;
+    let (thr_p, lat_p, occ_p, out_p) = serve_trace(true, n, workers)?;
     println!(
         "brainslug: {thr_p:6.1} req/s, mean latency {lat_p:6.2} ms, occupancy {:.0}%",
         occ_p * 100.0
@@ -95,6 +106,6 @@ fn main() -> anyhow::Result<()> {
         (thr_p / thr_b - 1.0) * 100.0,
         (lat_p / lat_b - 1.0) * 100.0
     );
-    println!("OK: full stack (server -> engine -> scheduler -> PJRT -> Pallas artifacts) composes");
+    println!("OK: full stack (server pool -> engine -> scheduler -> PJRT -> Pallas artifacts) composes");
     Ok(())
 }

@@ -1,0 +1,97 @@
+//! Figure 16 (repro extension): serving throughput scaling with engine
+//! replicas — the experiment behind `brainslug serve --workers N`.
+//!
+//! A closed-loop client population drives the batching server while the
+//! worker pool is swept over {1, 2, 4, 8} replicas at a fixed compiled
+//! batch size. The paced `SimBackend` sleeps the model time per batch
+//! (calibrated below so one batch ≈ 4 ms of wall-clock), which makes
+//! queueing and overlap *genuine*: with instantaneous sim runs every
+//! configuration would report the same near-infinite throughput.
+//!
+//! Expected shape: throughput scales near-linearly with workers while
+//! the client population keeps all replicas fed (≥2× at 4 workers vs 1
+//! is the acceptance bar), mean latency drops as queue wait shrinks,
+//! and occupancy stays high until the pool outruns the offered load.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use brainslug::bench::{self, Table};
+use brainslug::rng::fill_f32;
+use brainslug::server::{QueuePolicy, ServerConfig};
+
+/// Compiled batch size of every served engine.
+const BATCH: usize = 8;
+/// Closed-loop clients; 2× the slots of the largest pool (8 × BATCH)
+/// would idle it, so the sweep's tail shows occupancy rolling off.
+const CLIENTS: usize = 64;
+const REQS_PER_CLIENT: usize = 4;
+/// Wall-clock cost of one batch after pacing calibration.
+const TARGET_BATCH_S: f64 = 4e-3;
+
+fn main() -> anyhow::Result<()> {
+    // Calibrate the pacing scale against the unpaced model time so the
+    // batch cost is ~TARGET_BATCH_S regardless of the device model.
+    let mut probe = bench::serving_engine(BATCH, 0.0).build()?;
+    let input = probe.synthetic_input();
+    let (_, stats) = probe.run(input)?;
+    let scale = TARGET_BATCH_S / stats.total_s.max(1e-12);
+
+    println!("# Figure 16 — serving throughput vs worker-pool size (paced sim)");
+    println!(
+        "batch={BATCH} clients={CLIENTS} reqs/client={REQS_PER_CLIENT} batch-cost={:.1}ms queue=block",
+        TARGET_BATCH_S * 1e3
+    );
+    let mut table = Table::new(&[
+        "workers",
+        "req/s",
+        "vs-1",
+        "mean-lat-ms",
+        "occupancy",
+        "peak-queue",
+    ]);
+    let mut base_throughput = None;
+    for &workers in bench::fig16_worker_counts() {
+        let server = ServerConfig::new(bench::serving_engine(BATCH, scale))
+            .workers(workers)
+            .queue_depth(4 * BATCH)
+            .queue_policy(QueuePolicy::Block)
+            .max_wait(Duration::from_millis(2))
+            .start()?;
+        let handle = server.handle();
+        let elems = handle.image_shape().numel();
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    for i in 0..REQS_PER_CLIENT {
+                        h.infer(fill_f32((c * REQS_PER_CLIENT + i) as u64, elems))
+                            .expect("serving request failed");
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let served = server.stats.requests.load(Ordering::Relaxed);
+        let throughput = served as f64 / wall;
+        let vs_one = base_throughput.map_or(1.0, |b: f64| throughput / b);
+        if base_throughput.is_none() {
+            base_throughput = Some(throughput);
+        }
+        table.row(vec![
+            workers.to_string(),
+            format!("{throughput:.0}"),
+            format!("{vs_one:.2}x"),
+            format!("{:.2}", server.stats.mean_latency_ms()),
+            format!("{:.2}", server.occupancy()),
+            server.stats.queue_peak.load(Ordering::Relaxed).to_string(),
+        ]);
+        server.stop();
+    }
+    table.print();
+    Ok(())
+}

@@ -130,6 +130,25 @@ pub fn block_net(blocks: usize, batch: usize, c: usize, h: usize) -> Graph {
     g
 }
 
+/// [`EngineBuilder`] for the serving-scaling experiment (`fig16`): a
+/// measured-scale block network on the *paced* sim backend, so one
+/// batch occupies real wall-clock time and worker-pool queueing is
+/// genuine. `pace_scale = 0.0` degenerates to the unpaced sim backend
+/// (used to probe the model time when calibrating a scale).
+pub fn serving_engine(batch: usize, pace_scale: f64) -> EngineBuilder {
+    Engine::builder()
+        .graph_owned(block_net(2, batch, 4, 16))
+        .device(measured_device())
+        .brainslug(measured_opts())
+        .sim_paced(pace_scale)
+        .seed(oracle_seed())
+}
+
+/// Worker-pool sizes swept by the serving-scaling experiment.
+pub fn fig16_worker_counts() -> &'static [usize] {
+    &[1, 2, 4, 8]
+}
+
 /// The three collapse strategies evaluated in Figure 10.
 pub fn fig10_strategies() -> Vec<(&'static str, CollapseOptions)> {
     vec![

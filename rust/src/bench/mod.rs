@@ -11,8 +11,9 @@ pub mod experiments;
 
 pub use experiments::{
     artifacts_present, block_engine, block_net, build_measured, fig10_measured_blocks,
-    fig10_strategies, measured_batches, measured_device, measured_engine, measured_networks,
-    measured_opts, measured_runtime, oracle_seed, paper_engine, ARTIFACT_DIR,
+    fig10_strategies, fig16_worker_counts, measured_batches, measured_device, measured_engine,
+    measured_networks, measured_opts, measured_runtime, oracle_seed, paper_engine, serving_engine,
+    ARTIFACT_DIR,
 };
 
 use std::time::Instant;

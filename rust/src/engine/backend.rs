@@ -118,19 +118,45 @@ impl Backend for PjrtBackend {
 /// output tensor is a deterministic function of the workload seed (and
 /// therefore identical between baseline and plan runs, which keeps the
 /// facade's numerics cross-checks trivially green).
+///
+/// In *paced* mode ([`SimBackend::paced`], reachable through
+/// [`EngineBuilder::sim_paced`](super::EngineBuilder::sim_paced)) each
+/// `run` additionally sleeps the simulated total time × the pacing
+/// scale, so a run occupies real wall-clock proportional to its model
+/// cost. Concurrency experiments (the serving worker pool, queueing
+/// backpressure) need this: with instantaneous runs every queue is
+/// always empty and scaling measurements are artifacts.
 pub struct SimBackend {
     device: DeviceSpec,
     params: ModelParams,
+    /// Wall-clock seconds slept per simulated second (`None` = unpaced).
+    pace_scale: Option<f64>,
 }
 
 impl SimBackend {
     pub fn new(device: DeviceSpec) -> Self {
         let params = ModelParams::for_device(&device);
-        SimBackend { device, params }
+        SimBackend {
+            device,
+            params,
+            pace_scale: None,
+        }
+    }
+
+    /// Paced mode: sleep `model_time × scale` per `run`.
+    pub fn paced(device: DeviceSpec, scale: f64) -> Self {
+        SimBackend {
+            pace_scale: Some(scale),
+            ..Self::new(device)
+        }
     }
 
     pub fn device(&self) -> &DeviceSpec {
         &self.device
+    }
+
+    pub fn pace_scale(&self) -> Option<f64> {
+        self.pace_scale
     }
 }
 
@@ -170,6 +196,12 @@ impl Backend for SimBackend {
                         }
                     }
                 }
+            }
+        }
+        if let Some(scale) = self.pace_scale {
+            let secs = stats.total_s * scale;
+            if secs > 0.0 && secs.is_finite() {
+                std::thread::sleep(std::time::Duration::from_secs_f64(secs));
             }
         }
         let out_seed = crate::rng::tensor_seed(work.seed, "sim:output");

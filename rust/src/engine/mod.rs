@@ -103,6 +103,9 @@ pub struct EngineBuilder {
     device: DeviceSpec,
     mode: Mode,
     backend: BackendKind,
+    /// Real-time pacing scale for the sim backend (`None` = as fast as
+    /// the host allows). See [`EngineBuilder::sim_paced`].
+    sim_pace: Option<f64>,
     seed: u64,
 }
 
@@ -115,6 +118,7 @@ impl Default for EngineBuilder {
             backend: BackendKind::Pjrt {
                 artifact_dir: PathBuf::from(DEFAULT_ARTIFACT_DIR),
             },
+            sim_pace: None,
             seed: DEFAULT_SEED,
         }
     }
@@ -189,8 +193,21 @@ impl EngineBuilder {
         })
     }
 
-    /// Shorthand for the artifact-free simulation backend.
-    pub fn sim(self) -> Self {
+    /// Shorthand for the artifact-free simulation backend (unpaced:
+    /// `run` returns as fast as the host allows).
+    pub fn sim(mut self) -> Self {
+        self.sim_pace = None;
+        self.backend(BackendKind::Sim)
+    }
+
+    /// The simulation backend in *real-time pacing* mode: every `run`
+    /// sleeps the simulated model time × `scale` before returning, so
+    /// concurrency behaviour (batch occupancy, queueing, worker-pool
+    /// scaling) is genuine wall-clock behaviour rather than an artifact
+    /// of instantaneous runs. `scale = 1.0` replays model time 1:1;
+    /// smaller scales compress it.
+    pub fn sim_paced(mut self, scale: f64) -> Self {
+        self.sim_pace = Some(scale);
         self.backend(BackendKind::Sim)
     }
 
@@ -202,7 +219,7 @@ impl EngineBuilder {
 
     /// Resolve the network and optimize + validate the plan — the
     /// backend-independent half of `build`.
-    fn resolve(self) -> Result<(Arc<Graph>, Option<Arc<Plan>>, DeviceSpec, u64, BackendKind)> {
+    fn resolve(self) -> Result<Resolved> {
         let graph: Arc<Graph> = match self.network {
             None => bail!("EngineBuilder: no network set (use .zoo()/.graph())"),
             Some(NetworkSource::Graph(g)) => g,
@@ -223,24 +240,34 @@ impl EngineBuilder {
                 Some(Arc::new(p))
             }
         };
-        Ok((graph, plan, self.device, self.seed, self.backend))
+        Ok(Resolved {
+            graph,
+            plan,
+            device: self.device,
+            seed: self.seed,
+            backend: self.backend,
+            sim_pace: self.sim_pace,
+        })
     }
 
     /// Resolve the network, optimize + validate the plan, and construct
     /// the backend from the configured [`BackendKind`].
     pub fn build(self) -> Result<Engine> {
-        let (graph, plan, device, seed, kind) = self.resolve()?;
-        let backend: Box<dyn Backend> = match &kind {
+        let r = self.resolve()?;
+        let backend: Box<dyn Backend> = match &r.backend {
             BackendKind::Pjrt { artifact_dir } => {
-                Box::new(PjrtBackend::new(artifact_dir, graph.clone(), seed)?)
+                Box::new(PjrtBackend::new(artifact_dir, r.graph.clone(), r.seed)?)
             }
-            BackendKind::Sim => Box::new(SimBackend::new(device.clone())),
+            BackendKind::Sim => match r.sim_pace {
+                Some(scale) => Box::new(SimBackend::paced(r.device.clone(), scale)),
+                None => Box::new(SimBackend::new(r.device.clone())),
+            },
         };
         Ok(Engine {
-            graph,
-            plan,
-            device,
-            seed,
+            graph: r.graph,
+            plan: r.plan,
+            device: r.device,
+            seed: r.seed,
             backend,
         })
     }
@@ -254,16 +281,27 @@ impl EngineBuilder {
     where
         F: FnOnce(&Arc<Graph>, &DeviceSpec, u64) -> Result<Box<dyn Backend>>,
     {
-        let (graph, plan, device, seed, _kind) = self.resolve()?;
-        let backend = make_backend(&graph, &device, seed)?;
+        let r = self.resolve()?;
+        let backend = make_backend(&r.graph, &r.device, r.seed)?;
         Ok(Engine {
-            graph,
-            plan,
-            device,
-            seed,
+            graph: r.graph,
+            plan: r.plan,
+            device: r.device,
+            seed: r.seed,
             backend,
         })
     }
+}
+
+/// Output of [`EngineBuilder::resolve`]: everything `build` needs to
+/// construct a backend and assemble the engine.
+struct Resolved {
+    graph: Arc<Graph>,
+    plan: Option<Arc<Plan>>,
+    device: DeviceSpec,
+    seed: u64,
+    backend: BackendKind,
+    sim_pace: Option<f64>,
 }
 
 /// The assembled pipeline: resolved graph, validated plan, and a live
@@ -470,6 +508,28 @@ mod tests {
         let mut eng = block_engine().build().unwrap();
         let bad = HostTensor::zeros(crate::graph::Shape::nf(1, 3));
         assert!(eng.run(bad).is_err());
+    }
+
+    #[test]
+    fn paced_sim_sleeps_scaled_model_time() {
+        // Calibrate against the unpaced model time so the assertion is
+        // device-model independent: a paced run must take at least the
+        // model time × scale of wall-clock.
+        let mut plain = block_engine().build().unwrap();
+        let input = plain.synthetic_input();
+        let (_, st) = plain.run(input).unwrap();
+        let target = 0.02; // 20 ms per run
+        let scale = target / st.total_s.max(1e-12);
+        let mut paced = block_engine().sim_paced(scale).build().unwrap();
+        let input = paced.synthetic_input();
+        let t0 = std::time::Instant::now();
+        let (_, st_paced) = paced.run(input).unwrap();
+        // Pacing changes wall-clock, never the reported model time.
+        assert!((st_paced.total_s - st.total_s).abs() < 1e-12 * st.total_s.max(1.0));
+        assert!(
+            t0.elapsed().as_secs_f64() >= target * 0.9,
+            "paced run returned faster than the pacing floor"
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! * `dot`           — GraphViz dump of a network.
 
 use std::path::Path;
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -36,7 +37,7 @@ use brainslug::graph::graph_to_json;
 use brainslug::json::Json;
 use brainslug::memsim::speedup_pct;
 use brainslug::runtime::RequestSet;
-use brainslug::server::ServerConfig;
+use brainslug::server::{QueuePolicy, ServerConfig};
 use brainslug::zoo;
 
 fn main() {
@@ -81,11 +82,18 @@ USAGE: brainslug <command> [flags]
   run           --net NAME [--batch N] [--mode both|baseline|brainslug]
                 [--backend pjrt|sim] [--artifacts DIR] [--device PRESET]
   serve         --net NAME [--requests N] [--brainslug] [--backend pjrt|sim]
-                [--artifacts DIR]
+                [--artifacts DIR] [--workers N] [--queue-depth D]
+                [--queue-policy block|reject] [--pace SCALE]
   dot           --net NAME [--batch N] [--small] [--json]
 
 Network names accept family aliases (vgg, resnet, densenet, squeezenet,
 inception). `--backend sim` needs no artifacts directory at all.
+
+`serve` runs a pool of N engine replicas over one bounded dispatch
+queue (depth D): when the queue is full, requests block (policy
+`block`) or fail fast (`reject`). `--pace SCALE` makes the sim backend
+sleep model-time x SCALE per batch, so pool scaling and queueing are
+measured against real wall-clock (see benches/fig16_serving_scaling).
 
 Library quickstart (the whole pipeline is one builder):
 
@@ -315,10 +323,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 32)?;
     let brainslug_mode = args.get_bool("brainslug");
     let backend = backend_from_args(args)?;
+    let workers = args.get_usize("workers", 1)?;
+    let queue_depth = args.get_usize("queue-depth", 64)?;
+    let queue_policy = match args.get_or("queue-policy", "block") {
+        "block" => QueuePolicy::Block,
+        "reject" => QueuePolicy::Reject,
+        other => bail!("unknown queue policy '{other}' (block|reject)"),
+    };
+    let pace: Option<f64> = match args.get("pace") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| anyhow::anyhow!("--pace: bad number '{v}': {e}"))?,
+        ),
+    };
     args.reject_unknown()?;
 
+    if pace.is_some() && !matches!(backend, BackendKind::Sim) {
+        bail!("--pace only applies to the sim backend (add --backend sim)");
+    }
     let batch = *bench::measured_batches().last().unwrap();
-    let engine = Engine::builder()
+    let mut engine = Engine::builder()
         .zoo_small(&name, batch)
         .device(bench::measured_device())
         .mode(if brainslug_mode {
@@ -328,14 +353,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .backend(backend)
         .seed(bench::oracle_seed());
+    if let Some(scale) = pace {
+        engine = engine.sim_paced(scale);
+    }
     let server = ServerConfig::new(engine)
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .queue_policy(queue_policy)
         .max_wait(Duration::from_millis(5))
         .start()?;
     let handle = server.handle();
     let image_elems = handle.image_shape().numel();
 
     let t0 = std::time::Instant::now();
-    let workers: Vec<_> = (0..n_requests)
+    let clients: Vec<_> = (0..n_requests)
         .map(|i| {
             let h = handle.clone();
             std::thread::spawn(move || {
@@ -345,8 +376,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let mut ok = 0;
-    for w in workers {
-        if w.join().unwrap().is_ok() {
+    for c in clients {
+        if c.join().unwrap().is_ok() {
             ok += 1;
         }
     }
@@ -357,6 +388,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ok as f64 / wall,
         server.stats.mean_latency_ms(),
         server.occupancy() * 100.0
+    );
+    println!(
+        "workers={} batches/worker={:?} peak queue depth {} rejected {}",
+        server.workers(),
+        server.stats.worker_batches(),
+        server.stats.queue_peak.load(Ordering::Relaxed),
+        server.stats.rejected.load(Ordering::Relaxed)
     );
     server.stop();
     Ok(())

@@ -75,8 +75,13 @@ impl Step {
         }
     }
 
-    /// Input rows required to produce `rows` output rows.
+    /// Input rows required to produce `rows` output rows. A zero-row
+    /// band needs zero input rows (guards the `rows - 1` underflow that
+    /// `CollapseOptions { min_tile_rows: 0, .. }` used to reach).
     pub fn in_rows(&self, rows: usize) -> usize {
+        if rows == 0 {
+            return 0;
+        }
         let (k, s) = self.row_window();
         (rows - 1) * s + k
     }
@@ -123,11 +128,16 @@ impl Sequence {
     }
 
     /// Input rows of the *first* step needed for one band of `rows`
-    /// final-output rows — the halo-grown extent.
+    /// final-output rows — the halo-grown extent. Each step's band is
+    /// clamped to its actual input height: padded windows (k3 s1 p1)
+    /// produce out rows without extra input rows, so the naive
+    /// `(r-1)·s + k` back-propagation would demand more rows than the
+    /// tensor has.
     pub fn in_rows_for(&self, rows: usize) -> usize {
         let mut r = rows;
         for step in self.steps.iter().rev() {
-            r = step.in_rows(r);
+            let (in_h, _) = row_geometry(step.in_shape());
+            r = step.in_rows(r).min(in_h);
         }
         r
     }
@@ -136,12 +146,15 @@ impl Sequence {
     /// (input band + output band) pair across steps, plus resident
     /// per-channel params. Matches the two-buffer ping-pong execution.
     pub fn working_set_bytes(&self, rows: usize) -> usize {
-        // Band heights entering each step (and leaving the last).
+        // Band heights entering each step (and leaving the last), each
+        // clamped to the tensor it actually reads — see `in_rows_for`.
         let mut heights = Vec::with_capacity(self.steps.len() + 1);
-        let mut r = rows;
+        let (out_h, _) = row_geometry(self.out_shape());
+        let mut r = rows.min(out_h);
         heights.push(r);
         for step in self.steps.iter().rev() {
-            r = step.in_rows(r);
+            let (in_h, _) = row_geometry(step.in_shape());
+            r = step.in_rows(r).min(in_h);
             heights.push(r);
         }
         heights.reverse(); // heights[i] = rows entering step i; last = out
@@ -227,6 +240,9 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
     }
 
     // #4: group steps in sequences subject to the working-set budget.
+    // A band is at least one row tall; `min_tile_rows: 0` is clamped
+    // rather than fed into the band back-propagation.
+    let min_rows = opts.min_tile_rows.max(1);
     let budget = device.resource_limit();
     let mut sequences: Vec<Sequence> = Vec::new();
     let mut current: Vec<Step> = Vec::new();
@@ -237,9 +253,9 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
             .is_some_and(|m| current.len() > m);
         let probe = Sequence {
             steps: current.clone(),
-            tile_rows: opts.min_tile_rows,
+            tile_rows: min_rows,
         };
-        let over_mem = probe.working_set_bytes(opts.min_tile_rows) > budget;
+        let over_mem = probe.working_set_bytes(min_rows) > budget;
         if (over_len || over_mem) && current.len() > 1 {
             let st = current.pop().unwrap();
             sequences.push(seal(current, device, opts));
@@ -259,11 +275,12 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
 fn seal(steps: Vec<Step>, device: &DeviceSpec, opts: &CollapseOptions) -> Sequence {
     let (out_h, _) = row_geometry(steps.last().expect("empty sequence").out_shape());
     let budget = device.resource_limit();
+    let min_rows = opts.min_tile_rows.max(1);
     let mut seq = Sequence {
         steps,
-        tile_rows: opts.min_tile_rows,
+        tile_rows: min_rows,
     };
-    let mut rows = opts.min_tile_rows.min(out_h.max(1));
+    let mut rows = min_rows.min(out_h.max(1));
     while rows < out_h && seq.working_set_bytes(rows + 1) <= budget {
         rows += 1;
     }
@@ -516,6 +533,52 @@ mod tests {
         if deep.len() == 1 {
             assert!(deep[0].halo_overlap_factor() >= shallow[0].halo_overlap_factor());
         }
+    }
+
+    #[test]
+    fn zero_min_tile_rows_is_clamped_not_underflowed() {
+        // `rows - 1` on usize used to underflow (panic in debug builds)
+        // when CollapseOptions asked for zero-row bands.
+        let ops = mk_ops(&[("max3s1p1", 0), ("bn", 0), ("relu", 0)], 4, 16);
+        let opts = CollapseOptions {
+            min_tile_rows: 0,
+            ..Default::default()
+        };
+        let seqs = collapse(&ops, &dev(1 << 20), &opts);
+        assert!(!seqs.is_empty());
+        for s in &seqs {
+            assert!(s.tile_rows >= 1, "bands are at least one row tall");
+            assert!(s.working_set_bytes(s.tile_rows) > 0);
+        }
+        // in_rows itself is total: zero output rows need zero input rows.
+        assert_eq!(seqs[0].steps[0].in_rows(0), 0);
+    }
+
+    #[test]
+    fn halo_clamped_to_input_height() {
+        // Three k3 s1 p1 pools over an 8-row input: padding supplies the
+        // window edges, so a full 8-row output band needs exactly the 8
+        // input rows the tensor has — not 8 + 2·steps = 14.
+        let ops = mk_ops(
+            &[("max3s1p1", 0), ("max3s1p1", 0), ("max3s1p1", 0)],
+            4,
+            8,
+        );
+        let seqs = collapse(&ops, &dev(1 << 20), &CollapseOptions::default());
+        assert_eq!(seqs.len(), 1);
+        let seq = &seqs[0];
+        assert_eq!(seq.in_rows_for(8), 8);
+        // Working set of the full-tensor band is two 8-row planes plus
+        // resident params — never more than the tensors occupy.
+        let plane = 8 * 8 * seq.in_shape().dtype.bytes();
+        let params: usize = seq
+            .steps
+            .iter()
+            .map(|s| s.param_bytes_per_channel())
+            .sum();
+        assert_eq!(seq.working_set_bytes(8), 2 * plane + params);
+        // Small bands still grow their halo normally (1 → 3 → 5 → 7).
+        assert_eq!(seq.in_rows_for(1), 7);
     }
 
     #[test]

@@ -3,46 +3,84 @@
 //!
 //! Executables are AOT-compiled for a fixed batch size `B`, so the
 //! batcher gathers up to `B` single-image requests (or closes a batch
-//! after `max_wait`), pads the batch with zeros, runs the engine once,
+//! after `max_wait`), pads the batch with zeros, runs an engine once,
 //! and scatters the per-image outputs back to the callers. This is the
 //! standard fixed-shape dynamic-batching pattern (vLLM-style routers do
 //! the same against compiled engines).
 //!
+//! ## Worker pool
+//!
+//! Throughput scales past one batch in flight via a *sharded worker
+//! pool* ([`ServerConfig::workers`]): N threads each build their own
+//! [`Engine`] from the shared (`Send`) [`EngineBuilder`] — PJRT engines
+//! are `!Send`, so replication happens at the builder level — and pull
+//! from one shared, **bounded** dispatch queue:
+//!
+//! ```text
+//!   infer() ──┐
+//!   infer() ──┼──► bounded queue (depth D) ──► worker 0: Engine #0
+//!   infer() ──┘        │  QueuePolicy:        ► worker 1: Engine #1
+//!                      │    Block | Reject     ► ...      Engine #N-1
+//!                      └── backpressure        (gather → pad → run →
+//!                                               scatter, per worker)
+//! ```
+//!
+//! The queue bound is the backpressure seam: when it is full, `infer`
+//! either blocks ([`QueuePolicy::Block`], the default) or fails fast
+//! ([`QueuePolicy::Reject`]) instead of growing an unbounded backlog.
+//! Workers lock the queue only while *gathering* a batch; execution
+//! runs outside the lock, so up to N batches are in flight at once.
+//!
 //! The server is configured with a [`ServerConfig`] wrapping an
-//! [`EngineBuilder`]: the engine (and its non-`Send` PJRT runtime) is
-//! built *inside* the scheduler thread, so the same config drives real
-//! PJRT serving and artifact-free [`SimBackend`](crate::engine::SimBackend)
-//! serving — which is how the batching logic gets integration-tested
-//! below without any artifacts directory.
+//! [`EngineBuilder`]: the same config drives real PJRT serving and
+//! artifact-free [`SimBackend`](crate::engine::SimBackend) serving —
+//! which is how the batching logic gets integration-tested below
+//! without any artifacts directory. Pool-scaling behaviour is measured
+//! by `benches/fig16_serving_scaling.rs` on the *paced* sim backend
+//! ([`EngineBuilder::sim_paced`]), where a batch occupies real
+//! wall-clock time and queueing is genuine.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::engine::{Engine, EngineBuilder};
 use crate::graph::Shape;
 use crate::runtime::HostTensor;
 
 /// One inference request: a single image (batch dim 1) and a reply
-/// channel.
+/// channel. The reply carries an explicit error when batch execution
+/// fails, so callers never see a bare disconnected-channel error.
 struct Request {
     image: Vec<f32>,
-    reply: Sender<HostTensor>,
+    reply: Sender<Result<HostTensor>>,
     enqueued: Instant,
 }
 
 /// Channel message: a request, or an explicit shutdown signal (cloned
 /// handles may outlive the server, so channel-closure alone cannot end
-/// the loop).
+/// a worker loop). Each worker consumes exactly one `Shutdown`.
 enum Msg {
     Infer(Request),
     Shutdown,
 }
 
-/// Server statistics.
+/// What `infer` does when the bounded dispatch queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Block the caller until a slot frees up (default).
+    Block,
+    /// Fail fast with a "queue full" error (counted in
+    /// [`ServerStats::rejected`]).
+    Reject,
+}
+
+/// Server statistics, aggregated across all workers. Per-worker batch
+/// counts are kept separately ([`ServerStats::worker_batches`]) so load
+/// imbalance is observable.
 #[derive(Debug, Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
@@ -50,9 +88,29 @@ pub struct ServerStats {
     pub padded_slots: AtomicU64,
     /// Sum of per-request latency in microseconds.
     pub latency_us_sum: AtomicU64,
+    /// Requests refused by [`QueuePolicy::Reject`] on a full queue.
+    pub rejected: AtomicU64,
+    /// Requests currently sitting in the dispatch queue — an
+    /// approximate gauge, never exceeding the configured bound by more
+    /// than the races below: the sender increments *after* a successful
+    /// send, so a worker's decrement can transiently drive it negative
+    /// (readers clamp at zero).
+    pub queue_depth: AtomicI64,
+    /// High-water mark of [`Self::queue_depth`].
+    pub queue_peak: AtomicU64,
+    /// Batches executed by each worker.
+    worker_batches: Vec<AtomicU64>,
 }
 
 impl ServerStats {
+    /// Stats block for a pool of `n` workers.
+    pub fn with_workers(n: usize) -> Self {
+        ServerStats {
+            worker_batches: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
     /// Mean per-request latency; `0.0` (never NaN) before any request
     /// completes.
     pub fn mean_latency_ms(&self) -> f64 {
@@ -72,17 +130,36 @@ impl ServerStats {
         }
         1.0 - self.padded_slots.load(Ordering::Relaxed) as f64 / total_slots as f64
     }
+
+    /// Current dispatch-queue occupancy, clamped at zero (see
+    /// [`Self::queue_depth`] for the gauge's race tolerance).
+    pub fn queue_depth_now(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// Batches executed per worker (index = worker id).
+    pub fn worker_batches(&self) -> Vec<u64> {
+        self.worker_batches
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
 }
 
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: Sender<Msg>,
+    tx: SyncSender<Msg>,
     image_shape: Shape,
+    policy: QueuePolicy,
+    capacity: usize,
+    stats: Arc<ServerStats>,
 }
 
 impl ServerHandle {
-    /// Submit one image; blocks until the result is available.
+    /// Submit one image; blocks until the result is available. When the
+    /// dispatch queue is full the call blocks or fails fast per the
+    /// server's [`QueuePolicy`].
     pub fn infer(&self, image: Vec<f32>) -> Result<HostTensor> {
         anyhow::ensure!(
             image.len() == self.image_shape.numel(),
@@ -91,14 +168,40 @@ impl ServerHandle {
             self.image_shape.numel()
         );
         let (tx, rx) = channel();
-        self.tx
-            .send(Msg::Infer(Request {
-                image,
-                reply: tx,
-                enqueued: Instant::now(),
-            }))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx.recv()?)
+        let msg = Msg::Infer(Request {
+            image,
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        match self.policy {
+            QueuePolicy::Block => self
+                .tx
+                .send(msg)
+                .map_err(|_| anyhow!("server stopped"))?,
+            QueuePolicy::Reject => match self.tx.try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    anyhow::bail!(
+                        "server queue full (capacity {}); retry later",
+                        self.capacity
+                    );
+                }
+                Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+            },
+        }
+        // Gauge the queue occupancy only after the send succeeded: a
+        // caller blocked in `send` is not *in* the queue, so the peak
+        // stays bounded by the configured depth (modulo the benign
+        // decrement-first race documented on `queue_depth`).
+        let depth = self.stats.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        if depth > 0 {
+            self.stats
+                .queue_peak
+                .fetch_max(depth as u64, Ordering::Relaxed);
+        }
+        rx.recv()
+            .map_err(|_| anyhow!("server stopped before the request completed"))?
     }
 
     pub fn image_shape(&self) -> &Shape {
@@ -107,27 +210,57 @@ impl ServerHandle {
 }
 
 /// Configuration for [`Server::start`]: which engine to serve and how
-/// the batcher behaves.
+/// the batcher and its worker pool behave.
 pub struct ServerConfig {
     engine: EngineBuilder,
     max_wait: Duration,
+    workers: usize,
+    queue_depth: usize,
+    queue_policy: QueuePolicy,
 }
 
 impl ServerConfig {
     /// Serve the network described by `engine`. The builder's graph
     /// batch dimension is the compiled batch size `B`; its mode decides
     /// baseline vs BrainSlug serving; its backend decides PJRT vs sim.
+    /// Defaults: one worker, queue depth 64, [`QueuePolicy::Block`],
+    /// 5 ms `max_wait`.
     pub fn new(engine: EngineBuilder) -> Self {
         ServerConfig {
             engine,
             max_wait: Duration::from_millis(5),
+            workers: 1,
+            queue_depth: 64,
+            queue_policy: QueuePolicy::Block,
         }
     }
 
-    /// Maximum time the batcher waits to fill a batch before closing it
+    /// Maximum time a worker waits to fill a batch before closing it
     /// partially (default 5 ms).
     pub fn max_wait(mut self, max_wait: Duration) -> Self {
         self.max_wait = max_wait;
+        self
+    }
+
+    /// Number of pool workers; each builds its own engine replica from
+    /// the shared builder (clamped to at least 1, default 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Bound of the shared dispatch queue, in requests (clamped to at
+    /// least 1, default 64). A full queue exerts backpressure per the
+    /// [`QueuePolicy`].
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// What `infer` does when the queue is full (default
+    /// [`QueuePolicy::Block`]).
+    pub fn queue_policy(mut self, policy: QueuePolicy) -> Self {
+        self.queue_policy = policy;
         self
     }
 
@@ -137,55 +270,106 @@ impl ServerConfig {
     }
 }
 
-/// The batching server. Owns the scheduler thread.
+/// The batching server. Owns the worker threads.
 pub struct Server {
     handle: ServerHandle,
     pub stats: Arc<ServerStats>,
     /// Compiled batch size `B` of the served network.
     batch: usize,
-    join: Option<std::thread::JoinHandle<()>>,
-    shutdown: Sender<Msg>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    shutdown: SyncSender<Msg>,
 }
 
 impl Server {
     /// Start a server from `config`.
     ///
-    /// PJRT engines are `!Send` (Rc-based internals), so the engine is
-    /// built *inside* the scheduler thread from the (Send) builder;
-    /// build errors are reported through the returned `Result`.
+    /// PJRT engines are `!Send` (Rc-based internals), so each worker
+    /// builds its own engine *inside* its thread from the (Send)
+    /// builder; if any replica fails to build, startup fails with that
+    /// error and the healthy workers are torn down.
     pub fn start(config: ServerConfig) -> Result<Server> {
-        let ServerConfig { engine, max_wait } = config;
-        let (tx, rx) = channel::<Msg>();
-        let stats = Arc::new(ServerStats::default());
-        let stats2 = stats.clone();
+        let ServerConfig {
+            engine,
+            max_wait,
+            workers,
+            queue_depth,
+            queue_policy,
+        } = config;
+        let stats = Arc::new(ServerStats::with_workers(workers));
+        let (tx, rx) = sync_channel::<Msg>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = channel::<Result<Shape>>();
-        let join = std::thread::spawn(move || {
-            let mut engine = match engine.build() {
-                Ok(e) => e,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+        let mut joins = Vec::with_capacity(workers);
+        for worker in 0..workers {
+            let builder = engine.clone();
+            let rx = rx.clone();
+            let stats = stats.clone();
+            let ready_tx = ready_tx.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut engine = match builder.build() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(engine.graph().input_shape().clone()));
+                drop(ready_tx);
+                batch_loop(worker, &mut engine, &rx, &stats, max_wait);
+            }));
+        }
+        drop(ready_tx);
+        let mut input_shape: Option<Shape> = None;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(shape)) => {
+                    if input_shape.is_none() {
+                        input_shape = Some(shape);
+                    }
                 }
-            };
-            let input_shape = engine.graph().input_shape().clone();
-            let _ = ready_tx.send(Ok(input_shape));
-            batch_loop(&mut engine, rx, stats2, max_wait);
-        });
-        let input_shape = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server thread died during startup"))??;
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("server worker died during startup"));
+                    }
+                    break;
+                }
+            }
+        }
+        let input_shape = match (input_shape, first_err) {
+            (Some(shape), None) => shape,
+            (_, err) => {
+                // Tear down: dropping the only external sender
+                // disconnects the queue, so idle workers exit.
+                drop(tx);
+                for j in joins {
+                    let _ = j.join();
+                }
+                return Err(
+                    err.unwrap_or_else(|| anyhow!("server worker died during startup"))
+                );
+            }
+        };
         let batch = input_shape.batch();
         let mut dims = input_shape.dims.clone();
         dims[0] = 1;
         let handle = ServerHandle {
             tx: tx.clone(),
             image_shape: Shape::new(dims, input_shape.dtype),
+            policy: queue_policy,
+            capacity: queue_depth,
+            stats: stats.clone(),
         };
         Ok(Server {
             handle,
             stats,
             batch,
-            join: Some(join),
+            joins,
             shutdown: tx,
         })
     }
@@ -199,85 +383,120 @@ impl Server {
         self.batch
     }
 
+    /// Number of pool workers.
+    pub fn workers(&self) -> usize {
+        self.joins.len()
+    }
+
     /// Batch occupancy over the server's own batch size.
     pub fn occupancy(&self) -> f64 {
         self.stats.occupancy(self.batch)
     }
 
-    /// Stop the server and join the scheduler thread. Cloned handles
-    /// become inert (their sends fail) once the loop exits.
+    /// Stop the server and join all workers. Requests already queued are
+    /// drained first (FIFO: the shutdown signals queue behind them).
+    /// Cloned handles become inert (their sends fail) once the last
+    /// worker exits.
     pub fn stop(mut self) {
-        let _ = self.shutdown.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
+        for _ in 0..self.joins.len() {
+            if self.shutdown.send(Msg::Shutdown).is_err() {
+                break;
+            }
+        }
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 }
 
+/// One worker's serve loop: lock the shared queue, gather up to `batch`
+/// requests (or until `max_wait`), release the lock, execute, scatter.
+/// Execution happens outside the lock so the pool overlaps batches.
 fn batch_loop(
+    worker: usize,
     engine: &mut Engine,
-    rx: Receiver<Msg>,
-    stats: Arc<ServerStats>,
+    rx: &Arc<Mutex<Receiver<Msg>>>,
+    stats: &Arc<ServerStats>,
     max_wait: Duration,
 ) {
     let in_shape = engine.graph().input_shape().clone();
     let batch = in_shape.batch();
     let image_elems = in_shape.numel() / batch;
-    // Collect-until-full-or-timeout loop.
     loop {
-        let first = match rx.recv() {
-            Ok(Msg::Infer(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => return,
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + max_wait;
-        let mut shutdown_after = false;
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Infer(r)) => pending.push(r),
-                Ok(Msg::Shutdown) => {
-                    shutdown_after = true;
+        let (pending, shutdown_after) = {
+            let q = match rx.lock() {
+                Ok(q) => q,
+                Err(_) => return, // another worker panicked mid-gather
+            };
+            let first = match q.recv() {
+                Ok(Msg::Infer(r)) => {
+                    stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    r
+                }
+                Ok(Msg::Shutdown) | Err(_) => return,
+            };
+            let mut pending = vec![first];
+            let deadline = Instant::now() + max_wait;
+            let mut shutdown_after = false;
+            while pending.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
                     break;
                 }
-                Err(_) => break,
+                match q.recv_timeout(deadline - now) {
+                    Ok(Msg::Infer(r)) => {
+                        stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        pending.push(r);
+                    }
+                    Ok(Msg::Shutdown) => {
+                        shutdown_after = true;
+                        break;
+                    }
+                    Err(_) => break,
+                }
             }
-        }
+            (pending, shutdown_after)
+        };
         // Assemble the padded batch tensor.
         let mut data = vec![0.0f32; in_shape.numel()];
         for (i, r) in pending.iter().enumerate() {
             data[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
         }
         let input = HostTensor::new(in_shape.clone(), data);
-        let (out, _stats) = match engine.run(input) {
-            Ok(v) => v,
-            Err(e) => {
-                log::error!("batch execution failed: {e:#}");
-                if shutdown_after {
-                    return;
+        match engine.run(input) {
+            Ok((out, _stats)) => {
+                let out_elems = out.shape.numel() / batch;
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
+                stats
+                    .padded_slots
+                    .fetch_add((batch - pending.len()) as u64, Ordering::Relaxed);
+                let mut out_dims = out.shape.dims.clone();
+                out_dims[0] = 1;
+                for (i, r) in pending.iter().enumerate() {
+                    let slice = out.data[i * out_elems..(i + 1) * out_elems].to_vec();
+                    let t =
+                        HostTensor::new(Shape::new(out_dims.clone(), out.shape.dtype), slice);
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    stats.latency_us_sum.fetch_add(
+                        r.enqueued.elapsed().as_micros() as u64,
+                        Ordering::Relaxed,
+                    );
+                    let _ = r.reply.send(Ok(t));
                 }
-                continue; // reply channels drop → callers see an error
             }
-        };
-        let out_elems = out.shape.numel() / batch;
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats
-            .padded_slots
-            .fetch_add((batch - pending.len()) as u64, Ordering::Relaxed);
-        let mut out_dims = out.shape.dims.clone();
-        out_dims[0] = 1;
-        for (i, r) in pending.iter().enumerate() {
-            let slice = out.data[i * out_elems..(i + 1) * out_elems].to_vec();
-            let t = HostTensor::new(Shape::new(out_dims.clone(), out.shape.dtype), slice);
-            stats.requests.fetch_add(1, Ordering::Relaxed);
-            stats.latency_us_sum.fetch_add(
-                r.enqueued.elapsed().as_micros() as u64,
-                Ordering::Relaxed,
-            );
-            let _ = r.reply.send(t);
+            Err(e) => {
+                // Reply with an explicit error instead of dropping the
+                // channels (which surfaced as a cryptic "receiving on an
+                // empty and disconnected channel" at the caller).
+                log::error!("batch execution failed: {e:#}");
+                let msg = format!("{e:#}");
+                for r in &pending {
+                    let _ = r
+                        .reply
+                        .send(Err(anyhow!("batch execution failed: {msg}")));
+                }
+            }
         }
         if shutdown_after {
             return;
@@ -306,27 +525,48 @@ mod tests {
 
     #[test]
     fn stats_empty_server_is_nan_free() {
-        let s = ServerStats::default();
+        let s = ServerStats::with_workers(3);
         assert_eq!(s.mean_latency_ms(), 0.0);
         assert_eq!(s.occupancy(4), 0.0);
         // Degenerate batch size must not divide by zero either.
         assert_eq!(s.occupancy(0), 0.0);
         assert!(s.mean_latency_ms().is_finite());
         assert!(s.occupancy(0).is_finite());
+        assert_eq!(s.worker_batches(), vec![0, 0, 0]);
     }
 
-    /// A sim-backed server over a tiny block network with batch `b`.
-    fn sim_server(b: usize, max_wait: Duration) -> Server {
-        let engine = Engine::builder()
+    /// Builder for a sim-backed engine over a tiny block network with
+    /// batch `b` (unpaced).
+    fn sim_engine(b: usize) -> crate::engine::EngineBuilder {
+        Engine::builder()
             .graph_owned(bench::block_net(1, b, 2, 8))
             .device(DeviceSpec::tpu_core())
             .brainslug(CollapseOptions::default())
             .sim()
-            .seed(11);
-        ServerConfig::new(engine).max_wait(max_wait).start().unwrap()
+            .seed(11)
     }
 
-    fn spawn_requests(server: &Server, n: usize) -> Vec<std::thread::JoinHandle<Result<HostTensor>>> {
+    /// A single-worker sim server (the pre-pool configuration).
+    fn sim_server(b: usize, max_wait: Duration) -> Server {
+        ServerConfig::new(sim_engine(b))
+            .max_wait(max_wait)
+            .start()
+            .unwrap()
+    }
+
+    /// Pacing scale that makes one batch of the `sim_engine` network
+    /// cost roughly `target` seconds of wall-clock.
+    fn pace_scale_for(b: usize, target: f64) -> f64 {
+        let mut probe = sim_engine(b).build().unwrap();
+        let input = probe.synthetic_input();
+        let (_, st) = probe.run(input).unwrap();
+        target / st.total_s.max(1e-12)
+    }
+
+    fn spawn_requests(
+        server: &Server,
+        n: usize,
+    ) -> Vec<std::thread::JoinHandle<Result<HostTensor>>> {
         let elems = server.handle().image_shape().numel();
         (0..n)
             .map(|i| {
@@ -355,7 +595,9 @@ mod tests {
     #[test]
     fn sim_timeout_closes_partial_batch() {
         let server = sim_server(4, Duration::from_millis(30));
-        let out = server.handle().infer(vec![1.0; server.handle().image_shape().numel()]);
+        let out = server
+            .handle()
+            .infer(vec![1.0; server.handle().image_shape().numel()]);
         assert!(out.is_ok());
         assert_eq!(server.stats.requests.load(Ordering::Relaxed), 1);
         assert_eq!(server.stats.batches.load(Ordering::Relaxed), 1);
@@ -410,7 +652,153 @@ mod tests {
         let engine = Engine::builder()
             .graph_owned(bench::block_net(1, 2, 2, 8))
             .artifacts("/nonexistent/artifact/dir");
-        let err = ServerConfig::new(engine).start().unwrap_err();
+        let err = ServerConfig::new(engine).workers(3).start().unwrap_err();
         assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn worker_pool_stress_slot_conservation() {
+        let b = 4;
+        let pool = 4;
+        let n = 64;
+        let server = ServerConfig::new(sim_engine(b))
+            .workers(pool)
+            .queue_depth(2 * b)
+            .max_wait(Duration::from_millis(5))
+            .start()
+            .unwrap();
+        assert_eq!(server.workers(), pool);
+        let clients = spawn_requests(&server, n);
+        for c in clients {
+            assert!(c.join().unwrap().is_ok());
+        }
+        let requests = server.stats.requests.load(Ordering::Relaxed);
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        let padded = server.stats.padded_slots.load(Ordering::Relaxed);
+        assert_eq!(requests, n as u64);
+        // Slot conservation holds across all workers.
+        assert_eq!(batches * b as u64, requests + padded);
+        let occ = server.occupancy();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ} out of range");
+        // Per-worker counters sum to the aggregate batch count.
+        let per: u64 = server.stats.worker_batches().iter().sum();
+        assert_eq!(per, batches);
+        assert!(server.stats.mean_latency_ms().is_finite());
+        server.stop();
+    }
+
+    #[test]
+    fn shutdown_with_queued_requests_is_clean() {
+        // Paced batches occupy real time, so requests pile up in the
+        // bounded queue; stopping mid-flood must neither hang nor leave
+        // any caller without a reply (success or a clean error).
+        let b = 2;
+        let scale = pace_scale_for(b, 0.01);
+        let server = ServerConfig::new(sim_engine(b).sim_paced(scale))
+            .workers(2)
+            .queue_depth(2)
+            .max_wait(Duration::from_millis(1))
+            .start()
+            .unwrap();
+        let stats = server.stats.clone();
+        let clients = spawn_requests(&server, 12);
+        std::thread::sleep(Duration::from_millis(5));
+        server.stop();
+        let mut served = 0u64;
+        for c in clients {
+            match c.join().unwrap() {
+                Ok(_) => served += 1,
+                Err(e) => {
+                    assert!(e.to_string().contains("server stopped"), "{e}");
+                }
+            }
+        }
+        let requests = stats.requests.load(Ordering::Relaxed);
+        let batches = stats.batches.load(Ordering::Relaxed);
+        let padded = stats.padded_slots.load(Ordering::Relaxed);
+        assert_eq!(served, requests);
+        assert_eq!(batches * b as u64, requests + padded);
+    }
+
+    #[test]
+    fn reject_policy_fails_fast_when_queue_full() {
+        // One slow worker (paced, ~50 ms/batch), queue depth 1: the
+        // first request occupies the worker, the second the queue, the
+        // third must be rejected immediately.
+        let scale = pace_scale_for(1, 0.05);
+        let server = ServerConfig::new(sim_engine(1).sim_paced(scale))
+            .workers(1)
+            .queue_depth(1)
+            .queue_policy(QueuePolicy::Reject)
+            .max_wait(Duration::from_millis(1))
+            .start()
+            .unwrap();
+        let elems = server.handle().image_shape().numel();
+        let running = spawn_requests(&server, 1);
+        std::thread::sleep(Duration::from_millis(10)); // worker picked it up
+        let queued = spawn_requests(&server, 1);
+        std::thread::sleep(Duration::from_millis(10)); // queue slot taken
+        let t0 = Instant::now();
+        let err = server.handle().infer(vec![0.0; elems]).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "reject must not wait for the running batch"
+        );
+        assert_eq!(server.stats.rejected.load(Ordering::Relaxed), 1);
+        for c in running.into_iter().chain(queued) {
+            assert!(c.join().unwrap().is_ok());
+        }
+        assert!(server.stats.queue_peak.load(Ordering::Relaxed) >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn batch_failure_reports_explicit_error() {
+        // Force a failing `engine.run` with an injected backend and
+        // drive `batch_loop` directly: the blocked caller must receive
+        // an explicit batch-execution-failed error, not a cryptic
+        // disconnected-channel error.
+        struct FailingBackend;
+        impl crate::engine::Backend for FailingBackend {
+            fn name(&self) -> &'static str {
+                "fail"
+            }
+            fn run(
+                &mut self,
+                _work: &crate::engine::Workload,
+                _input: HostTensor,
+            ) -> Result<(HostTensor, crate::scheduler::ExecStats)> {
+                anyhow::bail!("injected backend failure")
+            }
+        }
+        let mut failing = sim_engine(2)
+            .build_with(|_, _, _| Ok(Box::new(FailingBackend) as Box<dyn crate::engine::Backend>))
+            .unwrap();
+        let (tx, rx) = sync_channel(4);
+        let (reply_tx, reply_rx) = channel();
+        let stats = Arc::new(ServerStats::with_workers(1));
+        let elems = failing.graph().input_shape().numel() / 2;
+        stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        tx.send(Msg::Infer(Request {
+            image: vec![0.0; elems],
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        }))
+        .unwrap();
+        drop(tx);
+        let rx = Arc::new(Mutex::new(rx));
+        batch_loop(0, &mut failing, &rx, &stats, Duration::from_millis(1));
+        let reply = reply_rx.recv().unwrap();
+        let err = reply.unwrap_err();
+        assert!(
+            err.to_string().contains("batch execution failed"),
+            "caller must see an explicit batch failure, got: {err}"
+        );
+        assert!(err.to_string().contains("injected backend failure"), "{err}");
+        // Failed batches are not counted as served.
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
     }
 }
