@@ -46,6 +46,11 @@ fn main() -> anyhow::Result<()> {
                 st.artifact_name(),
                 st.sequences.len()
             ),
+            Segment::Branch { arms, join } => println!(
+                "  seg {i}: BRANCH of {} arms joining at {} (depth-first arm-by-arm)",
+                arms.len(),
+                graph.node(*join).name
+            ),
         }
     }
     println!("  ...");

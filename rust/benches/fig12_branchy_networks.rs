@@ -1,0 +1,111 @@
+//! Figure 12 (repro extension): branchy-network acceleration under
+//! branch-aware depth-first planning.
+//!
+//! Chain-only planning (the paper's Listing 1) fragments ResNet,
+//! DenseNet, and Inception into tiny stacks at every `Add`/`Concat`
+//! junction — exactly the workloads Table 2 shows the least headroom on.
+//! This bench sweeps the branchy zoo families baseline-vs-BrainSlug on
+//! the paper device models (sim backend, batch 128) so the stacking
+//! gain from `Segment::Branch` (arms depth-first, joins fused) is
+//! measurable, and emits one machine-readable `BENCH {json}` row per
+//! network for trend tracking.
+//!
+//! A parity section drives one engine per zoo family through both
+//! execution modes on the sim backend and checks baseline output ==
+//! BrainSlug output — the paper's transparency guarantee extended to
+//! branch segments.
+
+use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
+use brainslug::memsim::speedup_pct;
+
+/// The branchy networks the branch-aware planner targets (plus their
+/// deeper siblings, to show the effect scales with depth).
+const BRANCHY: &[&str] = &[
+    "resnet18",
+    "resnet50",
+    "densenet121",
+    "densenet201",
+    "inception_v3",
+    "squeezenet1_1",
+];
+
+/// One representative per zoo family for the oracle-parity section.
+const FAMILIES: &[&str] = &[
+    "alexnet",
+    "vgg16_bn",
+    "resnet18",
+    "densenet121",
+    "inception_v3",
+    "squeezenet1_1",
+];
+
+fn simulated(device: &DeviceSpec) {
+    println!(
+        "\n## Branchy networks — device={}, batch=128 (simulated)",
+        device.name
+    );
+    let mut table = Table::new(&[
+        "network", "layers", "opt", "branches", "baseline", "brainslug", "speedup",
+    ]);
+    for &name in BRANCHY {
+        let engine = bench::paper_engine(name, 128, device).build().unwrap();
+        let plan = engine.plan().expect("paper engines plan");
+        let base = engine.simulate_baseline();
+        let bs = engine.simulate_plan().unwrap();
+        let speedup = speedup_pct(base.total_s, bs.total_s);
+        table.row(vec![
+            name.to_string(),
+            engine.graph().num_layers().to_string(),
+            plan.num_optimized_layers().to_string(),
+            plan.num_branches().to_string(),
+            fmt_time(base.total_s),
+            fmt_time(bs.total_s),
+            fmt_pct(speedup),
+        ]);
+        let mut row = Json::object();
+        row.set("bench", Json::Str("fig12_branchy_networks".into()));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("net", Json::Str(name.into()));
+        row.set("batch", Json::from_usize(128));
+        row.set("layers", Json::from_usize(engine.graph().num_layers()));
+        row.set("opt_layers", Json::from_usize(plan.num_optimized_layers()));
+        row.set("branches", Json::from_usize(plan.num_branches()));
+        row.set("stacks", Json::from_usize(plan.num_stacks()));
+        row.set("baseline_s", Json::Num(base.total_s));
+        row.set("brainslug_s", Json::Num(bs.total_s));
+        row.set("speedup_pct", Json::Num(speedup));
+        println!("BENCH {}", row.to_string_compact());
+    }
+    table.print();
+}
+
+fn oracle_parity() {
+    println!("\n## Oracle parity (sim backend, both modes, one engine per family)");
+    for &name in FAMILIES {
+        let mut engine = bench::paper_engine(name, 1, &DeviceSpec::paper_gpu())
+            .build()
+            .unwrap();
+        let input = engine.synthetic_input();
+        let (out_base, _) = engine.run_baseline(input.clone()).unwrap();
+        let (out_bs, stats) = engine.run(input).unwrap();
+        assert_eq!(
+            out_base, out_bs,
+            "{name}: baseline and BrainSlug outputs diverge"
+        );
+        let joins = stats.segments.iter().filter(|s| s.kind == "join").count();
+        println!(
+            "  {name}: outputs identical, {} fused join(s), model time {}",
+            joins,
+            fmt_time(stats.total_s)
+        );
+    }
+}
+
+fn main() {
+    println!("# Figure 12 (extension) — Branch-Aware Depth-First Planning");
+    simulated(&DeviceSpec::paper_cpu());
+    simulated(&DeviceSpec::paper_gpu());
+    oracle_parity();
+}

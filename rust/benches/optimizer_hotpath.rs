@@ -49,4 +49,21 @@ fn main() {
         std::hint::black_box(&plan);
     });
     println!("\nblock_net(40) optimize: {}", fmt_time(t));
+
+    // Consumer-map microbench: a planning pass needs consumer info in
+    // two places (the chain walk and branch-region detection), and the
+    // graph validator plus the executor each need it again. One
+    // `consumer_map` derivation is threaded through per pass instead of
+    // one per site; this measures what each avoided derivation costs on
+    // the largest zoo graph.
+    let g = zoo::build("densenet201", zoo::paper_config("densenet201", 128));
+    let t_map = bench::measure(3, 20, || {
+        let m = g.consumer_map();
+        std::hint::black_box(&m);
+    });
+    println!(
+        "densenet201 consumer_map: {} per derivation (computed once per \
+         planning pass and threaded through chain walk + region detection)",
+        fmt_time(t_map)
+    );
 }

@@ -22,9 +22,9 @@ use anyhow::Result;
 
 use crate::device::DeviceSpec;
 use crate::graph::Graph;
-use crate::memsim::{baseline_layer_time, simulate_baseline, stack_time, ModelParams};
-use crate::optimizer::{Plan, Segment};
-use crate::runtime::{layer_exec_name, HostTensor, Runtime};
+use crate::memsim::{segment_times, simulate_baseline, ModelParams};
+use crate::optimizer::Plan;
+use crate::runtime::{HostTensor, Runtime};
 use crate::scheduler::{ExecStats, Executor};
 
 /// Everything a backend needs to execute one network: the resolved
@@ -176,25 +176,15 @@ impl Backend for SimBackend {
                 }
             }
             Some(plan) => {
+                // One shared walk with the memsim plan simulation
+                // (branch arms depth-first, join fused): reported stats
+                // and `simulate_plan` totals agree by construction.
+                let mut times = Vec::new();
                 for seg in &plan.segments {
-                    match seg {
-                        Segment::Single(id) => {
-                            let node = graph.node(*id);
-                            let t = baseline_layer_time(graph, node, &self.device, &self.params);
-                            let name = layer_exec_name(graph, node)
-                                .unwrap_or_else(|| format!("native:{}", node.name));
-                            stats.push(
-                                name,
-                                node.layer.kind_name().into(),
-                                t,
-                                node.layer.is_optimizable(),
-                            );
-                        }
-                        Segment::Stack(st) => {
-                            let t = stack_time(graph, st, &self.device, &self.params);
-                            stats.push(st.artifact_name(), "stack".into(), t, true);
-                        }
-                    }
+                    segment_times(graph, seg, &self.device, &self.params, &mut times);
+                }
+                for lt in times {
+                    stats.push(lt.name, lt.kind.into(), lt.seconds, lt.optimizable);
                 }
             }
         }

@@ -362,13 +362,14 @@ impl Engine {
     pub fn describe(&self) -> String {
         match &self.plan {
             Some(p) => format!(
-                "network={} backend={} layers={} optimizable={} stacks={} unique_stacks={}",
+                "network={} backend={} layers={} optimizable={} stacks={} unique_stacks={} branches={}",
                 self.graph.name,
                 self.backend.name(),
                 self.graph.num_layers(),
                 p.num_optimized_layers(),
                 p.num_stacks(),
-                p.num_unique_stacks()
+                p.num_unique_stacks(),
+                p.num_branches()
             ),
             None => format!(
                 "network={} backend={} layers={} mode=baseline",

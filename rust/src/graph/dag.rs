@@ -13,6 +13,65 @@ use super::shape::Shape;
 /// Node identifier: index into `Graph::nodes`.
 pub type NodeId = usize;
 
+/// Precomputed consumer adjacency of a graph.
+///
+/// The planner, the validator, and the executor all ask "who reads this
+/// node?". The full O(V+E) map is derived once per pass and threaded
+/// through every query site (chain walk, branch-region detection,
+/// dangling-node check, remaining-consumer counts) instead of once per
+/// site — `benches/optimizer_hotpath.rs` measures what each avoided
+/// derivation costs.
+#[derive(Debug, Clone)]
+pub struct Consumers {
+    lists: Vec<Vec<NodeId>>,
+}
+
+impl Consumers {
+    /// Consumers of `id`, in topological order.
+    pub fn of(&self, id: NodeId) -> &[NodeId] {
+        &self.lists[id]
+    }
+
+    /// Number of consumers of `id`.
+    pub fn count(&self, id: NodeId) -> usize {
+        self.lists[id].len()
+    }
+
+    /// Does `id` have exactly one consumer? (Only then may it sit in the
+    /// interior of a stack — fan-out forces materialization.)
+    pub fn is_single(&self, id: NodeId) -> bool {
+        self.count(id) == 1
+    }
+}
+
+/// A single-entry/single-exit branch region: a fan-out node (`entry`)
+/// whose reconvergence point is an `Add`/`Concat` (`join`), with every
+/// arm between them a plain unary chain of single-consumer nodes. An
+/// empty arm is the identity skip edge of a residual connection.
+///
+/// This is the unit the branch-aware planner turns into a
+/// [`crate::optimizer::Segment::Branch`]: arms execute depth-first one
+/// after another while the entry buffer stays live, and the join fuses
+/// with the final arm instead of launching as a standalone kernel.
+#[derive(Debug, Clone)]
+pub struct BranchRegion {
+    /// The fan-out node feeding every arm (not part of the region).
+    pub entry: NodeId,
+    /// The reconverging `Add`/`Concat` node.
+    pub join: NodeId,
+    /// Arm bodies in join-input order: `arms[i]` produces
+    /// `join.inputs[i]` (an empty arm means the join reads `entry`
+    /// directly).
+    pub arms: Vec<Vec<NodeId>>,
+}
+
+impl BranchRegion {
+    /// All arm-body nodes of the region (entry and join excluded).
+    pub fn arm_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.arms.iter().flatten().copied()
+    }
+}
+
 /// One node of the network DAG.
 #[derive(Debug, Clone)]
 pub struct Node {
@@ -101,21 +160,71 @@ impl Graph {
         self.nodes.len() - 1
     }
 
-    /// Consumers of each node (computed on demand).
-    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
-        let mut cons = vec![Vec::new(); self.nodes.len()];
+    /// Compute the consumer adjacency once; thread the result through a
+    /// whole planning/validation/execution pass rather than re-deriving
+    /// it per query.
+    pub fn consumer_map(&self) -> Consumers {
+        let mut lists = vec![Vec::new(); self.nodes.len()];
         for n in &self.nodes {
             for &i in &n.inputs {
-                cons[i].push(n.id);
+                lists[i].push(n.id);
             }
         }
-        cons
+        Consumers { lists }
     }
 
-    /// Nodes with exactly one consumer (eligible to sit inside a stack:
-    /// a fan-out edge forces the intermediate into main memory).
-    pub fn single_consumer(&self) -> Vec<bool> {
-        self.consumers().iter().map(|c| c.len() == 1).collect()
+    /// Detect every branch region of the graph: for each `Add`/`Concat`
+    /// node, walk each input backwards through single-consumer unary
+    /// nodes; the region is valid when all walks stop at one shared
+    /// fan-out node. Walks that hit a multi-input node (a nested join)
+    /// or diverge onto different entries reject the candidate — such
+    /// joins stay ordinary segments.
+    ///
+    /// Arm bodies of different regions are automatically disjoint (a
+    /// single-consumer node's chain leads to exactly one join), and a
+    /// join is never inside another region's arm (it is multi-input), so
+    /// the returned regions never overlap.
+    pub fn branch_regions(&self, cons: &Consumers) -> Vec<BranchRegion> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.layer, Layer::Add | Layer::Concat))
+            .filter_map(|n| self.trace_region(n, cons))
+            .collect()
+    }
+
+    /// Trace one join candidate's arms back to a shared entry.
+    fn trace_region(&self, join: &Node, cons: &Consumers) -> Option<BranchRegion> {
+        if join.inputs.len() < 2 {
+            return None;
+        }
+        let mut arms = Vec::with_capacity(join.inputs.len());
+        let mut entry = None;
+        for &src in &join.inputs {
+            let mut arm = Vec::new();
+            let mut cur = src;
+            // Walk upstream while the node is exclusively ours; the
+            // first shared (fan-out) node is the entry candidate.
+            while cons.is_single(cur) {
+                let n = self.node(cur);
+                if n.inputs.len() != 1 {
+                    return None; // nested join or input placeholder
+                }
+                arm.push(cur);
+                cur = n.inputs[0];
+            }
+            match entry {
+                None => entry = Some(cur),
+                Some(e) if e == cur => {}
+                Some(_) => return None, // arms diverge: no single entry
+            }
+            arm.reverse();
+            arms.push(arm);
+        }
+        Some(BranchRegion {
+            entry: entry.expect("join has >= 2 inputs"),
+            join: join.id,
+            arms,
+        })
     }
 
     /// Validate structural invariants; returns an error description.
@@ -153,9 +262,9 @@ impl Graph {
             return Err("output id out of range".into());
         }
         // Every non-output node must be consumed.
-        let cons = self.consumers();
+        let cons = self.consumer_map();
         for n in &self.nodes {
-            if n.id != self.output && cons[n.id].is_empty() {
+            if n.id != self.output && cons.count(n.id) == 0 {
                 return Err(format!("dangling node {} ({})", n.id, n.name));
             }
         }
@@ -278,8 +387,8 @@ mod tests {
         g.add("add", Layer::Add, &[c, x]);
         g.push("relu", Layer::Relu);
         g.validate().unwrap();
-        let cons = g.consumers();
-        assert_eq!(cons[x], vec![c, c + 1]); // input feeds conv and add
+        let cons = g.consumer_map();
+        assert_eq!(cons.of(x), &[c, c + 1]); // input feeds conv and add
     }
 
     #[test]
@@ -289,9 +398,85 @@ mod tests {
         let a = g.add("relu_a", Layer::Relu, &[x]);
         let b = g.add("relu_b", Layer::Relu, &[x]);
         g.add("add", Layer::Add, &[a, b]);
-        let sc = g.single_consumer();
-        assert!(!sc[x]); // two consumers
-        assert!(sc[a] && sc[b]);
+        let cons = g.consumer_map();
+        assert!(!cons.is_single(x)); // two consumers
+        assert_eq!(cons.count(x), 2);
+        assert!(cons.is_single(a) && cons.is_single(b));
+    }
+
+    #[test]
+    fn residual_branch_region_detected() {
+        // x -> conv -> bn \
+        //   \--------------> add -> relu
+        let mut g = Graph::new("res", Shape::nchw(1, 4, 8, 8));
+        let x = g.output;
+        let c = g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        let b = g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        g.add("add", Layer::Add, &[b, x]);
+        g.push("relu", Layer::Relu);
+        let cons = g.consumer_map();
+        let regions = g.branch_regions(&cons);
+        assert_eq!(regions.len(), 1);
+        let r = &regions[0];
+        assert_eq!(r.entry, x);
+        assert_eq!(g.node(r.join).layer.kind_name(), "add");
+        assert_eq!(r.arms, vec![vec![c, b], vec![]]); // identity skip arm
+        assert_eq!(r.arm_nodes().count(), 2);
+    }
+
+    #[test]
+    fn concat_region_with_parallel_arms() {
+        // Fire-module shape: s fans out to two conv+relu arms, concat.
+        let mut g = Graph::new("fire", Shape::nchw(1, 4, 8, 8));
+        let s = g.push("squeeze_relu", Layer::Relu);
+        let conv = |oc: usize| Layer::Conv2d {
+            out_channels: oc,
+            window: Window2d::square(1, 1, 0),
+            bias: true,
+        };
+        let a = g.add("e1", conv(8), &[s]);
+        let ar = g.add("e1_relu", Layer::Relu, &[a]);
+        let b = g.add("e3", conv(8), &[s]);
+        let br = g.add("e3_relu", Layer::Relu, &[b]);
+        g.add("cat", Layer::Concat, &[ar, br]);
+        let regions = g.branch_regions(&g.consumer_map());
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].entry, s);
+        assert_eq!(regions[0].arms, vec![vec![a, ar], vec![b, br]]);
+    }
+
+    #[test]
+    fn nested_join_rejects_outer_region() {
+        // inner add reconverges at x; the outer concat's arm contains the
+        // inner join (multi-input), so only the inner region is valid.
+        let mut g = Graph::new("nest", Shape::nchw(1, 4, 8, 8));
+        let x = g.push("relu0", Layer::Relu);
+        let a = g.add("bn_a", Layer::BatchNorm2d { eps: 1e-5 }, &[x]);
+        let inner = g.add("add", Layer::Add, &[a, x]);
+        let c = g.add("relu_c", Layer::Relu, &[inner]);
+        g.add("cat", Layer::Concat, &[c, x]);
+        let regions = g.branch_regions(&g.consumer_map());
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].join, inner);
+    }
+
+    #[test]
+    fn consumer_map_contents() {
+        let g = tiny(); // input -> conv1 -> bn1 -> relu1 -> pool1
+        let cons = g.consumer_map();
+        for id in 0..g.nodes.len() - 1 {
+            assert_eq!(cons.of(id), &[id + 1]);
+            assert!(cons.is_single(id));
+        }
+        assert_eq!(cons.count(g.output), 0);
+        assert!(!cons.is_single(g.output));
     }
 
     #[test]

@@ -35,7 +35,7 @@ use brainslug::device::DeviceSpec;
 use brainslug::engine::{BackendKind, Engine, Mode};
 use brainslug::graph::graph_to_json;
 use brainslug::json::Json;
-use brainslug::memsim::speedup_pct;
+use brainslug::memsim::{baseline_optimized_time, speedup_pct};
 use brainslug::runtime::RequestSet;
 use brainslug::server::{QueuePolicy, ServerConfig};
 use brainslug::zoo;
@@ -186,15 +186,19 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     };
 
     let mut table = Table::new(&[
-        "network", "layers", "opt", "stacks", "uniq", "opt-speedup", "%time", "total-speedup",
+        "network", "layers", "opt", "stacks", "uniq", "branches", "opt-speedup", "%time",
+        "total-speedup",
     ]);
     for name in names {
         let engine = bench::paper_engine(name, batch, &device).build()?;
         let plan = engine.plan().expect("paper engines plan");
         let base = engine.simulate_baseline();
         let bs = engine.simulate_plan().expect("plan simulation");
-        let opt_speedup = speedup_pct(base.optimizable_s, bs.stack_s);
-        let pct_time = base.optimizable_s / base.total_s * 100.0;
+        // Like-for-like optimized-portion comparison: `stack_s` includes
+        // fused branch joins, so its baseline side must too.
+        let opt_base_s = baseline_optimized_time(engine.graph(), plan, engine.device());
+        let opt_speedup = speedup_pct(opt_base_s, bs.stack_s);
+        let pct_time = opt_base_s / base.total_s * 100.0;
         let total = speedup_pct(base.total_s, bs.total_s);
         table.row(vec![
             engine.graph().name.clone(),
@@ -202,6 +206,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             plan.num_optimized_layers().to_string(),
             plan.num_stacks().to_string(),
             plan.num_unique_stacks().to_string(),
+            plan.num_branches().to_string(),
             fmt_pct(opt_speedup),
             format!("{pct_time:.1}"),
             fmt_pct(total),

@@ -19,19 +19,34 @@ pub struct Cache {
 }
 
 impl Cache {
-    /// `size` bytes, `assoc`-way, `line`-byte lines. `size` must be a
-    /// multiple of `assoc * line`.
-    pub fn new(size: usize, assoc: usize, line: usize) -> Self {
-        assert!(size % (assoc * line) == 0, "size not divisible");
+    /// `size` bytes, `assoc`-way, `line`-byte lines.
+    ///
+    /// Policy: a `size` that is not a multiple of `assoc * line` is
+    /// rounded **down** to a whole number of sets (modelling the usable
+    /// capacity of an odd budget). Geometry that yields no set at all —
+    /// zero `assoc`/`line`, or `size < assoc * line` — is an `Err`
+    /// rather than a panic or a zero-set modulo downstream.
+    pub fn new(size: usize, assoc: usize, line: usize) -> Result<Self, String> {
+        if assoc == 0 || line == 0 {
+            return Err(format!(
+                "cache geometry: assoc={assoc} and line={line} must be nonzero"
+            ));
+        }
         let set_count = size / (assoc * line);
-        Cache {
+        if set_count == 0 {
+            return Err(format!(
+                "cache size {size} smaller than one set ({} bytes)",
+                assoc * line
+            ));
+        }
+        Ok(Cache {
             sets: vec![Vec::with_capacity(assoc); set_count],
             assoc,
             line,
             set_count,
             hits: 0,
             misses: 0,
-        }
+        })
     }
 
     /// Access one byte address (read or write — write-allocate).
@@ -53,10 +68,11 @@ impl Cache {
         }
     }
 
-    /// Access a contiguous f32 range [start_elem, start_elem+len).
-    pub fn access_range(&mut self, base: u64, start_elem: usize, len: usize) {
+    /// Access a contiguous element range `[start_elem, start_elem+len)`
+    /// of `elem_bytes`-wide elements (4 for f32, 2 for bf16, ...).
+    pub fn access_range(&mut self, base: u64, start_elem: usize, len: usize, elem_bytes: usize) {
         for i in 0..len {
-            self.access(base + (start_elem + i) as u64 * 4);
+            self.access(base + ((start_elem + i) * elem_bytes) as u64);
         }
     }
 
@@ -91,7 +107,7 @@ pub fn compare_schedules(elems: usize, depth: usize, band: usize, cache_bytes: u
     // Distinct buffer per layer boundary, placed far apart.
     let buf = |i: usize| i as u64 * plane.next_power_of_two().max(64) * 2;
 
-    let mut bf = Cache::new(cache_bytes, 8, 64);
+    let mut bf = Cache::new(cache_bytes, 8, 64).expect("compare_schedules cache geometry");
     for layer in 0..depth {
         for e in 0..elems {
             bf.access(buf(layer) + e as u64 * 4); // read
@@ -99,7 +115,7 @@ pub fn compare_schedules(elems: usize, depth: usize, band: usize, cache_bytes: u
         }
     }
 
-    let mut df = Cache::new(cache_bytes, 8, 64);
+    let mut df = Cache::new(cache_bytes, 8, 64).expect("compare_schedules cache geometry");
     // Two band-sized scratch buffers, placed after the planes.
     let scratch_base = buf(depth + 1);
     let scratch = |i: usize| scratch_base + (i % 2) as u64 * (band as u64 * 4 + 64);
@@ -109,15 +125,15 @@ pub fn compare_schedules(elems: usize, depth: usize, band: usize, cache_bytes: u
         for layer in 0..depth {
             // read source
             if layer == 0 {
-                df.access_range(buf(0), start, len);
+                df.access_range(buf(0), start, len, 4);
             } else {
-                df.access_range(scratch(layer - 1), 0, len);
+                df.access_range(scratch(layer - 1), 0, len, 4);
             }
             // write destination
             if layer == depth - 1 {
-                df.access_range(buf(depth), start, len);
+                df.access_range(buf(depth), start, len, 4);
             } else {
-                df.access_range(scratch(layer), 0, len);
+                df.access_range(scratch(layer), 0, len, 4);
             }
         }
         start += len;
@@ -132,7 +148,7 @@ mod tests {
 
     #[test]
     fn basic_hit_miss() {
-        let mut c = Cache::new(1024, 2, 64);
+        let mut c = Cache::new(1024, 2, 64).unwrap();
         c.access(0);
         assert_eq!((c.hits, c.misses), (0, 1));
         c.access(4); // same line
@@ -144,7 +160,7 @@ mod tests {
     #[test]
     fn lru_eviction() {
         // 2-way, line 64, 2 sets => size 256.
-        let mut c = Cache::new(256, 2, 64);
+        let mut c = Cache::new(256, 2, 64).unwrap();
         // Three lines mapping to set 0: lines 0, 2, 4.
         c.access(0);
         c.access(2 * 64);
@@ -181,10 +197,41 @@ mod tests {
 
     #[test]
     fn miss_rate_sane() {
-        let mut c = Cache::new(4096, 4, 64);
+        let mut c = Cache::new(4096, 4, 64).unwrap();
         for i in 0..1000u64 {
             c.access(i * 4);
         }
         assert!(c.miss_rate() > 0.0 && c.miss_rate() < 0.2);
+    }
+
+    #[test]
+    fn non_divisible_size_rounds_down() {
+        // 1000 B / (2-way * 64 B) = 7 whole sets (896 B usable) — used
+        // to assert-panic. The zero-set modulo path is an error instead
+        // of a divide-by-zero.
+        let mut c = Cache::new(1000, 2, 64).unwrap();
+        for i in 0..32u64 {
+            c.access(i * 64);
+        }
+        assert_eq!(c.misses, 32);
+    }
+
+    #[test]
+    fn degenerate_geometry_is_an_error() {
+        assert!(Cache::new(63, 2, 64).is_err()); // below one set
+        assert!(Cache::new(0, 8, 64).is_err());
+        assert!(Cache::new(1024, 0, 64).is_err());
+        assert!(Cache::new(1024, 8, 0).is_err());
+    }
+
+    #[test]
+    fn access_range_is_dtype_aware() {
+        // 32 elements: f64-wide spans 4 lines, f32 2 lines, bf16 1 line.
+        for (elem_bytes, lines) in [(8usize, 4u64), (4, 2), (2, 1)] {
+            let mut c = Cache::new(4096, 4, 64).unwrap();
+            c.access_range(0, 0, 32, elem_bytes);
+            assert_eq!(c.misses, lines, "elem_bytes {elem_bytes}");
+            assert_eq!(c.hits, 32 - lines, "elem_bytes {elem_bytes}");
+        }
     }
 }

@@ -196,6 +196,7 @@ mod tests {
                     }
                 }
                 Segment::Single(id) => df.add(&layer_cost_bf(&g, g.node(*id))),
+                Segment::Branch { .. } => unreachable!("linear net has no branches"),
             }
         }
         assert!(

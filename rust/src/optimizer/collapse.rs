@@ -186,14 +186,23 @@ impl Sequence {
             .join(";")
     }
 
-    /// Redundancy factor of the halo: input rows actually read per band
-    /// divided by the rows a non-overlapping decomposition would read.
-    /// 1.0 = no redundancy. Drives the memsim traffic model.
+    /// Redundancy factor of the halo: input rows actually read across
+    /// all bands divided by the rows a non-overlapping decomposition
+    /// would read. 1.0 = no redundancy. Drives the memsim traffic model.
+    ///
+    /// The final band is usually *partial* (`out_h % tile_rows` rows),
+    /// so its halo-grown input extent is computed from its actual
+    /// height; treating every band as full-height (`n_bands ×
+    /// in_rows_for(tile_rows)`) over-estimates read traffic whenever the
+    /// tile does not divide the output height.
     pub fn halo_overlap_factor(&self) -> f64 {
         let (out_h, _) = row_geometry(self.out_shape());
-        let rows = self.tile_rows.min(out_h);
+        let rows = self.tile_rows.min(out_h).max(1);
         let n_bands = out_h.div_ceil(rows);
-        let read_rows = (n_bands * self.in_rows_for(rows)) as f64;
+        let full_bands = n_bands - 1;
+        let last_rows = out_h - full_bands * rows;
+        let read_rows =
+            (full_bands * self.in_rows_for(rows) + self.in_rows_for(last_rows)) as f64;
         let (in_h, _) = row_geometry(self.in_shape());
         (read_rows / in_h as f64).max(1.0)
     }
@@ -207,6 +216,13 @@ pub struct CollapseOptions {
     pub max_steps_per_sequence: Option<usize>,
     /// Minimum output rows per band (keep SIMD lanes busy).
     pub min_tile_rows: usize,
+    /// Fast-memory bytes pinned by concurrently-live buffers while the
+    /// collapsed kernels run — the branch-aware planner reserves the
+    /// skip-connection plane held across a branch arm here. Packing and
+    /// band-height decisions use `resource_limit() - reserved_bytes`,
+    /// floored at 1/8 of the device limit (past that the live buffer is
+    /// assumed spilled to main memory instead of strangling the bands).
+    pub reserved_bytes: usize,
 }
 
 impl Default for CollapseOptions {
@@ -214,8 +230,30 @@ impl Default for CollapseOptions {
         CollapseOptions {
             max_steps_per_sequence: None,
             min_tile_rows: 1,
+            reserved_bytes: 0,
         }
     }
+}
+
+/// Does a reservation of `reserved_bytes` actually hold on `device` —
+/// i.e. is the effective budget *not* floored? When this is false the
+/// collapse budget bottoms out at `resource_limit() / 8` and the live
+/// buffer is assumed spilled to main memory (its consumers pay a
+/// re-read there instead). The memsim join model applies the same
+/// predicate when deciding whether a skip read hits the fast tier.
+pub fn reservation_holds(device: &DeviceSpec, reserved_bytes: usize) -> bool {
+    let limit = device.resource_limit();
+    limit.saturating_sub(reserved_bytes) >= limit / 8
+}
+
+/// Working-set budget after the reservation policy documented on
+/// [`CollapseOptions::reserved_bytes`].
+fn effective_budget(device: &DeviceSpec, opts: &CollapseOptions) -> usize {
+    let limit = device.resource_limit();
+    limit
+        .saturating_sub(opts.reserved_bytes)
+        .max(limit / 8)
+        .max(1)
 }
 
 /// Listing 1 steps #3 and #4: group operations into steps, then pack
@@ -243,7 +281,7 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
     // A band is at least one row tall; `min_tile_rows: 0` is clamped
     // rather than fed into the band back-propagation.
     let min_rows = opts.min_tile_rows.max(1);
-    let budget = device.resource_limit();
+    let budget = effective_budget(device, opts);
     let mut sequences: Vec<Sequence> = Vec::new();
     let mut current: Vec<Step> = Vec::new();
     for st in steps {
@@ -274,7 +312,7 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
 /// output values").
 fn seal(steps: Vec<Step>, device: &DeviceSpec, opts: &CollapseOptions) -> Sequence {
     let (out_h, _) = row_geometry(steps.last().expect("empty sequence").out_shape());
-    let budget = device.resource_limit();
+    let budget = effective_budget(device, opts);
     let min_rows = opts.min_tile_rows.max(1);
     let mut seq = Sequence {
         steps,
@@ -579,6 +617,61 @@ mod tests {
         assert_eq!(seq.working_set_bytes(8), 2 * plane + params);
         // Small bands still grow their halo normally (1 → 3 → 5 → 7).
         assert_eq!(seq.in_rows_for(1), 7);
+    }
+
+    #[test]
+    fn halo_factor_sums_partial_final_band() {
+        // One k3 s1 p1 pool over a 10-row plane, banded at 4 output
+        // rows: bands of 4, 4, 2 read 6 + 6 + 4 = 16 input rows.
+        // The old `n_bands * in_rows_for(tile)` formula claimed
+        // 3 * 6 = 18 (factor 1.8) — over-estimating DF read traffic on
+        // every non-divisible height.
+        let ops = mk_ops(&[("max3s1p1", 0)], 2, 10);
+        let mut seq = collapse(&ops, &dev(1 << 20), &CollapseOptions::default())
+            .pop()
+            .unwrap();
+        seq.tile_rows = 4;
+        assert_eq!(seq.in_rows_for(4), 6);
+        assert_eq!(seq.in_rows_for(2), 4);
+        let factor = seq.halo_overlap_factor();
+        assert!((factor - 1.6).abs() < 1e-12, "got {factor}");
+        // Divisible heights are unchanged: 10 = 2 * 5 bands of 2 rows
+        // read 4 rows each -> 20/10 = 2.0 under both formulas.
+        seq.tile_rows = 2;
+        assert!((seq.halo_overlap_factor() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reserved_bytes_shrink_band_height() {
+        // An element-wise stack on a 64-row plane: reserving most of the
+        // budget for a live skip buffer must reduce the chosen band.
+        let ops = mk_ops(&[("bn", 0), ("relu", 0)], 8, 64);
+        let device = dev(16 * 1024);
+        let free = collapse(&ops, &device, &CollapseOptions::default());
+        let reserved = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                reserved_bytes: 12 * 1024,
+                ..Default::default()
+            },
+        );
+        assert!(reserved[0].tile_rows < free[0].tile_rows);
+        assert!(reserved[0].working_set_bytes(reserved[0].tile_rows) <= 4 * 1024);
+        assert!(reservation_holds(&device, 12 * 1024));
+        assert!(!reservation_holds(&device, 1 << 30));
+        // Reserving more than the whole budget floors at limit/8 rather
+        // than underflowing to a zero-byte budget.
+        let floored = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                reserved_bytes: 1 << 30,
+                ..Default::default()
+            },
+        );
+        assert!(floored[0].tile_rows >= 1);
+        assert!(floored[0].working_set_bytes(floored[0].tile_rows) <= 16 * 1024 / 8);
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //!   sequences against the device's fast-memory budget (steps #3, #4),
 //!   choosing the depth-first band height per sequence.
 //! * [`plan`] — the Network Analyzer: detects maximal optimizable chains
-//!   (step #1), collapses each into a [`Stack`], dedups identical stacks,
-//!   and emits the [`Plan`] the scheduler executes (step #5).
+//!   (step #1) *and* single-entry/single-exit branch regions
+//!   ([`crate::graph::BranchRegion`]), collapses chains into [`Stack`]s
+//!   (branch arms against a skip-reserved budget), dedups identical
+//!   stacks, and emits the [`Plan`] the scheduler executes (step #5) —
+//!   branch regions as [`Segment::Branch`], arms depth-first, joins
+//!   fused.
 //!
 //! Code generation (the paper's step 5 proper) happens on the python side
 //! from the same stack signatures: `brainslug emit-requests` serializes
@@ -19,6 +23,6 @@ pub mod collapse;
 pub mod ops;
 pub mod plan;
 
-pub use collapse::{collapse, CollapseOptions, Sequence, Step};
+pub use collapse::{collapse, reservation_holds, CollapseOptions, Sequence, Step};
 pub use ops::{OpKind, Operation};
 pub use plan::{fnv64_hex, optimize, Plan, Segment, Stack};

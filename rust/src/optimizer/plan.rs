@@ -3,11 +3,22 @@
 //! into [`Stack`]s, collapse each stack into sequences, and emit an
 //! execution [`Plan`] where stacks are replaced by fused-kernel segments
 //! — the paper's "special BrainSlug layer".
+//!
+//! The analyzer is *branch-aware*: chain-only planning (the paper's
+//! Listing 1) fragments branchy networks (ResNet, DenseNet, Inception)
+//! at every `Add`/`Concat` junction, exactly the workloads Table 2 shows
+//! the least headroom on. Here every single-entry/single-exit
+//! [`BranchRegion`] becomes one [`Segment::Branch`]: independent stacks
+//! are built *inside each arm* (packed against a budget that reserves
+//! the live skip-connection plane, see
+//! [`CollapseOptions::reserved_bytes`]), the arms execute depth-first
+//! one after another, and the join fuses with the final arm instead of
+//! launching as a standalone kernel.
 
 use std::collections::HashMap;
 
 use crate::device::DeviceSpec;
-use crate::graph::{Graph, NodeId, Shape};
+use crate::graph::{BranchRegion, Graph, Layer, NodeId, Shape};
 
 use super::collapse::{collapse, CollapseOptions, Sequence};
 use super::ops::Operation;
@@ -50,6 +61,29 @@ pub enum Segment {
     Single(NodeId),
     /// A collapsed stack executed by the fused depth-first kernel.
     Stack(Stack),
+    /// A branch region executed depth-first arm-by-arm: each arm is a
+    /// planned run of `Single`/`Stack` segments (never a nested branch —
+    /// arms are unary chains by construction), and `join` is the
+    /// `Add`/`Concat` that reconverges them, consumed fused with the
+    /// final arm's output instead of dispatched as a standalone kernel.
+    Branch {
+        /// Arm bodies in join-input order (an empty arm is the identity
+        /// skip edge of a residual connection).
+        arms: Vec<Vec<Segment>>,
+        join: NodeId,
+    },
+}
+
+impl Segment {
+    /// The graph node whose value this segment leaves behind (`None`
+    /// only for a degenerate empty stack).
+    pub fn output_node(&self) -> Option<NodeId> {
+        match self {
+            Segment::Single(id) => Some(*id),
+            Segment::Stack(st) => st.nodes.last().copied(),
+            Segment::Branch { join, .. } => Some(*join),
+        }
+    }
 }
 
 /// The optimized execution plan for one network at one batch size.
@@ -58,72 +92,85 @@ pub struct Plan {
     pub network: String,
     pub device: String,
     pub segments: Vec<Segment>,
-    /// Stacks deduplicated by signature → representative index in
-    /// `segments` (the paper generates code once per distinct stack).
+    /// Stacks deduplicated by signature → representative ordinal in
+    /// [`Plan::stacks`] order (the paper generates code once per
+    /// distinct stack; branch-arm stacks dedup against each other and
+    /// against chain stacks through the same signatures).
     pub unique_stacks: HashMap<String, usize>,
 }
 
+/// Collect every stack (chain-level and branch-arm) in execution order.
+fn collect_stacks<'a>(segments: &'a [Segment], out: &mut Vec<&'a Stack>) {
+    for seg in segments {
+        match seg {
+            Segment::Single(_) => {}
+            Segment::Stack(st) => out.push(st),
+            Segment::Branch { arms, .. } => {
+                for arm in arms {
+                    collect_stacks(arm, out);
+                }
+            }
+        }
+    }
+}
+
 impl Plan {
+    /// Stacks everywhere in the plan (chain-level and inside branch
+    /// arms), counted without materializing [`Plan::stacks`].
     pub fn num_stacks(&self) -> usize {
-        self.segments
-            .iter()
-            .filter(|s| matches!(s, Segment::Stack(_)))
-            .count()
+        fn count(seg: &Segment) -> usize {
+            match seg {
+                Segment::Single(_) => 0,
+                Segment::Stack(_) => 1,
+                Segment::Branch { arms, .. } => arms.iter().flatten().map(count).sum(),
+            }
+        }
+        self.segments.iter().map(count).sum()
     }
 
     pub fn num_unique_stacks(&self) -> usize {
         self.unique_stacks.len()
     }
 
-    /// Number of graph layers absorbed into stacks (Table 2 "Opt.").
-    pub fn num_optimized_layers(&self) -> usize {
+    /// Branch regions executed depth-first arm-by-arm.
+    pub fn num_branches(&self) -> usize {
         self.segments
             .iter()
-            .map(|s| match s {
-                Segment::Stack(st) => st.nodes.len(),
+            .filter(|s| matches!(s, Segment::Branch { .. }))
+            .count()
+    }
+
+    /// Number of graph layers executed by the depth-first optimized
+    /// schedule (Table 2 "Opt."): stack members everywhere, plus each
+    /// branch join (fused with its final arm rather than launched as a
+    /// standalone framework kernel).
+    pub fn num_optimized_layers(&self) -> usize {
+        fn seg_opt(seg: &Segment) -> usize {
+            match seg {
                 Segment::Single(_) => 0,
-            })
-            .sum()
+                Segment::Stack(st) => st.nodes.len(),
+                Segment::Branch { arms, .. } => {
+                    1 + arms.iter().flatten().map(seg_opt).sum::<usize>()
+                }
+            }
+        }
+        self.segments.iter().map(seg_opt).sum()
     }
 
-    /// All stacks in execution order.
+    /// All stacks in execution order, including branch-arm stacks.
     pub fn stacks(&self) -> impl Iterator<Item = &Stack> {
-        self.segments.iter().filter_map(|s| match s {
-            Segment::Stack(st) => Some(st),
-            Segment::Single(_) => None,
-        })
+        let mut v = Vec::new();
+        collect_stacks(&self.segments, &mut v);
+        v.into_iter()
     }
 
-    /// Every node of the graph appears in exactly one segment; verify.
+    /// Every node of the graph appears in exactly one segment; stack
+    /// chains and branch regions are structurally well-formed; verify.
     pub fn validate(&self, graph: &Graph) -> Result<(), String> {
         let mut seen = vec![false; graph.nodes.len()];
         seen[0] = true; // input placeholder is implicit
-        let mut mark = |id: NodeId| -> Result<(), String> {
-            if seen[id] {
-                return Err(format!("node {id} appears twice in plan"));
-            }
-            seen[id] = true;
-            Ok(())
-        };
         for seg in &self.segments {
-            match seg {
-                Segment::Single(id) => mark(*id)?,
-                Segment::Stack(st) => {
-                    for &id in &st.nodes {
-                        mark(id)?;
-                    }
-                    // Stack nodes must form a consecutive unary chain.
-                    for w in st.nodes.windows(2) {
-                        let node = graph.node(w[1]);
-                        if node.inputs != [w[0]] {
-                            return Err(format!(
-                                "stack chain broken between {} and {}",
-                                w[0], w[1]
-                            ));
-                        }
-                    }
-                }
-            }
+            check_segment(graph, seg, &mut seen, true)?;
         }
         if let Some(missing) = seen.iter().position(|s| !s) {
             return Err(format!("node {missing} missing from plan"));
@@ -132,65 +179,260 @@ impl Plan {
     }
 }
 
+fn mark(seen: &mut [bool], id: NodeId) -> Result<(), String> {
+    if seen[id] {
+        return Err(format!("node {id} appears twice in plan"));
+    }
+    seen[id] = true;
+    Ok(())
+}
+
+fn check_stack(graph: &Graph, st: &Stack, seen: &mut [bool]) -> Result<(), String> {
+    for &id in &st.nodes {
+        mark(seen, id)?;
+    }
+    // Stack nodes must form a consecutive unary chain.
+    for w in st.nodes.windows(2) {
+        let node = graph.node(w[1]);
+        if node.inputs != [w[0]] {
+            return Err(format!("stack chain broken between {} and {}", w[0], w[1]));
+        }
+    }
+    Ok(())
+}
+
+fn check_segment(
+    graph: &Graph,
+    seg: &Segment,
+    seen: &mut [bool],
+    allow_branch: bool,
+) -> Result<(), String> {
+    match seg {
+        Segment::Single(id) => mark(seen, *id),
+        Segment::Stack(st) => check_stack(graph, st, seen),
+        Segment::Branch { arms, join } => {
+            if !allow_branch {
+                return Err(format!("nested branch segment at join {join}"));
+            }
+            check_branch(graph, arms, *join, seen)
+        }
+    }
+}
+
+/// Structural checks for one branch region: the join is an `Add`/
+/// `Concat` with one arm per input, every arm is a unary chain hanging
+/// off one shared entry, and each arm's output is the matching join
+/// input (the entry itself for an identity skip arm).
+fn check_branch(
+    graph: &Graph,
+    arms: &[Vec<Segment>],
+    join: NodeId,
+    seen: &mut [bool],
+) -> Result<(), String> {
+    let jn = graph.node(join);
+    if !matches!(jn.layer, Layer::Add | Layer::Concat) {
+        return Err(format!("branch join {join} is not an add/concat"));
+    }
+    if arms.len() != jn.inputs.len() {
+        return Err(format!(
+            "branch at {join}: {} arms for {} join inputs",
+            arms.len(),
+            jn.inputs.len()
+        ));
+    }
+    let entry = match arms.iter().find_map(|arm| arm.first()).map(first_node_of) {
+        Some(first) => {
+            let first = first?;
+            match graph.node(first).inputs.as_slice() {
+                [e] => *e,
+                _ => return Err(format!("branch arm head {first} is not unary")),
+            }
+        }
+        None => jn.inputs[0], // all arms are identity skips
+    };
+    for (arm, &join_input) in arms.iter().zip(&jn.inputs) {
+        let mut prev = entry;
+        for seg in arm {
+            check_segment(graph, seg, seen, false)?;
+            let first = first_node_of(seg)?;
+            if graph.node(first).inputs != [prev] {
+                return Err(format!(
+                    "branch arm broken at node {first} (expected input {prev})"
+                ));
+            }
+            prev = seg
+                .output_node()
+                .ok_or_else(|| "empty segment in branch arm".to_string())?;
+        }
+        if join_input != prev {
+            return Err(format!(
+                "branch arm output {prev} != join input {join_input}"
+            ));
+        }
+    }
+    mark(seen, join)
+}
+
+fn first_node_of(seg: &Segment) -> Result<NodeId, String> {
+    match seg {
+        Segment::Single(id) => Ok(*id),
+        Segment::Stack(st) => st
+            .nodes
+            .first()
+            .copied()
+            .ok_or_else(|| "empty stack in branch arm".to_string()),
+        Segment::Branch { join, .. } => Err(format!("nested branch segment at join {join}")),
+    }
+}
+
+/// Collapse `nodes` (a consecutive unary chain of optimizable layers)
+/// into a [`Stack`].
+fn build_stack(
+    graph: &Graph,
+    nodes: Vec<NodeId>,
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+) -> Stack {
+    let ops: Vec<Operation> = nodes
+        .iter()
+        .map(|&id| {
+            let n = graph.node(id);
+            let in_shape = &graph.node(n.inputs[0]).shape;
+            Operation::from_layer(id, &n.name, &n.layer, in_shape, &n.shape)
+                .expect("chain node must be optimizable")
+        })
+        .collect();
+    let sequences = collapse(&ops, device, opts);
+    // The signature captures everything codegen depends on: input
+    // shape, per-sequence op structure AND the chosen band height
+    // (tile_rows changes the generated kernel's grid).
+    let signature = format!(
+        "in:{}|{}",
+        sequences[0].in_shape().sig(),
+        sequences
+            .iter()
+            .map(|s| format!("{}@t{}", s.sig(), s.tile_rows))
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+    Stack {
+        nodes,
+        sequences,
+        signature,
+    }
+}
+
+/// Flush the open chain into a stack segment (no-op when empty).
+fn flush_chain(
+    graph: &Graph,
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+    chain: &mut Vec<NodeId>,
+    segments: &mut Vec<Segment>,
+) {
+    if chain.is_empty() {
+        return;
+    }
+    let nodes = std::mem::take(chain);
+    segments.push(Segment::Stack(build_stack(graph, nodes, device, opts)));
+}
+
+/// Plan one branch arm: the arm is a unary single-consumer chain, so
+/// runs of optimizable layers become stacks and everything else stays a
+/// single — the same partition chain-only planning produces, but packed
+/// against the arm's reserved (skip-aware) budget.
+fn plan_arm(
+    graph: &Graph,
+    nodes: &[NodeId],
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+) -> Vec<Segment> {
+    let mut segments = Vec::new();
+    let mut chain: Vec<NodeId> = Vec::new();
+    for &id in nodes {
+        if graph.node(id).layer.is_optimizable() {
+            chain.push(id);
+        } else {
+            flush_chain(graph, device, opts, &mut chain, &mut segments);
+            segments.push(Segment::Single(id));
+        }
+    }
+    flush_chain(graph, device, opts, &mut chain, &mut segments);
+    segments
+}
+
+/// Fast-tier bytes the skip connection pins per depth-first work unit
+/// while a branch arm executes: one (batch, channel) plane of the entry
+/// tensor (one row of a rank-2 activation). The fused join consumes
+/// this resident plane band-wise without a main-memory round-trip —
+/// the memsim join model (`memsim::perfmodel`) applies the same rule
+/// when deciding whether the skip read hits the fast tier.
+pub(crate) fn live_plane_bytes(shape: &Shape) -> usize {
+    match shape.rank() {
+        4 => shape.height() * shape.width() * shape.dtype.bytes(),
+        _ => shape.channels() * shape.dtype.bytes(),
+    }
+}
+
 /// Analyzer + collapse: produce the optimized plan for `graph` on
 /// `device`.
 ///
-/// A chain joins a stack while: the layer is optimizable, it consumes the
-/// previous chain node, and the previous chain node has a single consumer
-/// (fan-out forces materialization — the tail of a stack may fan out, the
-/// middle may not).
+/// A chain joins a stack while: the layer is optimizable, it consumes
+/// the previous chain node, and the previous chain node has a single
+/// consumer (fan-out forces materialization — the tail of a stack may
+/// fan out, the middle may not). Detected [`BranchRegion`]s are planned
+/// as [`Segment::Branch`]: their arm bodies are skipped by the linear
+/// walk and planned arm-by-arm (with the skip plane reserved from the
+/// collapse budget) when the walk reaches the join.
 pub fn optimize(graph: &Graph, device: &DeviceSpec, opts: &CollapseOptions) -> Plan {
-    let single = graph.single_consumer();
+    // One consumer map per planning pass, threaded everywhere.
+    let consumers = graph.consumer_map();
+    let regions: Vec<BranchRegion> = graph.branch_regions(&consumers);
+    let mut region_at: HashMap<NodeId, usize> = HashMap::new();
+    let mut in_arm = vec![false; graph.nodes.len()];
+    for (i, r) in regions.iter().enumerate() {
+        region_at.insert(r.join, i);
+        for id in r.arm_nodes() {
+            in_arm[id] = true;
+        }
+    }
+
     let mut segments: Vec<Segment> = Vec::new();
     let mut chain: Vec<NodeId> = Vec::new();
-
-    let flush = |chain: &mut Vec<NodeId>, segments: &mut Vec<Segment>| {
-        if chain.is_empty() {
-            return;
-        }
-        let ops: Vec<Operation> = chain
-            .iter()
-            .map(|&id| {
-                let n = graph.node(id);
-                let in_shape = &graph.node(n.inputs[0]).shape;
-                Operation::from_layer(id, &n.name, &n.layer, in_shape, &n.shape)
-                    .expect("chain node must be optimizable")
-            })
-            .collect();
-        let sequences = collapse(&ops, device, opts);
-        // The signature captures everything codegen depends on: input
-        // shape, per-sequence op structure AND the chosen band height
-        // (tile_rows changes the generated kernel's grid).
-        let signature = format!(
-            "in:{}|{}",
-            sequences[0].in_shape().sig(),
-            sequences
-                .iter()
-                .map(|s| format!("{}@t{}", s.sig(), s.tile_rows))
-                .collect::<Vec<_>>()
-                .join("|")
-        );
-        segments.push(Segment::Stack(Stack {
-            nodes: std::mem::take(chain),
-            sequences,
-            signature,
-        }));
-    };
-
     for node in graph.nodes.iter().skip(1) {
+        if in_arm[node.id] {
+            // Planned inside its region's branch segment at the join.
+            continue;
+        }
+        if let Some(&ri) = region_at.get(&node.id) {
+            flush_chain(graph, device, opts, &mut chain, &mut segments);
+            let region = &regions[ri];
+            let arm_opts = CollapseOptions {
+                reserved_bytes: opts
+                    .reserved_bytes
+                    .saturating_add(live_plane_bytes(&graph.node(region.entry).shape)),
+                ..*opts
+            };
+            let arms = region
+                .arms
+                .iter()
+                .map(|arm| plan_arm(graph, arm, device, &arm_opts))
+                .collect();
+            segments.push(Segment::Branch {
+                arms,
+                join: node.id,
+            });
+            continue;
+        }
         let extends_chain = node.layer.is_optimizable()
             && node.inputs.len() == 1
             && chain
                 .last()
-                .is_none_or(|&last| node.inputs[0] == last && single[last]);
+                .is_none_or(|&last| node.inputs[0] == last && consumers.is_single(last));
         if extends_chain {
-            if chain.is_empty() {
-                // A new chain can start anywhere (its input comes from
-                // main memory regardless).
-            }
             chain.push(node.id);
         } else {
-            flush(&mut chain, &mut segments);
+            flush_chain(graph, device, opts, &mut chain, &mut segments);
             if node.layer.is_optimizable() && node.inputs.len() == 1 {
                 // Starts a fresh chain (previous chain was broken by
                 // fan-out or non-adjacency).
@@ -200,13 +442,13 @@ pub fn optimize(graph: &Graph, device: &DeviceSpec, opts: &CollapseOptions) -> P
             }
         }
     }
-    flush(&mut chain, &mut segments);
+    flush_chain(graph, device, opts, &mut chain, &mut segments);
 
     let mut unique = HashMap::new();
-    for (i, seg) in segments.iter().enumerate() {
-        if let Segment::Stack(st) = seg {
-            unique.entry(st.signature.clone()).or_insert(i);
-        }
+    let mut stacks = Vec::new();
+    collect_stacks(&segments, &mut stacks);
+    for (i, st) in stacks.iter().enumerate() {
+        unique.entry(st.signature.clone()).or_insert(i);
     }
 
     Plan {
@@ -271,6 +513,26 @@ mod tests {
         g
     }
 
+    /// A residual block: x -> conv -> bn -> add(x) -> relu.
+    fn residual_net() -> Graph {
+        let mut g = Graph::new("res", Shape::nchw(1, 8, 16, 16));
+        g.push("bn_in", Layer::BatchNorm2d { eps: 1e-5 });
+        let x = g.push("relu_in", Layer::Relu);
+        let c = g.add(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b = g.add("bn", Layer::BatchNorm2d { eps: 1e-5 }, &[c]);
+        g.add("add", Layer::Add, &[b, x]);
+        g.push("relu_out", Layer::Relu);
+        g
+    }
+
     #[test]
     fn detects_bn_relu_pool_stack() {
         let g = simple_net();
@@ -301,15 +563,18 @@ mod tests {
         let plan = optimize(&g, &device(), &CollapseOptions::default());
         plan.validate(&g).unwrap();
         // bn+relu stack ends at relu (fan-out at its OUTPUT is fine since
-        // the stack result is materialized); conv and add are singles.
+        // the stack result is materialized); the conv+add tail becomes a
+        // branch region whose arm holds the conv.
         let st = plan.stacks().next().unwrap();
         assert_eq!(st.nodes.len(), 2);
+        assert_eq!(plan.num_branches(), 1);
     }
 
     #[test]
     fn fanout_inside_chain_splits() {
         // bn -> relu(fan-out) -> dropout: relu's output is consumed by
-        // dropout AND add, so dropout cannot join bn+relu's stack.
+        // dropout AND add, so dropout cannot join bn+relu's stack — it
+        // becomes the single-node stack of the branch's dropout arm.
         let mut g = Graph::new("fan", Shape::nchw(1, 8, 16, 16));
         g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
         let r = g.push("relu", Layer::Relu);
@@ -320,7 +585,120 @@ mod tests {
         let stacks: Vec<&Stack> = plan.stacks().collect();
         assert_eq!(stacks.len(), 2);
         assert_eq!(stacks[0].nodes.len(), 2); // bn, relu
-        assert_eq!(stacks[1].nodes.len(), 1); // dropout alone
+        assert_eq!(stacks[1].nodes.len(), 1); // dropout alone (in the arm)
+        assert_eq!(plan.num_branches(), 1);
+    }
+
+    #[test]
+    fn residual_region_becomes_branch_segment() {
+        let g = residual_net();
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.num_branches(), 1);
+        let branch = plan
+            .segments
+            .iter()
+            .find_map(|s| match s {
+                Segment::Branch { arms, join } => Some((arms, *join)),
+                _ => None,
+            })
+            .expect("plan has a branch segment");
+        let (arms, join) = branch;
+        assert_eq!(g.node(join).layer.kind_name(), "add");
+        assert_eq!(arms.len(), 2);
+        // Main arm: Single(conv) + Stack([bn]); skip arm: identity.
+        assert_eq!(arms[0].len(), 2);
+        assert!(arms[1].is_empty());
+        // The join counts as optimized: bn_in+relu_in (2) + bn (1) +
+        // relu_out (1) + join (1).
+        assert_eq!(plan.num_optimized_layers(), 5);
+    }
+
+    #[test]
+    fn arm_stacks_reserve_skip_plane() {
+        // The bn stack inside the arm packs against a reduced budget, so
+        // at a large enough plane its band is shorter than the same
+        // stack's outside a branch.
+        let mut g = Graph::new("res", Shape::nchw(1, 8, 64, 64));
+        let x = g.output;
+        let c = g.add(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b = g.add("bn", Layer::BatchNorm2d { eps: 1e-5 }, &[c]);
+        let b2 = g.add("relu", Layer::Relu, &[b]);
+        g.add("add", Layer::Add, &[b2, x]);
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        let arm_stack = plan.stacks().next().unwrap();
+        // Chain context: same ops collapsed with no reservation.
+        let mut lin = Graph::new("lin", Shape::nchw(1, 8, 64, 64));
+        lin.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 8,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        lin.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        lin.push("relu", Layer::Relu);
+        let lin_plan = optimize(&lin, &device(), &CollapseOptions::default());
+        let lin_stack = lin_plan.stacks().next().unwrap();
+        assert!(
+            arm_stack.sequences[0].tile_rows < lin_stack.sequences[0].tile_rows,
+            "arm tile {} !< chain tile {}",
+            arm_stack.sequences[0].tile_rows,
+            lin_stack.sequences[0].tile_rows
+        );
+        assert_ne!(arm_stack.signature, lin_stack.signature);
+    }
+
+    #[test]
+    fn identical_arm_stacks_dedup_across_branches() {
+        // Two identical residual blocks: the per-arm stacks share
+        // signatures across the two branch segments.
+        let mut g = Graph::new("res2", Shape::nchw(1, 8, 16, 16));
+        for i in 0..2 {
+            let x = g.output;
+            let c = g.add(
+                format!("conv{i}"),
+                Layer::Conv2d {
+                    out_channels: 8,
+                    window: Window2d::square(3, 1, 1),
+                    bias: false,
+                },
+                &[x],
+            );
+            let b = g.add(format!("bn{i}"), Layer::BatchNorm2d { eps: 1e-5 }, &[c]);
+            g.add(format!("add{i}"), Layer::Add, &[b, x]);
+            g.push(format!("relu{i}"), Layer::Relu);
+        }
+        let plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.num_branches(), 2);
+        // Stacks: 2x arm [bn], 2x chain [relu] — each pair dedups.
+        assert_eq!(plan.num_stacks(), 4);
+        assert_eq!(plan.num_unique_stacks(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_corrupted_branch() {
+        let g = residual_net();
+        let mut plan = optimize(&g, &device(), &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        // Swap the join for a non-join node: validation must fail loudly.
+        for seg in &mut plan.segments {
+            if let Segment::Branch { join, .. } = seg {
+                *join -= 1;
+            }
+        }
+        assert!(plan.validate(&g).is_err());
     }
 
     #[test]
@@ -351,7 +729,8 @@ mod tests {
             let plan = optimize(&g, &device(), &CollapseOptions::default());
             plan.validate(&g).unwrap();
             let frac = plan.num_optimized_layers() as f64 / g.num_layers() as f64;
-            // Paper Table 2: 44-64% of layers are optimizable.
+            // Paper Table 2: 44-64% of layers are optimizable; fused
+            // branch joins push our branchy nets slightly above.
             assert!(
                 (0.25..0.75).contains(&frac),
                 "{name}: optimized fraction {frac:.2} out of regime"
@@ -378,5 +757,15 @@ mod tests {
         let s1 = p1.stacks().next().unwrap();
         let s8 = p8.stacks().next().unwrap();
         assert_ne!(s1.signature, s8.signature); // shape is in signature
+    }
+
+    #[test]
+    fn branch_structure_is_batch_invariant() {
+        let g = residual_net();
+        let p1 = optimize(&g, &device(), &CollapseOptions::default());
+        let p8 = optimize(&g.with_batch(8), &device(), &CollapseOptions::default());
+        assert_eq!(p1.num_branches(), p8.num_branches());
+        assert_eq!(p1.num_stacks(), p8.num_stacks());
+        assert_eq!(p1.num_optimized_layers(), p8.num_optimized_layers());
     }
 }

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::graph::{graph_to_json, Graph};
+use crate::graph::{graph_to_json, Graph, Node};
 use crate::json::Json;
 use crate::optimizer::{OpKind, Plan, Segment, Stack};
 
@@ -126,57 +126,63 @@ impl RequestSet {
         Self::default()
     }
 
-    /// Register every executable a breadth-first (baseline) run of
-    /// `graph` needs: one per distinct layer signature.
-    pub fn add_baseline(&mut self, graph: &Graph) {
-        for node in graph.nodes.iter().skip(1) {
-            if let Some(name) = layer_exec_name(graph, node) {
-                self.layers.entry(name.clone()).or_insert_with(|| {
-                    let mut o = Json::object();
-                    o.set("name", Json::Str(name));
-                    let in_shapes: Vec<Json> = node
-                        .inputs
-                        .iter()
-                        .map(|&i| shape_json(&graph.node(i).shape))
-                        .collect();
-                    o.set("in_shapes", Json::Arr(in_shapes));
-                    o.set("out_shape", shape_json(&node.shape));
-                    crate::graph::json::layer_fields_into(&mut o, &node.layer);
-                    o
-                });
+    /// Register the executable for one non-stacked layer (deduplicated
+    /// by signature; scheduler-native layers register nothing).
+    fn register_layer(&mut self, graph: &Graph, node: &Node) {
+        if let Some(name) = layer_exec_name(graph, node) {
+            self.layers.entry(name.clone()).or_insert_with(|| {
+                let mut o = Json::object();
+                o.set("name", Json::Str(name));
+                let in_shapes: Vec<Json> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| shape_json(&graph.node(i).shape))
+                    .collect();
+                o.set("in_shapes", Json::Arr(in_shapes));
+                o.set("out_shape", shape_json(&node.shape));
+                crate::graph::json::layer_fields_into(&mut o, &node.layer);
+                o
+            });
+        }
+    }
+
+    /// Register everything one plan segment needs. Branch segments
+    /// recurse into their arms and register the join as a plain layer
+    /// executable (the PJRT path dispatches it; only the sim model
+    /// fuses its cost into the branch schedule).
+    fn register_segment(&mut self, graph: &Graph, seg: &Segment) {
+        match seg {
+            Segment::Single(id) => self.register_layer(graph, graph.node(*id)),
+            Segment::Stack(st) => {
+                self.stacks
+                    .entry(stack_exec_name(st))
+                    .or_insert_with(|| stack_json(st));
+            }
+            Segment::Branch { arms, join } => {
+                for arm in arms {
+                    for seg in arm {
+                        self.register_segment(graph, seg);
+                    }
+                }
+                self.register_layer(graph, graph.node(*join));
             }
         }
     }
 
-    /// Register the executables a BrainSlug plan needs: fused stacks plus
-    /// the single layers it leaves untouched.
+    /// Register every executable a breadth-first (baseline) run of
+    /// `graph` needs: one per distinct layer signature.
+    pub fn add_baseline(&mut self, graph: &Graph) {
+        for node in graph.nodes.iter().skip(1) {
+            self.register_layer(graph, node);
+        }
+    }
+
+    /// Register the executables a BrainSlug plan needs: fused stacks
+    /// (chain-level and inside branch arms) plus the single layers it
+    /// leaves untouched.
     pub fn add_plan(&mut self, graph: &Graph, plan: &Plan) {
         for seg in &plan.segments {
-            match seg {
-                Segment::Single(id) => {
-                    let node = graph.node(*id);
-                    if let Some(name) = layer_exec_name(graph, node) {
-                        self.layers.entry(name.clone()).or_insert_with(|| {
-                            let mut o = Json::object();
-                            o.set("name", Json::Str(name));
-                            let in_shapes: Vec<Json> = node
-                                .inputs
-                                .iter()
-                                .map(|&i| shape_json(&graph.node(i).shape))
-                                .collect();
-                            o.set("in_shapes", Json::Arr(in_shapes));
-                            o.set("out_shape", shape_json(&node.shape));
-                            crate::graph::json::layer_fields_into(&mut o, &node.layer);
-                            o
-                        });
-                    }
-                }
-                Segment::Stack(st) => {
-                    self.stacks
-                        .entry(stack_exec_name(st))
-                        .or_insert_with(|| stack_json(st));
-                }
-            }
+            self.register_segment(graph, seg);
         }
     }
 
@@ -249,6 +255,19 @@ mod tests {
         let s0 = &stacks[0];
         assert!(s0.str_field("name").unwrap().starts_with("stack_"));
         assert!(!s0.arr_field("sequences").unwrap().is_empty());
+    }
+
+    #[test]
+    fn branchy_plan_registers_arm_stacks_and_join() {
+        let mut rs = RequestSet::new();
+        let g = zoo::build("resnet18", zoo::small_config("resnet18", 1));
+        let plan = optimize(&g, &DeviceSpec::tpu_core(), &CollapseOptions::default());
+        assert!(plan.num_branches() > 0);
+        rs.add_plan(&g, &plan);
+        assert!(rs.num_stacks() >= 1);
+        // The residual joins register as plain add executables so the
+        // PJRT scheduler can dispatch them.
+        assert!(rs.layers.keys().any(|k| k.starts_with("add_in")));
     }
 
     #[test]

@@ -28,7 +28,8 @@ pub struct Executor {
 
 impl Executor {
     pub fn new(runtime: Rc<Runtime>, graph: Arc<Graph>, seed: u64) -> Self {
-        let consumers = graph.consumers().iter().map(|c| c.len()).collect();
+        let cons = graph.consumer_map();
+        let consumers = (0..graph.nodes.len()).map(|i| cons.count(i)).collect();
         let params = ParamStore::new(graph.clone(), seed);
         Executor {
             runtime,
@@ -190,7 +191,34 @@ impl Executor {
         Ok((out, stats))
     }
 
-    /// Run a BrainSlug plan: stacks fused, the rest as in the baseline.
+    /// Execute one plan segment. Branch segments run depth-first
+    /// arm-by-arm: every arm consumes the (already materialized) entry
+    /// value, then the join reduces the arm outputs. The
+    /// remaining-consumer bookkeeping is execution-order independent, so
+    /// the single/stack machinery applies inside arms unchanged.
+    fn run_segment(
+        &mut self,
+        values: &mut HashMap<NodeId, HostTensor>,
+        remaining: &mut [usize],
+        seg: &Segment,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        match seg {
+            Segment::Single(id) => self.run_single(values, remaining, *id, stats),
+            Segment::Stack(st) => self.run_stack(values, remaining, st, stats),
+            Segment::Branch { arms, join } => {
+                for arm in arms {
+                    for seg in arm {
+                        self.run_segment(values, remaining, seg, stats)?;
+                    }
+                }
+                self.run_single(values, remaining, *join, stats)
+            }
+        }
+    }
+
+    /// Run a BrainSlug plan: stacks fused, branch regions depth-first
+    /// arm-by-arm, the rest as in the baseline.
     pub fn run_plan(&mut self, plan: &Plan, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
         self.check_input(&input)?;
         let mut stats = ExecStats::default();
@@ -198,12 +226,7 @@ impl Executor {
         let mut remaining = self.consumers.clone();
         values.insert(0usize, input);
         for seg in &plan.segments {
-            match seg {
-                Segment::Single(id) => {
-                    self.run_single(&mut values, &mut remaining, *id, &mut stats)?
-                }
-                Segment::Stack(st) => self.run_stack(&mut values, &mut remaining, st, &mut stats)?,
-            }
+            self.run_segment(&mut values, &mut remaining, seg, &mut stats)?;
         }
         let out = values
             .remove(&self.graph.output)

@@ -6,6 +6,7 @@
 //! (failures reproduce by seed, printed on panic).
 
 use brainslug::device::DeviceSpec;
+use brainslug::engine::Engine;
 use brainslug::graph::{Graph, Layer, PoolKind, Shape, Window2d};
 use brainslug::memsim::{graph_cost_bf, sequence_cost_df, simulate_baseline, simulate_plan};
 use brainslug::optimizer::{optimize, CollapseOptions, Segment};
@@ -69,6 +70,63 @@ fn random_chain(seed: u64) -> Graph {
         }
     }
     g
+}
+
+/// Generate a random *branchy* DAG: optimizable runs interleaved with
+/// fan-out/join regions (`Add` with 2 arms or `Concat` with 2-3 arms;
+/// arm bodies hold 0-3 shape-preserving layers, 0 = identity skip).
+/// Returns the graph and the number of join regions built — every
+/// generated join is a well-formed single-entry/single-exit region, so
+/// the branch-aware planner must emit exactly that many branch segments.
+fn random_branchy(seed: u64) -> (Graph, usize) {
+    let mut st = seed ^ 0xB17A9C;
+    let c = rand_in(&mut st, 2, 10);
+    let h = rand_in(&mut st, 6, 24);
+    let batch = rand_in(&mut st, 1, 2);
+    let mut g = Graph::new(format!("branchy{seed}"), Shape::nchw(batch, c, h, h));
+    let blocks = rand_in(&mut st, 1, 5);
+    for b in 0..blocks {
+        for i in 0..rand_in(&mut st, 0, 2) {
+            match rand_in(&mut st, 0, 1) {
+                0 => g.push(format!("b{b}.pre{i}"), Layer::BatchNorm2d { eps: 1e-5 }),
+                _ => g.push(format!("b{b}.pre{i}"), Layer::Relu),
+            };
+        }
+        let entry = g.output;
+        let channels = g.output_shape().channels();
+        let concat = rand_in(&mut st, 0, 1) == 1;
+        let n_arms = if concat { rand_in(&mut st, 2, 3) } else { 2 };
+        let mut outs = Vec::new();
+        for a in 0..n_arms {
+            let mut cur = entry;
+            for l in 0..rand_in(&mut st, 0, 3) {
+                let name = format!("b{b}.a{a}.l{l}");
+                cur = match rand_in(&mut st, 0, 2) {
+                    0 => g.add(name, Layer::BatchNorm2d { eps: 1e-5 }, &[cur]),
+                    1 => g.add(name, Layer::Relu, &[cur]),
+                    _ => g.add(
+                        name,
+                        Layer::Conv2d {
+                            out_channels: channels,
+                            window: Window2d::square(3, 1, 1),
+                            bias: false,
+                        },
+                        &[cur],
+                    ),
+                };
+            }
+            outs.push(cur);
+        }
+        if concat {
+            g.add(format!("b{b}.cat"), Layer::Concat, &outs);
+        } else {
+            g.add(format!("b{b}.add"), Layer::Add, &outs);
+        }
+        if rand_in(&mut st, 0, 1) == 1 {
+            g.push(format!("b{b}.post"), Layer::Relu);
+        }
+    }
+    (g, blocks)
 }
 
 fn random_device(seed: u64) -> DeviceSpec {
@@ -160,6 +218,7 @@ fn depth_first_never_moves_more_main_bytes() {
                 Segment::Single(id) => {
                     df_main += brainslug::memsim::layer_cost_bf(&g, g.node(*id)).main_bytes;
                 }
+                Segment::Branch { .. } => unreachable!("random chains have no branches"),
             }
         }
         // Halo redundancy can add bytes, but removing intermediates must
@@ -245,6 +304,74 @@ fn batch_rebuild_preserves_plan_structure() {
             p2.num_optimized_layers(),
             "seed {seed}"
         );
+    }
+}
+
+#[test]
+fn branchy_plans_partition_and_count_regions() {
+    for seed in 0..200 {
+        let (g, blocks) = random_branchy(seed);
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let device = random_device(seed);
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        plan.validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(plan.num_branches(), blocks, "seed {seed}");
+        // Every optimizable layer stacks (inside or outside an arm), and
+        // every join is fused: the optimized-layer count is exact.
+        let n_opt = g
+            .nodes
+            .iter()
+            .skip(1)
+            .filter(|n| n.layer.is_optimizable())
+            .count();
+        assert_eq!(plan.num_optimized_layers(), n_opt + blocks, "seed {seed}");
+    }
+}
+
+#[test]
+fn branchy_plan_structure_is_batch_invariant() {
+    for seed in 0..60 {
+        let (g, _) = random_branchy(seed);
+        let device = random_device(seed);
+        let p1 = optimize(&g, &device, &CollapseOptions::default());
+        let p7 = optimize(&g.with_batch(7), &device, &CollapseOptions::default());
+        assert_eq!(p1.num_branches(), p7.num_branches(), "seed {seed}");
+        assert_eq!(p1.num_stacks(), p7.num_stacks(), "seed {seed}");
+        assert_eq!(
+            p1.num_optimized_layers(),
+            p7.num_optimized_layers(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn branchy_plans_execute_on_sim_with_oracle_parity() {
+    // Oracle parity for Segment::Branch on the artifact-free backend:
+    // baseline and plan runs must complete and produce identical
+    // outputs, and the plan stats must show one fused join per region.
+    for seed in 0..40 {
+        let (g, blocks) = random_branchy(seed);
+        let mut eng = Engine::builder()
+            .graph_owned(g)
+            .device(random_device(seed))
+            .sim()
+            .seed(seed)
+            .build()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(eng.plan().unwrap().num_branches(), blocks, "seed {seed}");
+        let input = eng.synthetic_input();
+        let (out_base, stats_base) = eng.run_baseline(input.clone()).unwrap();
+        let (out_plan, stats_plan) = eng.run(input).unwrap();
+        assert_eq!(out_base, out_plan, "seed {seed}: modes diverge");
+        assert!(stats_base.total_s > 0.0 && stats_base.total_s.is_finite());
+        assert!(stats_plan.total_s > 0.0 && stats_plan.total_s.is_finite());
+        let joins = stats_plan
+            .segments
+            .iter()
+            .filter(|s| s.kind == "join")
+            .count();
+        assert_eq!(joins, blocks, "seed {seed}");
     }
 }
 

@@ -8,13 +8,15 @@ use brainslug::optimizer::{optimize, CollapseOptions};
 use brainslug::zoo;
 
 /// (name, layers, optimizable, stacks, unique_stacks) at batch 1,
-/// paper-scale inputs, GPU device budget.
+/// paper-scale inputs, GPU device budget, branch-aware planning.
 /// For comparison, the paper's Table 2 reports (layers, opt, stacks):
 /// AlexNet 27/12/8, ResNet-18 71/39/21, DenseNet-121 429/247/124,
 /// Inception-V3 316/203/103 — our module accounting lands within a few
-/// counts of each (differences: the paper counts some composite modules
-/// separately; our stacks split at residual fan-outs slightly
-/// differently).
+/// counts of each. "Opt." additionally counts each fused branch join
+/// (one per detected region), and the unique-stack counts on ResNets
+/// are slightly higher than chain-only planning because branch-arm
+/// stacks pack against a skip-reserved budget (different band height →
+/// different signature than their outside-arm twins).
 const GOLDEN: &[(&str, usize, usize, usize, usize)] = &[
     ("alexnet", 21, 12, 8, 8),
     ("vgg11", 29, 17, 10, 9),
@@ -23,18 +25,29 @@ const GOLDEN: &[(&str, usize, usize, usize, usize)] = &[
     ("vgg16_bn", 52, 35, 15, 11),
     ("vgg19", 45, 25, 18, 11),
     ("vgg19_bn", 61, 41, 18, 11),
-    ("resnet18", 69, 38, 28, 13),
-    ("resnet34", 125, 70, 52, 13),
-    ("resnet50", 175, 103, 69, 16),
-    ("resnet101", 345, 205, 137, 16),
-    ("resnet152", 515, 307, 205, 16),
-    ("squeezenet1_0", 66, 30, 29, 17),
-    ("squeezenet1_1", 66, 30, 29, 13),
-    ("densenet121", 427, 246, 124, 68),
-    ("densenet161", 567, 326, 164, 88),
-    ("densenet169", 595, 342, 172, 92),
-    ("densenet201", 707, 406, 204, 108),
-    ("inception_v3", 314, 202, 106, 27),
+    ("resnet18", 69, 46, 28, 15),
+    ("resnet34", 125, 86, 52, 15),
+    ("resnet50", 175, 119, 69, 18),
+    ("resnet101", 345, 238, 137, 18),
+    ("resnet152", 515, 357, 205, 18),
+    ("squeezenet1_0", 66, 38, 29, 17),
+    ("squeezenet1_1", 66, 38, 29, 13),
+    ("densenet121", 427, 304, 124, 68),
+    ("densenet161", 567, 404, 164, 88),
+    ("densenet169", 595, 424, 172, 92),
+    ("densenet201", 707, 504, 204, 108),
+    ("inception_v3", 314, 215, 106, 27),
+];
+
+/// (name, branch regions, optimized layers, chain-only optimized
+/// layers) for the branchy families the branch-aware planner targets.
+/// The last column pins the pre-branch-awareness coverage so the
+/// "strictly more optimized layers than chain-only planning" guarantee
+/// is loud if planning regresses.
+const BRANCH_GOLDEN: &[(&str, usize, usize, usize)] = &[
+    ("resnet18", 8, 46, 38),
+    ("densenet121", 58, 304, 246),
+    ("inception_v3", 13, 215, 202),
 ];
 
 #[test]
@@ -66,18 +79,37 @@ fn zoo_structure_matches_golden() {
 }
 
 #[test]
+fn branchy_networks_match_branch_golden() {
+    let device = DeviceSpec::paper_gpu();
+    for &(name, branches, opt, chain_only_opt) in BRANCH_GOLDEN {
+        let g = zoo::build(name, zoo::paper_config(name, 1));
+        let plan = optimize(&g, &device, &CollapseOptions::default());
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.num_branches(), branches, "{name}: branch regions");
+        assert_eq!(plan.num_optimized_layers(), opt, "{name}: optimized layers");
+        assert!(
+            plan.num_optimized_layers() > chain_only_opt,
+            "{name}: branch-aware coverage {} regressed to <= chain-only {}",
+            plan.num_optimized_layers(),
+            chain_only_opt
+        );
+    }
+}
+
+#[test]
 fn optimizable_fraction_in_paper_regime() {
     // Table 2: 44-64% of layers optimizable. Our module accounting
-    // differs slightly from the paper's tally, so accept a wider band
-    // but require every network to be substantially optimizable.
+    // differs slightly from the paper's tally and branch-aware planning
+    // adds the fused joins on top, so accept a wider band but require
+    // every network to be substantially optimizable.
     let device = DeviceSpec::paper_gpu();
     for name in zoo::ALL_NETWORKS {
         let g = zoo::build(name, zoo::paper_config(name, 1));
         let plan = optimize(&g, &device, &CollapseOptions::default());
         let frac = plan.num_optimized_layers() as f64 / g.num_layers() as f64;
         assert!(
-            (0.35..0.70).contains(&frac),
-            "{name}: optimizable fraction {frac:.2} out of [0.35, 0.70)"
+            (0.35..0.75).contains(&frac),
+            "{name}: optimizable fraction {frac:.2} out of [0.35, 0.75)"
         );
     }
 }
@@ -85,7 +117,8 @@ fn optimizable_fraction_in_paper_regime() {
 #[test]
 fn stack_dedup_factor_significant_for_repetitive_nets() {
     // The paper reuses code across identical stacks (§4.3); deep
-    // repetitive nets must show strong dedup.
+    // repetitive nets must show strong dedup — including across branch
+    // arms, where identical residual blocks share arm-stack signatures.
     let device = DeviceSpec::paper_gpu();
     // ResNets repeat identically-shaped blocks: dedup is strong.
     // DenseNets grow the channel count every layer, so their BN+ReLU
