@@ -13,9 +13,10 @@
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::device::DeviceSpec;
 use brainslug::engine::Engine;
+use brainslug::json::Json;
 use brainslug::memsim::speedup_pct;
 
-fn simulated(device: &DeviceSpec) {
+fn simulated(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!("\n## Figure 10 (simulated) — device={}, batch=32, 32ch 112x112", device.name);
     let mut table = Table::new(&[
         "blocks", "baseline", "1step", "5step", "unrestr", "seqs-unr", "speedup-5step",
@@ -26,6 +27,10 @@ fn simulated(device: &DeviceSpec) {
         let mut t5 = f64::NAN;
         let mut seqs_unr = 0;
         let mut base_s = f64::NAN;
+        let mut row = Json::object();
+        row.set("bench", Json::Str("fig10_stacked_layers".into()));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("blocks", Json::from_usize(blocks));
         for (name, opts) in bench::fig10_strategies() {
             let engine = Engine::builder()
                 .graph_owned(bench::block_net(blocks, 32, 32, 112))
@@ -37,9 +42,11 @@ fn simulated(device: &DeviceSpec) {
             if cells.len() == 1 {
                 base_s = engine.simulate_baseline().total_s;
                 cells.push(fmt_time(base_s));
+                row.set("baseline_s", Json::Num(base_s));
             }
             let sim = engine.simulate_plan().unwrap();
             cells.push(fmt_time(sim.total_s));
+            row.set(&format!("{name}_s"), Json::Num(sim.total_s));
             if name == "5step" {
                 t5 = sim.total_s;
             }
@@ -55,6 +62,9 @@ fn simulated(device: &DeviceSpec) {
         prev_seqs = seqs_unr;
         cells.push(artifact);
         cells.push(fmt_pct(speedup_pct(base_s, t5)));
+        row.set("unrestricted_sequences", Json::from_usize(seqs_unr));
+        row.set("speedup_5step_pct", Json::Num(speedup_pct(base_s, t5)));
+        rows.push(row);
         table.row(cells);
     }
     table.print();
@@ -96,7 +106,9 @@ fn measured() {
 
 fn main() {
     println!("# Figure 10 — Stacked Layers Acceleration");
-    simulated(&DeviceSpec::paper_gpu());
-    simulated(&DeviceSpec::paper_cpu());
+    let mut rows = Vec::new();
+    simulated(&DeviceSpec::paper_gpu(), &mut rows);
+    simulated(&DeviceSpec::paper_cpu(), &mut rows);
     measured();
+    bench::emit_bench_json("fig10_stacked_layers", rows);
 }

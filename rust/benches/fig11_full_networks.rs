@@ -9,10 +9,11 @@
 
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
 use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
-fn simulated(device: &DeviceSpec) {
+fn simulated(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!(
         "\n## Fig {} (times) + Fig {} (speedups) — device={}, batch=128 (simulated)",
         if device.name.contains("xeon") { 11 } else { 12 },
@@ -30,6 +31,18 @@ fn simulated(device: &DeviceSpec) {
             fmt_time(bs.total_s),
             fmt_pct(speedup_pct(base.total_s, bs.total_s)),
         ]);
+        let mut row = Json::object();
+        row.set("bench", Json::Str("fig11_full_networks".into()));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("net", Json::Str((*name).into()));
+        row.set("batch", Json::from_usize(128));
+        row.set("baseline_s", Json::Num(base.total_s));
+        row.set("brainslug_s", Json::Num(bs.total_s));
+        row.set(
+            "speedup_pct",
+            Json::Num(speedup_pct(base.total_s, bs.total_s)),
+        );
+        rows.push(row);
     }
     table.print();
 }
@@ -64,7 +77,9 @@ fn measured() {
 
 fn main() {
     println!("# Figures 11-14 — Full Network Acceleration");
-    simulated(&DeviceSpec::paper_cpu());
-    simulated(&DeviceSpec::paper_gpu());
+    let mut rows = Vec::new();
+    simulated(&DeviceSpec::paper_cpu(), &mut rows);
+    simulated(&DeviceSpec::paper_gpu(), &mut rows);
     measured();
+    bench::emit_bench_json("fig11_full_networks", rows);
 }

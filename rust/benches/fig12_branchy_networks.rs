@@ -41,7 +41,7 @@ const FAMILIES: &[&str] = &[
     "squeezenet1_1",
 ];
 
-fn simulated(device: &DeviceSpec) {
+fn simulated(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!(
         "\n## Branchy networks — device={}, batch=128 (simulated)",
         device.name
@@ -76,7 +76,7 @@ fn simulated(device: &DeviceSpec) {
         row.set("baseline_s", Json::Num(base.total_s));
         row.set("brainslug_s", Json::Num(bs.total_s));
         row.set("speedup_pct", Json::Num(speedup));
-        println!("BENCH {}", row.to_string_compact());
+        rows.push(row);
     }
     table.print();
 }
@@ -105,7 +105,9 @@ fn oracle_parity() {
 
 fn main() {
     println!("# Figure 12 (extension) — Branch-Aware Depth-First Planning");
-    simulated(&DeviceSpec::paper_cpu());
-    simulated(&DeviceSpec::paper_gpu());
+    let mut rows = Vec::new();
+    simulated(&DeviceSpec::paper_cpu(), &mut rows);
+    simulated(&DeviceSpec::paper_gpu(), &mut rows);
     oracle_parity();
+    bench::emit_bench_json("fig12_branchy_networks", rows);
 }

@@ -6,11 +6,12 @@
 
 use brainslug::bench::{self, fmt_time, Table};
 use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
 
 const NETS: [&str; 3] = ["resnet18", "densenet121", "vgg16_bn"];
 const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
 
-fn simulated(device: &DeviceSpec) {
+fn simulated(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!("\n## Figure 15 — device={} (simulated)", device.name);
     let mut table = Table::new(&[
         "batch",
@@ -29,6 +30,14 @@ fn simulated(device: &DeviceSpec) {
             let bs = engine.simulate_plan().unwrap();
             cells.push(fmt_time(base.total_s));
             cells.push(fmt_time(bs.total_s));
+            let mut row = Json::object();
+            row.set("bench", Json::Str("fig15_batch_scaling".into()));
+            row.set("device", Json::Str(device.name.clone()));
+            row.set("net", Json::Str(name.into()));
+            row.set("batch", Json::from_usize(b));
+            row.set("baseline_s", Json::Num(base.total_s));
+            row.set("brainslug_s", Json::Num(bs.total_s));
+            rows.push(row);
         }
         table.row(cells);
     }
@@ -59,7 +68,9 @@ fn measured() {
 
 fn main() {
     println!("# Figure 15 — Batch Size Scaling Behavior");
-    simulated(&DeviceSpec::paper_gpu());
-    simulated(&DeviceSpec::paper_cpu());
+    let mut rows = Vec::new();
+    simulated(&DeviceSpec::paper_gpu(), &mut rows);
+    simulated(&DeviceSpec::paper_cpu(), &mut rows);
     measured();
+    bench::emit_bench_json("fig15_batch_scaling", rows);
 }

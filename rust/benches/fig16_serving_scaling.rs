@@ -17,6 +17,7 @@ use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use brainslug::bench::{self, Table};
+use brainslug::json::Json;
 use brainslug::rng::fill_f32;
 use brainslug::server::{QueuePolicy, ServerConfig};
 
@@ -51,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         "peak-queue",
     ]);
     let mut base_throughput = None;
+    let mut rows = Vec::new();
     for &workers in bench::fig16_worker_counts() {
         let server = ServerConfig::new(bench::serving_engine(BATCH, scale))
             .workers(workers)
@@ -90,8 +92,22 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", server.occupancy()),
             server.stats.queue_peak.load(Ordering::Relaxed).to_string(),
         ]);
+        let mut row = Json::object();
+        row.set("bench", Json::Str("fig16_serving_scaling".into()));
+        row.set("workers", Json::from_usize(workers));
+        row.set("batch", Json::from_usize(BATCH));
+        row.set("req_per_s", Json::Num(throughput));
+        row.set("scaling_vs_one", Json::Num(vs_one));
+        row.set("mean_latency_ms", Json::Num(server.stats.mean_latency_ms()));
+        row.set("occupancy", Json::Num(server.occupancy()));
+        row.set(
+            "queue_peak",
+            Json::Num(server.stats.queue_peak.load(Ordering::Relaxed) as f64),
+        );
+        rows.push(row);
         server.stop();
     }
     table.print();
+    bench::emit_bench_json("fig16_serving_scaling", rows);
     Ok(())
 }

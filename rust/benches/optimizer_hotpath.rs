@@ -6,13 +6,19 @@
 //! `optimize` latency and end-to-end `EngineBuilder::build` latency
 //! matter.
 
+use std::sync::Arc;
+
 use brainslug::bench::{self, fmt_time, Table};
 use brainslug::device::DeviceSpec;
+use brainslug::graph::Layer;
+use brainslug::json::Json;
 use brainslug::optimizer::{optimize, CollapseOptions};
+use brainslug::runtime::ParamStore;
 use brainslug::zoo;
 
 fn main() {
     println!("# Optimizer hot path");
+    let mut rows = Vec::new();
     let device = DeviceSpec::paper_gpu();
     let mut table = Table::new(&["network", "build-graph", "optimize", "engine-build", "stacks"]);
     for name in ["alexnet", "resnet152", "densenet201", "inception_v3"] {
@@ -39,6 +45,13 @@ fn main() {
             fmt_time(t_engine),
             engine.plan().unwrap().num_stacks().to_string(),
         ]);
+        let mut row = Json::object();
+        row.set("bench", Json::Str("optimizer_hotpath".into()));
+        row.set("net", Json::Str(name.into()));
+        row.set("build_graph_s", Json::Num(t_build));
+        row.set("optimize_s", Json::Num(t_opt));
+        row.set("engine_build_s", Json::Num(t_engine));
+        rows.push(row);
     }
     table.print();
 
@@ -66,4 +79,46 @@ fn main() {
          planning pass and threaded through chain walk + region detection)",
         fmt_time(t_map)
     );
+
+    // Folded-BN gather microbench: every `run_stack` invocation gathers
+    // the folded (scale, shift) pair of every bn op in the stack. The
+    // ParamStore caches the fold per node, so only the first gather pays
+    // for generation + folding; steady-state gathers are map lookups.
+    // densenet201 is the bn-heaviest zoo graph.
+    let g = Arc::new(zoo::build("densenet201", zoo::paper_config("densenet201", 1)));
+    let bn_nodes: Vec<usize> = g
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.layer, Layer::BatchNorm2d { .. }))
+        .map(|n| n.id)
+        .collect();
+    let t_cold = bench::measure(1, 5, || {
+        let mut store = ParamStore::new(g.clone(), 7);
+        for &id in &bn_nodes {
+            std::hint::black_box(store.bn_folded(id));
+        }
+    });
+    let mut store = ParamStore::new(g.clone(), 7);
+    for &id in &bn_nodes {
+        store.bn_folded(id); // warm the fold cache
+    }
+    let t_hot = bench::measure(1, 5, || {
+        for &id in &bn_nodes {
+            std::hint::black_box(store.bn_folded(id));
+        }
+    });
+    println!(
+        "densenet201 bn_folded gather x{}: cold {} -> cached {} per pass",
+        bn_nodes.len(),
+        fmt_time(t_cold),
+        fmt_time(t_hot)
+    );
+    let mut row = Json::object();
+    row.set("bench", Json::Str("optimizer_hotpath".into()));
+    row.set("net", Json::Str("densenet201".into()));
+    row.set("bn_nodes", Json::from_usize(bn_nodes.len()));
+    row.set("bn_gather_cold_s", Json::Num(t_cold));
+    row.set("bn_gather_cached_s", Json::Num(t_hot));
+    rows.push(row);
+    bench::emit_bench_json("optimizer_hotpath", rows);
 }

@@ -9,24 +9,32 @@
 
 use brainslug::bench::{self, fmt_pct, Table};
 use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
 use brainslug::memsim::speedup_pct;
 use brainslug::zoo;
 
 const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
 
-fn sweep(device: &DeviceSpec) {
+fn sweep(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!("\n## Table 1 — device={} (simulated)", device.name);
     let mut table = Table::new(&[
         "network", "1", "2", "4", "8", "16", "32", "64", "128", "256",
     ]);
     for name in zoo::ALL_NETWORKS {
         let mut cells = vec![name.to_string()];
+        let mut row = Json::object();
+        row.set("bench", Json::Str("table1_batch_sweep".into()));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("net", Json::Str((*name).into()));
         for &b in &BATCHES {
             let engine = bench::paper_engine(name, b, device).build().unwrap();
             let base = engine.simulate_baseline();
             let bs = engine.simulate_plan().unwrap();
-            cells.push(fmt_pct(speedup_pct(base.total_s, bs.total_s)));
+            let speedup = speedup_pct(base.total_s, bs.total_s);
+            cells.push(fmt_pct(speedup));
+            row.set(&format!("speedup_pct_b{b}"), Json::Num(speedup));
         }
+        rows.push(row);
         table.row(cells);
     }
     table.print();
@@ -34,6 +42,8 @@ fn sweep(device: &DeviceSpec) {
 
 fn main() {
     println!("# Table 1 — Full speed-up grid");
-    sweep(&DeviceSpec::paper_gpu());
-    sweep(&DeviceSpec::paper_cpu());
+    let mut rows = Vec::new();
+    sweep(&DeviceSpec::paper_gpu(), &mut rows);
+    sweep(&DeviceSpec::paper_cpu(), &mut rows);
+    bench::emit_bench_json("table1_batch_sweep", rows);
 }

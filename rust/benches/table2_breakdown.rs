@@ -9,10 +9,11 @@
 
 use brainslug::bench::{self, fmt_pct, Table};
 use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
 use brainslug::memsim::{baseline_optimized_time, speedup_pct};
 use brainslug::zoo;
 
-fn simulated(device: &DeviceSpec) {
+fn simulated(device: &DeviceSpec, rows: &mut Vec<Json>) {
     println!("\n## Table 2 — device={}, batch=128 (simulated)", device.name);
     let mut table = Table::new(&[
         "network",
@@ -42,6 +43,24 @@ fn simulated(device: &DeviceSpec) {
             format!("{:.1}", opt_base_s / base.total_s * 100.0),
             fmt_pct(speedup_pct(base.total_s, bs.total_s)),
         ]);
+        let mut row = Json::object();
+        row.set("bench", Json::Str("table2_breakdown".into()));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("net", Json::Str((*name).into()));
+        row.set("layers", Json::from_usize(engine.graph().num_layers()));
+        row.set("opt_layers", Json::from_usize(plan.num_optimized_layers()));
+        row.set("stacks", Json::from_usize(plan.num_stacks()));
+        row.set("unique_stacks", Json::from_usize(plan.num_unique_stacks()));
+        row.set(
+            "opt_speedup_pct",
+            Json::Num(speedup_pct(opt_base_s, bs.stack_s)),
+        );
+        row.set("opt_time_pct", Json::Num(opt_base_s / base.total_s * 100.0));
+        row.set(
+            "total_speedup_pct",
+            Json::Num(speedup_pct(base.total_s, bs.total_s)),
+        );
+        rows.push(row);
     }
     table.print();
 }
@@ -81,7 +100,9 @@ fn measured() {
 
 fn main() {
     println!("# Table 2 — Detailed Performance Analysis");
-    simulated(&DeviceSpec::paper_cpu());
-    simulated(&DeviceSpec::paper_gpu());
+    let mut rows = Vec::new();
+    simulated(&DeviceSpec::paper_cpu(), &mut rows);
+    simulated(&DeviceSpec::paper_gpu(), &mut rows);
     measured();
+    bench::emit_bench_json("table2_breakdown", rows);
 }

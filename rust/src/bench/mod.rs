@@ -16,7 +16,35 @@ pub use experiments::{
     ARTIFACT_DIR,
 };
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::json::Json;
+
+/// Emit one bench's machine-readable result rows: print each as a
+/// `BENCH {json}` line (the format trend-tracking tools grep for) and
+/// write the whole array to `BENCH_<name>.json` at the repo root, so
+/// every bench run leaves its rows on disk instead of only on stdout.
+///
+/// The repo root is resolved from the crate manifest directory
+/// (`rust/`'s parent), independent of the invocation cwd. Returns the
+/// path written (best-effort: an unwritable disk degrades to
+/// stdout-only with a warning, never a panic mid-bench).
+pub fn emit_bench_json(name: &str, rows: Vec<Json>) -> PathBuf {
+    for row in &rows {
+        println!("BENCH {}", row.to_string_compact());
+    }
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(PathBuf::from)
+        .unwrap_or_default();
+    let path = root.join(format!("BENCH_{name}.json"));
+    let doc = Json::Arr(rows);
+    if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+    path
+}
 
 /// Run `f` `warmup + iters` times; return the minimum of the timed iters
 /// in seconds.
@@ -135,6 +163,18 @@ mod tests {
         let lines: Vec<&str> = r.lines().collect();
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+    }
+
+    #[test]
+    fn emit_bench_json_writes_rows_to_disk() {
+        let mut row = Json::object();
+        row.set("bench", Json::Str("selftest".into()));
+        row.set("value", Json::Num(1.5));
+        let path = emit_bench_json("selftest_tmp", vec![row]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("selftest"));
+        assert!(text.trim_start().starts_with('['));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

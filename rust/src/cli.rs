@@ -71,6 +71,17 @@ impl Args {
         }
     }
 
+    /// Optional float flag (`None` when absent, error on a bad number).
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}: bad number '{v}': {e}")),
+        }
+    }
+
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -119,6 +130,10 @@ mod tests {
         let a = parse(&["x", "--n", "abc"]);
         assert_eq!(a.get_or("missing", "d"), "d");
         assert!(a.get_usize("n", 0).is_err());
+        assert!(a.get_f64("n").is_err());
+        assert_eq!(a.get_f64("missing").unwrap(), None);
+        let b = parse(&["x", "--pace", "0.5"]);
+        assert_eq!(b.get_f64("pace").unwrap(), Some(0.5));
     }
 
     #[test]

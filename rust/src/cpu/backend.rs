@@ -1,0 +1,375 @@
+//! [`CpuBackend`] — real, artifact-free execution on the host CPU.
+//!
+//! The third [`Backend`](crate::engine::Backend) implementation: where
+//! `PjrtBackend` needs AOT-compiled artifacts and `SimBackend` only
+//! *models* time, this backend actually computes every tensor with the
+//! native f32 kernels in [`super::kernels`]:
+//!
+//! * **Baseline path** (`plan: None`) — breadth-first, one whole-tensor
+//!   kernel per layer, every intermediate allocated and round-tripped
+//!   through main memory: the eager execution model of PyTorch the
+//!   paper benchmarks against.
+//! * **Optimized path** — plan segments: collapsed stacks run through
+//!   the depth-first band walker ([`super::walker`], two ping-pong band
+//!   buffers, `std::thread::scope` band parallelism), branch regions
+//!   execute depth-first arm-by-arm exactly like the PJRT executor, and
+//!   everything else falls back to the per-layer kernels.
+//!
+//! Both paths share the remaining-consumer bookkeeping scheme of
+//! [`crate::scheduler::Executor`]: activations live in the value map as
+//! `Arc<HostTensor>`, so fan-out nodes (residual/concat skip planes)
+//! are reference-shared, never deep-copied.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{Backend, Workload};
+use crate::graph::{Graph, Layer, NodeId};
+use crate::optimizer::{OpKind, Plan, Segment, Stack};
+use crate::runtime::{stack_exec_name, HostTensor, ParamStore};
+use crate::scheduler::executor::take_value;
+use crate::scheduler::ExecStats;
+
+use super::{kernels, walker};
+
+/// Native CPU execution of one graph + seed, with `threads` scoped
+/// workers per kernel / band grid.
+pub struct CpuBackend {
+    graph: Arc<Graph>,
+    seed: u64,
+    threads: usize,
+    params: ParamStore,
+    /// Arc-wrapped raw parameters (weights / biases) by node and kind:
+    /// the `ParamStore` hands out owned tensors, so without this layer
+    /// every `run` would memcpy the network's whole parameter set.
+    param_cache: HashMap<(NodeId, &'static str), Arc<HostTensor>>,
+    /// Arc-wrapped folded-BN (scale, shift) pairs by node — repeated
+    /// stack executions share the buffers instead of cloning them.
+    bn_cache: HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+    /// Remaining-consumer counts template (computed once).
+    consumers: Vec<usize>,
+}
+
+/// Arc-cached raw parameter lookup. A free function over the two cache
+/// fields (not a `&mut self` method) so callers can hold a borrow of
+/// the backend's graph at the same time.
+fn cached_param(
+    cache: &mut HashMap<(NodeId, &'static str), Arc<HostTensor>>,
+    params: &mut ParamStore,
+    id: NodeId,
+    want: &'static str,
+) -> Arc<HostTensor> {
+    if let Some(t) = cache.get(&(id, want)) {
+        return t.clone();
+    }
+    let t = Arc::new(params.raw(id, want));
+    cache.insert((id, want), t.clone());
+    t
+}
+
+/// Arc-cached folded-BN (scale, shift) lookup; same shape as
+/// [`cached_param`].
+fn cached_bn(
+    cache: &mut HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+    params: &mut ParamStore,
+    id: NodeId,
+) -> (Arc<HostTensor>, Arc<HostTensor>) {
+    if let Some(pair) = cache.get(&id) {
+        return pair.clone();
+    }
+    let (s, b) = params.bn_folded(id);
+    let pair = (Arc::new(s), Arc::new(b));
+    cache.insert(id, pair.clone());
+    pair
+}
+
+impl CpuBackend {
+    pub fn new(graph: Arc<Graph>, seed: u64, threads: usize) -> Self {
+        let cons = graph.consumer_map();
+        let consumers = (0..graph.nodes.len()).map(|i| cons.count(i)).collect();
+        let params = ParamStore::new(graph.clone(), seed);
+        CpuBackend {
+            graph,
+            seed,
+            threads: threads.max(1),
+            params,
+            param_cache: HashMap::new(),
+            bn_cache: HashMap::new(),
+            consumers,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute one non-stacked layer with the breadth-first kernels.
+    fn run_node(
+        &mut self,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
+        remaining: &mut [usize],
+        id: NodeId,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        let node = self.graph.node(id);
+        let name = format!("cpu:{}", node.name);
+        let kind = node.layer.kind_name();
+        let optimizable = node.layer.is_optimizable();
+        let t0 = Instant::now();
+        let out: HostTensor = match &node.layer {
+            Layer::Input { .. } => unreachable!("input node is pre-seeded"),
+            Layer::Dropout { .. } => {
+                // Identity at inference: share the Arc, no copy.
+                let x = take_value(values, remaining, node.inputs[0])?;
+                stats.push(name, kind.into(), t0.elapsed().as_secs_f64(), optimizable);
+                values.insert(id, x);
+                return Ok(());
+            }
+            Layer::Flatten => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                Arc::unwrap_or_clone(x).reshape(node.shape.clone())
+            }
+            Layer::Conv2d { window, bias, .. } => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                let w = cached_param(&mut self.param_cache, &mut self.params, id, "weight");
+                let b = if *bias {
+                    Some(cached_param(&mut self.param_cache, &mut self.params, id, "bias"))
+                } else {
+                    None
+                };
+                kernels::conv2d(&x, &w, b.as_deref(), window, &node.shape, self.threads)
+            }
+            Layer::Linear { bias, .. } => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                let w = cached_param(&mut self.param_cache, &mut self.params, id, "weight");
+                let b = if *bias {
+                    Some(cached_param(&mut self.param_cache, &mut self.params, id, "bias"))
+                } else {
+                    None
+                };
+                kernels::linear(&x, &w, b.as_deref(), &node.shape, self.threads)
+            }
+            Layer::Pool2d {
+                kind: pk,
+                window,
+                count_include_pad,
+                ..
+            } => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                kernels::pool2d(&x, *pk, window, *count_include_pad, &node.shape, self.threads)
+            }
+            Layer::AdaptiveAvgPool { out_hw } => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                kernels::adaptive_avg_pool(&x, *out_hw, &node.shape, self.threads)
+            }
+            Layer::BatchNorm2d { .. } => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                let (s, b) = cached_bn(&mut self.bn_cache, &mut self.params, id);
+                kernels::bn_affine(&x, &s, &b, self.threads)
+            }
+            Layer::Relu => {
+                let x = take_value(values, remaining, node.inputs[0])?;
+                kernels::relu(&x, self.threads)
+            }
+            Layer::Add => {
+                let a = take_value(values, remaining, node.inputs[0])?;
+                let b = take_value(values, remaining, node.inputs[1])?;
+                kernels::add(&a, &b)
+            }
+            Layer::Concat => {
+                let xs: Vec<Arc<HostTensor>> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| take_value(values, remaining, i))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&HostTensor> = xs.iter().map(|a| a.as_ref()).collect();
+                kernels::concat(&refs, &node.shape)
+            }
+        };
+        stats.push(name, kind.into(), t0.elapsed().as_secs_f64(), optimizable);
+        values.insert(id, Arc::new(out));
+        Ok(())
+    }
+
+    /// Execute a collapsed stack through the depth-first band walker.
+    fn run_stack(
+        &mut self,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
+        remaining: &mut [usize],
+        stack: &Stack,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let entry = self.graph.node(stack.nodes[0]).inputs[0];
+        let x = take_value(values, remaining, entry)?;
+        // Folded-BN (scale, shift) per bn op — Arc handles from the
+        // backend cache, so repeated stack executions share buffers
+        // instead of re-copying them.
+        let mut bn: HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)> = HashMap::new();
+        for seq in &stack.sequences {
+            for step in &seq.steps {
+                for op in &step.ops {
+                    if matches!(op.kind, OpKind::BnAffine { .. }) {
+                        bn.insert(
+                            op.node,
+                            cached_bn(&mut self.bn_cache, &mut self.params, op.node),
+                        );
+                    }
+                }
+            }
+        }
+        let out = walker::run_stack(stack, &x, &bn, self.threads);
+        // Interior nodes were never materialized; their consumers are
+        // all internal to the stack.
+        let last = *stack.nodes.last().unwrap();
+        for &nid in &stack.nodes {
+            if nid != last {
+                remaining[nid] = 0;
+            }
+        }
+        stats.push(
+            stack_exec_name(stack),
+            "stack".into(),
+            t0.elapsed().as_secs_f64(),
+            true,
+        );
+        values.insert(last, Arc::new(out));
+        Ok(())
+    }
+
+    /// Execute one plan segment (branch regions depth-first arm-by-arm,
+    /// mirroring [`crate::scheduler::Executor`]).
+    fn run_segment(
+        &mut self,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
+        remaining: &mut [usize],
+        seg: &Segment,
+        stats: &mut ExecStats,
+    ) -> Result<()> {
+        match seg {
+            Segment::Single(id) => self.run_node(values, remaining, *id, stats),
+            Segment::Stack(st) => self.run_stack(values, remaining, st, stats),
+            Segment::Branch { arms, join } => {
+                for arm in arms {
+                    for seg in arm {
+                        self.run_segment(values, remaining, seg, stats)?;
+                    }
+                }
+                self.run_node(values, remaining, *join, stats)
+            }
+        }
+    }
+
+    fn run_baseline(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        let mut stats = ExecStats::default();
+        let mut values = HashMap::new();
+        let mut remaining = self.consumers.clone();
+        values.insert(0usize, Arc::new(input));
+        for id in 1..self.graph.nodes.len() {
+            self.run_node(&mut values, &mut remaining, id, &mut stats)?;
+        }
+        self.finish(values, stats)
+    }
+
+    fn run_plan(&mut self, plan: &Plan, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        let mut stats = ExecStats::default();
+        let mut values = HashMap::new();
+        let mut remaining = self.consumers.clone();
+        values.insert(0usize, Arc::new(input));
+        for seg in &plan.segments {
+            self.run_segment(&mut values, &mut remaining, seg, &mut stats)?;
+        }
+        self.finish(values, stats)
+    }
+
+    fn finish(
+        &self,
+        mut values: HashMap<NodeId, Arc<HostTensor>>,
+        stats: ExecStats,
+    ) -> Result<(HostTensor, ExecStats)> {
+        let out = values
+            .remove(&self.graph.output)
+            .ok_or_else(|| anyhow!("output not computed"))?;
+        Ok((Arc::unwrap_or_clone(out), stats))
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn run(&mut self, work: &Workload, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        anyhow::ensure!(
+            Arc::ptr_eq(&work.graph, &self.graph),
+            "CpuBackend is bound to graph '{}'; rebuild the backend for a different network",
+            self.graph.name
+        );
+        anyhow::ensure!(
+            work.seed == self.seed,
+            "CpuBackend is bound to seed {}; workload asks for {}",
+            self.seed,
+            work.seed
+        );
+        match &work.plan {
+            Some(p) => self.run_plan(p, input),
+            None => self.run_baseline(input),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+    use crate::device::DeviceSpec;
+    use crate::optimizer::{optimize, CollapseOptions};
+    use crate::rng::ParamKind;
+
+    fn workload(graph: Arc<Graph>, plan: Option<Arc<Plan>>, seed: u64) -> Workload {
+        Workload { graph, plan, seed }
+    }
+
+    #[test]
+    fn depth_first_plan_matches_breadth_first_bitwise() {
+        // A fully-optimizable block net: the whole network collapses
+        // into one stack, so the plan path is 100% walker.
+        let graph = Arc::new(bench::block_net(3, 2, 4, 16));
+        let plan = Arc::new(optimize(
+            &graph,
+            &DeviceSpec::host_cpu(),
+            &CollapseOptions::default(),
+        ));
+        plan.validate(&graph).unwrap();
+        let input = HostTensor::from_seed(
+            graph.input_shape().clone(),
+            42,
+            ParamKind::Activation,
+        );
+        let mut be = CpuBackend::new(graph.clone(), 9, 2);
+        let (base, stats_base) =
+            be.run(&workload(graph.clone(), None, 9), input.clone()).unwrap();
+        let (df, stats_df) = be.run(&workload(graph.clone(), Some(plan), 9), input).unwrap();
+        assert_eq!(base, df, "schedules diverge");
+        assert_eq!(base.shape, *graph.output_shape());
+        assert_eq!(stats_base.segments.len(), graph.num_layers());
+        assert!(stats_df.segments.iter().any(|s| s.kind == "stack"));
+    }
+
+    #[test]
+    fn rejects_foreign_graph_and_seed() {
+        let graph = Arc::new(bench::block_net(1, 1, 2, 8));
+        let other = Arc::new(bench::block_net(1, 1, 2, 8));
+        let input = HostTensor::from_seed(
+            graph.input_shape().clone(),
+            1,
+            ParamKind::Activation,
+        );
+        let mut be = CpuBackend::new(graph.clone(), 5, 1);
+        assert!(be.run(&workload(other, None, 5), input.clone()).is_err());
+        assert!(be.run(&workload(graph, None, 6), input).is_err());
+    }
+}

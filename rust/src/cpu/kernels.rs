@@ -1,0 +1,456 @@
+//! Breadth-first f32 CPU kernels — one function per graph layer.
+//!
+//! These are the native baseline path of [`crate::cpu::CpuBackend`]: the
+//! eager, layer-at-a-time execution model of PyTorch (every layer reads
+//! and writes its full tensor through main memory, every output is a
+//! fresh allocation). Numerics follow `python/compile/layers.py`
+//! (PyTorch semantics): floor/ceil window arithmetic, max-pool padding
+//! with `-inf`, avg-pool `count_include_pad`, folded inference
+//! batch-norm (`y = x * scale[c] + shift[c]`).
+//!
+//! [`pool_window`] is the single source of pooling arithmetic: the
+//! depth-first band walker (`super::walker`) calls the same function per
+//! band, so the two schedules agree *bitwise* on every stacked layer.
+//!
+//! Parallelism mirrors the paper's §5.2 fix of the Listing-4 bug: every
+//! kernel iterates over `batch × channels` planes (not just batch), so
+//! all `--threads` workers stay busy at batch 1.
+
+use crate::graph::{PoolKind, Shape, Window2d};
+use crate::runtime::HostTensor;
+
+use super::par::for_planes;
+
+/// Direct 2-D convolution: NCHW input, OIHW weights, optional bias.
+/// Parallel over (batch, out_channel) output planes.
+pub fn conv2d(
+    x: &HostTensor,
+    weight: &HostTensor,
+    bias: Option<&HostTensor>,
+    window: &Window2d,
+    out_shape: &Shape,
+    threads: usize,
+) -> HostTensor {
+    let (n, ci, in_h, in_w) = (
+        x.shape.batch(),
+        x.shape.channels(),
+        x.shape.height(),
+        x.shape.width(),
+    );
+    let (oc, out_h, out_w) = (out_shape.channels(), out_shape.height(), out_shape.width());
+    debug_assert_eq!(out_shape.batch(), n);
+    debug_assert_eq!(weight.shape.dims, vec![oc, ci, window.kernel.0, window.kernel.1]);
+    let (kh, kw) = window.kernel;
+    let (sh, sw) = window.stride;
+    let (ph, pw) = window.pad;
+    let mut out = HostTensor::zeros(out_shape.clone());
+    let in_plane = in_h * in_w;
+    for_planes(threads, &mut out.data, out_h * out_w, |plane, dst| {
+        let b = plane / oc;
+        let o = plane % oc;
+        let bias_v = bias.map_or(0.0f32, |t| t.data[o]);
+        for (oy, dst_row) in dst.chunks_mut(out_w).enumerate() {
+            let iy0 = (oy * sh) as isize - ph as isize;
+            for (ox, dst_v) in dst_row.iter_mut().enumerate() {
+                let ix0 = (ox * sw) as isize - pw as isize;
+                let mut acc = bias_v;
+                for c in 0..ci {
+                    let src = &x.data[(b * ci + c) * in_plane..][..in_plane];
+                    let wbase = ((o * ci + c) * kh) * kw;
+                    for ky in 0..kh {
+                        let iy = iy0 + ky as isize;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        let src_row = &src[iy as usize * in_w..][..in_w];
+                        let w_row = &weight.data[wbase + ky * kw..][..kw];
+                        for (kx, &wv) in w_row.iter().enumerate() {
+                            let ix = ix0 + kx as isize;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            acc += src_row[ix as usize] * wv;
+                        }
+                    }
+                }
+                *dst_v = acc;
+            }
+        }
+    });
+    out
+}
+
+/// Fully-connected layer: `(N, in) @ (in, out) + bias`, weights stored
+/// `[in, out]` (the `ParamStore` layout). Parallel over batch rows.
+pub fn linear(
+    x: &HostTensor,
+    weight: &HostTensor,
+    bias: Option<&HostTensor>,
+    out_shape: &Shape,
+    threads: usize,
+) -> HostTensor {
+    let in_f = x.shape.channels();
+    let out_f = out_shape.channels();
+    debug_assert_eq!(weight.shape.dims, vec![in_f, out_f]);
+    let mut out = HostTensor::zeros(out_shape.clone());
+    for_planes(threads, &mut out.data, out_f, |row, dst| {
+        match bias {
+            Some(b) => dst.copy_from_slice(&b.data),
+            None => dst.fill(0.0),
+        }
+        let x_row = &x.data[row * in_f..][..in_f];
+        for (i, &xv) in x_row.iter().enumerate() {
+            let w_row = &weight.data[i * out_f..][..out_f];
+            for (d, &wv) in dst.iter_mut().zip(w_row) {
+                *d += xv * wv;
+            }
+        }
+    });
+    out
+}
+
+/// One pooling window at output position `(oy, ox)`, evaluated against
+/// a source buffer that holds input rows `[src_row0, src_row0 + ...)`
+/// of a plane whose full extent is `in_h × in_w`.
+///
+/// Shared between the breadth-first kernel (whole plane, `src_row0 = 0`)
+/// and the depth-first band walker (halo band), so both schedules
+/// produce bit-identical pooling results. Max pooling treats padding as
+/// `-inf` (clips to valid cells); average pooling divides by the window
+/// ∩ padded-extent cell count (`count_include_pad`) or the valid cell
+/// count otherwise.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_window(
+    kind: PoolKind,
+    window: &Window2d,
+    count_include_pad: bool,
+    src: &[f32],
+    src_row0: usize,
+    in_h: usize,
+    in_w: usize,
+    oy: usize,
+    ox: usize,
+) -> f32 {
+    let (kh, kw) = window.kernel;
+    let (sh, sw) = window.stride;
+    let (ph, pw) = window.pad;
+    let ry0 = (oy * sh) as isize - ph as isize;
+    let rx0 = (ox * sw) as isize - pw as isize;
+    let y_lo = ry0.max(0) as usize;
+    let y_hi = ((ry0 + kh as isize).min(in_h as isize)).max(0) as usize;
+    let x_lo = rx0.max(0) as usize;
+    let x_hi = ((rx0 + kw as isize).min(in_w as isize)).max(0) as usize;
+    match kind {
+        PoolKind::Max => {
+            let mut m = f32::NEG_INFINITY;
+            for y in y_lo..y_hi {
+                let row = &src[(y - src_row0) * in_w..][..in_w];
+                for &v in &row[x_lo..x_hi] {
+                    m = m.max(v);
+                }
+            }
+            m
+        }
+        PoolKind::Avg => {
+            let mut sum = 0.0f32;
+            for y in y_lo..y_hi {
+                let row = &src[(y - src_row0) * in_w..][..in_w];
+                for &v in &row[x_lo..x_hi] {
+                    sum += v;
+                }
+            }
+            let divisor = if count_include_pad {
+                // Window ∩ padded extent [-p, in + p): k×k in floor mode,
+                // clipped at the padded boundary in ceil mode.
+                let rows = (ry0 + kh as isize).min(in_h as isize + ph as isize)
+                    - ry0.max(-(ph as isize));
+                let cols = (rx0 + kw as isize).min(in_w as isize + pw as isize)
+                    - rx0.max(-(pw as isize));
+                (rows * cols) as f32
+            } else {
+                ((y_hi - y_lo) * (x_hi - x_lo)) as f32
+            };
+            sum / divisor
+        }
+    }
+}
+
+/// Max/avg pooling over NCHW. Parallel over (batch, channel) planes.
+pub fn pool2d(
+    x: &HostTensor,
+    kind: PoolKind,
+    window: &Window2d,
+    count_include_pad: bool,
+    out_shape: &Shape,
+    threads: usize,
+) -> HostTensor {
+    let (in_h, in_w) = (x.shape.height(), x.shape.width());
+    let (out_h, out_w) = (out_shape.height(), out_shape.width());
+    let in_plane = in_h * in_w;
+    let mut out = HostTensor::zeros(out_shape.clone());
+    for_planes(threads, &mut out.data, out_h * out_w, |plane, dst| {
+        let src = &x.data[plane * in_plane..][..in_plane];
+        for (oy, dst_row) in dst.chunks_mut(out_w).enumerate() {
+            for (ox, v) in dst_row.iter_mut().enumerate() {
+                *v = pool_window(kind, window, count_include_pad, src, 0, in_h, in_w, oy, ox);
+            }
+        }
+    });
+    out
+}
+
+/// Adaptive average pooling for dividing extents: a plain average pool
+/// whose kernel and stride are `in / out` (exactly how
+/// `python/compile/layers.py` computes the block mean).
+pub fn adaptive_avg_pool(
+    x: &HostTensor,
+    out_hw: (usize, usize),
+    out_shape: &Shape,
+    threads: usize,
+) -> HostTensor {
+    let (in_h, in_w) = (x.shape.height(), x.shape.width());
+    let window = Window2d {
+        kernel: (in_h / out_hw.0, in_w / out_hw.1),
+        stride: (in_h / out_hw.0, in_w / out_hw.1),
+        pad: (0, 0),
+    };
+    pool2d(x, PoolKind::Avg, &window, true, out_shape, threads)
+}
+
+/// Folded inference batch-norm: `y = x * scale[c] + shift[c]`.
+/// Rank-4 applies per (batch, channel) plane; rank-2 per feature column.
+pub fn bn_affine(
+    x: &HostTensor,
+    scale: &HostTensor,
+    shift: &HostTensor,
+    threads: usize,
+) -> HostTensor {
+    let c = x.shape.channels();
+    let rank4 = x.shape.rank() == 4;
+    let chunk = if rank4 {
+        x.shape.height() * x.shape.width()
+    } else {
+        c
+    };
+    let mut out = HostTensor::zeros(x.shape.clone());
+    for_planes(threads, &mut out.data, chunk, |p, dst| {
+        let src = &x.data[p * chunk..][..chunk];
+        if rank4 {
+            let (s, b) = (scale.data[p % c], shift.data[p % c]);
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v * s + b;
+            }
+        } else {
+            for (((d, &v), &s), &b) in
+                dst.iter_mut().zip(src).zip(&scale.data).zip(&shift.data)
+            {
+                *d = v * s + b;
+            }
+        }
+    });
+    out
+}
+
+/// Rectified linear unit (parallel over planes / rows like the rest of
+/// the baseline kernels, so thread budgets stay comparable).
+pub fn relu(x: &HostTensor, threads: usize) -> HostTensor {
+    let chunk = if x.shape.rank() == 4 {
+        x.shape.height() * x.shape.width()
+    } else {
+        x.shape.channels()
+    };
+    let mut out = HostTensor::zeros(x.shape.clone());
+    for_planes(threads, &mut out.data, chunk, |p, dst| {
+        let src = &x.data[p * chunk..][..chunk];
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = v.max(0.0);
+        }
+    });
+    out
+}
+
+/// Element-wise residual addition.
+pub fn add(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    debug_assert_eq!(a.shape, b.shape);
+    HostTensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// Channel-axis concatenation of N rank-4 inputs.
+pub fn concat(inputs: &[&HostTensor], out_shape: &Shape) -> HostTensor {
+    let n = out_shape.batch();
+    let hw = out_shape.height() * out_shape.width();
+    let mut out = HostTensor::zeros(out_shape.clone());
+    for b in 0..n {
+        let mut c_off = 0usize;
+        for t in inputs {
+            let ct = t.shape.channels();
+            let src = &t.data[b * ct * hw..][..ct * hw];
+            out.data[(b * out_shape.channels() + c_off) * hw..][..ct * hw]
+                .copy_from_slice(src);
+            c_off += ct;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[usize], data: Vec<f32>) -> HostTensor {
+        HostTensor::new(
+            Shape::new(dims.to_vec(), crate::graph::DType::F32),
+            data,
+        )
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_input_through() {
+        // 1x1 kernel, single in/out channel, weight 1.0: y == x.
+        let x = t(&[1, 1, 2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let w = t(&[1, 1, 1, 1], vec![1.0]);
+        let win = Window2d::square(1, 1, 0);
+        let out = conv2d(&x, &w, None, &win, &x.shape, 1);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn conv_3x3_hand_computed_with_padding_and_bias() {
+        // 3x3 input, 3x3 all-ones kernel, pad 1: each output is the sum
+        // of the 3x3 neighbourhood (zeros outside), plus bias 0.5.
+        let x = t(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let w = t(&[1, 1, 3, 3], vec![1.0; 9]);
+        let b = t(&[1], vec![0.5]);
+        let win = Window2d::square(3, 1, 1);
+        let out = conv2d(&x, &w, Some(&b), &win, &x.shape, 1);
+        // Center = 1+..+9 = 45; corner (0,0) = 1+2+4+5 = 12.
+        assert_eq!(out.data[4], 45.0 + 0.5);
+        assert_eq!(out.data[0], 12.0 + 0.5);
+        assert_eq!(out.data[8], 5.0 + 6.0 + 8.0 + 9.0 + 0.5);
+    }
+
+    #[test]
+    fn conv_multi_channel_sums_channels() {
+        // Two input channels, 1x1 weights (2.0, 3.0): y = 2a + 3b.
+        let x = t(&[1, 2, 1, 2], vec![1.0, 2.0, 10.0, 20.0]);
+        let w = t(&[1, 2, 1, 1], vec![2.0, 3.0]);
+        let win = Window2d::square(1, 1, 0);
+        let out = conv2d(&x, &w, None, &win, &Shape::nchw(1, 1, 1, 2), 1);
+        assert_eq!(out.data, vec![32.0, 64.0]);
+    }
+
+    #[test]
+    fn maxpool_hand_computed() {
+        let x = t(&[1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
+        let win = Window2d::square(2, 2, 0);
+        let out = pool2d(
+            &x,
+            PoolKind::Max,
+            &win,
+            true,
+            &Shape::nchw(1, 1, 2, 2),
+            1,
+        );
+        assert_eq!(out.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_padding_is_neg_inf_not_zero() {
+        // All-negative input with pad 1: corners must stay negative
+        // (zero-padding would wrongly give 0).
+        let x = t(&[1, 1, 2, 2], vec![-4.0, -3.0, -2.0, -1.0]);
+        let win = Window2d::square(2, 2, 1);
+        let out = pool2d(
+            &x,
+            PoolKind::Max,
+            &win,
+            true,
+            &Shape::nchw(1, 1, 2, 2),
+            1,
+        );
+        assert_eq!(out.data, vec![-4.0, -3.0, -2.0, -1.0]);
+    }
+
+    #[test]
+    fn avgpool_count_include_pad_divisors() {
+        let x = t(&[1, 1, 2, 2], vec![2.0, 2.0, 2.0, 2.0]);
+        let win = Window2d::square(2, 1, 1);
+        let shape = Shape::nchw(1, 1, 3, 3);
+        // include pad: corner window has 1 valid cell, divisor 4.
+        let inc = pool2d(&x, PoolKind::Avg, &win, true, &shape, 1);
+        assert_eq!(inc.data[0], 2.0 / 4.0);
+        assert_eq!(inc.data[4], 2.0); // center: 4 valid cells / 4
+        // exclude pad: corner divisor is the 1 valid cell.
+        let exc = pool2d(&x, PoolKind::Avg, &win, false, &shape, 1);
+        assert_eq!(exc.data[0], 2.0);
+        assert_eq!(exc.data[4], 2.0);
+    }
+
+    #[test]
+    fn adaptive_avg_pool_block_means() {
+        let x = t(&[1, 1, 2, 4], vec![1.0, 3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0]);
+        let out = adaptive_avg_pool(&x, (1, 2), &Shape::nchw(1, 1, 1, 2), 1);
+        // Blocks: {1,3,9,11} and {5,7,13,15}.
+        assert_eq!(out.data, vec![6.0, 10.0]);
+    }
+
+    #[test]
+    fn linear_hand_computed() {
+        // x = [1, 2], W = [[1, 2, 3], [4, 5, 6]], b = [1, 2, 3]: every
+        // value is integer-exact in f32, so equality is well-defined.
+        let x = t(&[1, 2], vec![1.0, 2.0]);
+        let w = t(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = t(&[3], vec![1.0, 2.0, 3.0]);
+        let out = linear(&x, &w, Some(&b), &Shape::nf(1, 3), 1);
+        assert_eq!(out.data, vec![10.0, 14.0, 18.0]);
+    }
+
+    #[test]
+    fn bn_affine_rank4_and_rank2() {
+        let x4 = t(&[1, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let scale = t(&[2], vec![2.0, 10.0]);
+        let shift = t(&[2], vec![1.0, -1.0]);
+        let out = bn_affine(&x4, &scale, &shift, 1);
+        assert_eq!(out.data, vec![3.0, 5.0, 29.0, 39.0]);
+        let x2 = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let out2 = bn_affine(&x2, &scale, &shift, 1);
+        assert_eq!(out2.data, vec![3.0, 19.0, 7.0, 39.0]);
+    }
+
+    #[test]
+    fn relu_add_concat() {
+        let a = t(&[1, 1, 1, 3], vec![-1.0, 0.0, 2.0]);
+        assert_eq!(relu(&a, 1).data, vec![0.0, 0.0, 2.0]);
+        let b = t(&[1, 1, 1, 3], vec![1.0, 1.0, 1.0]);
+        assert_eq!(add(&a, &b).data, vec![0.0, 1.0, 3.0]);
+        let c = concat(&[&a, &b], &Shape::nchw(1, 2, 1, 3));
+        assert_eq!(c.data, vec![-1.0, 0.0, 2.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn threaded_kernels_match_single_threaded() {
+        let x = HostTensor::from_seed(
+            Shape::nchw(2, 3, 9, 9),
+            7,
+            crate::rng::ParamKind::Activation,
+        );
+        let w = HostTensor::from_seed(
+            Shape::new(vec![4, 3, 3, 3], crate::graph::DType::F32),
+            8,
+            crate::rng::ParamKind::Weight,
+        );
+        let win = Window2d::square(3, 1, 1);
+        let out_shape = Shape::nchw(2, 4, 9, 9);
+        let a = conv2d(&x, &w, None, &win, &out_shape, 1);
+        let b = conv2d(&x, &w, None, &win, &out_shape, 4);
+        assert_eq!(a, b);
+        let pw = Window2d::square(3, 2, 1);
+        let pshape = Shape::nchw(2, 3, 5, 5);
+        let p1 = pool2d(&x, PoolKind::Max, &pw, true, &pshape, 1);
+        let p4 = pool2d(&x, PoolKind::Max, &pw, true, &pshape, 4);
+        assert_eq!(p1, p4);
+    }
+}

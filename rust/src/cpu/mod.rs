@@ -1,0 +1,29 @@
+//! Native CPU backend: real depth-first execution, no artifacts.
+//!
+//! This subsystem turns the repo's depth-first plans into *measured*
+//! wall-clock numbers on the host CPU — the paper's Figure 11/13 claim
+//! (up to 41.1% CPU speedup from cache-resident tile processing) made
+//! testable without the PJRT artifact toolchain:
+//!
+//! * [`kernels`] — breadth-first f32 kernels, one per graph layer
+//!   (direct conv2d, folded-BN affine, ReLU, max/avg pool, linear,
+//!   add, concat). The eager PyTorch-style baseline.
+//! * [`walker`] — the depth-first stack walker: one cache-sized band of
+//!   one (batch, channel) plane streams through a whole collapsed
+//!   sequence via two ping-pong band buffers; pooling arithmetic is
+//!   shared with [`kernels`], so both schedules agree bitwise.
+//! * [`par`] — `std::thread::scope` work distribution (`--threads N`):
+//!   independent bands / planes across workers, per-worker scratch.
+//! * [`backend`] — [`CpuBackend`], the `Backend`-trait adapter used by
+//!   `Engine::builder().cpu(threads)` and `--backend cpu`.
+//!
+//! Numeric parity between the two schedules (`allclose`, in practice
+//! bit-equality) is asserted by `rust/tests/prop.rs` and by
+//! `brainslug run --net <name> --backend cpu`.
+
+pub mod backend;
+pub mod kernels;
+pub mod par;
+pub mod walker;
+
+pub use backend::CpuBackend;

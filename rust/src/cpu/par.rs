@@ -1,0 +1,128 @@
+//! Scoped-thread work distribution for the native CPU backend.
+//!
+//! The paper's depth-first parallelism (§4.4) assigns *independent work
+//! units* — one (batch, channel) plane band on CPU — to parallel
+//! executors. Here that is `std::thread::scope`: the item list is split
+//! into contiguous groups, one scoped worker per group, each with its
+//! own scratch state (the two band buffers of the walker). With
+//! `threads <= 1` everything runs inline on the caller's thread, so the
+//! single-threaded path has zero spawn overhead.
+
+/// Run `f` over every item, splitting the items across up to `threads`
+/// scoped workers. Each worker owns a scratch value built by
+/// `mk_scratch` (shared across its items, never across workers).
+///
+/// Items may hold non-`'static` borrows (e.g. disjoint `&mut [f32]`
+/// bands of one output tensor): `std::thread::scope` guarantees every
+/// worker joins before this function returns.
+pub fn run_items<T, S, F, M>(threads: usize, items: Vec<T>, mk_scratch: M, f: F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(T, &mut S) + Sync,
+    M: Fn() -> S + Sync,
+{
+    let n = items.len();
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 {
+        let mut scratch = mk_scratch();
+        for item in items {
+            f(item, &mut scratch);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mk_scratch = &mk_scratch;
+        let mut rest = items;
+        let mut left = n;
+        for w in 0..workers {
+            // Balanced contiguous split: remaining / remaining workers.
+            let take = left / (workers - w);
+            left -= take;
+            let group: Vec<T> = rest.drain(..take).collect();
+            scope.spawn(move || {
+                let mut scratch = mk_scratch();
+                for item in group {
+                    f(item, &mut scratch);
+                }
+            });
+        }
+    });
+}
+
+/// Convenience: apply `f(plane_index, plane)` to every `plane_len` chunk
+/// of `data`, across up to `threads` workers. The breadth-first kernels
+/// use this to parallelize over (batch, channel) — or (batch,
+/// out_channel) for convolution — planes.
+pub fn for_planes<F>(threads: usize, data: &mut [f32], plane_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(plane_len > 0 && data.len() % plane_len == 0);
+    let items: Vec<(usize, &mut [f32])> = data.chunks_mut(plane_len).enumerate().collect();
+    run_items(threads, items, || (), |(i, plane), _scratch| f(i, plane));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_items_processed_once_any_thread_count() {
+        for threads in [1, 2, 3, 8, 100] {
+            let counter = AtomicUsize::new(0);
+            let items: Vec<usize> = (0..37).collect();
+            run_items(
+                threads,
+                items,
+                || (),
+                |i, _scratch| {
+                    counter.fetch_add(i + 1, Ordering::Relaxed);
+                },
+            );
+            // sum of 1..=37
+            assert_eq!(counter.load(Ordering::Relaxed), 37 * 38 / 2, "{threads}");
+        }
+    }
+
+    #[test]
+    fn for_planes_writes_disjoint_chunks() {
+        for threads in [1, 3] {
+            let mut data = vec![0.0f32; 24];
+            for_planes(threads, &mut data, 4, |i, plane| {
+                for v in plane.iter_mut() {
+                    *v = i as f32;
+                }
+            });
+            for (i, chunk) in data.chunks(4).enumerate() {
+                assert!(chunk.iter().all(|&v| v == i as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_per_worker() {
+        // Scratch accumulates within a worker; the total across workers
+        // must still cover every item exactly once.
+        let total = AtomicUsize::new(0);
+        run_items(
+            4,
+            (0..100).collect::<Vec<usize>>(),
+            Vec::new,
+            |i, seen: &mut Vec<usize>| {
+                seen.push(i);
+                total.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_items_is_a_noop() {
+        run_items(4, Vec::<usize>::new(), || (), |_, _: &mut ()| {
+            panic!("no items")
+        });
+    }
+}

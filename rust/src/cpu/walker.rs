@@ -1,0 +1,576 @@
+//! The depth-first stack walker: real execution of collapsed
+//! [`Stack`]s, one cache-sized band at a time (§4.1 Figure 9, §4.4).
+//!
+//! A sequence's band grid is `(batch · channels) × n_bands` — exactly
+//! the grid the collapser sizes `tile_rows` for. Each work item is one
+//! band of one (batch, channel) plane: the walker back-propagates the
+//! band's row interval through every op (pool halos grow it, clamped to
+//! the tensor extent — the same arithmetic as
+//! [`Sequence::in_rows_for`]), then streams the band through the whole
+//! op chain using **two ping-pong band buffers** that never leave the
+//! fast tier. The first op reads straight from the input tensor and the
+//! last op writes straight into the output tensor, so a band makes
+//! exactly one main-memory round trip regardless of stack depth — the
+//! paper's depth-first locality, for real this time.
+//!
+//! Independent bands run on `std::thread::scope` workers
+//! ([`crate::cpu::par::run_items`]): each worker owns its buffer pair
+//! and processes a contiguous slice of the band grid. Sequences
+//! synchronize through main memory (materialized tensors), mirroring
+//! the paper's sequence semantics.
+//!
+//! Numerics: element-wise ops and [`pool_window`] are shared with the
+//! breadth-first kernels, so depth-first output is *bit-identical* to
+//! the baseline schedule.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::graph::{NodeId, PoolKind, Window2d};
+use crate::optimizer::{OpKind, Operation, Sequence, Stack};
+use crate::runtime::HostTensor;
+
+use super::kernels::pool_window;
+use super::par::run_items;
+
+/// One stack operation lowered for band execution.
+enum BandOp<'a> {
+    /// Folded batch-norm: `y = x * scale[c] + shift[c]`.
+    Affine { scale: &'a [f32], shift: &'a [f32] },
+    Relu,
+    /// Inference-mode dropout.
+    Identity,
+    Pool {
+        kind: PoolKind,
+        window: Window2d,
+        count_include_pad: bool,
+        /// Full input-plane extent (for halo clamping and -inf/divisor
+        /// edge handling).
+        in_h: usize,
+        in_w: usize,
+        out_w: usize,
+    },
+}
+
+fn lower<'a>(
+    op: &Operation,
+    bn: &'a HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+) -> BandOp<'a> {
+    match &op.kind {
+        OpKind::BnAffine { .. } => {
+            let (s, b) = bn
+                .get(&op.node)
+                .expect("folded bn params gathered for every bn op");
+            BandOp::Affine {
+                scale: &s.data,
+                shift: &b.data,
+            }
+        }
+        OpKind::Relu => BandOp::Relu,
+        OpKind::Identity => BandOp::Identity,
+        OpKind::Pool {
+            kind,
+            window,
+            count_include_pad,
+            ..
+        } => BandOp::Pool {
+            kind: *kind,
+            window: *window,
+            count_include_pad: *count_include_pad,
+            in_h: op.in_shape.height(),
+            in_w: op.in_shape.width(),
+            out_w: op.out_shape.width(),
+        },
+    }
+}
+
+/// Input-row interval required to produce output rows `[out_lo, out_hi)`
+/// of `op` — the per-op form of [`Sequence::in_rows_for`]'s clamped halo
+/// back-propagation.
+fn in_interval(op: &BandOp, out_lo: usize, out_hi: usize) -> (usize, usize) {
+    match op {
+        BandOp::Pool { window, in_h, .. } => {
+            let (k, s) = (window.kernel.0, window.stride.0);
+            let p = window.pad.0;
+            let lo = (out_lo * s).saturating_sub(p);
+            let hi = ((out_hi - 1) * s + k).saturating_sub(p).min(*in_h);
+            (lo.min(hi), hi)
+        }
+        _ => (out_lo, out_hi),
+    }
+}
+
+/// Apply an element-wise op from `src` into `dst` (same geometry).
+/// `chan = Some(c)`: rank-4 plane of channel `c` (scalar affine);
+/// `chan = None`: rank-2 rows of `width` features (per-column affine).
+fn elem_copy(op: &BandOp, chan: Option<usize>, width: usize, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    match op {
+        BandOp::Relu => {
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v.max(0.0);
+            }
+        }
+        BandOp::Identity => dst.copy_from_slice(src),
+        BandOp::Affine { scale, shift } => match chan {
+            Some(c) => {
+                let (s, b) = (scale[c], shift[c]);
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = v * s + b;
+                }
+            }
+            None => {
+                for (row_d, row_s) in dst.chunks_mut(width).zip(src.chunks(width)) {
+                    for (((d, &v), &s), &b) in
+                        row_d.iter_mut().zip(row_s).zip(scale.iter()).zip(shift.iter())
+                    {
+                        *d = v * s + b;
+                    }
+                }
+            }
+        },
+        BandOp::Pool { .. } => unreachable!("pool is not element-wise"),
+    }
+}
+
+/// In-place variant of [`elem_copy`] for mid-chain ops (the band stays
+/// in its fast-tier buffer).
+fn elem_inplace(op: &BandOp, chan: Option<usize>, width: usize, buf: &mut [f32]) {
+    match op {
+        BandOp::Relu => {
+            for v in buf.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        BandOp::Identity => {}
+        BandOp::Affine { scale, shift } => match chan {
+            Some(c) => {
+                let (s, b) = (scale[c], shift[c]);
+                for v in buf.iter_mut() {
+                    *v = *v * s + b;
+                }
+            }
+            None => {
+                for row in buf.chunks_mut(width) {
+                    for ((v, &s), &b) in row.iter_mut().zip(scale.iter()).zip(shift.iter()) {
+                        *v = *v * s + b;
+                    }
+                }
+            }
+        },
+        BandOp::Pool { .. } => unreachable!("pool is not element-wise"),
+    }
+}
+
+/// Pool output rows `[out_lo, out_hi)` from a source holding input rows
+/// starting at absolute row `src_row0` into `dst`.
+fn pool_to(
+    op: &BandOp,
+    src: &[f32],
+    src_row0: usize,
+    dst: &mut [f32],
+    out_lo: usize,
+    out_hi: usize,
+) {
+    let BandOp::Pool {
+        kind,
+        window,
+        count_include_pad,
+        in_h,
+        in_w,
+        out_w,
+    } = op
+    else {
+        unreachable!("pool_to on non-pool op")
+    };
+    debug_assert_eq!(dst.len(), (out_hi - out_lo) * out_w);
+    for (oy, dst_row) in (out_lo..out_hi).zip(dst.chunks_mut(*out_w)) {
+        for (ox, v) in dst_row.iter_mut().enumerate() {
+            *v = pool_window(
+                *kind,
+                window,
+                *count_include_pad,
+                src,
+                src_row0,
+                *in_h,
+                *in_w,
+                oy,
+                ox,
+            );
+        }
+    }
+}
+
+/// Execute one collapsed sequence depth-first over its band grid.
+///
+/// `bn` maps each `BnAffine` op's graph node to its folded
+/// (scale, shift) pair (see `ParamStore::bn_folded`).
+pub fn run_sequence(
+    seq: &Sequence,
+    input: &HostTensor,
+    bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+    threads: usize,
+) -> HostTensor {
+    debug_assert_eq!(&input.shape, seq.in_shape());
+    let raw_ops: Vec<&Operation> = seq.steps.iter().flat_map(|s| &s.ops).collect();
+    let ops: Vec<BandOp> = raw_ops.iter().map(|o| lower(o, bn)).collect();
+    let out_shape = seq.out_shape().clone();
+    let in_shape = seq.in_shape();
+    let rank4 = out_shape.rank() == 4;
+    // Band geometry: rank-4 tensors band over H within one (batch,
+    // channel) plane; rank-2 over the batch dimension (one plane).
+    let (out_rows, out_w, channels) = if rank4 {
+        (
+            out_shape.height(),
+            out_shape.width(),
+            out_shape.channels(),
+        )
+    } else {
+        (out_shape.batch(), out_shape.channels(), out_shape.channels())
+    };
+    let (in_rows, in_w) = if rank4 {
+        (in_shape.height(), in_shape.width())
+    } else {
+        (in_shape.batch(), in_shape.channels())
+    };
+    // Per-op row widths (elements per band row entering / leaving).
+    let widths: Vec<(usize, usize)> = raw_ops
+        .iter()
+        .map(|o| {
+            if rank4 {
+                (o.in_shape.width(), o.out_shape.width())
+            } else {
+                (o.in_shape.channels(), o.out_shape.channels())
+            }
+        })
+        .collect();
+    let tile = seq.tile_rows.max(1).min(out_rows);
+    let mut out = HostTensor::zeros(out_shape.clone());
+
+    // The band grid: one item per (plane, band) — disjoint &mut slices
+    // of the output tensor, handed to scoped workers.
+    let plane_len = out_rows * out_w;
+    let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+    for (p, plane) in out.data.chunks_mut(plane_len).enumerate() {
+        let mut rest = plane;
+        let mut lo = 0usize;
+        while lo < out_rows {
+            let hi = (lo + tile).min(out_rows);
+            let (band, tail) = rest.split_at_mut((hi - lo) * out_w);
+            items.push((p, lo, band));
+            rest = tail;
+            lo = hi;
+        }
+    }
+
+    let in_plane_len = in_rows * in_w;
+    let input_data = &input.data;
+    let k = ops.len();
+    run_items(
+        threads,
+        items,
+        || (Vec::<f32>::new(), Vec::<f32>::new(), Vec::<(usize, usize)>::new()),
+        |(p, lo, mut band), (buf_a, buf_b, iv)| {
+            let chan = if rank4 { Some(p % channels) } else { None };
+            let hi = lo + band.len() / out_w;
+            // Halo back-propagation: iv[i] = rows entering op i,
+            // iv[k] = this band's output rows.
+            iv.clear();
+            iv.resize(k + 1, (0usize, 0usize));
+            iv[k] = (lo, hi);
+            for i in (0..k).rev() {
+                iv[i] = in_interval(&ops[i], iv[i + 1].0, iv[i + 1].1);
+            }
+            let plane_src = &input_data[p * in_plane_len..][..in_plane_len];
+            // Stream the band through the chain: op 0 reads the input
+            // tensor, op k-1 writes the output band, everything between
+            // ping-pongs across the two band buffers.
+            let mut cur_in_a = true;
+            for i in 0..k {
+                let first = i == 0;
+                let last = i == k - 1;
+                let (w_in, w_out) = widths[i];
+                let (in_lo, in_hi) = iv[i];
+                let (o_lo, o_hi) = iv[i + 1];
+                match &ops[i] {
+                    op @ BandOp::Pool { .. } => {
+                        if first && last {
+                            pool_to(op, plane_src, 0, &mut *band, o_lo, o_hi);
+                        } else if first {
+                            buf_a.clear();
+                            buf_a.resize((o_hi - o_lo) * w_out, 0.0);
+                            pool_to(op, plane_src, 0, buf_a, o_lo, o_hi);
+                            cur_in_a = true;
+                        } else if last {
+                            let src: &[f32] =
+                                if cur_in_a { buf_a.as_slice() } else { buf_b.as_slice() };
+                            pool_to(op, src, in_lo, &mut *band, o_lo, o_hi);
+                        } else if cur_in_a {
+                            buf_b.clear();
+                            buf_b.resize((o_hi - o_lo) * w_out, 0.0);
+                            pool_to(op, buf_a, in_lo, buf_b, o_lo, o_hi);
+                            cur_in_a = false;
+                        } else {
+                            buf_a.clear();
+                            buf_a.resize((o_hi - o_lo) * w_out, 0.0);
+                            pool_to(op, buf_b, in_lo, buf_a, o_lo, o_hi);
+                            cur_in_a = true;
+                        }
+                    }
+                    op => {
+                        if first && last {
+                            elem_copy(
+                                op,
+                                chan,
+                                w_in,
+                                &plane_src[in_lo * w_in..in_hi * w_in],
+                                &mut *band,
+                            );
+                        } else if first {
+                            buf_a.clear();
+                            buf_a.resize((in_hi - in_lo) * w_in, 0.0);
+                            elem_copy(
+                                op,
+                                chan,
+                                w_in,
+                                &plane_src[in_lo * w_in..in_hi * w_in],
+                                buf_a,
+                            );
+                            cur_in_a = true;
+                        } else if last {
+                            let src: &[f32] =
+                                if cur_in_a { buf_a.as_slice() } else { buf_b.as_slice() };
+                            elem_copy(op, chan, w_in, src, &mut *band);
+                        } else {
+                            let buf: &mut Vec<f32> =
+                                if cur_in_a { &mut *buf_a } else { &mut *buf_b };
+                            elem_inplace(op, chan, w_in, buf);
+                        }
+                    }
+                }
+            }
+        },
+    );
+    out
+}
+
+/// Execute a whole collapsed stack: sequences in order, each banded
+/// depth-first, synchronizing through materialized tensors at sequence
+/// boundaries.
+pub fn run_stack(
+    stack: &Stack,
+    input: &HostTensor,
+    bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+    threads: usize,
+) -> HostTensor {
+    let mut cur: Option<HostTensor> = None;
+    for seq in &stack.sequences {
+        let next = run_sequence(seq, cur.as_ref().unwrap_or(input), bn, threads);
+        cur = Some(next);
+    }
+    cur.expect("stack has at least one sequence")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::graph::{Layer, PoolKind, Shape, Window2d};
+    use crate::optimizer::{collapse, CollapseOptions};
+    use crate::rng::ParamKind;
+
+    /// Build the op chain for a spec of layer tags, threading shapes.
+    fn mk_ops(spec: &[&str], shape: Shape) -> Vec<Operation> {
+        let mut ops = Vec::new();
+        let mut cur = shape;
+        for (i, tag) in spec.iter().enumerate() {
+            let layer = match *tag {
+                "bn" => Layer::BatchNorm2d { eps: 1e-5 },
+                "relu" => Layer::Relu,
+                "id" => Layer::Dropout { p: 0.5 },
+                "max3s1p1" => Layer::Pool2d {
+                    kind: PoolKind::Max,
+                    window: Window2d::square(3, 1, 1),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+                "max2s2" => Layer::Pool2d {
+                    kind: PoolKind::Max,
+                    window: Window2d::square(2, 2, 0),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+                "avg3s2p1" => Layer::Pool2d {
+                    kind: PoolKind::Avg,
+                    window: Window2d::square(3, 2, 1),
+                    ceil_mode: false,
+                    count_include_pad: true,
+                },
+                "avg2s2nip" => Layer::Pool2d {
+                    kind: PoolKind::Avg,
+                    window: Window2d::square(2, 2, 1),
+                    ceil_mode: false,
+                    count_include_pad: false,
+                },
+                other => panic!("unknown {other}"),
+            };
+            let out = layer.infer_shape(&[&cur]).unwrap();
+            ops.push(
+                Operation::from_layer(i + 1, &format!("op{i}"), &layer, &cur, &out).unwrap(),
+            );
+            cur = out;
+        }
+        ops
+    }
+
+    /// Breadth-first reference: whole-tensor kernels, op by op.
+    fn reference(
+        ops: &[Operation],
+        input: &HostTensor,
+        bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+    ) -> HostTensor {
+        use super::super::kernels;
+        let mut cur = input.clone();
+        for op in ops {
+            cur = match &op.kind {
+                OpKind::BnAffine { .. } => {
+                    let (s, b) = &bn[&op.node];
+                    kernels::bn_affine(&cur, s, b, 1)
+                }
+                OpKind::Relu => kernels::relu(&cur, 1),
+                OpKind::Identity => cur,
+                OpKind::Pool {
+                    kind,
+                    window,
+                    count_include_pad,
+                    ..
+                } => kernels::pool2d(
+                    &cur,
+                    *kind,
+                    window,
+                    *count_include_pad,
+                    &op.out_shape,
+                    1,
+                ),
+            };
+        }
+        cur
+    }
+
+    fn bn_params(
+        ops: &[Operation],
+        seed: u64,
+    ) -> HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)> {
+        let mut m = HashMap::new();
+        for op in ops {
+            if matches!(op.kind, OpKind::BnAffine { .. }) {
+                let c = op.in_shape.channels();
+                let shape = Shape::new(vec![c], op.in_shape.dtype);
+                let s = HostTensor::from_seed(
+                    shape.clone(),
+                    seed ^ op.node as u64,
+                    ParamKind::BnGamma,
+                );
+                let b = HostTensor::from_seed(
+                    shape,
+                    seed ^ ((op.node as u64) << 8),
+                    ParamKind::BnBeta,
+                );
+                m.insert(op.node, (Arc::new(s), Arc::new(b)));
+            }
+        }
+        m
+    }
+
+    fn run_collapsed(
+        ops: &[Operation],
+        input: &HostTensor,
+        bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
+        budget: usize,
+        threads: usize,
+    ) -> HostTensor {
+        let device = DeviceSpec {
+            fast_mem_bytes: budget,
+            ..DeviceSpec::paper_cpu()
+        };
+        let seqs = collapse(ops, &device, &CollapseOptions::default());
+        let mut cur = input.clone();
+        for seq in &seqs {
+            cur = run_sequence(seq, &cur, bn, threads);
+        }
+        cur
+    }
+
+    #[test]
+    fn banded_walk_matches_breadth_first_bitwise() {
+        // Mixed element-wise + strided/padded pools, several budgets
+        // (band heights) and thread counts: depth-first must be
+        // bit-identical to the breadth-first reference.
+        let specs: &[&[&str]] = &[
+            &["relu"],
+            &["bn", "relu"],
+            &["max2s2"],
+            &["bn", "relu", "max3s1p1"],
+            &["max3s1p1", "bn", "relu", "max2s2", "relu"],
+            &["avg3s2p1", "bn", "avg2s2nip", "relu"],
+            &["bn", "relu", "id", "max3s1p1", "max3s1p1", "bn"],
+        ];
+        for (i, spec) in specs.iter().enumerate() {
+            let shape = Shape::nchw(2, 3, 13, 11);
+            let ops = mk_ops(spec, shape.clone());
+            let input = HostTensor::from_seed(shape, 100 + i as u64, ParamKind::Activation);
+            let bn = bn_params(&ops, 7);
+            let want = reference(&ops, &input, &bn);
+            for budget in [512usize, 2 * 1024, 1 << 20] {
+                for threads in [1usize, 3] {
+                    let got = run_collapsed(&ops, &input, &bn, budget, threads);
+                    assert_eq!(
+                        got, want,
+                        "spec {i} budget {budget} threads {threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank2_bands_over_batch_rows() {
+        // Classifier-head stack on (N, F): bn applies per column.
+        let shape = Shape::nf(9, 5);
+        let ops = mk_ops(&["bn", "relu", "id"], shape.clone());
+        let input = HostTensor::from_seed(shape, 3, ParamKind::Activation);
+        let bn = bn_params(&ops, 11);
+        let want = reference(&ops, &input, &bn);
+        for threads in [1usize, 2] {
+            let got = run_collapsed(&ops, &input, &bn, 64, threads);
+            assert_eq!(got, want, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn run_stack_chains_sequences_through_main_memory() {
+        // A deep pool chain under a tiny budget splits into multiple
+        // sequences; run_stack must still match the reference.
+        let shape = Shape::nchw(1, 2, 24, 24);
+        let ops = mk_ops(
+            &["max3s1p1", "bn", "relu", "max3s1p1", "max3s1p1", "relu"],
+            shape.clone(),
+        );
+        let input = HostTensor::from_seed(shape, 5, ParamKind::Activation);
+        let bn = bn_params(&ops, 13);
+        let want = reference(&ops, &input, &bn);
+        let device = DeviceSpec {
+            fast_mem_bytes: 1024,
+            ..DeviceSpec::paper_cpu()
+        };
+        let sequences = collapse(&ops, &device, &CollapseOptions::default());
+        assert!(sequences.len() > 1, "tiny budget must split sequences");
+        let stack = Stack {
+            nodes: ops.iter().map(|o| o.node).collect(),
+            sequences,
+            signature: "test".into(),
+        };
+        let got = run_stack(&stack, &input, &bn, 2);
+        assert_eq!(got, want);
+    }
+}

@@ -2,17 +2,21 @@
 //!
 //! A [`Backend`] turns a [`Workload`] (graph + optional plan + seed) and
 //! an input batch into an output batch plus per-segment [`ExecStats`].
-//! Two implementations ship:
+//! Three implementations ship:
 //!
-//! * [`PjrtBackend`] — the real path: the PJRT runtime executing
-//!   AOT-compiled XLA/Pallas artifacts through the scheduler. Numerics
-//!   are identical to the pre-facade `Runtime` + `Executor` wiring.
+//! * [`PjrtBackend`] — the PJRT runtime executing AOT-compiled
+//!   XLA/Pallas artifacts through the scheduler. Numerics are identical
+//!   to the pre-facade `Runtime` + `Executor` wiring.
 //! * [`SimBackend`] — the artifact-free path: drives the `memsim`
 //!   analytic perf model, reporting the simulated per-segment times as
 //!   `ExecStats` and synthesizing a deterministic output tensor. `run`,
 //!   `serve`, and the benches work end-to-end with no `artifacts/`
 //!   directory (batching behaviour, plan structure, and stats plumbing
 //!   are all real; only the tensor math is simulated).
+//! * [`crate::cpu::CpuBackend`] — artifact-free *and* real: native f32
+//!   kernels execute the breadth-first baseline, the depth-first band
+//!   walker executes collapsed stacks (see [`crate::cpu`]). This is the
+//!   backend that turns the perf claims into measured wall-clock.
 
 use std::path::Path;
 use std::rc::Rc;

@@ -25,13 +25,17 @@
 //! ([`Mode::Baseline`] | [`Mode::BrainSlug`]), plan validation, and
 //! backend construction. [`Backend`] is the execution seam: the
 //! [`PjrtBackend`] runs AOT artifacts for real, the [`SimBackend`]
-//! drives the `memsim` perf model with no artifacts at all. The builder
+//! drives the `memsim` perf model with no artifacts at all, and the
+//! [`CpuBackend`] computes everything in-process with native f32
+//! kernels (breadth-first baseline vs. depth-first band walker, see
+//! [`crate::cpu`]). The builder
 //! is `Send` (the engine itself is not — PJRT internals are `Rc`-based),
 //! so servers ship the builder across threads and build in place.
 
 mod backend;
 
 pub use backend::{Backend, PjrtBackend, SimBackend, Workload};
+pub use crate::cpu::CpuBackend;
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -80,17 +84,23 @@ pub enum BackendKind {
     Pjrt { artifact_dir: PathBuf },
     /// The `memsim` perf-model backend — no artifacts required.
     Sim,
+    /// Native in-process CPU kernels ([`CpuBackend`]): real f32
+    /// execution, no artifacts, `threads` scoped workers over the
+    /// depth-first band grid.
+    Cpu { threads: usize },
 }
 
 impl BackendKind {
-    /// Parse a CLI backend name ("pjrt" | "sim").
+    /// Parse a CLI backend name ("pjrt" | "sim" | "cpu"). The CPU
+    /// backend defaults to one thread; `--threads` overrides it.
     pub fn parse(name: &str, artifact_dir: &str) -> Result<BackendKind> {
         match name {
             "pjrt" | "xla" => Ok(BackendKind::Pjrt {
                 artifact_dir: PathBuf::from(artifact_dir),
             }),
             "sim" => Ok(BackendKind::Sim),
-            other => bail!("unknown backend '{other}' (pjrt|sim)"),
+            "cpu" | "native" => Ok(BackendKind::Cpu { threads: 1 }),
+            other => bail!("unknown backend '{other}' (pjrt|sim|cpu)"),
         }
     }
 }
@@ -200,6 +210,13 @@ impl EngineBuilder {
         self.backend(BackendKind::Sim)
     }
 
+    /// Shorthand for the native CPU backend ([`CpuBackend`]): real f32
+    /// kernels, no artifacts, `threads` scoped workers per kernel /
+    /// depth-first band grid.
+    pub fn cpu(self, threads: usize) -> Self {
+        self.backend(BackendKind::Cpu { threads })
+    }
+
     /// The simulation backend in *real-time pacing* mode: every `run`
     /// sleeps the simulated model time × `scale` before returning, so
     /// concurrency behaviour (batch occupancy, queueing, worker-pool
@@ -262,6 +279,9 @@ impl EngineBuilder {
                 Some(scale) => Box::new(SimBackend::paced(r.device.clone(), scale)),
                 None => Box::new(SimBackend::new(r.device.clone())),
             },
+            BackendKind::Cpu { threads } => {
+                Box::new(CpuBackend::new(r.graph.clone(), r.seed, *threads))
+            }
         };
         Ok(Engine {
             graph: r.graph,
@@ -549,6 +569,61 @@ mod tests {
             BackendKind::parse("pjrt", "x").unwrap(),
             BackendKind::Pjrt { .. }
         ));
+        assert!(matches!(
+            BackendKind::parse("cpu", "x").unwrap(),
+            BackendKind::Cpu { threads: 1 }
+        ));
         assert!(BackendKind::parse("fpga", "x").is_err());
+    }
+
+    #[test]
+    fn cpu_engine_runs_both_modes_with_identical_outputs() {
+        // The native backend really computes: baseline (breadth-first
+        // kernels) and depth-first (band walker) must agree exactly on
+        // a fully-optimizable block net.
+        let mut eng = Engine::builder()
+            .graph_owned(bench::block_net(2, 2, 4, 16))
+            .device(DeviceSpec::host_cpu())
+            .cpu(2)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(eng.backend_name(), "cpu");
+        assert!(eng.plan().is_some());
+        let input = eng.synthetic_input();
+        let (out_base, stats_base) = eng.run_baseline(input.clone()).unwrap();
+        let (out_plan, stats_plan) = eng.run(input).unwrap();
+        assert_eq!(out_base, out_plan);
+        assert_eq!(out_base.shape, *eng.graph().output_shape());
+        assert_eq!(stats_base.segments.len(), eng.graph().num_layers());
+        assert!(stats_plan.segments.iter().any(|s| s.kind == "stack"));
+    }
+
+    #[test]
+    fn cpu_engine_runs_a_zoo_network_end_to_end() {
+        // Conv, pool, flatten, linear, branch joins — the whole layer
+        // inventory — on a tiny resnet18 instance.
+        let cfg = crate::zoo::ZooConfig {
+            batch: 1,
+            input: 32,
+            width_mult: 0.125,
+            num_classes: 4,
+        };
+        let mut eng = Engine::builder()
+            .zoo("resnet18", cfg)
+            .device(DeviceSpec::host_cpu())
+            .cpu(2)
+            .seed(3)
+            .build()
+            .unwrap();
+        let input = eng.synthetic_input();
+        let (out_base, _) = eng.run_baseline(input.clone()).unwrap();
+        let (out_plan, _) = eng.run(input).unwrap();
+        assert_eq!(out_base.shape.dims, vec![1, 4]);
+        assert!(
+            out_base.allclose(&out_plan, 1e-6, 1e-6),
+            "max |diff| = {:.3e}",
+            out_base.max_abs_diff(&out_plan)
+        );
     }
 }

@@ -12,8 +12,11 @@
 //! hardware the collapser packs against; [`memsim`] is the memory-traffic
 //! substrate that regenerates the paper's tables and figures at paper
 //! scale; [`runtime`] + [`scheduler`] execute optimized plans on the PJRT
-//! CPU backend using artifacts AOT-compiled from JAX/Pallas; [`server`]
-//! is the batching inference front-end used by the end-to-end example.
+//! CPU backend using artifacts AOT-compiled from JAX/Pallas; [`cpu`] is
+//! the native in-process backend — real f32 kernels plus a depth-first
+//! band walker — that measures baseline-vs-depth-first wall-clock with
+//! no artifacts at all; [`server`] is the batching inference front-end
+//! used by the end-to-end example.
 //!
 //! [`engine`] is the public facade over all of the above: an
 //! [`engine::EngineBuilder`] resolves the network, runs the optimizer,
@@ -26,6 +29,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod cpu;
 pub mod device;
 pub mod engine;
 pub mod graph;

@@ -80,14 +80,19 @@ USAGE: brainslug <command> [flags]
   analyze       [--net NAME | --all] [--device paper-cpu|paper-gpu|tpu] [--batch N]
   simulate      --exp table1|table2 [--device ...]
   run           --net NAME [--batch N] [--mode both|baseline|brainslug]
-                [--backend pjrt|sim] [--artifacts DIR] [--device PRESET]
-  serve         --net NAME [--requests N] [--brainslug] [--backend pjrt|sim]
-                [--artifacts DIR] [--workers N] [--queue-depth D]
+                [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
+                [--device PRESET]
+  serve         --net NAME [--requests N] [--brainslug] [--backend pjrt|sim|cpu]
+                [--threads N] [--artifacts DIR] [--workers N] [--queue-depth D]
                 [--queue-policy block|reject] [--pace SCALE]
   dot           --net NAME [--batch N] [--small] [--json]
 
 Network names accept family aliases (vgg, resnet, densenet, squeezenet,
 inception). `--backend sim` needs no artifacts directory at all.
+`--backend cpu` really computes with native f32 kernels (breadth-first
+baseline vs depth-first band walker) — also artifact-free; `--threads N`
+spreads independent tile bands over N scoped workers, and the collapse
+budget defaults to the host-cpu device model.
 
 `serve` runs a pool of N engine replicas over one bounded dispatch
 queue (depth D): when the queue is full, requests block (policy
@@ -107,10 +112,18 @@ Library quickstart (the whole pipeline is one builder):
     );
 }
 
-/// `--backend` / `--artifacts` flags → a [`BackendKind`].
+/// `--backend` / `--artifacts` / `--threads` flags → a [`BackendKind`].
 fn backend_from_args(args: &Args) -> Result<BackendKind> {
     let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
-    BackendKind::parse(args.get_or("backend", "pjrt"), &artifacts)
+    let mut backend = BackendKind::parse(args.get_or("backend", "pjrt"), &artifacts)?;
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 {
+        match &mut backend {
+            BackendKind::Cpu { threads: t } => *t = threads,
+            _ => bail!("--threads only applies to --backend cpu"),
+        }
+    }
+    Ok(backend)
 }
 
 /// Optional `--device` preset, defaulting to the measured-mode device.
@@ -268,7 +281,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", bench::measured_batches()[0])?;
     let mode = args.get_or("mode", "both").to_string();
     let backend = backend_from_args(args)?;
-    let device = device_from_args(args, bench::measured_device())?;
+    // The native backend tiles for the host's cache by default; the
+    // other backends keep the measured-mode (TPU-profile) device.
+    let default_device = if matches!(backend, BackendKind::Cpu { .. }) {
+        DeviceSpec::host_cpu()
+    } else {
+        bench::measured_device()
+    };
+    let device = device_from_args(args, default_device)?;
     args.reject_unknown()?;
 
     let engine_mode = match mode.as_str() {
@@ -335,22 +355,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "reject" => QueuePolicy::Reject,
         other => bail!("unknown queue policy '{other}' (block|reject)"),
     };
-    let pace: Option<f64> = match args.get("pace") {
-        None => None,
-        Some(v) => Some(
-            v.parse()
-                .map_err(|e| anyhow::anyhow!("--pace: bad number '{v}': {e}"))?,
-        ),
-    };
+    let pace: Option<f64> = args.get_f64("pace")?;
     args.reject_unknown()?;
 
     if pace.is_some() && !matches!(backend, BackendKind::Sim) {
         bail!("--pace only applies to the sim backend (add --backend sim)");
     }
+    let device = if matches!(backend, BackendKind::Cpu { .. }) {
+        DeviceSpec::host_cpu()
+    } else {
+        bench::measured_device()
+    };
     let batch = *bench::measured_batches().last().unwrap();
     let mut engine = Engine::builder()
         .zoo_small(&name, batch)
-        .device(bench::measured_device())
+        .device(device)
         .mode(if brainslug_mode {
             Mode::BrainSlug(bench::measured_opts())
         } else {

@@ -20,6 +20,11 @@ pub struct ParamStore {
     graph: Arc<Graph>,
     seed: u64,
     cache: HashMap<(NodeId, &'static str), HostTensor>,
+    /// Folded batch-norm (scale, shift) per node: computed once, so
+    /// repeated stack executions (`run_stack` gathers every bn op's
+    /// folded pair on every invocation) stop re-folding — see the
+    /// bn-gather microbench in `benches/optimizer_hotpath.rs`.
+    bn_cache: HashMap<NodeId, (HostTensor, HostTensor)>,
 }
 
 fn kind_of(tag_kind: &str) -> ParamKind {
@@ -40,6 +45,7 @@ impl ParamStore {
             graph,
             seed,
             cache: HashMap::new(),
+            bn_cache: HashMap::new(),
         }
     }
 
@@ -66,7 +72,11 @@ impl ParamStore {
 
     /// Folded batch-norm (scale, shift):
     /// `scale = gamma / sqrt(var + eps)`, `shift = beta - mean * scale`.
+    /// Cached per node after the first fold.
     pub fn bn_folded(&mut self, node: NodeId) -> (HostTensor, HostTensor) {
+        if let Some(pair) = self.bn_cache.get(&node) {
+            return pair.clone();
+        }
         let eps = match &self.graph.node(node).layer {
             Layer::BatchNorm2d { eps } => *eps,
             other => panic!("bn_folded on {other:?}"),
@@ -84,10 +94,12 @@ impl ParamStore {
             shift.push(beta.data[i] - mean.data[i] * s);
         }
         let shape = Shape::new(vec![c], gamma.shape.dtype);
-        (
+        let pair = (
             HostTensor::new(shape.clone(), scale),
             HostTensor::new(shape, shift),
-        )
+        );
+        self.bn_cache.insert(node, pair.clone());
+        pair
     }
 
     /// Runtime inputs for a layer executable, in artifact argument order:
@@ -157,6 +169,16 @@ mod tests {
             assert!((scale.data[i] - s).abs() < 1e-7);
             assert!((shift.data[i] - (beta.data[i] - mean.data[i] * s)).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn bn_fold_is_cached_and_stable() {
+        let g = bn_graph();
+        let mut p = ParamStore::new(g, 7);
+        let first = p.bn_folded(2);
+        // Second call hits the fold cache and must be identical.
+        let second = p.bn_folded(2);
+        assert_eq!(first, second);
     }
 
     #[test]

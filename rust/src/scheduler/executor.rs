@@ -12,6 +12,28 @@ use crate::runtime::{layer_exec_name, stack_exec_name, HostTensor, ParamStore, R
 
 use super::metrics::ExecStats;
 
+/// Consume one input of a node from the value map: decrement the
+/// remaining-consumer count and drop the map entry once the last
+/// consumer has taken it. Values are `Arc`-shared, so fan-out nodes
+/// (residual / concat skip planes) hand every consumer the same buffer
+/// instead of deep-copying the activation per edge — the scheme is
+/// shared between [`Executor`] and [`crate::cpu::CpuBackend`].
+pub(crate) fn take_value(
+    values: &mut HashMap<NodeId, Arc<HostTensor>>,
+    remaining: &mut [usize],
+    id: NodeId,
+) -> Result<Arc<HostTensor>> {
+    let v = values
+        .get(&id)
+        .ok_or_else(|| anyhow!("value for node {id} not computed yet"))?
+        .clone();
+    remaining[id] -= 1;
+    if remaining[id] == 0 {
+        values.remove(&id);
+    }
+    Ok(v)
+}
+
 /// Executes a fixed graph instance against a [`Runtime`], with
 /// deterministic parameters from seed.
 ///
@@ -53,27 +75,10 @@ impl Executor {
         )
     }
 
-    fn take_input(
-        &self,
-        values: &mut HashMap<NodeId, HostTensor>,
-        remaining: &mut [usize],
-        id: NodeId,
-    ) -> Result<HostTensor> {
-        let v = values
-            .get(&id)
-            .ok_or_else(|| anyhow!("value for node {id} not computed yet"))?;
-        remaining[id] -= 1;
-        if remaining[id] == 0 {
-            Ok(values.remove(&id).unwrap())
-        } else {
-            Ok(v.clone())
-        }
-    }
-
     /// Execute one non-stacked layer.
     fn run_single(
         &mut self,
-        values: &mut HashMap<NodeId, HostTensor>,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
         remaining: &mut [usize],
         id: NodeId,
         stats: &mut ExecStats,
@@ -84,7 +89,8 @@ impl Executor {
             Layer::Input { .. } => unreachable!("input node is pre-seeded"),
             // Scheduler-native ops: no kernel needed.
             Layer::Dropout { .. } => {
-                let x = self.take_input(values, remaining, node.inputs[0])?;
+                // Identity at inference: share the Arc, no copy.
+                let x = take_value(values, remaining, node.inputs[0])?;
                 stats.push(
                     format!("native:{}", node.name),
                     "dropout".into(),
@@ -95,27 +101,27 @@ impl Executor {
                 return Ok(());
             }
             Layer::Flatten => {
-                let x = self.take_input(values, remaining, node.inputs[0])?;
-                let out = x.reshape(node.shape.clone());
+                let x = take_value(values, remaining, node.inputs[0])?;
+                let out = Arc::unwrap_or_clone(x).reshape(node.shape.clone());
                 stats.push(
                     format!("native:{}", node.name),
                     "flatten".into(),
                     t0.elapsed().as_secs_f64(),
                     false,
                 );
-                values.insert(id, out);
+                values.insert(id, Arc::new(out));
                 return Ok(());
             }
             _ => {
                 let name = layer_exec_name(&self.graph, node)
                     .expect("non-native layer must have an executable");
-                let acts: Vec<HostTensor> = node
+                let acts: Vec<Arc<HostTensor>> = node
                     .inputs
                     .iter()
-                    .map(|&i| self.take_input(values, remaining, i))
+                    .map(|&i| take_value(values, remaining, i))
                     .collect::<Result<_>>()?;
                 let params = self.params.exec_params(id);
-                let mut args: Vec<&HostTensor> = acts.iter().collect();
+                let mut args: Vec<&HostTensor> = acts.iter().map(|a| a.as_ref()).collect();
                 args.extend(params.iter());
                 let out = self.runtime.execute(&name, &args)?;
                 stats.push(
@@ -127,21 +133,21 @@ impl Executor {
                 out
             }
         };
-        values.insert(id, out);
+        values.insert(id, Arc::new(out));
         Ok(())
     }
 
     /// Execute a collapsed stack through its fused executable.
     fn run_stack(
         &mut self,
-        values: &mut HashMap<NodeId, HostTensor>,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
         remaining: &mut [usize],
         stack: &Stack,
         stats: &mut ExecStats,
     ) -> Result<()> {
         let t0 = std::time::Instant::now();
         let first = self.graph.node(stack.nodes[0]);
-        let x = self.take_input(values, remaining, first.inputs[0])?;
+        let x = take_value(values, remaining, first.inputs[0])?;
         // Gather folded BN params for every bn op, in op order (§4.2:
         // "the front-end gathers all necessary data and parameter
         // tensors").
@@ -158,7 +164,7 @@ impl Executor {
             }
         }
         let name = stack_exec_name(stack);
-        let mut args: Vec<&HostTensor> = vec![&x];
+        let mut args: Vec<&HostTensor> = vec![x.as_ref()];
         args.extend(bn_params.iter());
         let out = self.runtime.execute(&name, &args)?;
         // Interior nodes were never materialized; mark their consumers
@@ -171,7 +177,7 @@ impl Executor {
             }
         }
         stats.push(name, "stack".into(), t0.elapsed().as_secs_f64(), true);
-        values.insert(last, out);
+        values.insert(last, Arc::new(out));
         Ok(())
     }
 
@@ -181,14 +187,14 @@ impl Executor {
         let mut stats = ExecStats::default();
         let mut values = HashMap::new();
         let mut remaining = self.consumers.clone();
-        values.insert(0usize, input);
+        values.insert(0usize, Arc::new(input));
         for id in 1..self.graph.nodes.len() {
             self.run_single(&mut values, &mut remaining, id, &mut stats)?;
         }
         let out = values
             .remove(&self.graph.output)
             .ok_or_else(|| anyhow!("output not computed"))?;
-        Ok((out, stats))
+        Ok((Arc::unwrap_or_clone(out), stats))
     }
 
     /// Execute one plan segment. Branch segments run depth-first
@@ -198,7 +204,7 @@ impl Executor {
     /// the single/stack machinery applies inside arms unchanged.
     fn run_segment(
         &mut self,
-        values: &mut HashMap<NodeId, HostTensor>,
+        values: &mut HashMap<NodeId, Arc<HostTensor>>,
         remaining: &mut [usize],
         seg: &Segment,
         stats: &mut ExecStats,
@@ -224,14 +230,14 @@ impl Executor {
         let mut stats = ExecStats::default();
         let mut values = HashMap::new();
         let mut remaining = self.consumers.clone();
-        values.insert(0usize, input);
+        values.insert(0usize, Arc::new(input));
         for seg in &plan.segments {
             self.run_segment(&mut values, &mut remaining, seg, &mut stats)?;
         }
         let out = values
             .remove(&self.graph.output)
             .ok_or_else(|| anyhow!("output not computed"))?;
-        Ok((out, stats))
+        Ok((Arc::unwrap_or_clone(out), stats))
     }
 
     fn check_input(&self, input: &HostTensor) -> Result<()> {

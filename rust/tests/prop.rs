@@ -11,6 +11,7 @@ use brainslug::graph::{Graph, Layer, PoolKind, Shape, Window2d};
 use brainslug::memsim::{graph_cost_bf, sequence_cost_df, simulate_baseline, simulate_plan};
 use brainslug::optimizer::{optimize, CollapseOptions, Segment};
 use brainslug::rng::splitmix64;
+use brainslug::runtime::{HostTensor, ParamStore};
 
 /// Deterministic random usize in [lo, hi].
 fn rand_in(state: &mut u64, lo: usize, hi: usize) -> usize {
@@ -373,6 +374,265 @@ fn branchy_plans_execute_on_sim_with_oracle_parity() {
             .count();
         assert_eq!(joins, blocks, "seed {seed}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Native CPU backend: numeric parity between the breadth-first baseline
+// and the depth-first band walker.
+//
+// Tolerances: both schedules share the pooling / affine arithmetic
+// (`cpu::kernels::pool_window`, same per-element expressions) and the
+// non-stacked segments execute the very same kernels, so they are
+// expected to agree *bitwise*; atol = rtol = 1e-6 only leaves headroom
+// for a future reassociating (e.g. SIMD-blocked) kernel rewrite.
+const CPU_ATOL: f32 = 1e-6;
+const CPU_RTOL: f32 = 1e-6;
+
+/// Small random chains for the CPU-backend parity sweep. The shapes are
+/// deliberately tiny (real convolutions in debug builds); the structure
+/// space matches `random_chain`: bn / relu / dropout / max+avg pools /
+/// 3x3 convs in any order.
+fn random_small_chain(seed: u64) -> Graph {
+    let mut st = seed ^ 0xC4;
+    let c = rand_in(&mut st, 1, 6);
+    let h = rand_in(&mut st, 8, 18);
+    let mut g = Graph::new(
+        format!("cpu{seed}"),
+        Shape::nchw(rand_in(&mut st, 1, 2), c, h, h),
+    );
+    let n_layers = rand_in(&mut st, 2, 9);
+    for i in 0..n_layers {
+        let cur_h = g.output_shape().height();
+        match rand_in(&mut st, 0, 5) {
+            0 => {
+                g.push(format!("bn{i}"), Layer::BatchNorm2d { eps: 1e-5 });
+            }
+            1 => {
+                g.push(format!("relu{i}"), Layer::Relu);
+            }
+            2 => {
+                g.push(format!("drop{i}"), Layer::Dropout { p: 0.5 });
+            }
+            3 if cur_h >= 4 => {
+                let k = rand_in(&mut st, 2, 3);
+                let s = rand_in(&mut st, 1, 2);
+                let p = rand_in(&mut st, 0, k / 2);
+                g.push(
+                    format!("pool{i}"),
+                    Layer::Pool2d {
+                        kind: if rand_in(&mut st, 0, 1) == 0 {
+                            PoolKind::Max
+                        } else {
+                            PoolKind::Avg
+                        },
+                        window: Window2d::square(k, s, p),
+                        ceil_mode: false,
+                        count_include_pad: true,
+                    },
+                );
+            }
+            4 if cur_h >= 3 => {
+                g.push(
+                    format!("conv{i}"),
+                    Layer::Conv2d {
+                        out_channels: rand_in(&mut st, 1, 6),
+                        window: Window2d::square(3, 1, 1),
+                        bias: rand_in(&mut st, 0, 1) == 0,
+                    },
+                );
+            }
+            _ => {
+                g.push(format!("relu_b{i}"), Layer::Relu);
+            }
+        }
+    }
+    g
+}
+
+fn cpu_engine(g: Graph, seed: u64, threads: usize) -> Engine {
+    Engine::builder()
+        .graph_owned(g)
+        .device(DeviceSpec::host_cpu())
+        .cpu(threads)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn cpu_depth_first_matches_breadth_first_on_random_chains() {
+    for seed in 0..10 {
+        let g = random_small_chain(seed);
+        let mut eng = cpu_engine(g, seed, 2);
+        let input = eng.synthetic_input();
+        let (base, _) = eng.run_baseline(input.clone()).unwrap();
+        let (df, stats) = eng.run(input).unwrap();
+        assert!(
+            base.allclose(&df, CPU_ATOL, CPU_RTOL),
+            "seed {seed}: schedules diverge, max |diff| = {:.3e}",
+            base.max_abs_diff(&df)
+        );
+        // Plans with stacks must actually have exercised the walker.
+        if eng.plan().unwrap().num_stacks() > 0 {
+            assert!(
+                stats.segments.iter().any(|s| s.kind == "stack"),
+                "seed {seed}: no stack segment executed"
+            );
+        }
+    }
+}
+
+#[test]
+fn cpu_backend_parity_on_random_branchy_dags() {
+    // Residual adds and concats: skip planes are Arc-shared across the
+    // arms, branch arms execute depth-first, and the two schedules must
+    // still agree.
+    for seed in 0..8 {
+        let (g, blocks) = random_branchy(seed);
+        let mut eng = cpu_engine(g, seed, 2);
+        assert_eq!(eng.plan().unwrap().num_branches(), blocks, "seed {seed}");
+        let input = eng.synthetic_input();
+        let (base, _) = eng.run_baseline(input.clone()).unwrap();
+        let (df, _) = eng.run(input).unwrap();
+        assert!(
+            base.allclose(&df, CPU_ATOL, CPU_RTOL),
+            "seed {seed}: schedules diverge, max |diff| = {:.3e}",
+            base.max_abs_diff(&df)
+        );
+    }
+}
+
+/// Fixed-seed golden for one vgg16 block
+/// (conv3x3 → relu → conv3x3 → relu → maxpool2x2s2) at reduced width:
+/// the native backend must match an *independent* naive reference
+/// (different loop nest, f64 accumulation) within atol = rtol = 1e-4 —
+/// the tolerance covers f32-vs-f64 accumulation-order divergence; the
+/// two native schedules themselves must agree bitwise, and the whole
+/// pipeline must be deterministic across backend instances.
+#[test]
+fn cpu_vgg16_block_golden() {
+    fn conv3x3_ref(x: &HostTensor, w: &HostTensor, b: &HostTensor) -> HostTensor {
+        let (n, ci, h, wd) = (
+            x.shape.batch(),
+            x.shape.channels(),
+            x.shape.height(),
+            x.shape.width(),
+        );
+        let oc = w.shape.dims[0];
+        let mut out = HostTensor::zeros(Shape::nchw(n, oc, h, wd));
+        for bi in 0..n {
+            for o in 0..oc {
+                for y in 0..h {
+                    for x0 in 0..wd {
+                        let mut acc = b.data[o] as f64;
+                        for c in 0..ci {
+                            for ky in 0..3usize {
+                                for kx in 0..3usize {
+                                    let iy = y as isize + ky as isize - 1;
+                                    let ix = x0 as isize + kx as isize - 1;
+                                    if iy < 0
+                                        || ix < 0
+                                        || iy >= h as isize
+                                        || ix >= wd as isize
+                                    {
+                                        continue;
+                                    }
+                                    let xv = x.data
+                                        [((bi * ci + c) * h + iy as usize) * wd + ix as usize];
+                                    let wv = w.data[((o * ci + c) * 3 + ky) * 3 + kx];
+                                    acc += xv as f64 * wv as f64;
+                                }
+                            }
+                        }
+                        out.data[((bi * oc + o) * h + y) * wd + x0] = acc as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+    fn relu_ref(x: &HostTensor) -> HostTensor {
+        HostTensor::new(
+            x.shape.clone(),
+            x.data.iter().map(|v| if *v > 0.0 { *v } else { 0.0 }).collect(),
+        )
+    }
+    fn maxpool2x2_ref(x: &HostTensor) -> HostTensor {
+        let (n, c, h, w) = (
+            x.shape.batch(),
+            x.shape.channels(),
+            x.shape.height(),
+            x.shape.width(),
+        );
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = HostTensor::zeros(Shape::nchw(n, c, oh, ow));
+        for p in 0..n * c {
+            for y in 0..oh {
+                for x0 in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            m = m.max(x.data[(p * h + 2 * y + dy) * w + 2 * x0 + dx]);
+                        }
+                    }
+                    out.data[(p * oh + y) * ow + x0] = m;
+                }
+            }
+        }
+        out
+    }
+
+    let mut g = Graph::new("vgg16_block", Shape::nchw(2, 3, 12, 12));
+    let conv = |oc: usize| Layer::Conv2d {
+        out_channels: oc,
+        window: Window2d::square(3, 1, 1),
+        bias: true,
+    };
+    g.push("conv1", conv(8));
+    g.push("relu1", Layer::Relu);
+    g.push("conv2", conv(8));
+    g.push("relu2", Layer::Relu);
+    g.push(
+        "pool",
+        Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(2, 2, 0),
+            ceil_mode: false,
+            count_include_pad: true,
+        },
+    );
+    let seed = 42u64;
+
+    // Independent reference over the same deterministic param streams.
+    let shared = std::sync::Arc::new(g.clone());
+    let mut params = ParamStore::new(shared, seed);
+    let input = HostTensor::from_seed(
+        g.input_shape().clone(),
+        brainslug::rng::tensor_seed(seed, "input"),
+        brainslug::rng::ParamKind::Activation,
+    );
+    let mut want = conv3x3_ref(&input, &params.raw(1, "weight"), &params.raw(1, "bias"));
+    want = relu_ref(&want);
+    want = conv3x3_ref(&want, &params.raw(3, "weight"), &params.raw(3, "bias"));
+    want = relu_ref(&want);
+    want = maxpool2x2_ref(&want);
+
+    let mut eng = cpu_engine(g.clone(), seed, 2);
+    let eng_input = eng.synthetic_input();
+    assert_eq!(eng_input, input, "engine input drifts from the rng stream");
+    let (base, _) = eng.run_baseline(input.clone()).unwrap();
+    let (df, _) = eng.run(input.clone()).unwrap();
+    assert_eq!(base, df, "native schedules must agree bitwise here");
+    assert_eq!(base.shape, want.shape);
+    assert!(
+        base.allclose(&want, 1e-4, 1e-4),
+        "native backend diverges from the reference: max |diff| = {:.3e}",
+        base.max_abs_diff(&want)
+    );
+    // Determinism: a fresh engine reproduces the outputs bit-for-bit.
+    let mut eng2 = cpu_engine(g, seed, 1);
+    let (df2, _) = eng2.run(input).unwrap();
+    assert_eq!(df, df2, "cpu backend is not deterministic across instances");
 }
 
 #[test]
