@@ -50,11 +50,16 @@ fn main() {
     for &name in &NETS {
         for &batch in &BATCHES {
             for &threads in &THREADS {
+                // `no_profile`: this bench measures the *default preset*
+                // schedule; a previously tuned profile cache must not
+                // silently change what the rows mean (fig17 covers the
+                // tuned-vs-default comparison).
                 let mut eng = Engine::builder()
                     .zoo_small(name, batch)
                     .device(DeviceSpec::host_cpu())
                     .brainslug(Default::default())
                     .cpu(threads)
+                    .no_profile()
                     .seed(bench::oracle_seed())
                     .build()
                     .unwrap();

@@ -1,0 +1,104 @@
+//! Figure 17 (repro extension): autotuned vs default-preset collapse
+//! configuration, measured on the native CPU backend.
+//!
+//! For each zoo network swept, the autotuner runs its full pipeline —
+//! memsim cost-model pre-pass over the candidate space, timed runs
+//! (warmup + median-of-N with early-exit pruning) on
+//! [`brainslug::cpu::CpuBackend`], then an interleaved head-to-head
+//! re-match of the sweep winner against the device-preset default. The
+//! default preset is always fully measured and wins ties/lost
+//! re-matches, so `tuned <= default` holds per point by construction;
+//! the interesting output is *how much* the preset leaves on the table
+//! per network and thread count. Baseline-schedule parity is asserted
+//! on every winning config inside `autotune::tune` (transparency
+//! first, speed second — same contract as fig13).
+//!
+//! Acceptance: tuned measured time <= default measured time on every
+//! swept point, and strictly faster on at least one (a search over
+//! budget scale × band caps on real hardware should beat a static
+//! preset somewhere; if it never does, the tuner is broken).
+
+use std::sync::Arc;
+
+use brainslug::autotune::{self, TuneLevel};
+use brainslug::bench::{self, fmt_pct, fmt_time, Table};
+use brainslug::device::DeviceSpec;
+use brainslug::json::Json;
+use brainslug::zoo;
+
+const NETS: [&str; 4] = ["vgg16", "resnet18", "densenet121", "squeezenet1_1"];
+const THREADS: [usize; 2] = [1, 2];
+
+fn main() {
+    println!("# Figure 17 — autotuned vs default-preset collapse config, native CPU backend");
+    println!("reduced scale (64^2, quarter width), batch 1, tune level fast\n");
+    let device = DeviceSpec::host_cpu();
+    let mut table = Table::new(&[
+        "network", "threads", "default", "tuned", "gain", "winner", "measured", "pruned",
+    ]);
+    let mut rows = Vec::new();
+    let mut best_gain = f64::NEG_INFINITY;
+    for &name in &NETS {
+        let graph = Arc::new(
+            zoo::try_build(name, zoo::small_config(name, 1)).expect("zoo network"),
+        );
+        let outcome =
+            autotune::tune(&graph, &device, bench::oracle_seed(), TuneLevel::Fast, &THREADS)
+                .expect("tuning must succeed (parity is asserted inside)");
+        let pruned = outcome.measured.iter().filter(|m| m.pruned).count();
+        for tr in &outcome.per_thread {
+            let gain = tr.gain_pct();
+            best_gain = best_gain.max(gain);
+            // Per-point acceptance: tuning never regresses.
+            assert!(
+                tr.tuned_s <= tr.default_s,
+                "{name} t{}: tuned {} > default {}",
+                tr.threads,
+                tr.tuned_s,
+                tr.default_s
+            );
+            table.row(vec![
+                name.to_string(),
+                tr.threads.to_string(),
+                fmt_time(tr.default_s),
+                fmt_time(tr.tuned_s),
+                fmt_pct(gain),
+                tr.winner.label.clone(),
+                outcome.candidates_measured.to_string(),
+                pruned.to_string(),
+            ]);
+            let mut row = Json::object();
+            row.set("bench", Json::Str("fig17_autotune".into()));
+            row.set("net", Json::Str(name.into()));
+            row.set("batch", Json::from_usize(1));
+            row.set("threads", Json::from_usize(tr.threads));
+            row.set("backend", Json::Str("cpu".into()));
+            row.set("device", Json::Str(device.name.clone()));
+            row.set("default_s", Json::Num(tr.default_s));
+            row.set("tuned_s", Json::Num(tr.tuned_s));
+            row.set("gain_pct", Json::Num(gain));
+            row.set("winner", Json::Str(tr.winner.label.clone()));
+            row.set(
+                "candidates_total",
+                Json::from_usize(outcome.candidates_total),
+            );
+            row.set(
+                "candidates_measured",
+                Json::from_usize(outcome.candidates_measured),
+            );
+            row.set("candidates_pruned", Json::from_usize(pruned));
+            rows.push(row);
+        }
+    }
+    table.print();
+    println!(
+        "\nbest measured tuning gain over the device preset: {}",
+        fmt_pct(best_gain)
+    );
+    bench::emit_bench_json("fig17_autotune", rows);
+    assert!(
+        best_gain > 0.0,
+        "acceptance: the tuner must beat the default preset on at least one \
+         network × thread point (best gain {best_gain:+.1}%)"
+    );
+}

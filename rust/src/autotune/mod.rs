@@ -1,0 +1,463 @@
+//! The autotuning subsystem: search the plan space on real hardware,
+//! persist per-network profiles.
+//!
+//! The paper's hardware-adaptation story (§4.4) derives collapse
+//! budgets from *static* device parameters. With a native backend that
+//! really executes ([`crate::cpu`]) we can do what the paper could not:
+//! **measure** each candidate plan and pick the empirically fastest
+//! one — the framework-level tuning dimension highlighted by Wang et
+//! al. (arXiv:1908.04705) — while keeping the zero-user-effort
+//! transparency promise: tuning pays once, the winner persists to a
+//! profile cache that [`crate::engine::EngineBuilder`] loads
+//! automatically on every later `run`/`serve`.
+//!
+//! ## Pipeline
+//!
+//! ```text
+//!  candidate_space(level)          12–90 collapse configs (budget ×
+//!        │                         band-height caps), TuneLevel-sized
+//!        ▼
+//!  rank_by_cost_model()            memsim pre-pass: plan every config,
+//!        │  keep top-K + default   predict its time, prune the rest
+//!        ▼
+//!  timed runs on CpuBackend        warmup + median-of-N per candidate
+//!        │  early-exit pruning     × thread count; a first run slower
+//!        ▼                         than 1.5× the incumbent is dropped
+//!  head-to-head + parity           winner vs default re-measured
+//!        │                         interleaved (min-of-N); baseline
+//!        ▼                         parity asserted on the winner
+//!  Profile → ProfileStore          keyed signature × device × threads
+//! ```
+//!
+//! The default preset is always fully measured and wins ties, so
+//! `tuned_s <= default_s` holds for every [`ThreadResult`] by
+//! construction — tuning can only help, never silently regress.
+
+pub mod profile;
+pub mod search;
+
+pub use profile::{describe_opts, graph_signature, profile_key, Profile, ProfileStore};
+pub use search::{candidate_space, rank_by_cost_model, survivors, Candidate};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::device::DeviceSpec;
+use crate::engine::Engine;
+use crate::graph::Graph;
+use crate::optimizer::CollapseOptions;
+use crate::runtime::HostTensor;
+
+/// How hard to search: `Fast` for CI smokes and transparent first-run
+/// tuning, `Full` for overnight profiling of a serving fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneLevel {
+    Fast,
+    Full,
+}
+
+impl TuneLevel {
+    /// Parse a CLI level name (`brainslug tune --budget fast|full`).
+    pub fn parse(name: &str) -> Result<TuneLevel> {
+        match name {
+            "fast" => Ok(TuneLevel::Fast),
+            "full" => Ok(TuneLevel::Full),
+            other => bail!("unknown tune budget '{other}' (fast|full)"),
+        }
+    }
+
+    /// Candidates that graduate from the cost-model pre-pass.
+    pub fn top_k(self) -> usize {
+        match self {
+            TuneLevel::Fast => 4,
+            TuneLevel::Full => 8,
+        }
+    }
+
+    /// Timed repetitions per measured candidate (median taken).
+    pub fn iters(self) -> usize {
+        match self {
+            TuneLevel::Fast => 3,
+            TuneLevel::Full => 5,
+        }
+    }
+}
+
+/// A candidate's first timed run must stay within this factor of the
+/// incumbent best or the remaining repetitions are skipped.
+const EARLY_EXIT_FACTOR: f64 = 1.5;
+
+/// One measured point of the tuning run (for reports and benches).
+#[derive(Debug, Clone)]
+pub struct MeasuredCandidate {
+    pub label: String,
+    pub opts: CollapseOptions,
+    pub threads: usize,
+    /// memsim cost-model prediction (the pre-pass ranking key).
+    pub predicted_s: f64,
+    /// Median of the timed runs — or the single probe run when pruned.
+    pub measured_s: f64,
+    /// True when early-exit pruning skipped the remaining repetitions.
+    pub pruned: bool,
+}
+
+/// The tuning verdict for one thread count.
+#[derive(Debug, Clone)]
+pub struct ThreadResult {
+    pub threads: usize,
+    /// Winning configuration (the default preset when nothing beat it).
+    pub winner: Candidate,
+    /// Head-to-head measured time of the default preset (seconds).
+    pub default_s: f64,
+    /// Head-to-head measured time of the winner; `<= default_s` by
+    /// construction (the default wins ties and lost re-matches).
+    pub tuned_s: f64,
+    /// The persistable record of this verdict.
+    pub profile: Profile,
+}
+
+impl ThreadResult {
+    /// Measured improvement over the default preset, in the paper's
+    /// speed-up convention (`>= 0`).
+    pub fn gain_pct(&self) -> f64 {
+        crate::memsim::speedup_pct(self.default_s, self.tuned_s)
+    }
+}
+
+/// Everything a tuning run learned.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub network: String,
+    pub signature: String,
+    pub device: String,
+    /// Size of the full candidate space before the cost-model pre-pass.
+    pub candidates_total: usize,
+    /// Candidates that survived the pre-pass (measured per thread).
+    pub candidates_measured: usize,
+    pub measured: Vec<MeasuredCandidate>,
+    pub per_thread: Vec<ThreadResult>,
+}
+
+impl TuneOutcome {
+    /// The thread result with the largest measured gain.
+    pub fn best(&self) -> &ThreadResult {
+        self.per_thread
+            .iter()
+            .max_by(|a, b| a.gain_pct().total_cmp(&b.gain_pct()))
+            .expect("tune() always yields at least one thread result")
+    }
+}
+
+/// Thread counts a no-flag `brainslug tune` sweeps: powers of two up to
+/// the host's parallelism (capped at 8), plus the exact core count.
+pub fn default_thread_sweep() -> Vec<usize> {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    let mut v: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= cores)
+        .collect();
+    if !v.contains(&cores) {
+        v.push(cores);
+    }
+    v
+}
+
+fn cpu_engine(
+    graph: &Arc<Graph>,
+    device: &DeviceSpec,
+    seed: u64,
+    opts: CollapseOptions,
+    threads: usize,
+) -> Result<Engine> {
+    // `no_profile` matters: the default-preset candidate must measure
+    // the *actual* preset, not a previously tuned profile.
+    Engine::builder()
+        .graph(graph.clone())
+        .device(device.clone())
+        .brainslug(opts)
+        .cpu(threads)
+        .no_profile()
+        .seed(seed)
+        .build()
+}
+
+/// Warmup-free timed loop (callers warm up first): `iters` runs, median
+/// returned. When `early_exit_above` is set and the first run exceeds
+/// it, the remaining runs are skipped and `(first_run, true)` returns.
+fn timed_median(
+    engine: &mut Engine,
+    input: &HostTensor,
+    iters: usize,
+    early_exit_above: Option<f64>,
+) -> Result<(f64, bool)> {
+    let iters = iters.max(1);
+    let mut ts = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        engine.run(input.clone())?;
+        ts.push(t0.elapsed().as_secs_f64());
+        if i == 0 {
+            if let Some(limit) = early_exit_above {
+                if ts[0] > limit {
+                    return Ok((ts[0], true));
+                }
+            }
+        }
+    }
+    ts.sort_by(f64::total_cmp);
+    Ok((ts[ts.len() / 2], false))
+}
+
+/// Final verdict for one thread count: re-measure the challenger against
+/// the default preset *interleaved* (min-of-N per side, robust to
+/// machine drift during the candidate sweep). A challenger that loses
+/// the re-match is discarded — the default preset is the winner and
+/// `tuned_s == default_s`, so tuning never regresses.
+fn head_to_head(
+    graph: &Arc<Graph>,
+    device: &DeviceSpec,
+    seed: u64,
+    threads: usize,
+    challenger: &Candidate,
+    level: TuneLevel,
+) -> Result<(f64, f64, Candidate)> {
+    let mut de = cpu_engine(graph, device, seed, CollapseOptions::default(), threads)?;
+    let mut ce = cpu_engine(graph, device, seed, challenger.opts, threads)?;
+    let input = de.synthetic_input();
+    de.run(input.clone())?;
+    ce.run(input.clone())?;
+    let rounds = level.iters().max(3);
+    let (mut d_best, mut c_best) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        de.run(input.clone())?;
+        d_best = d_best.min(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        ce.run(input.clone())?;
+        c_best = c_best.min(t0.elapsed().as_secs_f64());
+    }
+    if c_best < d_best {
+        Ok((d_best, c_best, challenger.clone()))
+    } else {
+        Ok((d_best, d_best, Candidate::default_preset()))
+    }
+}
+
+/// The winning schedule must stay numerically transparent: baseline
+/// breadth-first vs the tuned depth-first plan, `allclose` at the same
+/// tolerance `brainslug run` enforces.
+fn check_parity(
+    graph: &Arc<Graph>,
+    device: &DeviceSpec,
+    seed: u64,
+    threads: usize,
+    opts: CollapseOptions,
+) -> Result<()> {
+    let mut engine = cpu_engine(graph, device, seed, opts, threads)?;
+    let input = engine.synthetic_input();
+    let (base, _) = engine.run_baseline(input.clone())?;
+    let (df, _) = engine.run(input)?;
+    ensure!(
+        base.allclose(&df, 1e-4, 1e-4),
+        "autotune: winning config breaks parity with the baseline schedule \
+         (max |diff| = {:.3e})",
+        base.max_abs_diff(&df)
+    );
+    Ok(())
+}
+
+/// Tune `graph` on `device` for each thread count in `threads`:
+/// cost-model pre-pass, timed runs on the native CPU backend, and a
+/// parity-checked head-to-head verdict per thread count. See the
+/// module docs for the full pipeline.
+pub fn tune(
+    graph: &Arc<Graph>,
+    device: &DeviceSpec,
+    seed: u64,
+    level: TuneLevel,
+    threads: &[usize],
+) -> Result<TuneOutcome> {
+    ensure!(!threads.is_empty(), "autotune: empty thread-count list");
+    for &t in threads {
+        ensure!(t >= 1, "autotune: thread counts must be >= 1 (got {t})");
+    }
+    graph
+        .validate()
+        .map_err(|e| anyhow!("autotune: invalid graph '{}': {e}", graph.name))?;
+
+    let space = candidate_space(level, device);
+    let candidates_total = space.len();
+    let ranked = rank_by_cost_model(graph, device, space);
+    let short_list = survivors(ranked, level.top_k());
+    let candidates_measured = short_list.len();
+
+    let nt = threads.len();
+    let mut measured: Vec<MeasuredCandidate> = Vec::new();
+    // Per-thread incumbents: (median_seconds, short_list index).
+    let mut best: Vec<Option<(f64, usize)>> = vec![None; nt];
+    let mut default_median: Vec<Option<f64>> = vec![None; nt];
+
+    for (si, (cand, predicted_s)) in short_list.iter().enumerate() {
+        // One engine per collapse config; `set_threads` sweeps the
+        // thread dimension without rebuilding the parameter caches.
+        let mut engine = cpu_engine(graph, device, seed, cand.opts, threads[0])?;
+        let input = engine.synthetic_input();
+        for (ti, &t) in threads.iter().enumerate() {
+            ensure!(
+                engine.set_threads(t),
+                "autotune: backend '{}' has no thread knob",
+                engine.backend_name()
+            );
+            engine.run(input.clone())?; // warmup at this thread count
+            let limit = if cand.is_default() {
+                None // the anchor is always fully measured
+            } else {
+                best[ti].map(|(b, _)| b * EARLY_EXIT_FACTOR)
+            };
+            let (t_med, pruned) = timed_median(&mut engine, &input, level.iters(), limit)?;
+            if !pruned && best[ti].is_none_or(|(b, _)| t_med < b) {
+                best[ti] = Some((t_med, si));
+            }
+            if cand.is_default() {
+                default_median[ti] = Some(t_med);
+            }
+            measured.push(MeasuredCandidate {
+                label: cand.label.clone(),
+                opts: cand.opts,
+                threads: t,
+                predicted_s: *predicted_s,
+                measured_s: t_med,
+                pruned,
+            });
+        }
+    }
+
+    let signature = graph_signature(graph);
+    let mut per_thread = Vec::with_capacity(nt);
+    // Parity is determined by the collapse options, not the thread
+    // count (band geometry is thread-invariant), so verify each
+    // distinct winning config once instead of once per thread result.
+    let mut parity_checked: Vec<CollapseOptions> = Vec::new();
+    for (ti, &t) in threads.iter().enumerate() {
+        let (sweep_best_s, bi) = best[ti].expect("first candidate is never pruned");
+        let d_med = default_median[ti].expect("the default preset is always measured");
+        let sweep_winner = short_list[bi].0.clone();
+        let (default_s, tuned_s, winner) = if sweep_winner.is_default() {
+            (d_med, sweep_best_s, sweep_winner)
+        } else {
+            head_to_head(graph, device, seed, t, &sweep_winner, level)?
+        };
+        if !parity_checked.contains(&winner.opts) {
+            check_parity(graph, device, seed, t, winner.opts)?;
+            parity_checked.push(winner.opts);
+        }
+        let profile = Profile {
+            network: graph.name.clone(),
+            signature: signature.clone(),
+            device: device.name.clone(),
+            threads: t,
+            opts: winner.opts,
+            tuned_s,
+            default_s,
+        };
+        per_thread.push(ThreadResult {
+            threads: t,
+            winner,
+            default_s,
+            tuned_s,
+            profile,
+        });
+    }
+
+    Ok(TuneOutcome {
+        network: graph.name.clone(),
+        signature,
+        device: device.name.clone(),
+        candidates_total,
+        candidates_measured,
+        measured,
+        per_thread,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+
+    #[test]
+    fn tune_level_parses() {
+        assert_eq!(TuneLevel::parse("fast").unwrap(), TuneLevel::Fast);
+        assert_eq!(TuneLevel::parse("full").unwrap(), TuneLevel::Full);
+        assert!(TuneLevel::parse("overnight").is_err());
+    }
+
+    #[test]
+    fn default_thread_sweep_is_sane() {
+        let sweep = default_thread_sweep();
+        assert!(!sweep.is_empty());
+        assert_eq!(sweep[0], 1);
+        for t in &sweep {
+            assert!(*t >= 1 && *t <= 8);
+        }
+    }
+
+    #[test]
+    fn tune_rejects_bad_thread_lists() {
+        let g = Arc::new(bench::block_net(1, 1, 2, 8));
+        let device = DeviceSpec::host_cpu();
+        assert!(tune(&g, &device, 1, TuneLevel::Fast, &[]).is_err());
+        assert!(tune(&g, &device, 1, TuneLevel::Fast, &[0]).is_err());
+    }
+
+    #[test]
+    fn tune_block_net_end_to_end() {
+        // A tiny fully-optimizable net through the whole pipeline:
+        // pre-pass, timed sweep, head-to-head, parity.
+        let g = Arc::new(bench::block_net(2, 1, 2, 12));
+        let device = DeviceSpec::host_cpu();
+        let outcome = tune(&g, &device, 7, TuneLevel::Fast, &[1]).unwrap();
+        assert_eq!(outcome.per_thread.len(), 1);
+        assert!(outcome.candidates_measured <= outcome.candidates_total);
+        let tr = &outcome.per_thread[0];
+        assert!(tr.tuned_s > 0.0 && tr.default_s > 0.0);
+        assert!(
+            tr.tuned_s <= tr.default_s,
+            "tuning regressed: {} > {}",
+            tr.tuned_s,
+            tr.default_s
+        );
+        assert!(tr.gain_pct() >= 0.0);
+        // The default anchor is always fully measured (never pruned).
+        assert!(outcome
+            .measured
+            .iter()
+            .any(|m| m.opts == CollapseOptions::default() && !m.pruned));
+        // The persistable profile matches the verdict.
+        assert_eq!(tr.profile.threads, 1);
+        assert_eq!(tr.profile.opts, tr.winner.opts);
+        assert_eq!(tr.profile.signature, outcome.signature);
+    }
+
+    #[test]
+    fn tune_sweeps_multiple_thread_counts() {
+        let g = Arc::new(bench::block_net(1, 1, 2, 10));
+        let device = DeviceSpec::host_cpu();
+        let outcome = tune(&g, &device, 3, TuneLevel::Fast, &[1, 2]).unwrap();
+        assert_eq!(outcome.per_thread.len(), 2);
+        assert_eq!(outcome.per_thread[0].threads, 1);
+        assert_eq!(outcome.per_thread[1].threads, 2);
+        // Every measured point carries a positive time.
+        for m in &outcome.measured {
+            assert!(m.measured_s > 0.0 && m.predicted_s > 0.0);
+        }
+        // best() picks one of the thread results.
+        let best = outcome.best();
+        assert!(outcome.per_thread.iter().any(|t| t.threads == best.threads));
+    }
+}

@@ -1,0 +1,385 @@
+//! The persistent profile cache: tuning pays once, every later run is
+//! faster with zero flags.
+//!
+//! A [`Profile`] records the winning [`CollapseOptions`] (plus the
+//! measured evidence) for one *tuning key* — network signature ×
+//! device × thread count. The [`ProfileStore`] serializes profiles to a
+//! small JSON file (default `~/.brainslug/profiles.json`, see
+//! [`ProfileStore::default_path`]); `EngineBuilder` transparently loads
+//! it on later `run`/`serve` invocations, so the zero-user-effort
+//! transparency promise of the source paper extends to hardware
+//! adaptation: nothing about the caller's code changes, the plan just
+//! gets the empirically fastest configuration for this machine.
+//!
+//! Robustness rules (covered by the tests below):
+//! * a missing file is an empty store — first `tune` creates it;
+//! * a corrupt or wrong-version file degrades to an empty store with a
+//!   one-line warning, never a crash (the next `save` repairs it);
+//! * a malformed entry is skipped with a warning, healthy entries load;
+//! * lookups miss (fall back to the device preset) whenever the
+//!   network structure, device, or thread count differs from what was
+//!   tuned — the key encodes all three.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::graph::Graph;
+use crate::json::{self, Json};
+use crate::optimizer::{fnv64_hex, CollapseOptions};
+
+/// Schema version of `profiles.json`. Bump on incompatible change; old
+/// files then degrade to "no profiles" rather than misapplying configs.
+const VERSION: usize = 1;
+
+/// Structural signature of a network: FNV-1a over the canonical JSON
+/// serialization (layer kinds, windows, shapes — batch included — and
+/// wiring). Two graphs tune interchangeably iff their signatures match.
+pub fn graph_signature(g: &Graph) -> String {
+    fnv64_hex(&crate::graph::graph_to_json(g).to_string_compact())
+}
+
+/// Cache key: network signature × device name × thread count.
+pub fn profile_key(signature: &str, device: &str, threads: usize) -> String {
+    format!("{signature}|{device}|t{threads}")
+}
+
+/// One tuned configuration with its measured evidence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// Human-readable network name (debugging only; the signature is
+    /// what lookups key on).
+    pub network: String,
+    pub signature: String,
+    /// Device preset name the tuning ran against.
+    pub device: String,
+    pub threads: usize,
+    /// The winning collapse configuration.
+    pub opts: CollapseOptions,
+    /// Measured time of the winner (head-to-head, min-of-N seconds).
+    pub tuned_s: f64,
+    /// Measured time of the default preset under the same methodology.
+    pub default_s: f64,
+}
+
+/// Short human-readable description of a collapse configuration
+/// relative to the device preset defaults.
+pub fn describe_opts(opts: &CollapseOptions) -> String {
+    let mut parts = Vec::new();
+    if let Some(b) = opts.budget_bytes {
+        parts.push(format!("budget={b}B"));
+    }
+    if let Some(c) = opts.max_tile_rows {
+        parts.push(format!("tile<={c}"));
+    }
+    if opts.min_tile_rows > 1 {
+        parts.push(format!("min_rows={}", opts.min_tile_rows));
+    }
+    if let Some(m) = opts.max_steps_per_sequence {
+        parts.push(format!("steps<={m}"));
+    }
+    if parts.is_empty() {
+        "default".to_string()
+    } else {
+        parts.join(" ")
+    }
+}
+
+impl Profile {
+    pub fn key(&self) -> String {
+        profile_key(&self.signature, &self.device, self.threads)
+    }
+
+    /// One-line description of the tuned configuration.
+    pub fn describe(&self) -> String {
+        describe_opts(&self.opts)
+    }
+
+    fn to_json(&self) -> Json {
+        let opt_usize = |v: Option<usize>| match v {
+            Some(n) => Json::from_usize(n),
+            None => Json::Null,
+        };
+        let mut o = Json::object();
+        o.set("network", Json::Str(self.network.clone()));
+        o.set("signature", Json::Str(self.signature.clone()));
+        o.set("device", Json::Str(self.device.clone()));
+        o.set("threads", Json::from_usize(self.threads));
+        o.set("budget_bytes", opt_usize(self.opts.budget_bytes));
+        o.set("max_tile_rows", opt_usize(self.opts.max_tile_rows));
+        o.set(
+            "max_steps_per_sequence",
+            opt_usize(self.opts.max_steps_per_sequence),
+        );
+        o.set("min_tile_rows", Json::from_usize(self.opts.min_tile_rows));
+        o.set("reserved_bytes", Json::from_usize(self.opts.reserved_bytes));
+        o.set("tuned_s", Json::Num(self.tuned_s));
+        o.set("default_s", Json::Num(self.default_s));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Profile> {
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            match j.req(key)? {
+                Json::Null => Ok(None),
+                v => Ok(Some(v.as_usize().with_context(|| {
+                    format!("field '{key}' not a non-negative integer")
+                })?)),
+            }
+        };
+        Ok(Profile {
+            network: j.str_field("network")?,
+            signature: j.str_field("signature")?,
+            device: j.str_field("device")?,
+            threads: j.usize_field("threads")?,
+            opts: CollapseOptions {
+                budget_bytes: opt_usize("budget_bytes")?,
+                max_tile_rows: opt_usize("max_tile_rows")?,
+                max_steps_per_sequence: opt_usize("max_steps_per_sequence")?,
+                min_tile_rows: j.usize_field("min_tile_rows")?,
+                reserved_bytes: j.usize_field("reserved_bytes")?,
+            },
+            tuned_s: j.f64_field("tuned_s")?,
+            default_s: j.f64_field("default_s")?,
+        })
+    }
+}
+
+/// In-memory view of `profiles.json`. `Send + Sync` plain data, so a
+/// server loads it once and shares it across worker replicas
+/// ([`crate::engine::EngineBuilder::preload_profiles`]).
+#[derive(Debug, Clone, Default)]
+pub struct ProfileStore {
+    profiles: BTreeMap<String, Profile>,
+}
+
+impl ProfileStore {
+    /// Default on-disk location: `$BRAINSLUG_PROFILE_PATH` if set, else
+    /// `$HOME/.brainslug/profiles.json` (cwd-relative `.brainslug/`
+    /// when no home directory exists).
+    pub fn default_path() -> PathBuf {
+        if let Some(p) = std::env::var_os("BRAINSLUG_PROFILE_PATH") {
+            return PathBuf::from(p);
+        }
+        let home = std::env::var_os("HOME")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        home.join(".brainslug").join("profiles.json")
+    }
+
+    /// Load a store from disk. Missing file → empty store (silently:
+    /// the first `tune` creates it). Corrupt JSON or wrong schema
+    /// version → empty store with a one-line warning, never a crash;
+    /// individually malformed entries are skipped the same way.
+    pub fn load(path: &Path) -> ProfileStore {
+        let mut store = ProfileStore::default();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return store,
+        };
+        let doc = match json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring corrupt profile cache {} ({e}); using device defaults",
+                    path.display()
+                );
+                return store;
+            }
+        };
+        if doc.get("version").and_then(Json::as_usize) != Some(VERSION) {
+            eprintln!(
+                "warning: profile cache {} has an unknown schema version; using device defaults",
+                path.display()
+            );
+            return store;
+        }
+        let Some(entries) = doc.get("profiles").and_then(Json::as_obj) else {
+            eprintln!(
+                "warning: profile cache {} has no 'profiles' object; using device defaults",
+                path.display()
+            );
+            return store;
+        };
+        for (key, entry) in entries {
+            match Profile::from_json(entry) {
+                Ok(p) => {
+                    store.profiles.insert(p.key(), p);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: skipping malformed profile '{key}' in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        store
+    }
+
+    /// Persist to disk (creates parent directories). The write goes to
+    /// a sibling temp file and is renamed into place, so a concurrent
+    /// `load` never observes a truncated/corrupt cache; concurrent
+    /// *writers* are last-writer-wins on the whole file (fine for a
+    /// per-user tuning cache — re-tuning regenerates lost entries).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Json::object();
+        for p in self.profiles.values() {
+            entries.set(&p.key(), p.to_json());
+        }
+        let mut doc = Json::object();
+        doc.set("version", Json::from_usize(VERSION));
+        doc.set("profiles", entries);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc.to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))
+    }
+
+    pub fn get(&self, signature: &str, device: &str, threads: usize) -> Option<&Profile> {
+        self.profiles.get(&profile_key(signature, device, threads))
+    }
+
+    /// Insert (or replace) the profile under its own key.
+    pub fn insert(&mut self, profile: Profile) {
+        self.profiles.insert(profile.key(), profile);
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("brainslug_test_{}_{name}", std::process::id()))
+            .join("profiles.json")
+    }
+
+    fn sample_profile() -> Profile {
+        Profile {
+            network: "vgg16".into(),
+            signature: "abc123".into(),
+            device: "host-cpu".into(),
+            threads: 2,
+            opts: CollapseOptions {
+                budget_bytes: Some(65536),
+                max_tile_rows: Some(4),
+                ..Default::default()
+            },
+            tuned_s: 1.0e-3,
+            default_s: 2.0e-3,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = tmp_path("roundtrip");
+        let p = sample_profile();
+        let mut store = ProfileStore::default();
+        store.insert(p.clone());
+        store.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path);
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.get("abc123", "host-cpu", 2), Some(&p));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn key_mismatch_on_device_or_threads_misses() {
+        let path = tmp_path("mismatch");
+        let mut store = ProfileStore::default();
+        store.insert(sample_profile());
+        store.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path);
+        // Same signature, different thread count: miss.
+        assert!(loaded.get("abc123", "host-cpu", 1).is_none());
+        // Same signature, different device: miss.
+        assert!(loaded.get("abc123", "tpu-core", 2).is_none());
+        // Different network structure: miss.
+        assert!(loaded.get("zzz", "host-cpu", 2).is_none());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn corrupt_json_falls_back_to_empty_and_save_repairs() {
+        let path = tmp_path("corrupt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "{ this is not json").unwrap();
+        let store = ProfileStore::load(&path);
+        assert!(store.is_empty(), "corrupt cache must degrade to defaults");
+        // Saving over the corrupt file repairs it.
+        let mut fresh = ProfileStore::default();
+        fresh.insert(sample_profile());
+        fresh.save(&path).unwrap();
+        assert_eq!(ProfileStore::load(&path).len(), 1);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn wrong_version_and_malformed_entries_are_skipped() {
+        let path = tmp_path("version");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, r#"{"version": 99, "profiles": {}}"#).unwrap();
+        assert!(ProfileStore::load(&path).is_empty());
+        // One healthy entry + one malformed entry: the healthy one loads.
+        let mut store = ProfileStore::default();
+        store.insert(sample_profile());
+        store.save(&path).unwrap();
+        let mut doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(entries)) = m.get_mut("profiles") {
+                entries.insert("bad".into(), Json::Str("nope".into()));
+            }
+        }
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        let loaded = ProfileStore::load(&path);
+        assert_eq!(loaded.len(), 1);
+        assert!(loaded.get("abc123", "host-cpu", 2).is_some());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_store() {
+        let store = ProfileStore::load(Path::new("/nonexistent/brainslug/profiles.json"));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn graph_signature_tracks_structure_and_batch() {
+        let a = crate::bench::block_net(2, 1, 4, 16);
+        let same = crate::bench::block_net(2, 1, 4, 16);
+        let deeper = crate::bench::block_net(3, 1, 4, 16);
+        let bigger_batch = crate::bench::block_net(2, 2, 4, 16);
+        assert_eq!(graph_signature(&a), graph_signature(&same));
+        assert_ne!(graph_signature(&a), graph_signature(&deeper));
+        assert_ne!(graph_signature(&a), graph_signature(&bigger_batch));
+    }
+
+    #[test]
+    fn describe_opts_is_compact() {
+        assert_eq!(describe_opts(&CollapseOptions::default()), "default");
+        let tuned = CollapseOptions {
+            budget_bytes: Some(32768),
+            max_tile_rows: Some(8),
+            ..Default::default()
+        };
+        assert_eq!(describe_opts(&tuned), "budget=32768B tile<=8");
+    }
+}

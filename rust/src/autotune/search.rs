@@ -1,0 +1,200 @@
+//! Candidate enumeration and the memsim cost-model pre-pass.
+//!
+//! The tuning space is the cross product of the collapse knobs the
+//! measured walker actually responds to:
+//!
+//! * **budget scale** — [`CollapseOptions::budget_bytes`] at fractions /
+//!   multiples of the device preset's `resource_limit()`. Presets derive
+//!   budgets from static cache parameters (§4.4); the empirically best
+//!   working-set size varies per network topology and machine.
+//! * **band-height caps** — [`CollapseOptions::max_tile_rows`] and
+//!   `min_tile_rows`: shorter bands cut halo redundancy, taller bands
+//!   cut per-band overhead; the sweet spot is plane-size dependent.
+//!
+//! Measuring the full product on hardware is wasteful, so a *cost-model
+//! pre-pass* plans every candidate and ranks it with the `memsim`
+//! analytic model ([`crate::memsim::simulate_plan`]) — the same model
+//! that regenerates the paper's tables, and sensitive to exactly what
+//! the knobs change (sequence splits, band heights, halo factors). Only
+//! the top-K predictions (plus the device-preset default, which always
+//! survives as the comparison anchor) graduate to timed runs.
+
+use crate::device::DeviceSpec;
+use crate::graph::Graph;
+use crate::memsim::simulate_plan;
+use crate::optimizer::{optimize, CollapseOptions};
+
+use super::profile::describe_opts;
+use super::TuneLevel;
+
+/// One point in the collapse-configuration search space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Human-readable knob description ("default", "budget=… tile<=…").
+    pub label: String,
+    pub opts: CollapseOptions,
+}
+
+impl Candidate {
+    /// The device-preset configuration every tuning run is anchored to.
+    pub fn default_preset() -> Candidate {
+        Candidate {
+            label: "default".to_string(),
+            opts: CollapseOptions::default(),
+        }
+    }
+
+    pub fn is_default(&self) -> bool {
+        self.opts == CollapseOptions::default()
+    }
+}
+
+/// Enumerate the candidate collapse configurations for `level` on
+/// `device`. Always contains the device-preset default exactly once.
+pub fn candidate_space(level: TuneLevel, device: &DeviceSpec) -> Vec<Candidate> {
+    let limit = device.resource_limit();
+    let budget_scales: &[f64] = match level {
+        TuneLevel::Fast => &[0.5, 1.0, 2.0, 4.0],
+        TuneLevel::Full => &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0],
+    };
+    let tile_caps: &[Option<usize>] = match level {
+        TuneLevel::Fast => &[None, Some(1), Some(4)],
+        TuneLevel::Full => &[None, Some(1), Some(2), Some(4), Some(8), Some(16)],
+    };
+    let min_rows: &[usize] = match level {
+        TuneLevel::Fast => &[1],
+        TuneLevel::Full => &[1, 2, 4],
+    };
+    let mut out = Vec::new();
+    for &scale in budget_scales {
+        // Scale 1.0 is the preset budget itself: keep `budget_bytes`
+        // unset so the candidate is recognizably the default config.
+        let budget_bytes = if (scale - 1.0).abs() < 1e-9 {
+            None
+        } else {
+            Some((((limit as f64) * scale).round() as usize).max(1024))
+        };
+        for &cap in tile_caps {
+            for &mn in min_rows {
+                if cap.is_some_and(|c| mn > c) {
+                    continue; // cap wins anyway; skip the duplicate
+                }
+                let opts = CollapseOptions {
+                    budget_bytes,
+                    max_tile_rows: cap,
+                    min_tile_rows: mn,
+                    ..Default::default()
+                };
+                out.push(Candidate {
+                    label: describe_opts(&opts),
+                    opts,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Plan every candidate and rank by memsim-predicted plan time
+/// (ascending). Returns `(candidate, predicted_seconds)` pairs.
+pub fn rank_by_cost_model(
+    graph: &Graph,
+    device: &DeviceSpec,
+    candidates: Vec<Candidate>,
+) -> Vec<(Candidate, f64)> {
+    let mut scored: Vec<(Candidate, f64)> = candidates
+        .into_iter()
+        .map(|c| {
+            let plan = optimize(graph, device, &c.opts);
+            let predicted = simulate_plan(graph, &plan, device).total_s;
+            (c, predicted)
+        })
+        .collect();
+    scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+    scored
+}
+
+/// Keep the `top_k` best-predicted candidates, plus the default preset
+/// whether or not the model liked it (it anchors the measured
+/// comparison and is the fallback when every challenger loses).
+pub fn survivors(scored: Vec<(Candidate, f64)>, top_k: usize) -> Vec<(Candidate, f64)> {
+    let mut keep: Vec<(Candidate, f64)> = Vec::with_capacity(top_k + 1);
+    for (c, s) in &scored {
+        if keep.len() >= top_k.max(1) {
+            break;
+        }
+        keep.push((c.clone(), *s));
+    }
+    if !keep.iter().any(|(c, _)| c.is_default()) {
+        if let Some(d) = scored.iter().find(|(c, _)| c.is_default()) {
+            keep.push(d.clone());
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+
+    #[test]
+    fn space_contains_exactly_one_default() {
+        let device = DeviceSpec::host_cpu();
+        for level in [TuneLevel::Fast, TuneLevel::Full] {
+            let space = candidate_space(level, &device);
+            assert!(space.len() >= 8, "{level:?}: space too small");
+            let defaults = space.iter().filter(|c| c.is_default()).count();
+            assert_eq!(defaults, 1, "{level:?}");
+        }
+    }
+
+    #[test]
+    fn full_space_is_a_superset_scale_of_fast() {
+        let device = DeviceSpec::host_cpu();
+        assert!(
+            candidate_space(TuneLevel::Full, &device).len()
+                > candidate_space(TuneLevel::Fast, &device).len()
+        );
+    }
+
+    #[test]
+    fn ranking_is_ascending_and_survivors_keep_default() {
+        let g = bench::block_net(3, 1, 4, 24);
+        let device = DeviceSpec::host_cpu();
+        let scored = rank_by_cost_model(&g, &device, candidate_space(TuneLevel::Fast, &device));
+        for w in scored.windows(2) {
+            assert!(w[0].1 <= w[1].1, "ranking not ascending");
+        }
+        for k in [1, 2, 3] {
+            let kept = survivors(scored.clone(), k);
+            assert!(kept.len() >= k.min(scored.len()));
+            assert!(
+                kept.iter().any(|(c, _)| c.is_default()),
+                "default must always survive (k={k})"
+            );
+            assert!(kept.len() <= k + 1);
+        }
+    }
+
+    #[test]
+    fn candidates_produce_distinct_plans() {
+        // The knobs must actually reach the planner: a tiny budget and
+        // the preset budget should disagree on sequence counts for a
+        // deep stack.
+        let g = bench::block_net(6, 1, 8, 32);
+        let device = DeviceSpec::host_cpu();
+        let seq_count = |opts: &CollapseOptions| -> usize {
+            optimize(&g, &device, opts)
+                .stacks()
+                .map(|s| s.sequences.len())
+                .sum()
+        };
+        let preset = seq_count(&CollapseOptions::default());
+        let starved = seq_count(&CollapseOptions {
+            budget_bytes: Some(1024),
+            ..Default::default()
+        });
+        assert!(starved > preset, "budget injection did not reach collapse");
+    }
+}

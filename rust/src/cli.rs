@@ -71,6 +71,22 @@ impl Args {
         }
     }
 
+    /// Optional strictly-positive integer flag: `None` when absent; a
+    /// one-line error naming the flag for zero, negative, or garbage
+    /// values — count-like flags (`--threads`, `--workers`,
+    /// `--collapse-budget`) must fail loudly, not clamp silently.
+    pub fn get_positive_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<usize>() {
+                Ok(0) | Err(_) => anyhow::bail!(
+                    "--{key}: must be a positive integer (got '{v}')"
+                ),
+                Ok(n) => Ok(Some(n)),
+            },
+        }
+    }
+
     /// Optional float flag (`None` when absent, error on a bad number).
     pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
         match self.get(key) {
@@ -134,6 +150,21 @@ mod tests {
         assert_eq!(a.get_f64("missing").unwrap(), None);
         let b = parse(&["x", "--pace", "0.5"]);
         assert_eq!(b.get_f64("pace").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn positive_usize_rejects_zero_negative_and_garbage() {
+        for bad in ["0", "-3", "abc", "1.5"] {
+            let a = parse(&["x", "--threads", bad]);
+            let err = a.get_positive_usize("threads").unwrap_err().to_string();
+            assert!(
+                err.contains("--threads") && err.contains("positive integer"),
+                "{bad}: {err}"
+            );
+        }
+        let a = parse(&["x", "--threads", "4"]);
+        assert_eq!(a.get_positive_usize("threads").unwrap(), Some(4));
+        assert_eq!(a.get_positive_usize("missing").unwrap(), None);
     }
 
     #[test]

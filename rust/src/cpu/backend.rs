@@ -106,6 +106,13 @@ impl CpuBackend {
         self.threads
     }
 
+    /// Change the worker-thread count for subsequent runs. Parameter
+    /// and folded-BN caches are untouched (they are thread-agnostic),
+    /// which is what makes the autotuner's thread sweep cheap.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
     /// Execute one non-stacked layer with the breadth-first kernels.
     fn run_node(
         &mut self,
@@ -300,6 +307,11 @@ impl CpuBackend {
 impl Backend for CpuBackend {
     fn name(&self) -> &'static str {
         "cpu"
+    }
+
+    fn set_threads(&mut self, threads: usize) -> bool {
+        CpuBackend::set_threads(self, threads);
+        true
     }
 
     fn run(&mut self, work: &Workload, input: HostTensor) -> Result<(HostTensor, ExecStats)> {

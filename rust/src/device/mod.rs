@@ -116,15 +116,25 @@ impl DeviceSpec {
         }
     }
 
-    /// Look up a preset by name (CLI `--device`).
+    /// Look up a preset by name (CLI `--device`). Canonical device
+    /// names (`DeviceSpec::name`, e.g. "gtx-1080ti") also resolve, so
+    /// a spec can round-trip through its own name — `simulate --exp
+    /// table2` forwards `device.name` back into this lookup.
     pub fn preset(name: &str) -> Option<Self> {
         match name {
-            "paper-cpu" | "cpu" => Some(Self::paper_cpu()),
-            "paper-gpu" | "gpu" => Some(Self::paper_gpu()),
-            "tpu" => Some(Self::tpu_core()),
-            "host" => Some(Self::host_cpu()),
+            "paper-cpu" | "cpu" | "xeon-e5-2690v4" => Some(Self::paper_cpu()),
+            "paper-gpu" | "gpu" | "gtx-1080ti" => Some(Self::paper_gpu()),
+            "tpu" | "tpu-core" => Some(Self::tpu_core()),
+            "host" | "host-cpu" => Some(Self::host_cpu()),
             _ => None,
         }
+    }
+
+    /// The valid [`Self::preset`] names, for actionable CLI errors —
+    /// every `preset()` miss should surface this list, not a bare
+    /// "unknown preset".
+    pub fn preset_names() -> &'static str {
+        "paper-cpu (alias: cpu), paper-gpu (alias: gpu), tpu, host"
     }
 
     /// `resourceLimit()` of Listing 1: bytes one work unit may keep
@@ -144,6 +154,25 @@ mod tests {
             assert!(DeviceSpec::preset(n).is_some(), "{n}");
         }
         assert!(DeviceSpec::preset("fpga").is_none());
+    }
+
+    #[test]
+    fn preset_names_list_every_canonical_preset() {
+        let names = DeviceSpec::preset_names();
+        for n in ["paper-cpu", "paper-gpu", "tpu", "host"] {
+            assert!(names.contains(n), "{n} missing from preset_names()");
+        }
+    }
+
+    #[test]
+    fn presets_roundtrip_through_their_own_names() {
+        // `simulate --exp table2` forwards device.name back into
+        // preset(); every spec must resolve to itself.
+        for key in ["paper-cpu", "paper-gpu", "tpu", "host"] {
+            let spec = DeviceSpec::preset(key).unwrap();
+            let again = DeviceSpec::preset(&spec.name).unwrap();
+            assert_eq!(spec.name, again.name, "{key}");
+        }
     }
 
     #[test]

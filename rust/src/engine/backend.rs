@@ -49,6 +49,15 @@ pub trait Backend {
     /// Execute `work` on `input`, returning the output batch and
     /// per-segment statistics.
     fn run(&mut self, work: &Workload, input: HostTensor) -> Result<(HostTensor, ExecStats)>;
+
+    /// Adjust the worker-thread count, when the backend has one
+    /// ([`crate::cpu::CpuBackend`] does; the PJRT and sim backends
+    /// return `false`). The autotuner uses this to sweep the thread
+    /// dimension on one live backend instead of rebuilding parameter
+    /// caches per thread count.
+    fn set_threads(&mut self, _threads: usize) -> bool {
+        false
+    }
 }
 
 /// The PJRT backend: wraps today's [`Runtime`] + [`Executor`] pair. The

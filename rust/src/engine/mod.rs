@@ -42,6 +42,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::autotune::{self, ProfileStore, TuneLevel};
 use crate::device::DeviceSpec;
 use crate::graph::Graph;
 use crate::memsim::{simulate_baseline, simulate_plan, BaselineSim, PlanSim};
@@ -105,6 +106,53 @@ impl BackendKind {
     }
 }
 
+/// Where the builder looks for tuned per-network profiles
+/// ([`crate::autotune`]). Profiles only ever apply to the native CPU
+/// backend in [`Mode::BrainSlug`] with *default* collapse options —
+/// explicit caller-set options are never silently overridden.
+#[derive(Debug, Clone, Default)]
+pub enum ProfilePolicy {
+    /// Load [`ProfileStore::default_path`] when the file exists
+    /// (`~/.brainslug/profiles.json`). The transparent default: a
+    /// `brainslug tune` run makes every later `run`/`serve` faster
+    /// with zero flags.
+    #[default]
+    Auto,
+    /// Never consult the profile cache (the autotuner itself uses this
+    /// so the default-preset candidate measures the actual preset).
+    Off,
+    /// Load this file (CLI `--profile-path`).
+    Path(PathBuf),
+    /// Use an already-loaded store. The server preloads one store and
+    /// shares it across worker replicas, so N workers do not re-read
+    /// the cache from disk N times ([`EngineBuilder::preload_profiles`]).
+    Preloaded(Arc<ProfileStore>),
+}
+
+impl ProfilePolicy {
+    /// The store to consult at plan time, if any.
+    fn load_store(&self) -> Option<Arc<ProfileStore>> {
+        match self {
+            ProfilePolicy::Off => None,
+            ProfilePolicy::Auto => {
+                let p = ProfileStore::default_path();
+                p.exists().then(|| Arc::new(ProfileStore::load(&p)))
+            }
+            ProfilePolicy::Path(p) => p.exists().then(|| Arc::new(ProfileStore::load(p))),
+            ProfilePolicy::Preloaded(s) => Some(s.clone()),
+        }
+    }
+
+    /// Where [`EngineBuilder::autotune`] persists its winners.
+    fn save_path(&self) -> Option<PathBuf> {
+        match self {
+            ProfilePolicy::Auto => Some(ProfileStore::default_path()),
+            ProfilePolicy::Path(p) => Some(p.clone()),
+            ProfilePolicy::Off | ProfilePolicy::Preloaded(_) => None,
+        }
+    }
+}
+
 /// Builder for [`Engine`]. `Send`, so it can be shipped to the thread
 /// that will own the (non-`Send`) engine — see [`crate::server`].
 #[derive(Debug, Clone)]
@@ -117,6 +165,11 @@ pub struct EngineBuilder {
     /// the host allows). See [`EngineBuilder::sim_paced`].
     sim_pace: Option<f64>,
     seed: u64,
+    /// Tuned-profile lookup policy (see [`ProfilePolicy`]).
+    profile: ProfilePolicy,
+    /// When set, `build()` runs the autotuner first and adopts (and
+    /// persists) the winning configuration.
+    tune: Option<TuneLevel>,
 }
 
 impl Default for EngineBuilder {
@@ -130,6 +183,8 @@ impl Default for EngineBuilder {
             },
             sim_pace: None,
             seed: DEFAULT_SEED,
+            profile: ProfilePolicy::Auto,
+            tune: None,
         }
     }
 }
@@ -234,24 +289,130 @@ impl EngineBuilder {
         self
     }
 
-    /// Resolve the network and optimize + validate the plan — the
-    /// backend-independent half of `build`.
-    fn resolve(self) -> Result<Resolved> {
-        let graph: Arc<Graph> = match self.network {
+    /// Load tuned profiles from this file instead of the default
+    /// `~/.brainslug/profiles.json` (CLI `--profile-path`).
+    pub fn profile_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.profile = ProfilePolicy::Path(path.into());
+        self
+    }
+
+    /// Never consult the tuned-profile cache (CLI `--no-profile`).
+    pub fn no_profile(mut self) -> Self {
+        self.profile = ProfilePolicy::Off;
+        self
+    }
+
+    /// Use an already-loaded profile store (no disk access at build
+    /// time). See [`Self::preload_profiles`].
+    pub fn profiles(mut self, store: Arc<ProfileStore>) -> Self {
+        self.profile = ProfilePolicy::Preloaded(store);
+        self
+    }
+
+    /// Read the profile cache from disk *now* and bake it in, so every
+    /// later `build()` of this builder (and its clones) is disk-free.
+    /// The server calls this once before fanning the builder out to N
+    /// worker replicas — per-worker profile reuse instead of N reads.
+    pub fn preload_profiles(mut self) -> Self {
+        self.profile = match self.profile.load_store() {
+            Some(store) => ProfilePolicy::Preloaded(store),
+            None => ProfilePolicy::Off,
+        };
+        self
+    }
+
+    /// Autotune at `build()` time: search the plan space on real
+    /// hardware ([`crate::autotune::tune`]), adopt the winner, and
+    /// persist it to the profile cache so later builds skip the search.
+    /// Requires the native CPU backend (the only one that measures).
+    pub fn autotune(mut self, level: TuneLevel) -> Self {
+        self.tune = Some(level);
+        self
+    }
+
+    /// Resolve the network source into a graph.
+    fn resolve_graph(network: Option<NetworkSource>) -> Result<Arc<Graph>> {
+        match network {
             None => bail!("EngineBuilder: no network set (use .zoo()/.graph())"),
-            Some(NetworkSource::Graph(g)) => g,
-            Some(NetworkSource::Zoo { name, config }) => Arc::new(
+            Some(NetworkSource::Graph(g)) => Ok(g),
+            Some(NetworkSource::Zoo { name, config }) => Ok(Arc::new(
                 zoo::try_build(&name, config)
                     .ok_or_else(|| anyhow!("unknown network '{name}' (see `analyze --all`)"))?,
+            )),
+        }
+    }
+
+    /// Run the autotuner when [`Self::autotune`] was requested: adopt
+    /// the winning collapse options for this backend's thread count and
+    /// persist every per-thread winner to the profile cache
+    /// (best-effort — an unwritable cache degrades to a warning).
+    /// No-op when no tuning was requested. `pub(crate)` so the server
+    /// can tune once up-front instead of once per worker replica.
+    pub(crate) fn apply_autotune(mut self) -> Result<EngineBuilder> {
+        let Some(level) = self.tune.take() else {
+            return Ok(self);
+        };
+        let threads = match &self.backend {
+            BackendKind::Cpu { threads } => *threads,
+            other => bail!(
+                "autotune requires the native CPU backend (got {other:?}); \
+                 use .cpu(threads) / --backend cpu"
             ),
         };
+        if !matches!(self.mode, Mode::BrainSlug(_)) {
+            bail!("autotune requires BrainSlug mode (baseline has no plan to tune)");
+        }
+        let graph = Self::resolve_graph(self.network.take())?;
         graph
             .validate()
             .map_err(|e| anyhow!("invalid graph '{}': {e}", graph.name))?;
+        let outcome = autotune::tune(&graph, &self.device, self.seed, level, &[threads])?;
+        if let Some(path) = self.profile.save_path() {
+            let mut store = ProfileStore::load(&path);
+            for tr in &outcome.per_thread {
+                store.insert(tr.profile.clone());
+            }
+            if let Err(e) = store.save(&path) {
+                eprintln!(
+                    "warning: could not persist tuning profile to {}: {e}",
+                    path.display()
+                );
+            }
+        }
+        let winner = &outcome.per_thread[0];
+        self.mode = Mode::BrainSlug(winner.winner.opts);
+        // The winner is applied explicitly; don't re-consult the cache.
+        self.profile = ProfilePolicy::Off;
+        self.network = Some(NetworkSource::Graph(graph));
+        Ok(self)
+    }
+
+    /// Resolve the network and optimize + validate the plan — the
+    /// backend-independent half of `build`. Transparently swaps in a
+    /// tuned profile's collapse options when one matches this network ×
+    /// device × thread count (CPU backend, default options only).
+    fn resolve(self) -> Result<Resolved> {
+        let graph = Self::resolve_graph(self.network)?;
+        graph
+            .validate()
+            .map_err(|e| anyhow!("invalid graph '{}': {e}", graph.name))?;
+        let mut profile_label = None;
         let plan = match &self.mode {
             Mode::Baseline => None,
             Mode::BrainSlug(opts) => {
-                let p = optimize(&graph, &self.device, opts);
+                let mut opts = *opts;
+                if let BackendKind::Cpu { threads } = &self.backend {
+                    if opts == CollapseOptions::default() {
+                        if let Some(store) = self.profile.load_store() {
+                            let sig = autotune::graph_signature(&graph);
+                            if let Some(p) = store.get(&sig, &self.device.name, *threads) {
+                                opts = p.opts;
+                                profile_label = Some(format!("{} [{}]", p.describe(), p.key()));
+                            }
+                        }
+                    }
+                }
+                let p = optimize(&graph, &self.device, &opts);
                 p.validate(&graph)
                     .map_err(|e| anyhow!("plan validation for '{}': {e}", graph.name))?;
                 Some(Arc::new(p))
@@ -264,13 +425,14 @@ impl EngineBuilder {
             seed: self.seed,
             backend: self.backend,
             sim_pace: self.sim_pace,
+            profile_label,
         })
     }
 
     /// Resolve the network, optimize + validate the plan, and construct
     /// the backend from the configured [`BackendKind`].
     pub fn build(self) -> Result<Engine> {
-        let r = self.resolve()?;
+        let r = self.apply_autotune()?.resolve()?;
         let backend: Box<dyn Backend> = match &r.backend {
             BackendKind::Pjrt { artifact_dir } => {
                 Box::new(PjrtBackend::new(artifact_dir, r.graph.clone(), r.seed)?)
@@ -289,6 +451,7 @@ impl EngineBuilder {
             device: r.device,
             seed: r.seed,
             backend,
+            profile_label: r.profile_label,
         })
     }
 
@@ -301,7 +464,7 @@ impl EngineBuilder {
     where
         F: FnOnce(&Arc<Graph>, &DeviceSpec, u64) -> Result<Box<dyn Backend>>,
     {
-        let r = self.resolve()?;
+        let r = self.apply_autotune()?.resolve()?;
         let backend = make_backend(&r.graph, &r.device, r.seed)?;
         Ok(Engine {
             graph: r.graph,
@@ -309,6 +472,7 @@ impl EngineBuilder {
             device: r.device,
             seed: r.seed,
             backend,
+            profile_label: r.profile_label,
         })
     }
 }
@@ -322,6 +486,7 @@ struct Resolved {
     seed: u64,
     backend: BackendKind,
     sim_pace: Option<f64>,
+    profile_label: Option<String>,
 }
 
 /// The assembled pipeline: resolved graph, validated plan, and a live
@@ -333,6 +498,9 @@ pub struct Engine {
     device: DeviceSpec,
     seed: u64,
     backend: Box<dyn Backend>,
+    /// Description of the tuned profile the plan was built from, when
+    /// one was transparently applied ([`ProfilePolicy`]).
+    profile_label: Option<String>,
 }
 
 impl Engine {
@@ -367,6 +535,19 @@ impl Engine {
         self.backend.name()
     }
 
+    /// Description of the tuned profile this engine's plan came from
+    /// (`None` when the plan uses the caller's / preset options).
+    pub fn applied_profile(&self) -> Option<&str> {
+        self.profile_label.as_deref()
+    }
+
+    /// Adjust the backend's worker-thread count when it has one (the
+    /// native CPU backend); `false` otherwise. The existing plan is
+    /// untouched — band geometry is thread-agnostic.
+    pub fn set_threads(&mut self, threads: usize) -> bool {
+        self.backend.set_threads(threads)
+    }
+
     /// Deterministic synthetic input batch (the shared rng stream the
     /// python oracle also draws from).
     pub fn synthetic_input(&self) -> HostTensor {
@@ -382,14 +563,19 @@ impl Engine {
     pub fn describe(&self) -> String {
         match &self.plan {
             Some(p) => format!(
-                "network={} backend={} layers={} optimizable={} stacks={} unique_stacks={} branches={}",
+                "network={} backend={} layers={} optimizable={} stacks={} unique_stacks={} branches={}{}",
                 self.graph.name,
                 self.backend.name(),
                 self.graph.num_layers(),
                 p.num_optimized_layers(),
                 p.num_stacks(),
                 p.num_unique_stacks(),
-                p.num_branches()
+                p.num_branches(),
+                if self.profile_label.is_some() {
+                    " profile=tuned"
+                } else {
+                    ""
+                }
             ),
             None => format!(
                 "network={} backend={} layers={} mode=baseline",
@@ -597,6 +783,129 @@ mod tests {
         assert_eq!(out_base.shape, *eng.graph().output_shape());
         assert_eq!(stats_base.segments.len(), eng.graph().num_layers());
         assert!(stats_plan.segments.iter().any(|s| s.kind == "stack"));
+    }
+
+    fn tmp_profile_path(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("brainslug_engine_{}_{name}", std::process::id()))
+            .join("profiles.json")
+    }
+
+    #[test]
+    fn builder_applies_matching_profile_transparently() {
+        // Hand-write a profile for the block net and check the builder
+        // picks it up (cpu backend + default opts), that the plan really
+        // reflects the tuned config, and that key mismatches miss.
+        let g = Arc::new(bench::block_net(2, 2, 4, 16));
+        let device = DeviceSpec::host_cpu();
+        let path = tmp_profile_path("apply");
+        let mut store = crate::autotune::ProfileStore::default();
+        store.insert(crate::autotune::Profile {
+            network: g.name.clone(),
+            signature: crate::autotune::graph_signature(&g),
+            device: device.name.clone(),
+            threads: 2,
+            opts: CollapseOptions {
+                max_tile_rows: Some(1),
+                ..Default::default()
+            },
+            tuned_s: 1.0,
+            default_s: 2.0,
+        });
+        store.save(&path).unwrap();
+
+        let eng = Engine::builder()
+            .graph(g.clone())
+            .device(device.clone())
+            .cpu(2)
+            .profile_path(&path)
+            .build()
+            .unwrap();
+        assert!(eng.applied_profile().is_some(), "profile must apply");
+        assert!(eng.describe().contains("profile=tuned"));
+        for st in eng.plan().unwrap().stacks() {
+            for seq in &st.sequences {
+                assert_eq!(seq.tile_rows, 1, "tuned tile cap not honoured");
+            }
+        }
+        // Thread-count mismatch: no application.
+        let eng1 = Engine::builder()
+            .graph(g.clone())
+            .device(device.clone())
+            .cpu(1)
+            .profile_path(&path)
+            .build()
+            .unwrap();
+        assert!(eng1.applied_profile().is_none());
+        // Explicit opt-out.
+        let eng2 = Engine::builder()
+            .graph(g.clone())
+            .device(device.clone())
+            .cpu(2)
+            .profile_path(&path)
+            .no_profile()
+            .build()
+            .unwrap();
+        assert!(eng2.applied_profile().is_none());
+        // Caller-set (non-default) options are never overridden.
+        let eng3 = Engine::builder()
+            .graph(g.clone())
+            .device(device.clone())
+            .brainslug(CollapseOptions {
+                min_tile_rows: 2,
+                ..Default::default()
+            })
+            .cpu(2)
+            .profile_path(&path)
+            .build()
+            .unwrap();
+        assert!(eng3.applied_profile().is_none());
+        // Preloading bakes the store in (still applies, no disk read).
+        let eng4 = Engine::builder()
+            .graph(g.clone())
+            .device(device)
+            .cpu(2)
+            .profile_path(&path)
+            .preload_profiles()
+            .build()
+            .unwrap();
+        assert!(eng4.applied_profile().is_some());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn builder_autotune_applies_persists_and_reloads() {
+        let path = tmp_profile_path("autotune");
+        let mk = || {
+            Engine::builder()
+                .graph_owned(bench::block_net(2, 1, 2, 12))
+                .device(DeviceSpec::host_cpu())
+                .cpu(1)
+                .profile_path(&path)
+                .seed(3)
+        };
+        let mut eng = mk().autotune(crate::autotune::TuneLevel::Fast).build().unwrap();
+        assert!(path.exists(), "autotune must persist its winner");
+        // The tuned engine still satisfies parity.
+        let input = eng.synthetic_input();
+        let (base, _) = eng.run_baseline(input.clone()).unwrap();
+        let (df, _) = eng.run(input).unwrap();
+        assert_eq!(base, df, "tuned schedule diverges");
+        // A fresh builder over the same cache transparently reloads it.
+        let eng2 = mk().build().unwrap();
+        assert!(eng2.applied_profile().is_some());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn autotune_requires_the_cpu_backend() {
+        let err = Engine::builder()
+            .graph_owned(bench::block_net(1, 1, 2, 8))
+            .sim()
+            .autotune(crate::autotune::TuneLevel::Fast)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("CPU backend"), "{err}");
     }
 
     #[test]

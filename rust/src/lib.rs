@@ -15,8 +15,10 @@
 //! CPU backend using artifacts AOT-compiled from JAX/Pallas; [`cpu`] is
 //! the native in-process backend — real f32 kernels plus a depth-first
 //! band walker — that measures baseline-vs-depth-first wall-clock with
-//! no artifacts at all; [`server`] is the batching inference front-end
-//! used by the end-to-end example.
+//! no artifacts at all; [`autotune`] searches the plan space on that
+//! backend with real timed runs and persists per-network winners to a
+//! profile cache the engine reloads transparently; [`server`] is the
+//! batching inference front-end used by the end-to-end example.
 //!
 //! [`engine`] is the public facade over all of the above: an
 //! [`engine::EngineBuilder`] resolves the network, runs the optimizer,
@@ -27,6 +29,7 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+pub mod autotune;
 pub mod bench;
 pub mod cli;
 pub mod cpu;

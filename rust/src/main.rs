@@ -23,19 +23,22 @@
 //! * `serve`         — batching-server demo (either backend).
 //! * `dot`           — GraphViz dump of a network.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use brainslug::autotune::{self, ProfileStore, TuneLevel};
 use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::cli::Args;
 use brainslug::device::DeviceSpec;
-use brainslug::engine::{BackendKind, Engine, Mode};
+use brainslug::engine::{BackendKind, Engine, EngineBuilder, Mode};
 use brainslug::graph::graph_to_json;
 use brainslug::json::Json;
 use brainslug::memsim::{baseline_optimized_time, speedup_pct};
+use brainslug::optimizer::CollapseOptions;
 use brainslug::runtime::RequestSet;
 use brainslug::server::{QueuePolicy, ServerConfig};
 use brainslug::zoo;
@@ -54,6 +57,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "dot" => cmd_dot(&args),
         "" | "help" | "--help" => {
             print_help();
@@ -81,10 +85,15 @@ USAGE: brainslug <command> [flags]
   simulate      --exp table1|table2 [--device ...]
   run           --net NAME [--batch N] [--mode both|baseline|brainslug]
                 [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
-                [--device PRESET]
-  serve         --net NAME [--requests N] [--brainslug] [--backend pjrt|sim|cpu]
-                [--threads N] [--artifacts DIR] [--workers N] [--queue-depth D]
-                [--queue-policy block|reject] [--pace SCALE]
+                [--device PRESET] [--collapse-budget BYTES]
+                [--profile-path FILE] [--no-profile]
+  serve         --net NAME [--batch B] [--requests N] [--brainslug]
+                [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
+                [--workers N] [--queue-depth D] [--queue-policy block|reject]
+                [--pace SCALE] [--device PRESET] [--profile-path FILE]
+                [--no-profile]
+  tune          --net NAME [--batch N] [--backend cpu] [--threads N]
+                [--budget fast|full] [--device PRESET] [--profile-path FILE]
   dot           --net NAME [--batch N] [--small] [--json]
 
 Network names accept family aliases (vgg, resnet, densenet, squeezenet,
@@ -100,6 +109,18 @@ queue (depth D): when the queue is full, requests block (policy
 sleep model-time x SCALE per batch, so pool scaling and queueing are
 measured against real wall-clock (see benches/fig16_serving_scaling).
 
+`tune` searches the collapse-configuration space (budget scale,
+band-height caps) on the *real* CPU backend: a memsim cost-model
+pre-pass prunes the candidates, the survivors get timed runs (warmup +
+median-of-N, early-exit for clear losers), and each per-thread winner
+persists to the profile cache (default ~/.brainslug/profiles.json, or
+--profile-path). Later `run`/`serve` invocations on the same network,
+device, and thread count load the tuned config automatically — tuning
+pays once, every later run is faster with zero flags (`--no-profile`
+opts out). The cache key includes the batch size (it is part of the
+graph), so tune at the batch you will serve: `tune --net X --batch 8`
+pairs with `serve --net X --batch 8`.
+
 Library quickstart (the whole pipeline is one builder):
 
   let mut engine = Engine::builder()
@@ -113,11 +134,12 @@ Library quickstart (the whole pipeline is one builder):
 }
 
 /// `--backend` / `--artifacts` / `--threads` flags → a [`BackendKind`].
+/// `--threads 0` (or any non-positive value) is an error, not a silent
+/// fall-through to the default.
 fn backend_from_args(args: &Args) -> Result<BackendKind> {
     let artifacts = args.get_or("artifacts", bench::ARTIFACT_DIR).to_string();
     let mut backend = BackendKind::parse(args.get_or("backend", "pjrt"), &artifacts)?;
-    let threads = args.get_usize("threads", 0)?;
-    if threads > 0 {
+    if let Some(threads) = args.get_positive_usize("threads")? {
         match &mut backend {
             BackendKind::Cpu { threads: t } => *t = threads,
             _ => bail!("--threads only applies to --backend cpu"),
@@ -127,12 +149,38 @@ fn backend_from_args(args: &Args) -> Result<BackendKind> {
 }
 
 /// Optional `--device` preset, defaulting to the measured-mode device.
+/// A miss lists the valid preset names.
 fn device_from_args(args: &Args, default: DeviceSpec) -> Result<DeviceSpec> {
     match args.get("device") {
         None => Ok(default),
-        Some(d) => DeviceSpec::preset(d)
-            .ok_or_else(|| anyhow::anyhow!("unknown device preset '{d}' (paper-cpu|paper-gpu|tpu|host)")),
+        Some(d) => DeviceSpec::preset(d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown device preset '{d}' — valid presets: {}",
+                DeviceSpec::preset_names()
+            )
+        }),
     }
+}
+
+/// `--profile-path` / `--no-profile` flags → builder profile policy.
+fn apply_profile_flags(mut builder: EngineBuilder, args: &Args) -> EngineBuilder {
+    let path = args.get("profile-path").map(PathBuf::from);
+    if args.get_bool("no-profile") {
+        builder = builder.no_profile();
+    } else if let Some(p) = path {
+        builder = builder.profile_path(p);
+    }
+    builder
+}
+
+/// Optional `--collapse-budget BYTES` (positive) merged into collapse
+/// options — budget injection instead of preset-only budgets.
+fn collapse_opts_from_args(args: &Args, base: CollapseOptions) -> Result<CollapseOptions> {
+    let mut opts = base;
+    if let Some(bytes) = args.get_positive_usize("collapse-budget")? {
+        opts.budget_bytes = Some(bytes);
+    }
+    Ok(opts)
 }
 
 fn cmd_emit_requests(args: &Args) -> Result<()> {
@@ -185,9 +233,8 @@ fn cmd_emit_requests(args: &Args) -> Result<()> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
-    let device = DeviceSpec::preset(args.get_or("device", "paper-gpu"))
-        .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
-    let batch = args.get_usize("batch", 128)?;
+    let device = device_from_args(args, DeviceSpec::paper_gpu())?;
+    let batch = args.get_positive_usize("batch")?.unwrap_or(128);
     let all = args.get_bool("all");
     let one = args.get("net").map(|s| s.to_string());
     args.reject_unknown()?;
@@ -235,8 +282,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "table1").to_string();
-    let device = DeviceSpec::preset(args.get_or("device", "paper-gpu"))
-        .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+    let device = device_from_args(args, DeviceSpec::paper_gpu())?;
     args.reject_unknown()?;
     match exp.as_str() {
         "table1" => {
@@ -278,7 +324,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         .get("net")
         .ok_or_else(|| anyhow::anyhow!("--net required"))?
         .to_string();
-    let batch = args.get_usize("batch", bench::measured_batches()[0])?;
+    let batch = args
+        .get_positive_usize("batch")?
+        .unwrap_or(bench::measured_batches()[0]);
     let mode = args.get_or("mode", "both").to_string();
     let backend = backend_from_args(args)?;
     // The native backend tiles for the host's cache by default; the
@@ -289,23 +337,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         bench::measured_device()
     };
     let device = device_from_args(args, default_device)?;
-    args.reject_unknown()?;
-
+    let opts = collapse_opts_from_args(args, bench::measured_opts())?;
     let engine_mode = match mode.as_str() {
         "baseline" => Mode::Baseline,
-        "both" | "brainslug" => Mode::BrainSlug(bench::measured_opts()),
+        "both" | "brainslug" => Mode::BrainSlug(opts),
         other => bail!("unknown mode '{other}' (both|baseline|brainslug)"),
     };
-    let mut engine = Engine::builder()
-        .zoo_small(&name, batch)
-        .device(device)
-        .mode(engine_mode)
-        .backend(backend)
-        .seed(bench::oracle_seed())
-        .build()?;
+    let builder = apply_profile_flags(
+        Engine::builder()
+            .zoo_small(&name, batch)
+            .device(device)
+            .mode(engine_mode)
+            .backend(backend)
+            .seed(bench::oracle_seed()),
+        args,
+    );
+    args.reject_unknown()?;
+    let mut engine = builder.build()?;
     let input = engine.synthetic_input();
 
     println!("{} batch={batch}", engine.describe());
+    if let Some(p) = engine.applied_profile() {
+        println!("tuned profile: {p}");
+    }
 
     let mut t_base = None;
     let mut t_plan = None;
@@ -348,25 +402,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 32)?;
     let brainslug_mode = args.get_bool("brainslug");
     let backend = backend_from_args(args)?;
-    let workers = args.get_usize("workers", 1)?;
-    let queue_depth = args.get_usize("queue-depth", 64)?;
+    let workers = args.get_positive_usize("workers")?.unwrap_or(1);
+    let queue_depth = args.get_positive_usize("queue-depth")?.unwrap_or(64);
     let queue_policy = match args.get_or("queue-policy", "block") {
         "block" => QueuePolicy::Block,
         "reject" => QueuePolicy::Reject,
         other => bail!("unknown queue policy '{other}' (block|reject)"),
     };
     let pace: Option<f64> = args.get_f64("pace")?;
-    args.reject_unknown()?;
-
     if pace.is_some() && !matches!(backend, BackendKind::Sim) {
         bail!("--pace only applies to the sim backend (add --backend sim)");
     }
-    let device = if matches!(backend, BackendKind::Cpu { .. }) {
+    let default_device = if matches!(backend, BackendKind::Cpu { .. }) {
         DeviceSpec::host_cpu()
     } else {
         bench::measured_device()
     };
-    let batch = *bench::measured_batches().last().unwrap();
+    let device = device_from_args(args, default_device)?;
+    // Compiled batch size B. Tuned profiles are keyed by the graph
+    // signature (batch included), so serving a tuned config requires
+    // tuning at the same batch: `tune --batch N` then `serve --batch N`.
+    let batch = args
+        .get_positive_usize("batch")?
+        .unwrap_or(*bench::measured_batches().last().unwrap());
     let mut engine = Engine::builder()
         .zoo_small(&name, batch)
         .device(device)
@@ -377,6 +435,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .backend(backend)
         .seed(bench::oracle_seed());
+    engine = apply_profile_flags(engine, args);
+    args.reject_unknown()?;
     if let Some(scale) = pace {
         engine = engine.sim_paced(scale);
     }
@@ -424,12 +484,128 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `brainslug tune`: search the collapse-configuration space on the
+/// real CPU backend and persist the per-thread winners to the profile
+/// cache, so later `run`/`serve` invocations auto-load them.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?
+        .to_string();
+    let batch = args
+        .get_positive_usize("batch")?
+        .unwrap_or(bench::measured_batches()[0]);
+    let backend_name = args.get_or("backend", "cpu").to_string();
+    if !matches!(backend_name.as_str(), "cpu" | "native") {
+        bail!(
+            "tune measures real execution: only --backend cpu is supported \
+             (got '{backend_name}')"
+        );
+    }
+    let level = TuneLevel::parse(args.get_or("budget", "fast"))?;
+    let threads = args.get_positive_usize("threads")?;
+    let device = device_from_args(args, DeviceSpec::host_cpu())?;
+    let profile_path = args
+        .get("profile-path")
+        .map(PathBuf::from)
+        .unwrap_or_else(ProfileStore::default_path);
+    args.reject_unknown()?;
+
+    let resolved = zoo::resolve(&name);
+    let graph = zoo::try_build(resolved, zoo::small_config(&name, batch)).ok_or_else(|| {
+        anyhow::anyhow!("unknown network '{name}' (see `analyze --all` for the zoo)")
+    })?;
+    let graph = Arc::new(graph);
+    let thread_list: Vec<usize> = match threads {
+        Some(t) => vec![t],
+        None => autotune::default_thread_sweep(),
+    };
+    println!(
+        "# tune — network={} batch={batch} device={} level={level:?} threads={thread_list:?}",
+        graph.name, device.name
+    );
+
+    let outcome = autotune::tune(&graph, &device, bench::oracle_seed(), level, &thread_list)?;
+    println!(
+        "candidates: {} in space, {} measured after the cost-model pre-pass",
+        outcome.candidates_total, outcome.candidates_measured
+    );
+    let mut table = Table::new(&["config", "threads", "predicted", "measured", "note"]);
+    for m in &outcome.measured {
+        let winner = outcome
+            .per_thread
+            .iter()
+            .any(|tr| tr.threads == m.threads && tr.winner.opts == m.opts && !m.pruned);
+        table.row(vec![
+            m.label.clone(),
+            m.threads.to_string(),
+            fmt_time(m.predicted_s),
+            fmt_time(m.measured_s),
+            if m.pruned {
+                "pruned".into()
+            } else if winner {
+                "winner".into()
+            } else {
+                String::new()
+            },
+        ]);
+    }
+    table.print();
+
+    let mut rows = Vec::new();
+    for tr in &outcome.per_thread {
+        println!(
+            "threads={}: winner `{}` — default {}, tuned {} ({})",
+            tr.threads,
+            tr.winner.label,
+            fmt_time(tr.default_s),
+            fmt_time(tr.tuned_s),
+            fmt_pct(tr.gain_pct())
+        );
+        let mut row = Json::object();
+        row.set("bench", Json::Str("tune".into()));
+        row.set("net", Json::Str(graph.name.clone()));
+        row.set("batch", Json::from_usize(batch));
+        row.set("threads", Json::from_usize(tr.threads));
+        row.set("device", Json::Str(device.name.clone()));
+        row.set("config", Json::Str(tr.winner.label.clone()));
+        row.set("default_s", Json::Num(tr.default_s));
+        row.set("tuned_s", Json::Num(tr.tuned_s));
+        row.set("gain_pct", Json::Num(tr.gain_pct()));
+        rows.push(row);
+    }
+    bench::emit_bench_json("tune", rows);
+
+    let mut store = ProfileStore::load(&profile_path);
+    for tr in &outcome.per_thread {
+        store.insert(tr.profile.clone());
+    }
+    store.save(&profile_path)?;
+    let best = outcome.best();
+    // The suggested follow-up must hit the cache key this run wrote:
+    // spell out batch and profile path whenever they differ from the
+    // `run` defaults (batch is part of the graph signature).
+    let mut hint = format!("brainslug run --net {name} --backend cpu --threads {}", best.threads);
+    if batch != bench::measured_batches()[0] {
+        hint.push_str(&format!(" --batch {batch}"));
+    }
+    if profile_path != ProfileStore::default_path() {
+        hint.push_str(&format!(" --profile-path {}", profile_path.display()));
+    }
+    println!(
+        "wrote {} profile(s) to {} — `{hint}` now auto-loads the tuned config",
+        outcome.per_thread.len(),
+        profile_path.display()
+    );
+    Ok(())
+}
+
 fn cmd_dot(args: &Args) -> Result<()> {
     let name = args
         .get("net")
         .ok_or_else(|| anyhow::anyhow!("--net required"))?
         .to_string();
-    let batch = args.get_usize("batch", 1)?;
+    let batch = args.get_positive_usize("batch")?.unwrap_or(1);
     let small = args.get_bool("small");
     let json_out = args.get_bool("json");
     args.reject_unknown()?;

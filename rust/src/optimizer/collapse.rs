@@ -223,6 +223,20 @@ pub struct CollapseOptions {
     /// floored at 1/8 of the device limit (past that the live buffer is
     /// assumed spilled to main memory instead of strangling the bands).
     pub reserved_bytes: usize,
+    /// Working-set budget override in bytes: when set, packing and
+    /// band-height decisions use this instead of
+    /// `device.resource_limit()`. This is the autotuner's budget-scale
+    /// knob — the device presets derive budgets from static cache
+    /// parameters, but the empirically best budget varies per network
+    /// and machine. The `reserved_bytes` floor (1/8) is taken against
+    /// the injected budget. `None` = use the device preset.
+    pub budget_bytes: Option<usize>,
+    /// Upper bound on the chosen band height (`None` = unrestricted).
+    /// Wins over `min_tile_rows` when the two conflict. The autotuner
+    /// sweeps this cap; the parity suite pins the degenerate
+    /// `Some(1)` (single-row bands) and huge-`min_tile_rows`
+    /// (whole-plane bands) corners to the breadth-first baseline.
+    pub max_tile_rows: Option<usize>,
 }
 
 impl Default for CollapseOptions {
@@ -231,6 +245,8 @@ impl Default for CollapseOptions {
             max_steps_per_sequence: None,
             min_tile_rows: 1,
             reserved_bytes: 0,
+            budget_bytes: None,
+            max_tile_rows: None,
         }
     }
 }
@@ -247,13 +263,20 @@ pub fn reservation_holds(device: &DeviceSpec, reserved_bytes: usize) -> bool {
 }
 
 /// Working-set budget after the reservation policy documented on
-/// [`CollapseOptions::reserved_bytes`].
+/// [`CollapseOptions::reserved_bytes`], starting from the injected
+/// [`CollapseOptions::budget_bytes`] when one is set (the autotuner's
+/// budget-scale knob) and the device preset otherwise.
 fn effective_budget(device: &DeviceSpec, opts: &CollapseOptions) -> usize {
-    let limit = device.resource_limit();
+    let limit = opts.budget_bytes.unwrap_or(device.resource_limit());
     limit
         .saturating_sub(opts.reserved_bytes)
         .max(limit / 8)
         .max(1)
+}
+
+/// Band-height cap from [`CollapseOptions::max_tile_rows`] (≥ 1).
+fn tile_cap(opts: &CollapseOptions) -> usize {
+    opts.max_tile_rows.unwrap_or(usize::MAX).max(1)
 }
 
 /// Listing 1 steps #3 and #4: group operations into steps, then pack
@@ -280,7 +303,7 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
     // #4: group steps in sequences subject to the working-set budget.
     // A band is at least one row tall; `min_tile_rows: 0` is clamped
     // rather than fed into the band back-propagation.
-    let min_rows = opts.min_tile_rows.max(1);
+    let min_rows = opts.min_tile_rows.max(1).min(tile_cap(opts));
     let budget = effective_budget(device, opts);
     let mut sequences: Vec<Sequence> = Vec::new();
     let mut current: Vec<Step> = Vec::new();
@@ -313,13 +336,14 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
 fn seal(steps: Vec<Step>, device: &DeviceSpec, opts: &CollapseOptions) -> Sequence {
     let (out_h, _) = row_geometry(steps.last().expect("empty sequence").out_shape());
     let budget = effective_budget(device, opts);
-    let min_rows = opts.min_tile_rows.max(1);
+    let max_rows = tile_cap(opts);
+    let min_rows = opts.min_tile_rows.max(1).min(max_rows);
     let mut seq = Sequence {
         steps,
         tile_rows: min_rows,
     };
     let mut rows = min_rows.min(out_h.max(1));
-    while rows < out_h && seq.working_set_bytes(rows + 1) <= budget {
+    while rows < out_h && rows < max_rows && seq.working_set_bytes(rows + 1) <= budget {
         rows += 1;
     }
     seq.tile_rows = rows;
@@ -672,6 +696,97 @@ mod tests {
         );
         assert!(floored[0].tile_rows >= 1);
         assert!(floored[0].working_set_bytes(floored[0].tile_rows) <= 16 * 1024 / 8);
+    }
+
+    #[test]
+    fn budget_override_replaces_device_limit() {
+        // Same op list, same device: a tiny injected budget must split
+        // where the device budget would merge, and a huge injected
+        // budget must merge where the device budget would split.
+        let ops = mk_ops(
+            &[
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+                ("max3s1p1", 0),
+            ],
+            32,
+            224,
+        );
+        let big_dev = dev(64 * 1024 * 1024);
+        let split = collapse(
+            &ops,
+            &big_dev,
+            &CollapseOptions {
+                budget_bytes: Some(4 * 1024),
+                ..Default::default()
+            },
+        );
+        assert!(split.len() > 1, "tiny injected budget must split");
+        let tiny_dev = dev(4 * 1024);
+        let merged = collapse(
+            &ops,
+            &tiny_dev,
+            &CollapseOptions {
+                budget_bytes: Some(64 * 1024 * 1024),
+                ..Default::default()
+            },
+        );
+        assert_eq!(merged.len(), 1, "huge injected budget keeps one sequence");
+        // Chosen tiles respect the *injected* budget, not the device's.
+        for s in &merged {
+            assert!(s.working_set_bytes(s.tile_rows) <= 64 * 1024 * 1024);
+        }
+    }
+
+    #[test]
+    fn max_tile_rows_caps_band_height() {
+        let ops = mk_ops(&[("bn", 0), ("relu", 0)], 8, 64);
+        let device = dev(1 << 20);
+        let free = collapse(&ops, &device, &CollapseOptions::default());
+        assert_eq!(free[0].tile_rows, 64, "huge budget grows to the full plane");
+        let capped = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                max_tile_rows: Some(4),
+                ..Default::default()
+            },
+        );
+        assert_eq!(capped[0].tile_rows, 4);
+        let single = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                max_tile_rows: Some(1),
+                ..Default::default()
+            },
+        );
+        assert_eq!(single[0].tile_rows, 1);
+        // The cap wins over a conflicting min_tile_rows.
+        let conflict = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                min_tile_rows: 8,
+                max_tile_rows: Some(2),
+                ..Default::default()
+            },
+        );
+        assert_eq!(conflict[0].tile_rows, 2);
+        // Huge min_tile_rows without a cap clamps at the plane height.
+        let whole = collapse(
+            &ops,
+            &device,
+            &CollapseOptions {
+                min_tile_rows: 1 << 20,
+                ..Default::default()
+            },
+        );
+        for s in &whole {
+            let (out_h, _) = row_geometry(s.out_shape());
+            assert_eq!(s.tile_rows, out_h);
+        }
     }
 
     #[test]

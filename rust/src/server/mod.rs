@@ -295,6 +295,18 @@ impl Server {
             queue_depth,
             queue_policy,
         } = config;
+        // Tune once, up front: a builder carrying `.autotune(level)`
+        // must not re-run the whole timed search in every worker thread
+        // (concurrent searches contend on the cores, replicas could
+        // adopt different winners, and nothing would persist once the
+        // policy below is baked). After this, the builder carries the
+        // winning options and no pending tune.
+        let engine = engine.apply_autotune()?;
+        // Per-worker profile reuse: read the tuned-profile cache once
+        // and bake it into the builder, so the N worker replicas below
+        // share one in-memory store instead of re-reading the file N
+        // times (see `EngineBuilder::preload_profiles`).
+        let engine = engine.preload_profiles();
         let stats = Arc::new(ServerStats::with_workers(workers));
         let (tx, rx) = sync_channel::<Msg>(queue_depth);
         let rx = Arc::new(Mutex::new(rx));

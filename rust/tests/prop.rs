@@ -502,6 +502,80 @@ fn cpu_backend_parity_on_random_branchy_dags() {
     }
 }
 
+#[test]
+fn cpu_parity_at_walker_edge_tile_configs() {
+    // The autotuner explores degenerate band geometries; the walker
+    // must stay *bit-identical* to the breadth-first baseline at both
+    // extremes: forced single-row bands (`max_tile_rows = 1`, maximal
+    // halo redundancy) and whole-plane bands (`min_tile_rows` far above
+    // any output height, `tile_rows >= out_h` after clamping), plus a
+    // mid cap for good measure. Non-stacked segments run the same
+    // kernels on both schedules, so exact equality is the bar.
+    let configs: &[(&str, CollapseOptions)] = &[
+        (
+            "tile_rows=1",
+            CollapseOptions {
+                max_tile_rows: Some(1),
+                ..Default::default()
+            },
+        ),
+        (
+            "tile_rows<=2",
+            CollapseOptions {
+                max_tile_rows: Some(2),
+                ..Default::default()
+            },
+        ),
+        (
+            "tile_rows>=out_h",
+            CollapseOptions {
+                min_tile_rows: 1 << 20,
+                ..Default::default()
+            },
+        ),
+    ];
+    for seed in 0..6 {
+        let g = random_small_chain(seed ^ 0x71E5);
+        for (label, opts) in configs {
+            let mut eng = Engine::builder()
+                .graph_owned(g.clone())
+                .device(DeviceSpec::host_cpu())
+                .brainslug(*opts)
+                .cpu(2)
+                .seed(seed)
+                .build()
+                .unwrap();
+            let input = eng.synthetic_input();
+            let (base, _) = eng.run_baseline(input.clone()).unwrap();
+            let (df, _) = eng.run(input).unwrap();
+            assert_eq!(
+                base, df,
+                "seed {seed} {label}: walker diverges at an edge tile config"
+            );
+            // The forced geometry really bit: every sequence honours it.
+            for stack in eng.plan().unwrap().stacks() {
+                for seq in &stack.sequences {
+                    match *label {
+                        "tile_rows=1" => assert_eq!(seq.tile_rows, 1, "seed {seed}"),
+                        "tile_rows<=2" => assert!(seq.tile_rows <= 2, "seed {seed}"),
+                        _ => {
+                            // Whole-plane bands: tile_rows clamps to the
+                            // sequence's own output height.
+                            let out = seq.out_shape();
+                            let out_h = if out.rank() == 4 {
+                                out.height()
+                            } else {
+                                out.batch()
+                            };
+                            assert_eq!(seq.tile_rows, out_h, "seed {seed}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Fixed-seed golden for one vgg16 block
 /// (conv3x3 → relu → conv3x3 → relu → maxpool2x2s2) at reduced width:
 /// the native backend must match an *independent* naive reference
