@@ -1,0 +1,190 @@
+//! Figure 18 (repro extension): HTTP serving tail latency — the
+//! experiment behind `brainslug bench-serve`.
+//!
+//! Unlike Figure 16 (in-process `ServerHandle::infer` calls), every
+//! request here crosses a real socket: HTTP/1.1 keep-alive framing,
+//! lazy JSON body parsing, the bounded connection pool, the dispatch
+//! queue, and the reply serialisation all sit on the measured path.
+//!
+//! Two load shapes per worker count:
+//! * **closed loop** (Block policy) — fixed client concurrency, every
+//!   request eventually served; queue wait surfaces in p95/p99.
+//! * **open loop** (Reject policy) — paced arrivals at ~1.5x the
+//!   pool's estimated capacity; the server must shed the excess as
+//!   503 + Retry-After, and latency is measured from each request's
+//!   *scheduled* arrival (no coordinated omission).
+//!
+//! Expected shape: closed-loop p50 stays near the batch cost while p99
+//! grows with concurrency; the overload point reports a non-zero
+//! reject rate at every pool size (offered load is scaled with the
+//! pool, so it is always ~1.5x capacity).
+
+use std::time::Duration;
+
+use brainslug::bench::{self, Table};
+use brainslug::http::{self, HttpConfig, HttpServer};
+use brainslug::json::Json;
+use brainslug::rng::fill_f32;
+use brainslug::server::{QueuePolicy, ServerConfig};
+
+/// Compiled batch size of every served engine.
+const BATCH: usize = 8;
+/// Wall-clock cost of one batch after pacing calibration.
+const TARGET_BATCH_S: f64 = 8e-3;
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+const CONCURRENCIES: [usize; 3] = [1, 4, 16];
+const REQS_PER_CLIENT: usize = 4;
+/// Open-loop overload: offered load vs estimated capacity, duration.
+const OVERLOAD_FACTOR: f64 = 1.5;
+const OVERLOAD_DURATION_S: f64 = 0.4;
+const OVERLOAD_POOL: usize = 16;
+
+fn start_http(scale: f64, workers: usize, policy: QueuePolicy, depth: usize) -> HttpServer {
+    let server = ServerConfig::new(bench::serving_engine(BATCH, scale))
+        .workers(workers)
+        .queue_depth(depth)
+        .queue_policy(policy)
+        .max_wait(Duration::from_millis(2))
+        .start()
+        .expect("server start");
+    let mut cfg = HttpConfig::new("127.0.0.1:0");
+    // Enough connection threads that the dispatch queue — not the
+    // connection pool — is the bottleneck under every load point.
+    cfg.conn_threads = CONCURRENCIES.iter().max().copied().unwrap().max(OVERLOAD_POOL) + 4;
+    HttpServer::start(server, cfg).expect("http start")
+}
+
+fn main() -> anyhow::Result<()> {
+    // Calibrate pacing against the unpaced model time (fig16 scheme).
+    let mut probe = bench::serving_engine(BATCH, 0.0).build()?;
+    let input = probe.synthetic_input();
+    let (_, stats) = probe.run(input)?;
+    let scale = TARGET_BATCH_S / stats.total_s.max(1e-12);
+
+    println!("# Figure 18 — HTTP serving tail latency (paced sim over real sockets)");
+    println!(
+        "batch={BATCH} batch-cost={:.0}ms reqs/client={REQS_PER_CLIENT} overload={OVERLOAD_FACTOR}x capacity",
+        TARGET_BATCH_S * 1e3
+    );
+    let mut table = Table::new(&[
+        "mode", "workers", "load", "sent", "ok", "rejected", "req/s", "p50-ms", "p95-ms",
+        "p99-ms",
+    ]);
+    let mut rows = Vec::new();
+    for &workers in &WORKER_COUNTS {
+        for &clients in &CONCURRENCIES {
+            let http = start_http(scale, workers, QueuePolicy::Block, 4 * BATCH);
+            let state = http.state().clone();
+            let body = run_body(&state.model, state.image_elems);
+            let report = http::closed_loop(
+                &http.addr().to_string(),
+                clients,
+                REQS_PER_CLIENT,
+                body.as_bytes(),
+            );
+            http.shutdown();
+            assert_eq!(
+                report.ok, report.sent,
+                "closed loop w={workers} c={clients}: {} errors, {} rejected",
+                report.errors, report.rejected
+            );
+            assert!(
+                report.p99_ms() >= report.p50_ms(),
+                "percentiles out of order"
+            );
+            table.row(vec![
+                "closed".into(),
+                workers.to_string(),
+                format!("c={clients}"),
+                report.sent.to_string(),
+                report.ok.to_string(),
+                report.rejected.to_string(),
+                format!("{:.0}", report.throughput_rps()),
+                format!("{:.2}", report.p50_ms()),
+                format!("{:.2}", report.p95_ms()),
+                format!("{:.2}", report.p99_ms()),
+            ]);
+            let mut row = base_row("closed", workers, &report);
+            row.set("concurrency", Json::from_usize(clients));
+            rows.push(row);
+        }
+
+        let capacity_rps = workers as f64 * BATCH as f64 / TARGET_BATCH_S;
+        let rate_rps = OVERLOAD_FACTOR * capacity_rps;
+        let http = start_http(scale, workers, QueuePolicy::Reject, BATCH);
+        let state = http.state().clone();
+        let body = run_body(&state.model, state.image_elems);
+        let report = http::open_loop(
+            &http.addr().to_string(),
+            rate_rps,
+            OVERLOAD_DURATION_S,
+            OVERLOAD_POOL,
+            body.as_bytes(),
+        );
+        // The shed must be visible both to the client (503s) and in
+        // the server's own counters.
+        let rejected_stat = state
+            .stats
+            .rejected
+            .load(std::sync::atomic::Ordering::Relaxed);
+        http.shutdown();
+        assert!(
+            report.rejected > 0 && rejected_stat > 0,
+            "overload w={workers} at {rate_rps:.0}/s shed nothing (ok={} errors={})",
+            report.ok,
+            report.errors
+        );
+        table.row(vec![
+            "open".into(),
+            workers.to_string(),
+            format!("{rate_rps:.0}/s"),
+            report.sent.to_string(),
+            report.ok.to_string(),
+            report.rejected.to_string(),
+            format!("{:.0}", report.throughput_rps()),
+            format!("{:.2}", report.p50_ms()),
+            format!("{:.2}", report.p95_ms()),
+            format!("{:.2}", report.p99_ms()),
+        ]);
+        let mut row = base_row("open", workers, &report);
+        row.set("rate_rps", Json::Num(rate_rps));
+        row.set("pool", Json::from_usize(OVERLOAD_POOL));
+        rows.push(row);
+    }
+    table.print();
+    bench::emit_bench_json("fig18_http_serving", rows);
+    Ok(())
+}
+
+fn run_body(model: &str, elems: usize) -> String {
+    let mut o = Json::object();
+    o.set("model", Json::Str(model.to_string()));
+    o.set(
+        "input",
+        Json::Arr(
+            fill_f32(18, elems)
+                .into_iter()
+                .map(|v| Json::Num(v as f64))
+                .collect(),
+        ),
+    );
+    o.to_string_compact()
+}
+
+fn base_row(mode: &str, workers: usize, report: &http::LoadReport) -> Json {
+    let mut row = Json::object();
+    row.set("bench", Json::Str("fig18_http_serving".into()));
+    row.set("mode", Json::Str(mode.into()));
+    row.set("workers", Json::from_usize(workers));
+    row.set("batch", Json::from_usize(BATCH));
+    row.set("sent", Json::Num(report.sent as f64));
+    row.set("ok", Json::Num(report.ok as f64));
+    row.set("rejected", Json::Num(report.rejected as f64));
+    row.set("reject_rate", Json::Num(report.reject_rate()));
+    row.set("throughput_rps", Json::Num(report.throughput_rps()));
+    row.set("mean_ms", Json::Num(report.mean_ms()));
+    row.set("p50_ms", Json::Num(report.p50_ms()));
+    row.set("p95_ms", Json::Num(report.p95_ms()));
+    row.set("p99_ms", Json::Num(report.p99_ms()));
+    row
+}

@@ -98,6 +98,23 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of positive integers (e.g. `--workers
+    /// 1,2,4`); `default` when absent, error on garbage or zeros.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|part| match part.trim().parse::<usize>() {
+                    Ok(n) if n > 0 => Ok(n),
+                    _ => Err(anyhow::anyhow!(
+                        "--{key}: expected comma-separated positive integers (got '{v}')"
+                    )),
+                })
+                .collect(),
+        }
+    }
+
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -165,6 +182,17 @@ mod tests {
         let a = parse(&["x", "--threads", "4"]);
         assert_eq!(a.get_positive_usize("threads").unwrap(), Some(4));
         assert_eq!(a.get_positive_usize("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects() {
+        let a = parse(&["x", "--workers", "1,2,4"]);
+        assert_eq!(a.get_usize_list("workers", &[8]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("missing", &[8, 16]).unwrap(), vec![8, 16]);
+        for bad in ["1,0,2", "a,b", "1,,2", ""] {
+            let a = parse(&["x", "--workers", bad]);
+            assert!(a.get_usize_list("workers", &[1]).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

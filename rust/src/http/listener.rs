@@ -1,0 +1,272 @@
+//! TCP listener and connection-thread pool.
+//!
+//! ```text
+//!  accept loop (nonblocking poll)      K connection threads
+//!  ┌───────────────┐  bounded channel  ┌──────────────────┐   try_infer   ┌──────────────┐
+//!  │ TcpListener   │ ───────────────▶  │ read_request     │ ────────────▶ │ dispatch     │
+//!  │ (1 thread)    │   full → 503      │ route / respond  │  full → 503   │ queue + pool │
+//!  └───────────────┘                   │ keep-alive loop  │               └──────────────┘
+//!                                      └──────────────────┘
+//! ```
+//!
+//! Two bounded hand-offs stand between a socket and an engine: the
+//! connection channel (here) and the dispatch queue (in
+//! [`crate::server`]). Both shed load as 503 + `Retry-After` instead of
+//! queueing without bound.
+//!
+//! Shutdown ordering (the graceful-drain contract): flip the stop flag
+//! → acceptor exits (no new connections) → connection threads answer
+//! their in-flight request with `Connection: close` and exit →
+//! [`crate::server::Server::stop`] drains every queued request to a
+//! real reply → workers join.
+
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::server::Server;
+
+use super::router::{route, AppState};
+use super::wire::{read_request, write_response, Response, WireError, WireLimits};
+
+/// Granularity of the acceptor's nonblocking poll and the connection
+/// threads' idle ticks; bounds shutdown latency.
+const POLL_TICK: Duration = Duration::from_millis(10);
+
+/// How long a keep-alive connection may sit idle before we close it.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Listener configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:8080`; port `0` picks an ephemeral
+    /// port (see [`HttpServer::addr`]).
+    pub addr: String,
+    /// Connection threads — the ceiling on concurrently served
+    /// sockets.
+    pub conn_threads: usize,
+    /// Pending-connection channel bound; overflow is shed with 503.
+    pub conn_queue: usize,
+    pub limits: WireLimits,
+}
+
+impl HttpConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        HttpConfig {
+            addr: addr.into(),
+            conn_threads: 8,
+            conn_queue: 64,
+            limits: WireLimits::default(),
+        }
+    }
+}
+
+/// A running HTTP front door over a [`Server`]. Owns the acceptor and
+/// connection threads; dropping without [`HttpServer::shutdown`] leaks
+/// them (the CLI and tests always shut down explicitly).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    conn_threads: Vec<std::thread::JoinHandle<()>>,
+    server: Option<Server>,
+    state: AppState,
+}
+
+impl HttpServer {
+    /// Bind and start serving `server` over HTTP.
+    pub fn start(server: Server, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding http listener on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let state = AppState {
+            handle: server.handle(),
+            stats: server.stats.clone(),
+            batch: server.batch_size(),
+            workers: server.workers(),
+            model: server.model_name().to_string(),
+            image_elems: server.handle().image_shape().numel(),
+            started: Instant::now(),
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_queue.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut conn_threads = Vec::with_capacity(cfg.conn_threads.max(1));
+        for _ in 0..cfg.conn_threads.max(1) {
+            let conn_rx = conn_rx.clone();
+            let state = state.clone();
+            let stop = stop.clone();
+            let limits = cfg.limits;
+            conn_threads.push(std::thread::spawn(move || loop {
+                // Receiver disconnects when the acceptor (sole sender)
+                // exits — that is the pool's shutdown signal.
+                let stream = match conn_rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                serve_connection(stream, &state, &limits, &stop);
+            }));
+        }
+
+        let acceptor = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => match conn_tx.try_send(stream) {
+                            Ok(()) => {}
+                            // Pool saturated: shed at the door rather
+                            // than queueing sockets without bound.
+                            Err(TrySendError::Full(stream)) => shed(stream),
+                            Err(TrySendError::Disconnected(_)) => return,
+                        },
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL_TICK);
+                        }
+                        // Transient accept errors (e.g. aborted
+                        // handshake): back off briefly and keep going.
+                        Err(_) => std::thread::sleep(POLL_TICK),
+                    }
+                }
+                // conn_tx drops here, disconnecting the pool.
+            })
+        };
+
+        Ok(HttpServer {
+            addr,
+            stop,
+            acceptor: Some(acceptor),
+            conn_threads,
+            server: Some(server),
+            state,
+        })
+    }
+
+    /// The bound address (resolves port `0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared request-serving state (stats, model metadata).
+    pub fn state(&self) -> &AppState {
+        &self.state
+    }
+
+    /// Flag observed by the accept loop and all connection threads;
+    /// setting it (e.g. from a signal handler) begins shutdown, which
+    /// [`HttpServer::shutdown`] completes.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, finish in-flight requests,
+    /// drain the dispatch queue, join everything.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(acceptor) = self.acceptor.take() {
+            let _ = acceptor.join();
+        }
+        for t in self.conn_threads.drain(..) {
+            let _ = t.join();
+        }
+        // Only after every connection thread is done: they may still
+        // need live workers to answer their last request.
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+    }
+}
+
+/// Canned 503 for connections shed at the accept stage; best-effort
+/// (the client may already be gone).
+fn shed(mut stream: TcpStream) {
+    // Accepted sockets are blocking on Linux, but make it explicit —
+    // some platforms inherit the listener's nonblocking flag.
+    let _ = stream.set_nonblocking(false);
+    let mut resp = Response::error(503, "connection pool saturated; retry later");
+    resp.retry_after = Some(1);
+    resp.close = true;
+    let _ = write_response(&mut stream, &resp, true);
+}
+
+/// Serve one connection until it closes, errors, times out idle, or
+/// the server begins shutdown.
+fn serve_connection(stream: TcpStream, state: &AppState, limits: &WireLimits, stop: &AtomicBool) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    // Short read timeout = the idle-wait tick: between requests we spin
+    // on fill_buf so keep-alive waits stay interruptible by `stop`.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut reader = BufReader::new(stream);
+    loop {
+        // Idle wait: block (bounded by the read timeout) until the next
+        // request's first byte, EOF, or shutdown.
+        let idle_start = Instant::now();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match reader.fill_buf() {
+                Ok([]) => return, // clean close from the peer
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if idle_start.elapsed() > IDLE_TIMEOUT {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        let resp = match read_request(&mut reader, limits) {
+            Ok(req) => {
+                let mut resp = route(state, &req);
+                resp.close |= !req.keep_alive;
+                resp
+            }
+            Err(WireError::Bad(msg)) => {
+                // The stream may be desynchronised; answer and close.
+                let mut resp = Response::error(400, &msg);
+                resp.close = true;
+                resp
+            }
+            Err(WireError::TooLarge { declared, limit }) => {
+                // Body left unread — closing is mandatory.
+                let mut resp = Response::error(
+                    413,
+                    &format!("body of {declared} bytes exceeds limit of {limit}"),
+                );
+                resp.close = true;
+                resp
+            }
+            // Peer vanished or timed out mid-request: nothing sensible
+            // to say, and nobody to say it to.
+            Err(WireError::Io(_)) | Err(WireError::Eof) => return,
+        };
+        // During shutdown, answer the request we already read but tell
+        // the client not to reuse the connection.
+        let closing = resp.close || stop.load(Ordering::Relaxed);
+        if write_response(reader.get_mut(), &resp, closing).is_err() || closing {
+            return;
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // Best-effort: if `shutdown` was skipped (e.g. a panicking
+        // test), still unblock the threads so the process can exit.
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,403 @@
+//! Minimal HTTP/1.1 client and load generators for `bench-serve`.
+//!
+//! Two harness shapes, matching the serving-benchmark literature:
+//!
+//! * **closed loop** — `C` clients, each with one keep-alive
+//!   connection, issuing the next request the moment the previous
+//!   reply lands. Measures per-request latency under a fixed
+//!   concurrency; throughput is demand-limited by `C`.
+//! * **open loop** — requests arrive on a fixed schedule (`rate` per
+//!   second) regardless of how fast replies come back. Latency is
+//!   measured from the *scheduled* arrival time, not from the moment a
+//!   connection became free, so a stalled server inflates the tail
+//!   instead of silently pausing the clock (no coordinated omission).
+//!
+//! Both count 503 replies as `rejected` — load the server shed on
+//! purpose — separately from transport `errors`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::sync_channel;
+use std::time::{Duration, Instant};
+
+/// One reply as seen by the client.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First header value for `name` (ASCII case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A keep-alive client connection.
+pub struct ClientConn {
+    r: BufReader<TcpStream>,
+}
+
+impl ClientConn {
+    pub fn connect(addr: &str) -> std::io::Result<ClientConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        // Generous bound so a wedged server fails the harness instead
+        // of hanging it.
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(ClientConn {
+            r: BufReader::new(stream),
+        })
+    }
+
+    /// Issue one request and read the full reply. JSON content type is
+    /// assumed for bodies — that is all this API speaks.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> std::io::Result<ClientResponse> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: brainslug\r\n");
+        if let Some(body) = body {
+            head.push_str(&format!(
+                "content-type: application/json\r\ncontent-length: {}\r\n",
+                body.len()
+            ));
+        }
+        head.push_str("\r\n");
+        let w = self.r.get_mut();
+        w.write_all(head.as_bytes())?;
+        if let Some(body) = body {
+            w.write_all(body)?;
+        }
+        w.flush()?;
+        self.read_response()
+    }
+
+    fn read_line(&mut self) -> std::io::Result<String> {
+        let mut line = String::new();
+        if self.r.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(line)
+    }
+
+    fn read_response(&mut self) -> std::io::Result<ClientResponse> {
+        let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let status_line = self.read_line()?;
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| bad(format!("malformed status line {status_line:?}")))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| bad(format!("malformed header {line:?}")))?;
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let len = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .and_then(|(_, v)| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        self.r.read_exact(&mut body)?;
+        Ok(ClientResponse {
+            status,
+            headers,
+            body,
+        })
+    }
+}
+
+/// Connect, issue one request, disconnect. The CI smoke path.
+pub fn one_shot(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> std::io::Result<ClientResponse> {
+    ClientConn::connect(addr)?.request(method, path, body)
+}
+
+/// Aggregated result of one load-generation run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    /// 503 replies — load the server shed deliberately.
+    pub rejected: u64,
+    /// Transport failures and non-200/503 statuses.
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Latency of every reply (ok + rejected), milliseconds, sorted.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.50)
+    }
+    pub fn p95_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.95)
+    }
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.99)
+    }
+    pub fn mean_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+    }
+    /// Successful replies per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / self.wall_s
+    }
+    pub fn reject_rate(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.sent as f64
+    }
+
+    fn absorb(&mut self, status: Option<u16>, latency_ms: f64) {
+        self.sent += 1;
+        match status {
+            Some(200) => {
+                self.ok += 1;
+                self.latencies_ms.push(latency_ms);
+            }
+            Some(503) => {
+                self.rejected += 1;
+                self.latencies_ms.push(latency_ms);
+            }
+            _ => self.errors += 1,
+        }
+    }
+
+    fn merge(&mut self, other: LoadReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+
+    fn finish(&mut self, wall: Duration) {
+        self.wall_s = wall.as_secs_f64();
+        self.latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice; `0.0` when empty.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Closed loop: `clients` threads × `reqs_per_client` sequential
+/// `POST /v1/run` requests with `body`, one keep-alive connection per
+/// client (re-established after transport errors or server-initiated
+/// closes).
+pub fn closed_loop(addr: &str, clients: usize, reqs_per_client: usize, body: &[u8]) -> LoadReport {
+    let started = Instant::now();
+    let joins: Vec<_> = (0..clients.max(1))
+        .map(|_| {
+            let addr = addr.to_string();
+            let body = body.to_vec();
+            std::thread::spawn(move || {
+                let mut local = LoadReport::default();
+                let mut conn = ClientConn::connect(&addr).ok();
+                for _ in 0..reqs_per_client {
+                    let t0 = Instant::now();
+                    let result = match conn.as_mut() {
+                        Some(c) => c.request("POST", "/v1/run", Some(&body)),
+                        None => Err(std::io::Error::new(
+                            std::io::ErrorKind::NotConnected,
+                            "connect failed",
+                        )),
+                    };
+                    match result {
+                        Ok(resp) => {
+                            // The server closes the stream after some
+                            // statuses (shutdown, 413); reconnect lazily.
+                            if resp.header("connection") == Some("close") {
+                                conn = None;
+                            }
+                            local.absorb(Some(resp.status), ms_since(t0));
+                        }
+                        Err(_) => {
+                            local.absorb(None, ms_since(t0));
+                            conn = None;
+                        }
+                    }
+                    if conn.is_none() {
+                        conn = ClientConn::connect(&addr).ok();
+                    }
+                }
+                local
+            })
+        })
+        .collect();
+    let mut report = LoadReport::default();
+    for j in joins {
+        if let Ok(local) = j.join() {
+            report.merge(local);
+        }
+    }
+    report.finish(started.elapsed());
+    report
+}
+
+/// Open loop: `rate_rps` scheduled arrivals per second for
+/// `duration_s`, executed by a pool of `pool` connections. Latency is
+/// measured from each request's *scheduled* time.
+pub fn open_loop(
+    addr: &str,
+    rate_rps: f64,
+    duration_s: f64,
+    pool: usize,
+    body: &[u8],
+) -> LoadReport {
+    let total = (rate_rps * duration_s).round().max(1.0) as usize;
+    let interval = Duration::from_secs_f64(1.0 / rate_rps.max(1e-9));
+    // Deep ticket queue: a slow server must find backed-up tickets, not
+    // a blocked pacer (that would re-introduce coordinated omission).
+    let (tx, rx) = sync_channel::<Instant>(total);
+    let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+    let started = Instant::now();
+    let joins: Vec<_> = (0..pool.max(1))
+        .map(|_| {
+            let addr = addr.to_string();
+            let body = body.to_vec();
+            let rx = rx.clone();
+            std::thread::spawn(move || {
+                let mut local = LoadReport::default();
+                let mut conn = ClientConn::connect(&addr).ok();
+                loop {
+                    let scheduled = match rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+                        Ok(t) => t,
+                        Err(_) => return local,
+                    };
+                    let result = match conn.as_mut() {
+                        Some(c) => c.request("POST", "/v1/run", Some(&body)),
+                        None => Err(std::io::Error::new(
+                            std::io::ErrorKind::NotConnected,
+                            "connect failed",
+                        )),
+                    };
+                    match result {
+                        Ok(resp) => {
+                            if resp.header("connection") == Some("close") {
+                                conn = None;
+                            }
+                            local.absorb(Some(resp.status), ms_since(scheduled));
+                        }
+                        Err(_) => {
+                            local.absorb(None, ms_since(scheduled));
+                            conn = None;
+                        }
+                    }
+                    if conn.is_none() {
+                        conn = ClientConn::connect(&addr).ok();
+                    }
+                }
+            })
+        })
+        .collect();
+    // Pace on this thread: emit each ticket at its scheduled instant.
+    for i in 0..total {
+        let target = started + interval.mul_f64(i as f64);
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        if tx.send(target).is_err() {
+            break;
+        }
+    }
+    drop(tx);
+    let mut report = LoadReport::default();
+    for j in joins {
+        if let Ok(local) = j.join() {
+            report.merge(local);
+        }
+    }
+    report.finish(started.elapsed());
+    report
+}
+
+/// Milliseconds elapsed since `t0`, clamped at zero.
+fn ms_since(t0: Instant) -> f64 {
+    Instant::now()
+        .checked_duration_since(t0)
+        .unwrap_or(Duration::ZERO)
+        .as_secs_f64()
+        * 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // Tiny q still picks the first element, never index -1.
+        assert_eq!(percentile(&v, 0.0001), 1.0);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let mut r = LoadReport::default();
+        r.absorb(Some(200), 2.0);
+        r.absorb(Some(200), 4.0);
+        r.absorb(Some(503), 1.0);
+        r.absorb(None, 9.0);
+        r.finish(Duration::from_secs(2));
+        assert_eq!((r.sent, r.ok, r.rejected, r.errors), (4, 2, 1, 1));
+        assert_eq!(r.latencies_ms, vec![1.0, 2.0, 4.0]);
+        assert!((r.throughput_rps() - 1.0).abs() < 1e-9);
+        assert!((r.reject_rate() - 0.25).abs() < 1e-9);
+        assert!((r.mean_ms() - 7.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_nan_free() {
+        let r = LoadReport::default();
+        assert_eq!(r.p50_ms(), 0.0);
+        assert_eq!(r.mean_ms(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.reject_rate(), 0.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! HTTP/JSON serving front door: the wire face of [`crate::server`].
+//!
+//! BrainSlug's serving story so far ended at an in-process Rust API;
+//! this module puts the batching worker pool behind a zero-dependency
+//! HTTP/1.1 endpoint so the "millions of users" traffic the ROADMAP
+//! targets has a protocol to arrive on:
+//!
+//! * [`wire`] — request parsing / response serialisation (keep-alive,
+//!   `Content-Length` framing, bounded header and body sizes),
+//! * [`router`] — `POST /v1/run`, `GET /v1/stats`, `GET /healthz`,
+//!   with lazy JSON field extraction ([`crate::json::scan_str_field`]
+//!   and friends) so the hot path never builds a document tree,
+//! * [`listener`] — `TcpListener` accept loop plus a bounded
+//!   connection-thread pool,
+//! * [`load`] — the closed/open-loop load generator behind
+//!   `brainslug bench-serve`.
+//!
+//! Backpressure is end-to-end: a full connection channel sheds at the
+//! accept stage with 503, and a full dispatch queue (under
+//! [`crate::server::QueuePolicy::Reject`]) surfaces as 503 +
+//! `Retry-After` per request. Shutdown is graceful by construction —
+//! see [`listener`] for the ordering contract.
+
+pub mod listener;
+pub mod load;
+pub mod router;
+pub mod wire;
+
+pub use listener::{HttpConfig, HttpServer};
+pub use load::{closed_loop, one_shot, open_loop, ClientConn, ClientResponse, LoadReport};
+pub use router::AppState;
+pub use wire::{Request, Response, WireError, WireLimits};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+    use crate::device::DeviceSpec;
+    use crate::engine::{Engine, EngineBuilder};
+    use crate::json::{self, Json};
+    use crate::optimizer::CollapseOptions;
+    use crate::server::{QueuePolicy, ServerConfig};
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    /// Builder for a sim-backed engine over a tiny block network with
+    /// batch `b` (unpaced).
+    fn sim_builder(b: usize) -> EngineBuilder {
+        Engine::builder()
+            .graph_owned(bench::block_net(1, b, 2, 8))
+            .device(DeviceSpec::tpu_core())
+            .brainslug(CollapseOptions::default())
+            .sim()
+            .seed(11)
+    }
+
+    /// Pacing scale that makes one batch cost roughly `target` seconds
+    /// of wall-clock (same calibration as the server tests).
+    fn pace_scale_for(b: usize, target: f64) -> f64 {
+        let mut probe = sim_builder(b).build().unwrap();
+        let input = probe.synthetic_input();
+        let (_, st) = probe.run(input).unwrap();
+        target / st.total_s.max(1e-12)
+    }
+
+    fn start_http(config: ServerConfig) -> HttpServer {
+        let server = config.start().unwrap();
+        HttpServer::start(server, HttpConfig::new("127.0.0.1:0")).unwrap()
+    }
+
+    fn run_body(state: &AppState, input: &[f32]) -> String {
+        let mut o = Json::object();
+        o.set("model", Json::Str(state.model.clone()));
+        o.set(
+            "input",
+            Json::Arr(input.iter().map(|v| Json::Num(*v as f64)).collect()),
+        );
+        o.to_string_compact()
+    }
+
+    #[test]
+    fn http_output_matches_in_process_run() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let addr = http.addr().to_string();
+        let state = http.state().clone();
+        let input = crate::rng::fill_f32(3, state.image_elems);
+        let body = run_body(&state, &input);
+        let resp = one_shot(&addr, "POST", "/v1/run", Some(body.as_bytes())).unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let wire_out: Vec<f32> = parsed
+            .arr_field("output")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let direct = state.handle.infer(input).unwrap();
+        assert_eq!(wire_out, direct.data, "wire output diverges from engine.run");
+        http.shutdown();
+    }
+
+    #[test]
+    fn healthz_stats_and_errors_over_the_wire() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let addr = http.addr().to_string();
+        assert_ne!(http.addr().port(), 0, "ephemeral port resolved");
+
+        let resp = one_shot(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"ok\":true}");
+
+        let resp = one_shot(&addr, "GET", "/v1/stats", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed.str_field("model").unwrap(), http.state().model);
+        assert!(parsed.usize_field("image_elems").unwrap() > 0);
+
+        assert_eq!(one_shot(&addr, "GET", "/nope", None).unwrap().status, 404);
+        let resp = one_shot(&addr, "GET", "/v1/run", None).unwrap();
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("POST"));
+        let resp = one_shot(&addr, "POST", "/v1/run", Some(b"not json")).unwrap();
+        assert_eq!(resp.status, 400);
+        http.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_line_gets_400_and_close() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let mut stream = TcpStream::connect(http.addr()).unwrap();
+        stream.write_all(b"BOGUS\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap(); // server closes → EOF
+        assert!(raw.starts_with("HTTP/1.1 400 "), "{raw}");
+        assert!(raw.contains("connection: close"), "{raw}");
+        http.shutdown();
+    }
+
+    #[test]
+    fn oversized_body_gets_413_and_close() {
+        let server = ServerConfig::new(sim_builder(1)).start().unwrap();
+        let mut cfg = HttpConfig::new("127.0.0.1:0");
+        cfg.limits.max_body_bytes = 64;
+        let http = HttpServer::start(server, cfg).unwrap();
+        let mut stream = TcpStream::connect(http.addr()).unwrap();
+        // Declared length over the limit; body never sent.
+        stream
+            .write_all(b"POST /v1/run HTTP/1.1\r\ncontent-length: 65\r\n\r\n")
+            .unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 413 "), "{raw}");
+        assert!(raw.contains("connection: close"), "{raw}");
+        http.shutdown();
+    }
+
+    #[test]
+    fn pipelined_keep_alive_requests_both_answered() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let mut stream = TcpStream::connect(http.addr()).unwrap();
+        stream
+            .write_all(
+                b"GET /healthz HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n",
+            )
+            .unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert_eq!(raw.matches("HTTP/1.1 200 OK").count(), 2, "{raw}");
+        assert_eq!(raw.matches("{\"ok\":true}").count(), 2, "{raw}");
+        http.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_against_paced_engine() {
+        let scale = pace_scale_for(2, 0.004);
+        let http = start_http(
+            ServerConfig::new(sim_builder(2).sim_paced(scale))
+                .workers(2)
+                .queue_depth(16),
+        );
+        let addr = http.addr().to_string();
+        let state = http.state().clone();
+        let input = crate::rng::fill_f32(5, state.image_elems);
+        let body = run_body(&state, &input);
+        let report = closed_loop(&addr, 4, 5, body.as_bytes());
+        assert_eq!(report.sent, 20);
+        assert_eq!(report.ok, 20, "errors={} rejected={}", report.errors, report.rejected);
+        assert!(report.p99_ms() >= report.p50_ms());
+        assert_eq!(
+            http.state().stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+            20
+        );
+        http.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_as_503_with_retry_after() {
+        // One slow worker (≈80 ms/batch), a one-deep queue, Reject
+        // policy: a burst of 8 must shed most of itself.
+        let scale = pace_scale_for(1, 0.08);
+        let http = start_http(
+            ServerConfig::new(sim_builder(1).sim_paced(scale))
+                .workers(1)
+                .queue_depth(1)
+                .queue_policy(QueuePolicy::Reject),
+        );
+        let addr = http.addr().to_string();
+        let state = http.state().clone();
+        let body = run_body(&state, &vec![0.5; state.image_elems]);
+        let joins: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                let body = body.clone();
+                std::thread::spawn(move || one_shot(&addr, "POST", "/v1/run", Some(body.as_bytes())))
+            })
+            .collect();
+        let mut saw_503_with_retry_after = false;
+        let mut ok = 0;
+        for j in joins {
+            let resp = j.join().unwrap().unwrap();
+            match resp.status {
+                200 => ok += 1,
+                503 => {
+                    assert_eq!(resp.header("retry-after"), Some("1"));
+                    saw_503_with_retry_after = true;
+                }
+                s => panic!("unexpected status {s}"),
+            }
+        }
+        assert!(ok >= 1, "at least the first request must be served");
+        assert!(saw_503_with_retry_after, "burst of 8 onto capacity 2 must shed");
+        // The shed shows up in /v1/stats as a non-zero rejected count.
+        let resp = one_shot(&addr, "GET", "/v1/stats", None).unwrap();
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(parsed.usize_field("rejected").unwrap() > 0);
+        http.shutdown();
+    }
+
+    #[test]
+    fn shutdown_closes_the_listener() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let addr = http.addr();
+        assert_eq!(one_shot(&addr.to_string(), "GET", "/healthz", None).unwrap().status, 200);
+        http.shutdown();
+        // The port is released: new connections are refused (or, if the
+        // OS raced a final accept, the stream yields no response).
+        match TcpStream::connect(addr) {
+            Err(_) => {}
+            Ok(mut stream) => {
+                let _ = stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+                let mut raw = String::new();
+                let _ = stream.read_to_string(&mut raw);
+                assert!(raw.is_empty(), "served after shutdown: {raw}");
+            }
+        }
+    }
+}

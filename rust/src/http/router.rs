@@ -1,0 +1,295 @@
+//! Route table: maps parsed requests onto the serving engine.
+//!
+//! Three endpoints, mirrored in DESIGN.md §HTTP Serving:
+//!
+//! | method | path        | body in                              | 200 body out                     |
+//! |--------|-------------|--------------------------------------|----------------------------------|
+//! | POST   | `/v1/run`   | `{"model": "...", "input": [...]}`   | `{"model": ..., "output": [...]}`|
+//! | GET    | `/v1/stats` | —                                    | [`ServerStats::to_json`] + serving metadata |
+//! | GET    | `/healthz`  | —                                    | `{"ok": true}`                   |
+//!
+//! The hot path (`POST /v1/run`) never builds a JSON tree for the
+//! request: the two fields are pulled straight off the byte stream with
+//! the lazy scanners in [`crate::json`]. Backpressure from the bounded
+//! dispatch queue maps onto the wire as 503 + `Retry-After`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::json::{self, Json};
+use crate::server::{InferError, ServerHandle, ServerStats};
+
+use super::wire::{Request, Response};
+
+/// Everything a connection thread needs to answer requests. Cheap to
+/// clone (all `Arc`s and small copies).
+#[derive(Clone)]
+pub struct AppState {
+    pub handle: ServerHandle,
+    pub stats: Arc<ServerStats>,
+    /// Compiled batch size of the served engine (for occupancy).
+    pub batch: usize,
+    /// Worker-pool size (reported in `/v1/stats`).
+    pub workers: usize,
+    /// Served model name; `POST /v1/run` rejects any other with 404.
+    pub model: String,
+    /// Expected `input` element count per request.
+    pub image_elems: usize,
+    pub started: Instant,
+}
+
+/// Dispatch one request. Infallible by design: every failure becomes a
+/// response with the right status code.
+pub fn route(state: &AppState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/run") => run(state, &req.body),
+        ("GET", "/v1/stats") => stats(state),
+        ("GET", "/healthz") => Response::json(200, "{\"ok\":true}".to_string()),
+        // Known paths with the wrong verb get 405 + Allow, per RFC.
+        (_, "/v1/run") => {
+            let mut resp = Response::error(405, "use POST");
+            resp.allow = Some("POST");
+            resp
+        }
+        (_, "/v1/stats") | (_, "/healthz") => {
+            let mut resp = Response::error(405, "use GET");
+            resp.allow = Some("GET");
+            resp
+        }
+        (_, path) => Response::error(404, &format!("no route for {path}")),
+    }
+}
+
+/// `POST /v1/run`: lazy-extract `model` and `input`, submit to the
+/// dispatch queue, serialise the output tensor.
+fn run(state: &AppState, body: &[u8]) -> Response {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Response::error(400, "body is not valid UTF-8");
+    };
+    match json::scan_str_field(text, "model") {
+        Ok(Some(model)) if model == state.model => {}
+        Ok(Some(model)) => {
+            return Response::error(
+                404,
+                &format!("model {model:?} not served here (serving {:?})", state.model),
+            )
+        }
+        Ok(None) => return Response::error(400, "missing \"model\" field"),
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    }
+    let input = match json::scan_f32_array_field(text, "input") {
+        Ok(Some(v)) => v,
+        Ok(None) => return Response::error(400, "missing \"input\" field"),
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if input.len() != state.image_elems {
+        return Response::error(
+            400,
+            &format!(
+                "input has {} elements, expected {}",
+                input.len(),
+                state.image_elems
+            ),
+        );
+    }
+    match state.handle.try_infer(input) {
+        Ok(tensor) => {
+            let mut o = Json::object();
+            o.set("model", Json::Str(state.model.clone()));
+            o.set(
+                "output",
+                Json::Arr(tensor.data.iter().map(|v| Json::Num(*v as f64)).collect()),
+            );
+            Response::json(200, o.to_string_compact())
+        }
+        // Backpressure → 503 with a back-off hint. This is the wire
+        // face of QueuePolicy::Reject.
+        Err(e @ InferError::QueueFull { .. }) => {
+            let mut resp = Response::error(503, &e.to_string());
+            resp.retry_after = Some(1);
+            resp
+        }
+        // Shutdown → 503 and close, so keep-alive clients re-resolve.
+        Err(e @ InferError::Stopped) => {
+            let mut resp = Response::error(503, &e.to_string());
+            resp.retry_after = Some(1);
+            resp.close = true;
+            resp
+        }
+        Err(e @ InferError::BadInput(_)) => Response::error(400, &e.to_string()),
+        Err(e @ InferError::Exec(_)) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// `GET /v1/stats`: the shared [`ServerStats`] snapshot plus serving
+/// metadata the load harness needs (model name, expected input size).
+fn stats(state: &AppState) -> Response {
+    let mut o = state.stats.to_json(state.batch);
+    o.set("model", Json::Str(state.model.clone()));
+    o.set("workers", Json::from_usize(state.workers));
+    o.set("image_elems", Json::from_usize(state.image_elems));
+    o.set(
+        "uptime_s",
+        Json::Num(state.started.elapsed().as_secs_f64()),
+    );
+    Response::json(200, o.to_string_compact())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench;
+    use crate::device::DeviceSpec;
+    use crate::engine::Engine;
+    use crate::optimizer::CollapseOptions;
+    use crate::server::{QueuePolicy, Server, ServerConfig};
+
+    fn test_state() -> (Server, AppState) {
+        let builder = Engine::builder()
+            .graph_owned(bench::block_net(1, 2, 2, 8))
+            .device(DeviceSpec::tpu_core())
+            .brainslug(CollapseOptions::default())
+            .sim()
+            .seed(11);
+        let server = ServerConfig::new(builder)
+            .workers(1)
+            .queue_depth(4)
+            .queue_policy(QueuePolicy::Block)
+            .start()
+            .expect("server start");
+        let state = AppState {
+            handle: server.handle(),
+            stats: server.stats.clone(),
+            batch: server.batch_size(),
+            workers: server.workers(),
+            model: server.model_name().to_string(),
+            image_elems: server.handle().image_shape().numel(),
+            started: Instant::now(),
+        };
+        (server, state)
+    }
+
+    fn post_run(state: &AppState, body: &str) -> Response {
+        let req = Request {
+            method: "POST".into(),
+            path: "/v1/run".into(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+            keep_alive: true,
+        };
+        route(state, &req)
+    }
+
+    fn get(state: &AppState, path: &str) -> Response {
+        let req = Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+            keep_alive: true,
+        };
+        route(state, &req)
+    }
+
+    #[test]
+    fn run_round_trips_through_json() {
+        let (server, state) = test_state();
+        let input = crate::rng::fill_f32(11, state.image_elems);
+        let mut body = Json::object();
+        body.set("model", Json::Str(state.model.clone()));
+        body.set(
+            "input",
+            Json::Arr(input.iter().map(|v| Json::Num(*v as f64)).collect()),
+        );
+        let resp = post_run(&state, &body.to_string_compact());
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed.str_field("model").unwrap(), state.model);
+        let wire_out: Vec<f32> = parsed
+            .arr_field("output")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        // Parity with the in-process path on the same handle.
+        let direct = state.handle.infer(input).unwrap();
+        assert_eq!(wire_out, direct.data);
+        server.stop();
+    }
+
+    #[test]
+    fn run_input_errors_are_400() {
+        let (server, state) = test_state();
+        for body in [
+            "not json at all",
+            "{}",
+            &format!("{{\"model\":\"{}\"}}", state.model),
+            &format!("{{\"model\":\"{}\",\"input\":\"nope\"}}", state.model),
+            &format!("{{\"model\":\"{}\",\"input\":[1,2,3]}}", state.model),
+        ] {
+            let resp = post_run(&state, body);
+            assert_eq!(resp.status, 400, "body {body:?}");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_model_is_404() {
+        let (server, state) = test_state();
+        let resp = post_run(&state, "{\"model\":\"nonesuch\",\"input\":[1]}");
+        assert_eq!(resp.status, 404);
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_routes_and_wrong_methods() {
+        let (server, state) = test_state();
+        assert_eq!(get(&state, "/nope").status, 404);
+        assert_eq!(get(&state, "/v1/run").status, 405);
+        assert_eq!(get(&state, "/v1/run").allow, Some("POST"));
+        let resp = route(
+            &state,
+            &Request {
+                method: "DELETE".into(),
+                path: "/healthz".into(),
+                headers: Vec::new(),
+                body: Vec::new(),
+                keep_alive: true,
+            },
+        );
+        assert_eq!((resp.status, resp.allow), (405, Some("GET")));
+        server.stop();
+    }
+
+    #[test]
+    fn stats_and_healthz() {
+        let (server, state) = test_state();
+        let resp = get(&state, "/healthz");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"ok\":true}");
+        let resp = get(&state, "/v1/stats");
+        assert_eq!(resp.status, 200);
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed.str_field("model").unwrap(), state.model);
+        assert_eq!(parsed.usize_field("workers").unwrap(), 1);
+        assert_eq!(parsed.usize_field("image_elems").unwrap(), state.image_elems);
+        assert!(parsed.f64_field("uptime_s").unwrap() >= 0.0);
+        server.stop();
+    }
+
+    #[test]
+    fn stopped_server_maps_to_503() {
+        let (server, state) = test_state();
+        server.stop();
+        let resp = post_run(
+            &state,
+            &format!(
+                "{{\"model\":\"{}\",\"input\":{}}}",
+                state.model,
+                Json::Arr(vec![Json::Num(0.0); state.image_elems]).to_string_compact()
+            ),
+        );
+        assert_eq!(resp.status, 503);
+        assert!(resp.close);
+    }
+}

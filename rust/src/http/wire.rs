@@ -1,0 +1,465 @@
+//! HTTP/1.1 wire format: request parsing and response serialisation.
+//!
+//! This is a deliberately small subset of RFC 9112, sized for a JSON
+//! inference API behind a trusted load balancer:
+//!
+//! * request line `METHOD SP PATH SP HTTP/1.x`,
+//! * header block terminated by an empty line, total size bounded by
+//!   [`WireLimits::max_header_bytes`],
+//! * bodies framed by `Content-Length` only (chunked transfer encoding
+//!   is rejected with 400), bounded by [`WireLimits::max_body_bytes`]
+//!   — the bound is enforced *before* the body is read, so an
+//!   oversized declaration costs no memory and maps to 413,
+//! * keep-alive by default for HTTP/1.1, opt-in via
+//!   `Connection: keep-alive` for HTTP/1.0, opt-out via
+//!   `Connection: close`.
+//!
+//! Parsing never allocates proportionally to anything the client did
+//! not send: header names/values are stored as owned strings but their
+//! cumulative size is capped first.
+
+use std::io::{BufRead, Read, Write};
+
+/// Size bounds applied while parsing a request.
+#[derive(Debug, Clone, Copy)]
+pub struct WireLimits {
+    /// Cap on the request line plus all header lines, in bytes.
+    pub max_header_bytes: usize,
+    /// Cap on the declared `Content-Length`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for WireLimits {
+    fn default() -> Self {
+        WireLimits {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+        }
+    }
+}
+
+/// Why a request could not be read. Each variant carries enough for the
+/// listener to pick a status code: `Bad` → 400, `TooLarge` → 413 (and
+/// close, since the unread body would desynchronise the stream), `Io` /
+/// `Eof` → close without a response.
+#[derive(Debug)]
+pub enum WireError {
+    /// Malformed request: bad request line, bad header, bad framing.
+    Bad(String),
+    /// Declared body exceeds [`WireLimits::max_body_bytes`].
+    TooLarge { declared: usize, limit: usize },
+    /// Transport error (includes read timeouts).
+    Io(std::io::Error),
+    /// Clean end of stream before any request byte (keep-alive close).
+    Eof,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Bad(msg) => write!(f, "bad request: {msg}"),
+            WireError::TooLarge { declared, limit } => {
+                write!(f, "body of {declared} bytes exceeds limit of {limit}")
+            }
+            WireError::Io(e) => write!(f, "i/o error: {e}"),
+            WireError::Eof => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// One parsed request. Header names are lower-cased at parse time so
+/// lookups are case-insensitive; the query string (everything from `?`)
+/// is stripped from `path` — no endpoint takes query parameters.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection may carry another request after this one.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header value for `name` (ASCII case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one line terminated by `\n`, stripping the `\r\n` / `\n`
+/// terminator. `budget` is the remaining header-byte allowance and is
+/// decremented by the raw line length (terminator included) — a line
+/// that would overrun it is an oversized header block.
+fn read_line<R: BufRead>(r: &mut R, budget: &mut usize) -> Result<String, WireError> {
+    let mut raw = Vec::new();
+    let mut limited = r.take(*budget as u64 + 1);
+    let n = limited.read_until(b'\n', &mut raw)?;
+    if n == 0 {
+        return Err(WireError::Eof);
+    }
+    if raw.last() != Some(&b'\n') {
+        if n > *budget {
+            return Err(WireError::Bad("header block too large".into()));
+        }
+        return Err(WireError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed mid-line",
+        )));
+    }
+    *budget -= n.min(*budget);
+    raw.pop();
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw).map_err(|_| WireError::Bad("header line is not valid UTF-8".into()))
+}
+
+/// Read and validate one request from `r`.
+pub fn read_request<R: BufRead>(r: &mut R, limits: &WireLimits) -> Result<Request, WireError> {
+    let mut budget = limits.max_header_bytes;
+    let request_line = read_line(r, &mut budget)?;
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(WireError::Bad(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => {
+            return Err(WireError::Bad(format!(
+                "unsupported protocol version {version:?}"
+            )))
+        }
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(WireError::Bad(format!("malformed method {method:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(WireError::Bad(format!(
+            "request target {target:?} is not an absolute path"
+        )));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line(r, &mut budget) {
+            Ok(line) => line,
+            // EOF inside the header block is a framing error, not a
+            // clean close — the peer sent a partial request.
+            Err(WireError::Eof) => {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed inside header block",
+                )))
+            }
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(WireError::Bad(format!("malformed header line {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(WireError::Bad(format!("malformed header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        return Err(WireError::Bad(
+            "transfer-encoding is not supported; use content-length".into(),
+        ));
+    }
+    let content_length = match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| WireError::Bad(format!("invalid content-length {v:?}")))?,
+        None => 0,
+    };
+    // Enforce the body bound *before* reading: the caller must close
+    // the connection after a 413 because the body bytes stay unread.
+    if content_length > limits.max_body_bytes {
+        return Err(WireError::TooLarge {
+            declared: content_length,
+            limit: limits.max_body_bytes,
+        });
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)?;
+
+    let connection = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase());
+    let keep_alive = match connection.as_deref() {
+        Some("close") => false,
+        Some("keep-alive") => true,
+        _ => http11,
+    };
+    Ok(Request {
+        method: method.to_string(),
+        path,
+        headers,
+        body,
+        keep_alive,
+    })
+}
+
+/// One response to serialise. Built by the router; the listener owns
+/// the final `Connection` decision (it may force `close` on shutdown).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+    /// Emitted as a `Retry-After` header (seconds) — set on 503s so
+    /// well-behaved clients back off instead of hammering a full queue.
+    pub retry_after: Option<u32>,
+    /// Emitted as an `Allow` header — required on 405 responses.
+    pub allow: Option<&'static str>,
+    /// Close the connection after this response regardless of what the
+    /// request asked for (parse errors, 413, server shutdown).
+    pub close: bool,
+}
+
+impl Response {
+    /// JSON response with the given status.
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            body: body.into_bytes(),
+            content_type: "application/json",
+            retry_after: None,
+            allow: None,
+            close: false,
+        }
+    }
+
+    /// Standard error body `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut o = crate::json::Json::object();
+        o.set("error", crate::json::Json::Str(msg.to_string()));
+        Response::json(status, o.to_string_compact())
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serialise `resp`. `close` forces `Connection: close` (the listener
+/// ors it with `resp.close` and the request's own keep-alive choice).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response, close: bool) -> std::io::Result<()> {
+    let close = close || resp.close;
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    if let Some(secs) = resp.retry_after {
+        head.push_str(&format!("retry-after: {secs}\r\n"));
+    }
+    if let Some(allow) = resp.allow {
+        head.push_str(&format!("allow: {allow}\r\n"));
+    }
+    head.push_str(if close {
+        "connection: close\r\n\r\n"
+    } else {
+        "connection: keep-alive\r\n\r\n"
+    });
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, WireError> {
+        read_request(&mut Cursor::new(raw.as_bytes()), &WireLimits::default())
+    }
+
+    #[test]
+    fn parses_minimal_get() {
+        let req = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn frames_body_by_content_length() {
+        let req =
+            parse("POST /v1/run HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloEXTRA").unwrap();
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw = "POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let limits = WireLimits::default();
+        let first = read_request(&mut cur, &limits).unwrap();
+        assert_eq!((first.path.as_str(), first.body.as_slice()), ("/a", &b"hi"[..]));
+        let second = read_request(&mut cur, &limits).unwrap();
+        assert_eq!(second.path, "/b");
+        assert!(matches!(
+            read_request(&mut cur, &limits),
+            Err(WireError::Eof)
+        ));
+    }
+
+    #[test]
+    fn malformed_request_lines_rejected() {
+        for raw in [
+            "GET\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "get /x HTTP/1.1\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/2\r\n\r\n",
+            " /x HTTP/1.1\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse(raw), Err(WireError::Bad(_))),
+                "accepted {raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_headers_rejected() {
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(WireError::Bad(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nbad name: v\r\n\r\n"),
+            Err(WireError::Bad(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nContent-Length: banana\r\n\r\n"),
+            Err(WireError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn transfer_encoding_rejected() {
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(WireError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn header_block_size_is_bounded() {
+        let limits = WireLimits {
+            max_header_bytes: 64,
+            max_body_bytes: 1024,
+        };
+        let raw = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "a".repeat(256));
+        let err = read_request(&mut Cursor::new(raw.as_bytes()), &limits).unwrap_err();
+        assert!(matches!(err, WireError::Bad(ref m) if m.contains("too large")), "{err}");
+    }
+
+    #[test]
+    fn oversized_body_maps_to_too_large_without_reading_it() {
+        let limits = WireLimits {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 8,
+        };
+        // Body bytes deliberately absent: the check fires on the
+        // declared length alone.
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n";
+        match read_request(&mut Cursor::new(raw.as_bytes()), &limits) {
+            Err(WireError::TooLarge { declared: 9, limit: 8 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_defaults_per_version() {
+        assert!(parse("GET / HTTP/1.1\r\n\r\n").unwrap().keep_alive);
+        assert!(!parse("GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .keep_alive);
+        assert!(parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .keep_alive);
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"),
+            Err(WireError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn query_string_is_stripped() {
+        let req = parse("GET /v1/stats?verbose=1 HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.path, "/v1/stats");
+    }
+
+    #[test]
+    fn empty_stream_is_eof() {
+        assert!(matches!(parse(""), Err(WireError::Eof)));
+    }
+
+    #[test]
+    fn response_serialisation_round_trip() {
+        let mut resp = Response::json(200, "{\"ok\":true}".to_string());
+        resp.retry_after = Some(1);
+        let mut out = Vec::new();
+        write_response(&mut out, &resp, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 11\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "{text}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::error(405, "nope"), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"error\":\"nope\"}"), "{text}");
+    }
+}

@@ -1,10 +1,25 @@
-//! Minimal JSON substrate (parser + writer).
+//! Minimal JSON substrate (parser + writer + lazy field scanner).
 //!
 //! The build environment is offline without serde, so the artifact
-//! manifest, graph interop with the python compile path, and report
-//! emission use this small, strict JSON implementation instead. It
-//! supports the full JSON grammar except `\u` surrogate pairs beyond the
-//! BMP are passed through unvalidated.
+//! manifest, graph interop with the python compile path, report
+//! emission, and the HTTP serving front door use this small, strict
+//! JSON implementation instead. It supports the full JSON grammar
+//! except `\u` surrogate pairs beyond the BMP are passed through
+//! unvalidated.
+//!
+//! Two entry styles:
+//!
+//! * [`parse`] — full tree into [`Json`] (manifest/graph documents).
+//! * [`scan_str_field`] / [`scan_f32_array_field`] — *lazy* single-field
+//!   extraction for the serving hot path: scan the top-level object for
+//!   one key and decode only that value, skipping every other field
+//!   structurally without allocating a tree (the mik-sdk ADR-002 /
+//!   smoljson idiom). A `POST /v1/run` body is one large `"input"`
+//!   array plus a couple of small fields; the scanners turn it straight
+//!   into a `Vec<f32>` with no intermediate `Json` values at all.
+//!
+//! Both entries enforce [`MAX_DEPTH`], so a hostile `[[[[…` request
+//! body cannot exhaust the parser's recursion stack.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -239,12 +254,14 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum nesting depth accepted by [`parse`] and the lazy scanners:
+/// deep enough for any manifest/graph/bench document this repo emits,
+/// shallow enough that recursion stays bounded on hostile input.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Returns an error with byte position context.
 pub fn parse(input: &str) -> anyhow::Result<Json> {
-    let mut p = Parser {
-        bytes: input.as_bytes(),
-        pos: 0,
-    };
+    let mut p = Parser::new(input);
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -254,12 +271,89 @@ pub fn parse(input: &str) -> anyhow::Result<Json> {
     Ok(v)
 }
 
+/// Lazily extract the string value of top-level field `key` without
+/// building a tree: every other field is skipped structurally. Returns
+/// `Ok(None)` when the key is absent, an error when the document (up to
+/// and including the match) is malformed or the value is not a string.
+///
+/// Lazy means *lazy*: bytes after the matched value are never looked
+/// at, so garbage in later fields goes undetected — acceptable for the
+/// serving hot path, where the alternative is parsing a megabyte of
+/// `"input"` numbers twice.
+pub fn scan_str_field(input: &str, key: &str) -> anyhow::Result<Option<String>> {
+    let mut p = Parser::new(input);
+    if !p.seek_top_level(key)? {
+        return Ok(None);
+    }
+    if p.peek()? != b'"' {
+        anyhow::bail!("field '{key}' not a string");
+    }
+    Ok(Some(p.string()?))
+}
+
+/// Lazily extract top-level field `key` as a flat `f32` array (the
+/// `POST /v1/run` `"input"` payload): numbers are decoded straight into
+/// the vector, no `Json` values are built anywhere. `Ok(None)` when the
+/// key is absent; an error when the value is not an array of numbers.
+pub fn scan_f32_array_field(input: &str, key: &str) -> anyhow::Result<Option<Vec<f32>>> {
+    let mut p = Parser::new(input);
+    if !p.seek_top_level(key)? {
+        return Ok(None);
+    }
+    if p.peek()? != b'[' {
+        anyhow::bail!("field '{key}' not an array");
+    }
+    p.pos += 1;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek()? == b']' {
+        p.pos += 1;
+        return Ok(Some(out));
+    }
+    loop {
+        p.skip_ws();
+        match p.peek()? {
+            b'-' | b'0'..=b'9' => {
+                let n = p
+                    .number()?
+                    .as_f64()
+                    .expect("number() always yields Num");
+                out.push(n as f32);
+            }
+            _ => anyhow::bail!(
+                "field '{key}' must be a flat array of numbers (byte {})",
+                p.pos
+            ),
+        }
+        p.skip_ws();
+        match p.peek()? {
+            b',' => {
+                p.pos += 1;
+            }
+            b']' => {
+                p.pos += 1;
+                return Ok(Some(out));
+            }
+            c => anyhow::bail!("expected ',' or ']' at byte {}, got '{}'", p.pos, c as char),
+        }
+    }
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn new(input: &'a str) -> Parser<'a> {
+        Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+            depth: 0,
+        }
+    }
+
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
@@ -299,6 +393,13 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> anyhow::Result<Json> {
+        self.enter()?;
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> anyhow::Result<Json> {
         match self.peek()? {
             b'{' => self.object(),
             b'[' => self.array(),
@@ -308,6 +409,135 @@ impl<'a> Parser<'a> {
             b'n' => self.literal("null", Json::Null),
             b'-' | b'0'..=b'9' => self.number(),
             c => anyhow::bail!("unexpected '{}' at byte {}", c as char, self.pos),
+        }
+    }
+
+    /// Bump the recursion depth, erroring past [`MAX_DEPTH`].
+    fn enter(&mut self) -> anyhow::Result<()> {
+        if self.depth >= MAX_DEPTH {
+            anyhow::bail!(
+                "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                self.pos
+            );
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    // ---- lazy scanning (no tree construction) ----
+
+    /// Scan the document's top-level object for `key`. On a hit the
+    /// cursor rests on the first byte of the value and `Ok(true)` is
+    /// returned; other fields' values are skipped structurally (no
+    /// allocation beyond each key string). `Ok(false)` when the object
+    /// ends without the key.
+    fn seek_top_level(&mut self, key: &str) -> anyhow::Result<bool> {
+        self.skip_ws();
+        self.expect(b'{')?;
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            return Ok(false);
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            if k == key {
+                return Ok(true);
+            }
+            self.skip_value()?;
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                b'}' => return Ok(false),
+                c => anyhow::bail!(
+                    "expected ',' or '}}' at byte {}, got '{}'",
+                    self.pos,
+                    c as char
+                ),
+            }
+        }
+    }
+
+    /// Advance past one value without building it. Escape sequences in
+    /// skipped strings are not validated (only `\"`/`\\` matter for
+    /// finding the closing quote); nesting still honours [`MAX_DEPTH`].
+    fn skip_value(&mut self) -> anyhow::Result<()> {
+        self.enter()?;
+        let r = self.skip_value_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn skip_value_inner(&mut self) -> anyhow::Result<()> {
+        match self.peek()? {
+            b'"' => self.skip_string(),
+            b'{' => self.skip_delimited(b'}', true),
+            b'[' => self.skip_delimited(b']', false),
+            b't' => self.literal("true", Json::Null).map(|_| ()),
+            b'f' => self.literal("false", Json::Null).map(|_| ()),
+            b'n' => self.literal("null", Json::Null).map(|_| ()),
+            b'-' | b'0'..=b'9' => self.number().map(|_| ()),
+            c => anyhow::bail!("unexpected '{}' at byte {}", c as char, self.pos),
+        }
+    }
+
+    /// Skip an object (`with_keys`) or array body up to `close`.
+    fn skip_delimited(&mut self, close: u8, with_keys: bool) -> anyhow::Result<()> {
+        self.pos += 1; // opening brace/bracket, already peeked
+        self.skip_ws();
+        if self.peek()? == close {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            if with_keys {
+                self.skip_string()?;
+                self.skip_ws();
+                self.expect(b':')?;
+                self.skip_ws();
+            }
+            self.skip_value()?;
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                c if c == close => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                c => anyhow::bail!(
+                    "expected ',' or '{}' at byte {}, got '{}'",
+                    close as char,
+                    self.pos,
+                    c as char
+                ),
+            }
+        }
+    }
+
+    fn skip_string(&mut self) -> anyhow::Result<()> {
+        self.expect(b'"')?;
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    // Consume the escape head so an escaped quote does
+                    // not terminate the scan; `\uXXXX` hex digits fall
+                    // through the generic arm.
+                    self.peek()?;
+                    self.pos += 1;
+                }
+                _ => {}
+            }
         }
     }
 
@@ -510,5 +740,176 @@ mod tests {
         let v = parse("123456789012345").unwrap();
         assert_eq!(v.as_usize().unwrap(), 123456789012345);
         assert_eq!(v.to_string_compact(), "123456789012345");
+    }
+
+    #[test]
+    fn escape_sequence_roundtrips() {
+        // Read side: every escape form decodes to the expected char.
+        for (src, want) in [
+            (r#""\"""#, "\""),
+            (r#""\\""#, "\\"),
+            (r#""\n""#, "\n"),
+            (r#""\t""#, "\t"),
+            (r#""\r""#, "\r"),
+            (r#""\/""#, "/"),
+            (r#""A""#, "A"),
+            (r#""☃""#, "☃"),
+            ("\"\\u0041\"", "A"),
+            ("\"\\u2603\"", "☃"),
+        ] {
+            let v = parse(src).unwrap();
+            assert_eq!(v.as_str().unwrap(), want, "{src}");
+            // Write side: emitting and re-parsing preserves the value.
+            assert_eq!(parse(&v.to_string_compact()).unwrap(), v, "{src}");
+        }
+        // Escapes embedded in keys survive the object round trip.
+        let doc = "{\"a\\nb\":1}";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("a\nb").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parse(&v.to_string_compact()).unwrap(), v);
+    }
+
+    #[test]
+    fn depth_limit_rejects_nesting_bombs() {
+        let deep = |n: usize| format!("{}0{}", "[".repeat(n), "]".repeat(n));
+        assert!(parse(&deep(MAX_DEPTH - 1)).is_ok());
+        let err = parse(&deep(MAX_DEPTH + 50)).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        // Object nesting hits the same guard.
+        let objs = format!("{}1{}", "{\"k\":".repeat(MAX_DEPTH + 50), "}".repeat(MAX_DEPTH + 50));
+        assert!(parse(&objs).unwrap_err().to_string().contains("nesting"));
+    }
+
+    #[test]
+    fn truncated_input_rejected_at_every_prefix() {
+        // ASCII document where every proper prefix is invalid.
+        let doc = r#"{"a":[1,2,{"b":null}],"c":"x\ny"}"#;
+        assert!(parse(doc).is_ok());
+        for i in 1..doc.len() {
+            assert!(parse(&doc[..i]).is_err(), "prefix of len {i} parsed");
+        }
+    }
+
+    /// Random `Json` tree from the shared SplitMix64 stream. Numbers are
+    /// drawn exactly representable through the shortest-roundtrip f64
+    /// formatter (ints, `u64_to_f32` values, dyadic fractions), so value
+    /// equality after a parse round trip is exact.
+    fn random_json(state: &mut u64, depth: usize) -> Json {
+        use crate::rng::{splitmix64, u64_to_f32};
+        let r = splitmix64(state);
+        match r % if depth == 0 { 4 } else { 6 } {
+            0 => Json::Null,
+            1 => Json::Bool(r & 8 == 0),
+            2 => match r % 3 {
+                0 => Json::Num((r >> 32) as i32 as f64),
+                1 => Json::Num(u64_to_f32(splitmix64(state)) as f64),
+                _ => Json::Num((splitmix64(state) % 1_000_000) as f64 / 64.0),
+            },
+            3 => Json::Str(random_string(state)),
+            4 => Json::Arr(
+                (0..splitmix64(state) % 4)
+                    .map(|_| random_json(state, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..splitmix64(state) % 4 {
+                    m.insert(random_string(state), random_json(state, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    fn random_string(state: &mut u64) -> String {
+        const PALETTE: &[char] = &[
+            'a', 'b', 'z', '0', ' ', '"', '\\', '\n', '\t', '\r', '\u{1}', '\u{1f}', 'é', '☃',
+            '/', '{', '}',
+        ];
+        let n = crate::rng::splitmix64(state) % 9;
+        (0..n)
+            .map(|_| PALETTE[(crate::rng::splitmix64(state) % PALETTE.len() as u64) as usize])
+            .collect()
+    }
+
+    #[test]
+    fn property_parse_inverts_emission() {
+        let mut state = 0xA11CE_u64;
+        for i in 0..300 {
+            let v = random_json(&mut state, 4);
+            let compact = v.to_string_compact();
+            assert_eq!(parse(&compact).unwrap(), v, "iter {i}: {compact}");
+            assert_eq!(parse(&v.to_string_pretty()).unwrap(), v, "iter {i} (pretty)");
+        }
+    }
+
+    // ---- lazy scanner ----
+
+    #[test]
+    fn scan_extracts_without_full_parse() {
+        let doc = r#"{"model":"resnet18","meta":{"a":[1,{"b":"}]"}]},"input":[1,-2.5,3e2]}"#;
+        assert_eq!(
+            scan_str_field(doc, "model").unwrap().as_deref(),
+            Some("resnet18")
+        );
+        assert_eq!(
+            scan_f32_array_field(doc, "input").unwrap().unwrap(),
+            vec![1.0, -2.5, 300.0]
+        );
+        assert_eq!(scan_str_field(doc, "absent").unwrap(), None);
+        assert_eq!(scan_f32_array_field(doc, "absent").unwrap(), None);
+        assert_eq!(scan_f32_array_field(r#"{"input":[]}"#, "input").unwrap(), Some(vec![]));
+    }
+
+    #[test]
+    fn scan_agrees_with_full_parse() {
+        let doc = r#"{"a":"x☃y","nums":[0.5,1,2,3.25],"z":null}"#;
+        let full = parse(doc).unwrap();
+        assert_eq!(
+            scan_str_field(doc, "a").unwrap().as_deref(),
+            full.get("a").unwrap().as_str()
+        );
+        let lazy = scan_f32_array_field(doc, "nums").unwrap().unwrap();
+        let tree: Vec<f32> = full
+            .arr_field("nums")
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(lazy, tree);
+    }
+
+    #[test]
+    fn scan_is_lazy_past_the_match() {
+        // Garbage *after* the matched field goes unseen — documented
+        // hot-path tradeoff.
+        let doc = r#"{"input":[1,2],"junk":}"#;
+        assert_eq!(
+            scan_f32_array_field(doc, "input").unwrap().unwrap(),
+            vec![1.0, 2.0]
+        );
+        // …but garbage before the match still errors.
+        assert!(scan_f32_array_field(r#"{"junk":,"input":[1]}"#, "input").is_err());
+    }
+
+    #[test]
+    fn scan_type_and_shape_errors() {
+        assert!(scan_str_field(r#"{"model":42}"#, "model").is_err());
+        assert!(scan_f32_array_field(r#"{"input":"no"}"#, "input").is_err());
+        assert!(scan_f32_array_field(r#"{"input":[1,[2]]}"#, "input").is_err());
+        assert!(scan_f32_array_field(r#"{"input":[1,2"#, "input").is_err());
+        assert!(scan_str_field("[1,2]", "model").is_err(), "top level must be an object");
+    }
+
+    #[test]
+    fn scan_skip_honours_depth_limit() {
+        // A nesting bomb in a *skipped* field must not recurse away.
+        let bomb = format!(
+            r#"{{"pad":{}0{},"input":[1]}}"#,
+            "[".repeat(MAX_DEPTH + 50),
+            "]".repeat(MAX_DEPTH + 50)
+        );
+        let err = scan_f32_array_field(&bomb, "input").unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
     }
 }

@@ -18,7 +18,9 @@
 //! no artifacts at all; [`autotune`] searches the plan space on that
 //! backend with real timed runs and persists per-network winners to a
 //! profile cache the engine reloads transparently; [`server`] is the
-//! batching inference front-end used by the end-to-end example.
+//! batching inference front-end used by the end-to-end example; [`http`]
+//! puts that front-end behind a zero-dependency HTTP/1.1 + JSON wire
+//! protocol with a closed/open-loop load harness (`bench-serve`).
 //!
 //! [`engine`] is the public facade over all of the above: an
 //! [`engine::EngineBuilder`] resolves the network, runs the optimizer,
@@ -36,6 +38,7 @@ pub mod cpu;
 pub mod device;
 pub mod engine;
 pub mod graph;
+pub mod http;
 pub mod json;
 pub mod memsim;
 pub mod optimizer;

@@ -20,11 +20,14 @@
 //! * `run`           — execute a network (PJRT artifacts or the
 //!   artifact-free sim backend), baseline vs BrainSlug, and verify
 //!   numerics.
-//! * `serve`         — batching-server demo (either backend).
+//! * `serve`         — batching-server demo (either backend); with
+//!   `--http PORT` it becomes a real HTTP/JSON inference service.
+//! * `bench-serve`   — closed/open-loop load harness over real sockets
+//!   (Figure 18); `--single` is the CI smoke client.
 //! * `dot`           — GraphViz dump of a network.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -36,11 +39,12 @@ use brainslug::cli::Args;
 use brainslug::device::DeviceSpec;
 use brainslug::engine::{BackendKind, Engine, EngineBuilder, Mode};
 use brainslug::graph::graph_to_json;
+use brainslug::http::{self, HttpConfig, HttpServer};
 use brainslug::json::Json;
 use brainslug::memsim::{baseline_optimized_time, speedup_pct};
 use brainslug::optimizer::CollapseOptions;
 use brainslug::runtime::RequestSet;
-use brainslug::server::{QueuePolicy, ServerConfig};
+use brainslug::server::{QueuePolicy, Server, ServerConfig};
 use brainslug::zoo;
 
 fn main() {
@@ -57,6 +61,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "tune" => cmd_tune(&args),
         "dot" => cmd_dot(&args),
         "" | "help" | "--help" => {
@@ -91,7 +96,11 @@ USAGE: brainslug <command> [flags]
                 [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
                 [--workers N] [--queue-depth D] [--queue-policy block|reject]
                 [--pace SCALE] [--device PRESET] [--profile-path FILE]
-                [--no-profile]
+                [--no-profile] [--http PORT] [--http-threads K]
+                [--max-body BYTES]
+  bench-serve   [--workers 1,2,4] [--concurrency 2,8] [--batch B]
+                [--requests N] [--batch-cost-ms MS]
+                [--addr HOST:PORT [--single]]
   tune          --net NAME [--batch N] [--backend cpu] [--threads N]
                 [--budget fast|full] [--device PRESET] [--profile-path FILE]
   dot           --net NAME [--batch N] [--small] [--json]
@@ -108,6 +117,20 @@ queue (depth D): when the queue is full, requests block (policy
 `block`) or fail fast (`reject`). `--pace SCALE` makes the sim backend
 sleep model-time x SCALE per batch, so pool scaling and queueing are
 measured against real wall-clock (see benches/fig16_serving_scaling).
+With `--http PORT` the pool goes behind a zero-dependency HTTP/1.1
+front door (POST /v1/run, GET /v1/stats, GET /healthz; port 0 picks an
+ephemeral port) and runs until SIGINT/SIGTERM, then drains gracefully.
+A `reject` queue policy surfaces on the wire as 503 + Retry-After.
+
+`bench-serve` load-tests that front door over real sockets: a
+closed-loop sweep (workers x concurrency, keep-alive clients) plus one
+open-loop overload point per worker count (paced arrivals at ~1.75x
+estimated capacity, latency measured from the *scheduled* arrival so
+queue build-up is charged to the tail, not hidden). Reports
+p50/p95/p99 latency, throughput, and rejected-request rate; writes
+BENCH_serve_http.json. `--addr` points it at an already-running
+server; with `--single` it fires one POST /v1/run + GET /healthz and
+exits non-zero unless both return 200 (the CI smoke).
 
 `tune` searches the collapse-configuration space (budget scale,
 band-height caps) on the *real* CPU backend: a memsim cost-model
@@ -413,6 +436,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if pace.is_some() && !matches!(backend, BackendKind::Sim) {
         bail!("--pace only applies to the sim backend (add --backend sim)");
     }
+    // HTTP front-door flags (port 0 = ephemeral).
+    let http_port: Option<u16> = match args.get("http") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| anyhow::anyhow!("--http: bad port '{v}': {e}"))?,
+        ),
+    };
+    let http_threads = args.get_positive_usize("http-threads")?.unwrap_or(8);
+    let max_body = args.get_positive_usize("max-body")?;
     let default_device = if matches!(backend, BackendKind::Cpu { .. }) {
         DeviceSpec::host_cpu()
     } else {
@@ -446,6 +479,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .queue_policy(queue_policy)
         .max_wait(Duration::from_millis(5))
         .start()?;
+    if let Some(port) = http_port {
+        return serve_http(server, port, http_threads, max_body);
+    }
     let handle = server.handle();
     let image_elems = handle.image_shape().numel();
 
@@ -473,6 +509,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.stats.mean_latency_ms(),
         server.occupancy() * 100.0
     );
+    let (p50, p95, p99) = server.stats.latency_percentiles_ms();
+    println!("latency p50 {p50:.2}ms p95 {p95:.2}ms p99 {p99:.2}ms");
     println!(
         "workers={} batches/worker={:?} peak queue depth {} rejected {}",
         server.workers(),
@@ -481,6 +519,278 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.stats.rejected.load(Ordering::Relaxed)
     );
     server.stop();
+    Ok(())
+}
+
+/// Flag set by the SIGINT/SIGTERM handlers; the `serve --http` wait
+/// loop polls it. A C signal handler may only touch lock-free statics,
+/// hence a process-global rather than the listener's own stop flag.
+static SIGNAL_STOP: AtomicBool = AtomicBool::new(false);
+
+/// Point SIGINT (2) and SIGTERM (15) at a flag-setting handler via the
+/// raw libc `signal` symbol — the offline toolchain has no `libc`
+/// crate, and an atomic store is async-signal-safe.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_signum: i32) {
+        SIGNAL_STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler = on_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(2, handler);
+        signal(15, handler);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// `serve --http PORT`: put the worker pool behind the HTTP front door
+/// and run until a signal arrives, then drain gracefully (stop
+/// accepting → finish in-flight → drain the queue → join).
+fn serve_http(server: Server, port: u16, conn_threads: usize, max_body: Option<usize>) -> Result<()> {
+    let mut cfg = HttpConfig::new(format!("0.0.0.0:{port}"));
+    cfg.conn_threads = conn_threads;
+    if let Some(bytes) = max_body {
+        cfg.limits.max_body_bytes = bytes;
+    }
+    let http = HttpServer::start(server, cfg)?;
+    println!(
+        "serving {} on http://{} — POST /v1/run, GET /v1/stats, GET /healthz (ctrl-c to drain)",
+        http.state().model,
+        http.addr()
+    );
+    install_signal_handlers();
+    while !SIGNAL_STOP.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("signal received — draining in-flight and queued requests");
+    let stats = http.state().stats.clone();
+    let batch = http.state().batch;
+    http.shutdown();
+    let (p50, p95, p99) = stats.latency_percentiles_ms();
+    println!(
+        "served {} requests ({} rejected), mean latency {:.2}ms, p50 {p50:.2}ms p95 {p95:.2}ms p99 {p99:.2}ms, batch occupancy {:.0}%",
+        stats.requests.load(Ordering::Relaxed),
+        stats.rejected.load(Ordering::Relaxed),
+        stats.mean_latency_ms(),
+        stats.occupancy(batch) * 100.0
+    );
+    Ok(())
+}
+
+/// `{"model": ..., "input": [...]}` — the `POST /v1/run` body.
+fn run_body_json(model: &str, input: &[f32]) -> String {
+    let mut o = Json::object();
+    o.set("model", Json::Str(model.to_string()));
+    o.set(
+        "input",
+        Json::Arr(input.iter().map(|v| Json::Num(*v as f64)).collect()),
+    );
+    o.to_string_compact()
+}
+
+/// Ask a running server who it is: (model, image_elems, workers) from
+/// `GET /v1/stats`.
+fn discover_server(addr: &str) -> Result<(String, usize, usize)> {
+    let resp = http::one_shot(addr, "GET", "/v1/stats", None)
+        .map_err(|e| anyhow::anyhow!("GET /v1/stats on {addr}: {e}"))?;
+    if resp.status != 200 {
+        bail!("GET /v1/stats on {addr} returned {}", resp.status);
+    }
+    let j = brainslug::json::parse(std::str::from_utf8(&resp.body)?)?;
+    Ok((
+        j.str_field("model")?,
+        j.usize_field("image_elems")?,
+        j.usize_field("workers")?,
+    ))
+}
+
+/// Common fields of one `BENCH_serve_http.json` row.
+fn serve_row(mode: &str, workers: usize, report: &http::LoadReport) -> Json {
+    let mut row = Json::object();
+    row.set("bench", Json::Str("serve_http".into()));
+    row.set("mode", Json::Str(mode.into()));
+    row.set("workers", Json::from_usize(workers));
+    row.set("sent", Json::Num(report.sent as f64));
+    row.set("ok", Json::Num(report.ok as f64));
+    row.set("rejected", Json::Num(report.rejected as f64));
+    row.set("errors", Json::Num(report.errors as f64));
+    row.set("reject_rate", Json::Num(report.reject_rate()));
+    row.set("throughput_rps", Json::Num(report.throughput_rps()));
+    row.set("mean_ms", Json::Num(report.mean_ms()));
+    row.set("p50_ms", Json::Num(report.p50_ms()));
+    row.set("p95_ms", Json::Num(report.p95_ms()));
+    row.set("p99_ms", Json::Num(report.p99_ms()));
+    row
+}
+
+/// One table row for the bench-serve report.
+fn serve_table_row(table: &mut Table, mode: &str, workers: usize, load: String, r: &http::LoadReport) {
+    table.row(vec![
+        mode.to_string(),
+        workers.to_string(),
+        load,
+        r.sent.to_string(),
+        r.ok.to_string(),
+        r.rejected.to_string(),
+        format!("{:.2}", r.reject_rate()),
+        format!("{:.0}", r.throughput_rps()),
+        format!("{:.2}", r.mean_ms()),
+        format!("{:.2}", r.p50_ms()),
+        format!("{:.2}", r.p95_ms()),
+        format!("{:.2}", r.p99_ms()),
+    ]);
+}
+
+fn serve_table() -> Table {
+    Table::new(&[
+        "mode", "workers", "load", "sent", "ok", "rejected", "rej-rate", "req/s", "mean-ms",
+        "p50-ms", "p95-ms", "p99-ms",
+    ])
+}
+
+/// `bench-serve --single --addr H:P`: the CI smoke — one real
+/// `POST /v1/run` and one `GET /healthz`, non-zero exit unless both
+/// return 200 with sane bodies.
+fn bench_serve_single(addr: &str) -> Result<()> {
+    let (model, elems, _) = discover_server(addr)?;
+    let body = run_body_json(&model, &brainslug::rng::fill_f32(1, elems));
+    let run = http::one_shot(addr, "POST", "/v1/run", Some(body.as_bytes()))
+        .map_err(|e| anyhow::anyhow!("POST /v1/run on {addr}: {e}"))?;
+    if run.status != 200 {
+        bail!(
+            "POST /v1/run returned {}: {}",
+            run.status,
+            String::from_utf8_lossy(&run.body)
+        );
+    }
+    let out = brainslug::json::parse(std::str::from_utf8(&run.body)?)?;
+    let n_out = out.arr_field("output")?.len();
+    let health = http::one_shot(addr, "GET", "/healthz", None)
+        .map_err(|e| anyhow::anyhow!("GET /healthz on {addr}: {e}"))?;
+    if health.status != 200 {
+        bail!("GET /healthz returned {}", health.status);
+    }
+    println!(
+        "single-shot smoke OK against {addr}: POST /v1/run 200 (model {model}, {n_out} output values), GET /healthz 200"
+    );
+    Ok(())
+}
+
+/// `bench-serve --addr H:P`: closed-loop load against an
+/// already-running external server.
+fn bench_serve_external(
+    addr: &str,
+    concurrencies: &[usize],
+    reqs_per_client: usize,
+) -> Result<()> {
+    let (model, elems, workers) = discover_server(addr)?;
+    let body = run_body_json(&model, &brainslug::rng::fill_f32(7, elems));
+    println!("# bench-serve — external server {addr} (model {model}, {workers} workers)");
+    let mut table = serve_table();
+    let mut rows = Vec::new();
+    for &c in concurrencies {
+        let report = http::closed_loop(addr, c, reqs_per_client, body.as_bytes());
+        serve_table_row(&mut table, "closed", workers, format!("c={c}"), &report);
+        let mut row = serve_row("closed", workers, &report);
+        row.set("concurrency", Json::from_usize(c));
+        rows.push(row);
+    }
+    table.print();
+    bench::emit_bench_json("serve_http", rows);
+    Ok(())
+}
+
+/// `brainslug bench-serve`: spin up paced-sim HTTP servers in-process
+/// and measure serving tail latency over real sockets — a closed-loop
+/// (workers x concurrency) sweep plus one open-loop overload point per
+/// worker count. The paced sim makes queueing genuine (a batch costs
+/// real wall-clock), so percentiles reflect scheduling, not kernels.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr").map(|s| s.to_string());
+    let single = args.get_bool("single");
+    let worker_counts = args.get_usize_list("workers", &[1, 2, 4])?;
+    let concurrencies = args.get_usize_list("concurrency", &[2, 8])?;
+    let batch = args.get_positive_usize("batch")?.unwrap_or(4);
+    let reqs_per_client = args.get_positive_usize("requests")?.unwrap_or(8);
+    let batch_cost_ms = args.get_f64("batch-cost-ms")?.unwrap_or(4.0);
+    args.reject_unknown()?;
+    if single {
+        let addr = addr.ok_or_else(|| anyhow::anyhow!("--single requires --addr HOST:PORT"))?;
+        return bench_serve_single(&addr);
+    }
+    if let Some(addr) = addr {
+        return bench_serve_external(&addr, &concurrencies, reqs_per_client);
+    }
+
+    // Calibrate the sim pacing so one batch costs ~batch_cost_ms of
+    // wall-clock (same scheme as benches/fig16_serving_scaling).
+    let batch_cost_s = batch_cost_ms / 1e3;
+    let mut probe = bench::serving_engine(batch, 0.0).build()?;
+    let input = probe.synthetic_input();
+    let (_, st) = probe.run(input)?;
+    let scale = batch_cost_s / st.total_s.max(1e-12);
+
+    println!(
+        "# bench-serve — HTTP serving tail latency (paced sim, batch={batch}, batch-cost={batch_cost_ms:.1}ms)"
+    );
+    let mut table = serve_table();
+    let mut rows = Vec::new();
+    for &w in &worker_counts {
+        // Closed loop, Block policy: every request is eventually
+        // served; queue wait shows up in the percentiles.
+        for &c in &concurrencies {
+            let server = ServerConfig::new(bench::serving_engine(batch, scale))
+                .workers(w)
+                .queue_depth(4 * batch)
+                .queue_policy(QueuePolicy::Block)
+                .max_wait(Duration::from_millis(2))
+                .start()?;
+            let mut cfg = HttpConfig::new("127.0.0.1:0");
+            cfg.conn_threads = c.max(8);
+            let http = HttpServer::start(server, cfg)?;
+            let state = http.state().clone();
+            let body = run_body_json(&state.model, &brainslug::rng::fill_f32(7, state.image_elems));
+            let report = http::closed_loop(&http.addr().to_string(), c, reqs_per_client, body.as_bytes());
+            http.shutdown();
+            serve_table_row(&mut table, "closed", w, format!("c={c}"), &report);
+            let mut row = serve_row("closed", w, &report);
+            row.set("batch", Json::from_usize(batch));
+            row.set("concurrency", Json::from_usize(c));
+            rows.push(row);
+        }
+        // Open loop, Reject policy, arrivals at ~1.75x estimated
+        // capacity: the overload point. Latency is charged from each
+        // request's scheduled arrival, so shed load keeps the tail
+        // honest instead of pausing the clock.
+        let capacity_rps = w as f64 * batch as f64 / batch_cost_s;
+        let rate_rps = 1.75 * capacity_rps;
+        let server = ServerConfig::new(bench::serving_engine(batch, scale))
+            .workers(w)
+            .queue_depth(2 * batch)
+            .queue_policy(QueuePolicy::Reject)
+            .max_wait(Duration::from_millis(2))
+            .start()?;
+        let mut cfg = HttpConfig::new("127.0.0.1:0");
+        cfg.conn_threads = 16;
+        let http = HttpServer::start(server, cfg)?;
+        let state = http.state().clone();
+        let body = run_body_json(&state.model, &brainslug::rng::fill_f32(7, state.image_elems));
+        let report = http::open_loop(&http.addr().to_string(), rate_rps, 1.0, 16, body.as_bytes());
+        http.shutdown();
+        serve_table_row(&mut table, "open", w, format!("{rate_rps:.0}/s"), &report);
+        let mut row = serve_row("open", w, &report);
+        row.set("batch", Json::from_usize(batch));
+        row.set("rate_rps", Json::Num(rate_rps));
+        row.set("pool", Json::from_usize(16));
+        rows.push(row);
+    }
+    table.print();
+    bench::emit_bench_json("serve_http", rows);
     Ok(())
 }
 

@@ -42,14 +42,124 @@
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::engine::{Engine, EngineBuilder};
 use crate::graph::Shape;
+use crate::json::Json;
 use crate::runtime::HostTensor;
+
+/// Allocation-free fixed-bucket latency histogram (HdrHistogram-style
+/// two-significant-bit layout): microsecond-resolution below 16 µs,
+/// then four linear sub-buckets per power-of-two octave, so any
+/// recorded value lands within 12.5 % of its bucket midpoint. The hot
+/// path is one atomic increment; percentile queries walk the fixed
+/// bucket array. Covers up to ~2^36 µs (≈19 h); larger values clamp
+/// into the top bucket.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+}
+
+/// First octave with sub-bucket resolution (values below `2^4 = 16` µs
+/// get one bucket per microsecond).
+const HIST_LINEAR: usize = 16;
+const HIST_FIRST_OCTAVE: usize = 4;
+const HIST_LAST_OCTAVE: usize = 35;
+const HIST_BUCKETS: usize = HIST_LINEAR + (HIST_LAST_OCTAVE - HIST_FIRST_OCTAVE + 1) * 4;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn index(us: u64) -> usize {
+        if us < HIST_LINEAR as u64 {
+            return us as usize;
+        }
+        let octave = (63 - us.leading_zeros() as usize).min(HIST_LAST_OCTAVE);
+        let sub = ((us >> (octave - 2)) & 0b11) as usize;
+        HIST_LINEAR + (octave - HIST_FIRST_OCTAVE) * 4 + sub
+    }
+
+    /// Bucket midpoint in microseconds.
+    fn midpoint_us(idx: usize) -> f64 {
+        if idx < HIST_LINEAR {
+            return idx as f64 + 0.5;
+        }
+        let octave = HIST_FIRST_OCTAVE + (idx - HIST_LINEAR) / 4;
+        let sub = (idx - HIST_LINEAR) % 4;
+        (1u64 << octave) as f64 + (sub as f64 + 0.5) * (1u64 << (octave - 2)) as f64
+    }
+
+    /// Record one latency observation (microseconds).
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// `q`-quantile (`0.0 ..= 1.0`) in milliseconds, `0.0` before any
+    /// observation. Nearest-rank over the bucket midpoints.
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::midpoint_us(idx) / 1000.0;
+            }
+        }
+        Self::midpoint_us(HIST_BUCKETS - 1) / 1000.0
+    }
+}
+
+/// Why a submitted request failed — the typed seam the HTTP front door
+/// maps onto wire status codes (queue-full → 503 + `Retry-After`,
+/// shutdown → 503, bad input → 400, execution failure → 500). The
+/// `Display` strings are the stable messages the pre-HTTP `infer` API
+/// always returned.
+#[derive(Debug)]
+pub enum InferError {
+    /// The bounded dispatch queue was full under [`QueuePolicy::Reject`].
+    QueueFull { capacity: usize },
+    /// The server has stopped (or is draining for shutdown).
+    Stopped,
+    /// The image does not match the served input shape.
+    BadInput(String),
+    /// Batch execution failed on a worker. The message already carries
+    /// the worker's "batch execution failed: …" context verbatim.
+    Exec(String),
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::QueueFull { capacity } => {
+                write!(f, "server queue full (capacity {capacity}); retry later")
+            }
+            InferError::Stopped => write!(f, "server stopped"),
+            InferError::BadInput(msg) | InferError::Exec(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
 
 /// One inference request: a single image (batch dim 1) and a reply
 /// channel. The reply carries an explicit error when batch execution
@@ -98,6 +208,10 @@ pub struct ServerStats {
     pub queue_depth: AtomicI64,
     /// High-water mark of [`Self::queue_depth`].
     pub queue_peak: AtomicU64,
+    /// End-to-end (enqueue → reply) latency distribution; p50/p95/p99
+    /// feed `GET /v1/stats` and the `serve` summary. Fixed buckets, one
+    /// atomic increment per request on the hot path.
+    pub latency: LatencyHistogram,
     /// Batches executed by each worker.
     worker_batches: Vec<AtomicU64>,
 }
@@ -144,6 +258,56 @@ impl ServerStats {
             .map(|c| c.load(Ordering::Relaxed))
             .collect()
     }
+
+    /// End-to-end latency percentiles in milliseconds: (p50, p95, p99).
+    /// All zero before the first completed request.
+    pub fn latency_percentiles_ms(&self) -> (f64, f64, f64) {
+        (
+            self.latency.percentile_ms(0.50),
+            self.latency.percentile_ms(0.95),
+            self.latency.percentile_ms(0.99),
+        )
+    }
+
+    /// Snapshot as a JSON object — the `GET /v1/stats` body. `batch` is
+    /// the served engine's compiled batch size (needed for occupancy).
+    pub fn to_json(&self, batch: usize) -> Json {
+        let (p50, p95, p99) = self.latency_percentiles_ms();
+        let mut o = Json::object();
+        o.set(
+            "requests",
+            Json::Num(self.requests.load(Ordering::Relaxed) as f64),
+        );
+        o.set(
+            "batches",
+            Json::Num(self.batches.load(Ordering::Relaxed) as f64),
+        );
+        o.set(
+            "rejected",
+            Json::Num(self.rejected.load(Ordering::Relaxed) as f64),
+        );
+        o.set("batch", Json::from_usize(batch));
+        o.set("occupancy", Json::Num(self.occupancy(batch)));
+        o.set("queue_depth", Json::Num(self.queue_depth_now() as f64));
+        o.set(
+            "queue_peak",
+            Json::Num(self.queue_peak.load(Ordering::Relaxed) as f64),
+        );
+        o.set("mean_latency_ms", Json::Num(self.mean_latency_ms()));
+        o.set("p50_ms", Json::Num(p50));
+        o.set("p95_ms", Json::Num(p95));
+        o.set("p99_ms", Json::Num(p99));
+        o.set(
+            "worker_batches",
+            Json::Arr(
+                self.worker_batches()
+                    .into_iter()
+                    .map(|b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        );
+        o
+    }
 }
 
 /// Handle for submitting requests.
@@ -154,41 +318,64 @@ pub struct ServerHandle {
     policy: QueuePolicy,
     capacity: usize,
     stats: Arc<ServerStats>,
+    /// Shutdown gate (see [`Server::stop`]): `infer` enqueues under the
+    /// read side, `stop` flips the flag under the write side *before*
+    /// sending the shutdown tokens, so every accepted request is
+    /// FIFO-ordered ahead of every token and drains to a real reply.
+    closed: Arc<RwLock<bool>>,
 }
 
 impl ServerHandle {
     /// Submit one image; blocks until the result is available. When the
     /// dispatch queue is full the call blocks or fails fast per the
-    /// server's [`QueuePolicy`].
-    pub fn infer(&self, image: Vec<f32>) -> Result<HostTensor> {
-        anyhow::ensure!(
-            image.len() == self.image_shape.numel(),
-            "image has {} elements, expected {}",
-            image.len(),
-            self.image_shape.numel()
-        );
+    /// server's [`QueuePolicy`]. Failures are typed ([`InferError`]) so
+    /// front ends can map backpressure and shutdown onto wire status
+    /// codes without string matching.
+    pub fn try_infer(&self, image: Vec<f32>) -> std::result::Result<HostTensor, InferError> {
+        if image.len() != self.image_shape.numel() {
+            return Err(InferError::BadInput(format!(
+                "image has {} elements, expected {}",
+                image.len(),
+                self.image_shape.numel()
+            )));
+        }
         let (tx, rx) = channel();
         let msg = Msg::Infer(Request {
             image,
             reply: tx,
             enqueued: Instant::now(),
         });
-        match self.policy {
-            QueuePolicy::Block => self
-                .tx
-                .send(msg)
-                .map_err(|_| anyhow!("server stopped"))?,
-            QueuePolicy::Reject => match self.tx.try_send(msg) {
-                Ok(()) => {}
-                Err(TrySendError::Full(_)) => {
-                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                    anyhow::bail!(
-                        "server queue full (capacity {}); retry later",
-                        self.capacity
-                    );
+        {
+            // Hold the read side across the send: once `stop` has taken
+            // the write side no new request can slip in behind the
+            // shutdown tokens. Blocking sends under the read lock are
+            // fine — workers keep draining the queue until the tokens
+            // (which `stop` can only send after this guard drops)
+            // arrive, so blocked senders always make progress.
+            let closed = self
+                .closed
+                .read()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            if *closed {
+                return Err(InferError::Stopped);
+            }
+            match self.policy {
+                QueuePolicy::Block => {
+                    if self.tx.send(msg).is_err() {
+                        return Err(InferError::Stopped);
+                    }
                 }
-                Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
-            },
+                QueuePolicy::Reject => match self.tx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(InferError::QueueFull {
+                            capacity: self.capacity,
+                        });
+                    }
+                    Err(TrySendError::Disconnected(_)) => return Err(InferError::Stopped),
+                },
+            }
         }
         // Gauge the queue occupancy only after the send succeeded: a
         // caller blocked in `send` is not *in* the queue, so the peak
@@ -200,8 +387,19 @@ impl ServerHandle {
                 .queue_peak
                 .fetch_max(depth as u64, Ordering::Relaxed);
         }
-        rx.recv()
-            .map_err(|_| anyhow!("server stopped before the request completed"))?
+        match rx.recv() {
+            Ok(Ok(t)) => Ok(t),
+            Ok(Err(e)) => Err(InferError::Exec(format!("{e:#}"))),
+            // Unreachable post the drain fix (accepted requests always
+            // get a reply); kept as a defensive mapping.
+            Err(_) => Err(InferError::Stopped),
+        }
+    }
+
+    /// [`Self::try_infer`] with the failure flattened into `anyhow` —
+    /// the original API every in-process caller and test uses.
+    pub fn infer(&self, image: Vec<f32>) -> Result<HostTensor> {
+        self.try_infer(image).map_err(|e| anyhow!("{e}"))
     }
 
     pub fn image_shape(&self) -> &Shape {
@@ -276,8 +474,11 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     /// Compiled batch size `B` of the served network.
     batch: usize,
+    /// Name of the served network (for `/v1/stats` and model routing).
+    model: String,
     joins: Vec<std::thread::JoinHandle<()>>,
     shutdown: SyncSender<Msg>,
+    closed: Arc<RwLock<bool>>,
 }
 
 impl Server {
@@ -310,7 +511,7 @@ impl Server {
         let stats = Arc::new(ServerStats::with_workers(workers));
         let (tx, rx) = sync_channel::<Msg>(queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let (ready_tx, ready_rx) = channel::<Result<Shape>>();
+        let (ready_tx, ready_rx) = channel::<Result<(Shape, String)>>();
         let mut joins = Vec::with_capacity(workers);
         for worker in 0..workers {
             let builder = engine.clone();
@@ -325,13 +526,16 @@ impl Server {
                         return;
                     }
                 };
-                let _ = ready_tx.send(Ok(engine.graph().input_shape().clone()));
+                let _ = ready_tx.send(Ok((
+                    engine.graph().input_shape().clone(),
+                    engine.graph().name.clone(),
+                )));
                 drop(ready_tx);
                 batch_loop(worker, &mut engine, &rx, &stats, max_wait);
             }));
         }
         drop(ready_tx);
-        let mut input_shape: Option<Shape> = None;
+        let mut input_shape: Option<(Shape, String)> = None;
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..workers {
             match ready_rx.recv() {
@@ -353,8 +557,8 @@ impl Server {
                 }
             }
         }
-        let input_shape = match (input_shape, first_err) {
-            (Some(shape), None) => shape,
+        let (input_shape, model) = match (input_shape, first_err) {
+            (Some(pair), None) => pair,
             (_, err) => {
                 // Tear down: dropping the only external sender
                 // disconnects the queue, so idle workers exit.
@@ -370,19 +574,23 @@ impl Server {
         let batch = input_shape.batch();
         let mut dims = input_shape.dims.clone();
         dims[0] = 1;
+        let closed = Arc::new(RwLock::new(false));
         let handle = ServerHandle {
             tx: tx.clone(),
             image_shape: Shape::new(dims, input_shape.dtype),
             policy: queue_policy,
             capacity: queue_depth,
             stats: stats.clone(),
+            closed: closed.clone(),
         };
         Ok(Server {
             handle,
             stats,
             batch,
+            model,
             joins,
             shutdown: tx,
+            closed,
         })
     }
 
@@ -395,6 +603,12 @@ impl Server {
         self.batch
     }
 
+    /// Name of the served network (the graph's `name`), used by the
+    /// HTTP front door for model routing and `/v1/stats`.
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
     /// Number of pool workers.
     pub fn workers(&self) -> usize {
         self.joins.len()
@@ -405,11 +619,24 @@ impl Server {
         self.stats.occupancy(self.batch)
     }
 
-    /// Stop the server and join all workers. Requests already queued are
-    /// drained first (FIFO: the shutdown signals queue behind them).
-    /// Cloned handles become inert (their sends fail) once the last
-    /// worker exits.
+    /// Stop the server and join all workers. Graceful by construction:
+    /// the shutdown gate is flipped under the write side of the
+    /// `closed` lock *before* the per-worker shutdown tokens are sent,
+    /// so every request whose enqueue succeeded (all of which happened
+    /// under the read side, and therefore strictly before the tokens in
+    /// the FIFO queue) is gathered and answered by a worker before that
+    /// worker consumes a token and exits — no reply channel is ever
+    /// dropped for an accepted request. Later `infer` calls fail fast
+    /// with a clean "server stopped" error instead of racing the
+    /// tokens.
     pub fn stop(mut self) {
+        {
+            let mut closed = self
+                .closed
+                .write()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            *closed = true;
+        }
         for _ in 0..self.joins.len() {
             if self.shutdown.send(Msg::Shutdown).is_err() {
                 break;
@@ -490,10 +717,9 @@ fn batch_loop(
                     let t =
                         HostTensor::new(Shape::new(out_dims.clone(), out.shape.dtype), slice);
                     stats.requests.fetch_add(1, Ordering::Relaxed);
-                    stats.latency_us_sum.fetch_add(
-                        r.enqueued.elapsed().as_micros() as u64,
-                        Ordering::Relaxed,
-                    );
+                    let us = r.enqueued.elapsed().as_micros() as u64;
+                    stats.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+                    stats.latency.record(us);
                     let _ = r.reply.send(Ok(t));
                 }
             }
@@ -523,6 +749,66 @@ mod tests {
     use crate::device::DeviceSpec;
     use crate::engine::Engine;
     use crate::optimizer::CollapseOptions;
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_tight() {
+        // Index is monotone in the value and the midpoint estimate is
+        // within 12.5 % above 16 µs (exact below).
+        let mut last = 0usize;
+        for us in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1000, 65_536, 1 << 30] {
+            let idx = LatencyHistogram::index(us);
+            assert!(idx >= last, "index not monotone at {us}");
+            last = idx;
+            let mid = LatencyHistogram::midpoint_us(idx);
+            if us < 16 {
+                assert!((mid - (us as f64 + 0.5)).abs() < 1e-9, "{us}");
+            } else {
+                let rel = (mid - us as f64).abs() / us as f64;
+                assert!(rel <= 0.30, "us={us} mid={mid} rel={rel}");
+            }
+        }
+        // Absurd values clamp into the top bucket instead of panicking.
+        assert_eq!(LatencyHistogram::index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_ms(0.5), 0.0, "empty histogram is 0.0, not NaN");
+        // 100 observations at 1 ms, 10 at 100 ms: p50 ≈ 1 ms, p99+ ≈ 100 ms.
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        assert_eq!(h.count(), 110);
+        let p50 = h.percentile_ms(0.50);
+        let p99 = h.percentile_ms(0.99);
+        assert!((0.8..=1.3).contains(&p50), "p50 {p50}");
+        assert!((80.0..=130.0).contains(&p99), "p99 {p99}");
+        assert!(h.percentile_ms(0.0) <= p50 && p50 <= p99);
+        assert!(p99 <= h.percentile_ms(1.0) + 1e-9);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let s = ServerStats::with_workers(2);
+        s.requests.store(4, Ordering::Relaxed);
+        s.batches.store(2, Ordering::Relaxed);
+        s.rejected.store(1, Ordering::Relaxed);
+        s.latency.record(2_000);
+        let j = s.to_json(4);
+        assert_eq!(j.usize_field("requests").unwrap(), 4);
+        assert_eq!(j.usize_field("rejected").unwrap(), 1);
+        assert_eq!(j.usize_field("batch").unwrap(), 4);
+        assert_eq!(j.arr_field("worker_batches").unwrap().len(), 2);
+        assert!(j.f64_field("p50_ms").unwrap() > 0.0);
+        assert!(j.f64_field("p99_ms").unwrap() >= j.f64_field("p50_ms").unwrap());
+        // The document round-trips through our own parser.
+        let parsed = crate::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.usize_field("requests").unwrap(), 4);
+    }
 
     #[test]
     fn stats_math() {
@@ -763,6 +1049,51 @@ mod tests {
         }
         assert!(server.stats.queue_peak.load(Ordering::Relaxed) >= 1);
         server.stop();
+    }
+
+    #[test]
+    fn shutdown_while_queued_drains_every_accepted_request() {
+        // Regression for the graceful-drain fix: requests whose enqueue
+        // succeeded before `stop()` must all complete with a real
+        // result — none may observe a dropped reply channel ("server
+        // stopped before the request completed"). One slow worker
+        // (paced ~30 ms/batch, batch 1) and a roomy queue, so all three
+        // requests enqueue immediately and two are still queued when
+        // stop() lands.
+        let scale = pace_scale_for(1, 0.03);
+        let server = ServerConfig::new(sim_engine(1).sim_paced(scale))
+            .workers(1)
+            .queue_depth(4)
+            .max_wait(Duration::from_millis(1))
+            .start()
+            .unwrap();
+        let stats = server.stats.clone();
+        let clients = spawn_requests(&server, 3);
+        // Wait until every request is accepted (in the queue or on the
+        // worker) before stopping.
+        let t0 = Instant::now();
+        while stats.queue_depth_now() + stats.requests.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "requests never enqueued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Settle: the queue has room for all three, so the last send (a
+        // few µs behind its siblings) lands well inside this window.
+        std::thread::sleep(Duration::from_millis(15));
+        let handle = server.handle();
+        server.stop();
+        for c in clients {
+            let out = c.join().unwrap();
+            assert!(out.is_ok(), "accepted request dropped: {:?}", out.err());
+        }
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 3);
+        // Post-stop submissions fail fast with the clean typed error.
+        let err = handle
+            .try_infer(vec![0.0; handle.image_shape().numel()])
+            .unwrap_err();
+        assert!(matches!(err, InferError::Stopped), "{err}");
+        // Latency percentiles were recorded for the drained requests.
+        let (p50, _, p99) = stats.latency_percentiles_ms();
+        assert!(p50 > 0.0 && p99 >= p50);
     }
 
     #[test]
