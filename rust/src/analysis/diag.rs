@@ -1,0 +1,420 @@
+//! Diagnostic codes, severities, and renderers for the static verifier.
+//!
+//! Every check in [`crate::analysis`] reports through a [`Diagnostic`]
+//! carrying a stable [`DiagCode`] (`BSL0xx`). Codes are part of the
+//! public contract: tests, CI gates, and downstream tooling key on them,
+//! so existing codes must never be renumbered — only appended.
+//!
+//! Code space:
+//! - `BSL001`–`BSL019`: graph lint ([`crate::analysis::graph_lint`])
+//! - `BSL020`–`BSL039`: plan verifier ([`crate::analysis::plan_verify`])
+//! - `BSL040`–`BSL059`: concurrency topology lint ([`crate::analysis::topo`])
+
+use crate::json::Json;
+
+/// How bad a finding is. `Error` means the artifact is unsound and must
+/// not execute; `Warning` means suspicious-but-runnable (promoted to
+/// failure under `--deny warnings`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. The numeric part never changes meaning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    // --- graph lint ---
+    /// Graph empty or node 0 is not the Input node.
+    EmptyGraph,
+    /// Node id does not equal its index in the node vector.
+    NodeIdMismatch,
+    /// Edge references a node at or after its consumer (cycle / non-topological).
+    NonTopologicalEdge,
+    /// Edge references a node id outside the graph (dangling edge).
+    DanglingEdge,
+    /// Input layer appears at an interior node.
+    InteriorInput,
+    /// Layer got the wrong number of inputs.
+    ArityMismatch,
+    /// Shape mismatch at an Add/Concat join.
+    JoinShapeMismatch,
+    /// Stored node shape disagrees with static re-inference.
+    StoredShapeMismatch,
+    /// Degenerate op config (zero-size window, stride 0, window larger
+    /// than padded input, zero channels, non-dividing adaptive pool).
+    DegenerateOp,
+    /// Graph output id out of range.
+    BadOutput,
+    /// Non-output node with no consumers (dangling node).
+    DanglingNode,
+    /// Mixed dtypes at a join where the dims otherwise agree.
+    JoinDtypeMix,
+    // --- plan verifier ---
+    /// Plan does not cover the graph: node missing, duplicated, or out
+    /// of range.
+    PlanCoverage,
+    /// Stack chain broken: consecutive stack nodes are not a unary
+    /// producer/consumer chain.
+    StackChainBroken,
+    /// Branch join malformed: join is not Add/Concat, or arm count
+    /// disagrees with join arity.
+    BranchJoinMalformed,
+    /// Branch arm inconsistent: arm does not start at the region entry
+    /// or its output is not the matching join input.
+    BranchArmMismatch,
+    /// Multi-step sequence working set exceeds the collapse budget.
+    BudgetOverrun,
+    /// Halo back-propagation can underflow: a band of the planned
+    /// geometry reaches zero rows at some step.
+    HaloUnderflow,
+    /// Branch-arm stack exceeds its skip-reserved budget (the
+    /// `reserved_bytes` floor accounting is broken).
+    SkipReservationBroken,
+    /// Band buffer / shape chain broken: step or sequence shapes do not
+    /// chain, or fused ops disagree with the stack's node list.
+    BandShapeChain,
+    /// Fused op has no breadth-first fallback (non-optimizable layer
+    /// inside a stack).
+    NoFallback,
+    /// tile_rows exceeds the sequence output height (wasteful but
+    /// clamped at run time).
+    TileRowsExceedHeight,
+    // --- concurrency topology lint ---
+    /// Capacity-zero channel cycle (rendezvous deadlock).
+    ZeroCapacityCycle,
+    /// Shutdown tokens sent on a gated channel before the gate closes
+    /// (requests accepted after tokens → lost-wakeup / dropped work).
+    SendBeforeGateClose,
+    /// Thread is never joined and does not end with its scope.
+    UnjoinedThread,
+    /// Channel endpoint or gate references an undeclared thread/gate,
+    /// or a channel has no senders/receivers.
+    BadEndpoint,
+    /// Thread joined before its exit condition is established
+    /// (insufficient shutdown tokens, senders still live, gate open).
+    JoinWithoutTermination,
+    /// Gate declared but never closed during shutdown.
+    GateNeverClosed,
+}
+
+impl DiagCode {
+    /// The stable wire code, e.g. `"BSL024"`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::EmptyGraph => "BSL001",
+            DiagCode::NodeIdMismatch => "BSL002",
+            DiagCode::NonTopologicalEdge => "BSL003",
+            DiagCode::DanglingEdge => "BSL004",
+            DiagCode::InteriorInput => "BSL005",
+            DiagCode::ArityMismatch => "BSL006",
+            DiagCode::JoinShapeMismatch => "BSL007",
+            DiagCode::StoredShapeMismatch => "BSL008",
+            DiagCode::DegenerateOp => "BSL009",
+            DiagCode::BadOutput => "BSL010",
+            DiagCode::DanglingNode => "BSL011",
+            DiagCode::JoinDtypeMix => "BSL012",
+            DiagCode::PlanCoverage => "BSL020",
+            DiagCode::StackChainBroken => "BSL021",
+            DiagCode::BranchJoinMalformed => "BSL022",
+            DiagCode::BranchArmMismatch => "BSL023",
+            DiagCode::BudgetOverrun => "BSL024",
+            DiagCode::HaloUnderflow => "BSL025",
+            DiagCode::SkipReservationBroken => "BSL026",
+            DiagCode::BandShapeChain => "BSL027",
+            DiagCode::NoFallback => "BSL028",
+            DiagCode::TileRowsExceedHeight => "BSL029",
+            DiagCode::ZeroCapacityCycle => "BSL040",
+            DiagCode::SendBeforeGateClose => "BSL041",
+            DiagCode::UnjoinedThread => "BSL042",
+            DiagCode::BadEndpoint => "BSL043",
+            DiagCode::JoinWithoutTermination => "BSL044",
+            DiagCode::GateNeverClosed => "BSL045",
+        }
+    }
+
+    /// Default severity. Only two codes are warnings: everything else
+    /// makes the artifact unsound.
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::JoinDtypeMix
+            | DiagCode::TileRowsExceedHeight
+            | DiagCode::GateNeverClosed => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line explanation for the code table (`DESIGN.md` mirrors
+    /// these).
+    pub fn explain(&self) -> &'static str {
+        match self {
+            DiagCode::EmptyGraph => "graph is empty or node 0 is not the Input node",
+            DiagCode::NodeIdMismatch => "node id does not match its position in the node vector",
+            DiagCode::NonTopologicalEdge => "edge points at or after its consumer (cycle)",
+            DiagCode::DanglingEdge => "edge references a node id outside the graph",
+            DiagCode::InteriorInput => "Input layer at an interior node",
+            DiagCode::ArityMismatch => "layer has the wrong number of inputs",
+            DiagCode::JoinShapeMismatch => "shapes disagree at an add/concat join",
+            DiagCode::StoredShapeMismatch => "stored shape disagrees with static re-inference",
+            DiagCode::DegenerateOp => "degenerate op config (zero window, stride 0, window > input, zero channels)",
+            DiagCode::BadOutput => "graph output id out of range",
+            DiagCode::DanglingNode => "non-output node has no consumers",
+            DiagCode::JoinDtypeMix => "join inputs mix dtypes",
+            DiagCode::PlanCoverage => "plan misses or duplicates a graph node",
+            DiagCode::StackChainBroken => "stack nodes are not a unary producer/consumer chain",
+            DiagCode::BranchJoinMalformed => "branch join is not add/concat or arm count mismatches join arity",
+            DiagCode::BranchArmMismatch => "branch arm entry/exit disagrees with the region",
+            DiagCode::BudgetOverrun => "multi-step sequence working set exceeds the collapse budget",
+            DiagCode::HaloUnderflow => "halo back-propagation reaches zero rows for some band",
+            DiagCode::SkipReservationBroken => "branch-arm stack exceeds its skip-reserved budget",
+            DiagCode::BandShapeChain => "step/sequence shapes do not chain through the stack",
+            DiagCode::NoFallback => "fused op has no breadth-first fallback kernel",
+            DiagCode::TileRowsExceedHeight => "tile_rows exceeds the sequence output height",
+            DiagCode::ZeroCapacityCycle => "capacity-zero channel cycle (rendezvous deadlock)",
+            DiagCode::SendBeforeGateClose => "shutdown tokens sent before the intake gate closes",
+            DiagCode::UnjoinedThread => "thread is never joined and does not end with its scope",
+            DiagCode::BadEndpoint => "channel/gate references an undeclared endpoint",
+            DiagCode::JoinWithoutTermination => "thread joined before its exit condition is established",
+            DiagCode::GateNeverClosed => "gate declared but never closed during shutdown",
+        }
+    }
+}
+
+/// One finding: a code, where it is, what is wrong, and optional notes.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    pub severity: Severity,
+    /// Where: `"vgg16: node 3 ('features.1')"`, `"plan for resnet18:
+    /// segment 4"`, `"topology 'server'"`.
+    pub subject: String,
+    /// Graph node id when the finding is about one node.
+    pub node: Option<usize>,
+    pub message: String,
+    pub notes: Vec<String>,
+}
+
+impl Diagnostic {
+    pub fn new(code: DiagCode, subject: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            subject: subject.into(),
+            node: None,
+            message: message.into(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn at_node(mut self, id: usize) -> Self {
+        self.node = Some(id);
+        self
+    }
+
+    pub fn note(mut self, note: impl Into<String>) -> Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    /// rustc-style multi-line rendering:
+    ///
+    /// ```text
+    /// error[BSL024]: working set 40960 B exceeds budget 16384 B
+    ///   --> plan for resnet18: segment 4, sequence 0
+    ///    = note: multi-step sequences must fit the collapse budget
+    /// ```
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{}[{}]: {}\n  --> {}",
+            self.severity.name(),
+            self.code.as_str(),
+            self.message,
+            self.subject
+        );
+        for n in &self.notes {
+            s.push_str("\n   = note: ");
+            s.push_str(n);
+        }
+        s
+    }
+
+    /// One-line rendering for embedding in `Result<_, String>` paths.
+    pub fn render_oneline(&self) -> String {
+        format!("[{}] {}: {}", self.code.as_str(), self.subject, self.message)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("code", Json::Str(self.code.as_str().into()))
+            .set("severity", Json::Str(self.severity.name().into()))
+            .set("subject", Json::Str(self.subject.clone()))
+            .set("message", Json::Str(self.message.clone()));
+        if let Some(id) = self.node {
+            j.set("node", Json::from_usize(id));
+        }
+        if !self.notes.is_empty() {
+            j.set(
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            );
+        }
+        j
+    }
+}
+
+/// A collection of findings from one or more passes.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn extend(&mut self, ds: Vec<Diagnostic>) {
+        self.diags.extend(ds);
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    /// True when nothing at or above the failing severity was found.
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.error_count() == 0 && (!deny_warnings || self.warning_count() == 0)
+    }
+
+    /// Full text rendering: errors first, then warnings, then a summary
+    /// line.
+    pub fn render_text(&self) -> String {
+        let mut sorted: Vec<&Diagnostic> = self.diags.iter().collect();
+        sorted.sort_by_key(|d| std::cmp::Reverse(d.severity));
+        let mut out = String::new();
+        for d in sorted {
+            out.push_str(&d.render());
+            out.push_str("\n\n");
+        }
+        out.push_str(&format!(
+            "check result: {} error(s), {} warning(s)",
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set(
+            "diagnostics",
+            Json::Arr(self.diags.iter().map(Diagnostic::to_json).collect()),
+        )
+        .set("errors", Json::from_usize(self.error_count()))
+        .set("warnings", Json::from_usize(self.warning_count()));
+        j
+    }
+
+    /// True if any diagnostic carries `code`.
+    pub fn has_code(&self, code: DiagCode) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let all = [
+            DiagCode::EmptyGraph,
+            DiagCode::NodeIdMismatch,
+            DiagCode::NonTopologicalEdge,
+            DiagCode::DanglingEdge,
+            DiagCode::InteriorInput,
+            DiagCode::ArityMismatch,
+            DiagCode::JoinShapeMismatch,
+            DiagCode::StoredShapeMismatch,
+            DiagCode::DegenerateOp,
+            DiagCode::BadOutput,
+            DiagCode::DanglingNode,
+            DiagCode::JoinDtypeMix,
+            DiagCode::PlanCoverage,
+            DiagCode::StackChainBroken,
+            DiagCode::BranchJoinMalformed,
+            DiagCode::BranchArmMismatch,
+            DiagCode::BudgetOverrun,
+            DiagCode::HaloUnderflow,
+            DiagCode::SkipReservationBroken,
+            DiagCode::BandShapeChain,
+            DiagCode::NoFallback,
+            DiagCode::TileRowsExceedHeight,
+            DiagCode::ZeroCapacityCycle,
+            DiagCode::SendBeforeGateClose,
+            DiagCode::UnjoinedThread,
+            DiagCode::BadEndpoint,
+            DiagCode::JoinWithoutTermination,
+            DiagCode::GateNeverClosed,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for c in all {
+            assert!(c.as_str().starts_with("BSL"), "{}", c.as_str());
+            assert!(seen.insert(c.as_str()), "duplicate code {}", c.as_str());
+            assert!(!c.explain().is_empty());
+        }
+        // Pinned: renumbering any of these is a breaking change.
+        assert_eq!(DiagCode::BudgetOverrun.as_str(), "BSL024");
+        assert_eq!(DiagCode::HaloUnderflow.as_str(), "BSL025");
+        assert_eq!(DiagCode::SendBeforeGateClose.as_str(), "BSL041");
+    }
+
+    #[test]
+    fn render_is_rustc_style() {
+        let d = Diagnostic::new(DiagCode::BudgetOverrun, "plan for x: segment 1", "too big")
+            .note("fit the budget");
+        let r = d.render();
+        assert!(r.starts_with("error[BSL024]: too big"));
+        assert!(r.contains("--> plan for x: segment 1"));
+        assert!(r.contains("= note: fit the budget"));
+    }
+
+    #[test]
+    fn report_counts_and_deny() {
+        let mut r = Report::new();
+        r.push(Diagnostic::new(DiagCode::TileRowsExceedHeight, "s", "w"));
+        assert_eq!(r.error_count(), 0);
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.is_clean(false));
+        assert!(!r.is_clean(true));
+        r.push(Diagnostic::new(DiagCode::PlanCoverage, "s", "e"));
+        assert!(!r.is_clean(false));
+        let j = r.to_json();
+        assert_eq!(j.usize_field("errors").unwrap(), 1);
+        assert_eq!(j.usize_field("warnings").unwrap(), 1);
+        assert_eq!(j.arr_field("diagnostics").unwrap().len(), 2);
+    }
+}

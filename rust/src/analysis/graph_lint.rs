@@ -1,0 +1,350 @@
+//! Pass 1: graph lint — full static shape/dtype re-inference over the
+//! [`Graph`] IR.
+//!
+//! Subsumes the original `Graph::validate` (which now delegates here)
+//! and extends it: every finding carries the node id, the node's
+//! user-facing name, and a stable `BSL0xx` code instead of a bare
+//! `String`. The pass is total — it never panics, even on graphs whose
+//! shapes would make `Layer::infer_shape`'s window helpers assert —
+//! because window sanity ([`Layer::check_config`]) is checked *before*
+//! inference runs.
+//!
+//! Check order per node: identity (BSL002), edges (BSL003/BSL004),
+//! interior inputs (BSL005), arity (BSL006), degenerate configs
+//! (BSL009), inference + join classification (BSL007/BSL009/BSL012),
+//! stored-shape agreement (BSL008); then whole-graph checks: output
+//! range (BSL010) and dangling nodes (BSL011).
+
+use super::diag::{DiagCode, Diagnostic};
+use crate::graph::{Graph, Layer, Shape};
+
+/// Human-oriented location string: network, node id, node name, kind.
+fn subject(g: &Graph, id: usize) -> String {
+    match g.nodes.get(id) {
+        Some(n) => format!(
+            "{}: node {} ('{}', {})",
+            g.name,
+            id,
+            n.name,
+            n.layer.kind_name()
+        ),
+        None => format!("{}: node {}", g.name, id),
+    }
+}
+
+/// Run the full graph lint. Returns every finding (errors and
+/// warnings); an empty vector means the graph is well-formed.
+pub fn lint_graph(g: &Graph) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if g.nodes.is_empty() {
+        diags.push(Diagnostic::new(
+            DiagCode::EmptyGraph,
+            g.name.clone(),
+            "graph has no nodes",
+        ));
+        return diags;
+    }
+    if !matches!(g.nodes[0].layer, Layer::Input { .. }) {
+        diags.push(
+            Diagnostic::new(
+                DiagCode::EmptyGraph,
+                subject(g, 0),
+                "node 0 must be the Input node",
+            )
+            .at_node(0),
+        );
+    }
+
+    for (idx, node) in g.nodes.iter().enumerate() {
+        if node.id != idx {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::NodeIdMismatch,
+                    subject(g, idx),
+                    format!("node id {} does not match its index {idx}", node.id),
+                )
+                .at_node(idx),
+            );
+        }
+
+        let mut edges_ok = true;
+        for &i in &node.inputs {
+            if i >= g.nodes.len() {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::DanglingEdge,
+                        subject(g, idx),
+                        format!("input edge references node {i}, but the graph has only {} nodes", g.nodes.len()),
+                    )
+                    .at_node(idx),
+                );
+                edges_ok = false;
+            } else if i >= idx {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::NonTopologicalEdge,
+                        subject(g, idx),
+                        format!("input edge from node {i} is not topologically earlier"),
+                    )
+                    .at_node(idx)
+                    .note("the node vector is append-only; a forward or self edge implies a cycle"),
+                );
+                edges_ok = false;
+            }
+        }
+
+        if idx > 0 && matches!(node.layer, Layer::Input { .. }) {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::InteriorInput,
+                    subject(g, idx),
+                    "Input layer at an interior node",
+                )
+                .at_node(idx),
+            );
+            continue;
+        }
+
+        let (min_in, max_in) = node.layer.arity();
+        if node.inputs.len() < min_in || node.inputs.len() > max_in {
+            let expected = if max_in == usize::MAX {
+                format!(">= {min_in}")
+            } else if min_in == max_in {
+                format!("{min_in}")
+            } else {
+                format!("{min_in}..={max_in}")
+            };
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::ArityMismatch,
+                    subject(g, idx),
+                    format!(
+                        "{} expects {expected} input(s), got {}",
+                        node.layer.kind_name(),
+                        node.inputs.len()
+                    ),
+                )
+                .at_node(idx),
+            );
+            continue;
+        }
+        if !edges_ok {
+            continue; // can't infer shapes through bad edges
+        }
+
+        let in_shapes: Vec<&Shape> = node.inputs.iter().map(|&i| &g.nodes[i].shape).collect();
+        if let Err(reason) = node.layer.check_config(&in_shapes) {
+            diags.push(
+                Diagnostic::new(DiagCode::DegenerateOp, subject(g, idx), reason).at_node(idx),
+            );
+            continue;
+        }
+        match node.layer.infer_shape(&in_shapes) {
+            Err(reason) => {
+                let code = match node.layer {
+                    Layer::Add | Layer::Concat => {
+                        // A join whose input dims agree but dtypes differ
+                        // is runnable-but-suspicious, not structurally
+                        // broken.
+                        let dims_agree = match node.layer {
+                            Layer::Add => in_shapes
+                                .windows(2)
+                                .all(|w| w[0].dims == w[1].dims),
+                            _ => true,
+                        };
+                        let dtype_mix =
+                            in_shapes.iter().any(|s| s.dtype != in_shapes[0].dtype);
+                        if dims_agree && dtype_mix {
+                            DiagCode::JoinDtypeMix
+                        } else {
+                            DiagCode::JoinShapeMismatch
+                        }
+                    }
+                    _ => DiagCode::DegenerateOp,
+                };
+                diags.push(Diagnostic::new(code, subject(g, idx), reason).at_node(idx));
+            }
+            Ok(inferred) => {
+                if inferred != node.shape {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::StoredShapeMismatch,
+                            subject(g, idx),
+                            format!(
+                                "stored shape {} disagrees with inferred {}",
+                                node.shape, inferred
+                            ),
+                        )
+                        .at_node(idx),
+                    );
+                }
+                // Concat takes the first input's dtype, so inference
+                // succeeds even when the arms disagree — flag it.
+                if matches!(node.layer, Layer::Concat)
+                    && in_shapes.iter().any(|s| s.dtype != in_shapes[0].dtype)
+                {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::JoinDtypeMix,
+                            subject(g, idx),
+                            "concat inputs mix dtypes; output takes the first input's dtype",
+                        )
+                        .at_node(idx),
+                    );
+                }
+            }
+        }
+    }
+
+    if g.output >= g.nodes.len() {
+        diags.push(Diagnostic::new(
+            DiagCode::BadOutput,
+            g.name.clone(),
+            format!(
+                "output id {} out of range (graph has {} nodes)",
+                g.output,
+                g.nodes.len()
+            ),
+        ));
+    } else {
+        // Dangling-node check, edge-tolerant (out-of-range inputs were
+        // already reported above, so just skip them here).
+        let mut has_consumer = vec![false; g.nodes.len()];
+        for node in &g.nodes {
+            for &i in &node.inputs {
+                if let Some(slot) = has_consumer.get_mut(i) {
+                    *slot = true;
+                }
+            }
+        }
+        for (idx, consumed) in has_consumer.iter().enumerate() {
+            if idx != g.output && !consumed {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::DanglingNode,
+                        subject(g, idx),
+                        "node is neither the output nor consumed by any other node",
+                    )
+                    .at_node(idx),
+                );
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Layer, PoolKind, Shape, Window2d};
+
+    fn base() -> Graph {
+        let mut g = Graph::new("lint-test", Shape::nchw(1, 4, 8, 8));
+        let c = g.push(
+            "conv",
+            Layer::Conv2d {
+                out_channels: 4,
+                window: Window2d::square(3, 1, 1),
+                bias: false,
+            },
+        );
+        g.add("relu", Layer::Relu, &[c]);
+        g
+    }
+
+    fn codes(g: &Graph) -> Vec<&'static str> {
+        lint_graph(g).iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn clean_graph_has_no_findings() {
+        assert!(codes(&base()).is_empty());
+    }
+
+    #[test]
+    fn forward_edge_is_a_cycle() {
+        let mut g = base();
+        g.nodes[1].inputs = vec![2];
+        assert!(codes(&g).contains(&"BSL003"));
+    }
+
+    #[test]
+    fn out_of_range_edge_dangles() {
+        let mut g = base();
+        g.nodes[2].inputs = vec![99];
+        let c = codes(&g);
+        assert!(c.contains(&"BSL004"), "{c:?}");
+    }
+
+    #[test]
+    fn stored_shape_mismatch() {
+        let mut g = base();
+        g.nodes[2].shape = Shape::nchw(1, 4, 7, 7);
+        assert!(codes(&g).contains(&"BSL008"));
+    }
+
+    #[test]
+    fn degenerate_window_is_flagged_not_panicking() {
+        let mut g = base();
+        // Stride 0 would assert inside conv_out_dim if inference ran.
+        g.nodes[1].layer = Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d {
+                kernel: (3, 3),
+                stride: (0, 1),
+                pad: (1, 1),
+            },
+            ceil_mode: false,
+            count_include_pad: true,
+        };
+        assert!(codes(&g).contains(&"BSL009"));
+    }
+
+    #[test]
+    fn window_larger_than_padded_input() {
+        let mut g = base();
+        g.nodes[1].layer = Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(64, 1, 0),
+            ceil_mode: false,
+            count_include_pad: true,
+        };
+        assert!(codes(&g).contains(&"BSL009"));
+    }
+
+    #[test]
+    fn bad_output_and_dangling() {
+        let mut g = base();
+        g.output = 42;
+        assert!(codes(&g).contains(&"BSL010"));
+        let mut g = base();
+        g.output = 1; // relu at node 2 now dangles
+        assert!(codes(&g).contains(&"BSL011"));
+    }
+
+    #[test]
+    fn add_arity_and_join_mismatch() {
+        let mut g = base();
+        g.add("add", Layer::Add, &[1, 2]);
+        assert!(codes(&g).is_empty()); // same shapes: fine
+        g.nodes[3].inputs = vec![1];
+        assert!(codes(&g).contains(&"BSL006"));
+    }
+
+    #[test]
+    fn dtype_mix_is_a_warning() {
+        let mut g = base();
+        // Second arm in bf16, same dims: add join flags BSL012, not BSL007.
+        let mut s = Shape::nchw(1, 4, 8, 8);
+        s.dtype = DType::BF16;
+        g.nodes[2].shape = s;
+        // (Stored-shape check fires too — relu inferred f32 — but the
+        // join itself must classify as a dtype mix.)
+        g.add("add", Layer::Add, &[1, 1]);
+        g.nodes[3].inputs = vec![1, 2];
+        let ds = lint_graph(&g);
+        assert!(ds
+            .iter()
+            .any(|d| d.code == DiagCode::JoinDtypeMix && d.node == Some(3)));
+    }
+}

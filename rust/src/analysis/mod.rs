@@ -1,0 +1,63 @@
+//! Static verification subsystem (`brainslug check`).
+//!
+//! Three passes, every finding a [`Diagnostic`] with a stable `BSL0xx`
+//! code (the full table lives in [`diag::DiagCode`] and DESIGN.md
+//! §Static Analysis):
+//!
+//! 1. [`graph_lint`] (BSL001–BSL012) — full static shape/dtype
+//!    inference over a [`crate::graph::Graph`]: dangling and
+//!    non-topological edges, arity, join shape/dtype agreement,
+//!    degenerate op configs, stored-vs-inferred shape drift.
+//!    `Graph::validate` delegates here.
+//! 2. [`plan_verify`] (BSL020–BSL029) — proof-oriented verification of
+//!    a [`crate::optimizer::Plan`]: coverage/chain/branch structure,
+//!    working sets re-derived against the collapse budget, halo
+//!    back-propagation proven to never underflow for any band offset,
+//!    skip-reservation accounting, breadth-first fallbacks.
+//!    `Plan::validate` delegates to the structural half; the engine
+//!    runs the resource half in debug builds.
+//! 3. [`topo`] (BSL040–BSL045) — the runtime's thread/channel/gate
+//!    topology declared as data and checked for rendezvous cycles,
+//!    drain-ordering races, unjoined threads and blocking joins.
+//!
+//! Severity policy: everything that proves a real defect is
+//! [`Severity::Error`]; stylistic or clamped-at-runtime findings
+//! (BSL012, BSL029, BSL045) are warnings so `--deny warnings` stays
+//! meaningful. `brainslug check --all-zoo --deny warnings` must exit 0
+//! on the shipped zoo — CI enforces this.
+
+pub mod diag;
+pub mod graph_lint;
+pub mod plan_verify;
+pub mod topo;
+
+pub use diag::{DiagCode, Diagnostic, Report, Severity};
+pub use graph_lint::lint_graph;
+pub use plan_verify::{verify_plan, verify_resources, verify_structure};
+pub use topo::{check_topology, ChannelSpec, ExitCondition, ShutdownStep, ThreadSpec, Topology};
+
+/// The concurrency topologies the runtime actually instantiates, with
+/// their default sizings. `brainslug check` and the test suite lint all
+/// of them; a change to the server/listener/pool threading model must
+/// update the matching `topology()` constructor, which keeps the model
+/// honest.
+pub fn standard_topologies() -> Vec<Topology> {
+    vec![
+        crate::server::topology(4, 64),
+        crate::http::listener::topology(8, 64),
+        crate::cpu::par::topology(4),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_topologies_are_clean() {
+        for t in standard_topologies() {
+            let diags = check_topology(&t);
+            assert!(diags.is_empty(), "{}: {diags:?}", t.name);
+        }
+    }
+}

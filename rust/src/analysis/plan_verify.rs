@@ -1,0 +1,731 @@
+//! Pass 2: plan verifier — a proof-oriented static pass over
+//! [`Plan`]/[`Segment`]/[`Stack`].
+//!
+//! Two halves:
+//!
+//! * [`verify_structure`] (BSL020–BSL023, BSL027, BSL028) — the plan
+//!   partitions the graph exactly, stack chains are unary
+//!   producer/consumer runs, branch regions are well-formed, fused ops
+//!   chain shape-to-shape, and every fused node has a breadth-first
+//!   fallback kernel. This replaces `Plan::validate`'s original ad-hoc
+//!   string checks (that method now delegates here).
+//! * [`verify_resources`] (BSL024–BSL026, BSL029) — symbolically
+//!   re-derives each sequence's working set against the *same*
+//!   [`effective_budget`] the packer used, proves the halo
+//!   back-propagation cannot underflow rows for any band offset (full
+//!   bands and the final partial band — the invariant the PR 2 clamp
+//!   enforces dynamically), and re-derives branch-arm skip reservations
+//!   (`reserved_bytes` + entry plane) to catch broken accounting.
+//!
+//! Proven invariants (see DESIGN.md §Static Analysis):
+//! 1. coverage: every graph node in exactly one segment;
+//! 2. chain: stack nodes form a unary single-producer chain;
+//! 3. shape chain: step/sequence shapes compose, and fused ops agree
+//!    with the stack's node list (band buffers are sized from these
+//!    shapes, so a break here means an undersized buffer at run time);
+//! 4. fallback: every fused node `is_optimizable` (has a standalone
+//!    breadth-first kernel to fall back to);
+//! 5. budget: every *multi-step* sequence's working set at its chosen
+//!    `tile_rows` fits the effective budget. Single-step sequences are
+//!    exempt by design: a sequence that cannot be split further may
+//!    legitimately exceed the budget (e.g. a classifier-head row on a
+//!    16 KiB paper budget) — the packer isolates it instead of failing;
+//! 6. halo: for every band offset, back-propagated band heights stay
+//!    ≥ 1 through every step;
+//! 7. reservation: branch-arm stacks fit the skip-reserved budget
+//!    (entry plane bytes subtracted, 1/8 floor).
+
+use super::diag::{DiagCode, Diagnostic};
+use crate::device::DeviceSpec;
+use crate::graph::{Graph, Layer, NodeId, Shape};
+use crate::optimizer::plan::live_plane_bytes;
+use crate::optimizer::{effective_budget, CollapseOptions, Plan, Segment, Stack};
+
+/// Band geometry of a tensor, or `None` for ranks the collapse tiling
+/// model does not cover (the total, non-panicking twin of the private
+/// `row_geometry` in `collapse.rs`).
+fn geometry(shape: &Shape) -> Option<(usize, usize)> {
+    match shape.rank() {
+        4 => Some((shape.height(), shape.width())),
+        2 => Some((shape.batch(), shape.channels())),
+        _ => None,
+    }
+}
+
+fn subj(plan: &Plan) -> String {
+    format!("plan for {}", plan.network)
+}
+
+fn stack_span(st: &Stack) -> String {
+    match (st.nodes.first(), st.nodes.last()) {
+        (Some(a), Some(b)) if a != b => format!("stack n{a}..n{b}"),
+        (Some(a), _) => format!("stack n{a}"),
+        _ => "empty stack".to_string(),
+    }
+}
+
+fn first_node_of(seg: &Segment) -> Option<NodeId> {
+    match seg {
+        Segment::Single(id) => Some(*id),
+        Segment::Stack(st) => st.nodes.first().copied(),
+        Segment::Branch { .. } => None,
+    }
+}
+
+fn mark(plan: &Plan, seen: &mut [bool], id: NodeId, diags: &mut Vec<Diagnostic>) {
+    match seen.get_mut(id) {
+        None => diags.push(
+            Diagnostic::new(
+                DiagCode::PlanCoverage,
+                subj(plan),
+                format!("plan references node {id}, which is outside the graph"),
+            )
+            .at_node(id),
+        ),
+        Some(s) if *s => diags.push(
+            Diagnostic::new(
+                DiagCode::PlanCoverage,
+                subj(plan),
+                format!("node {id} appears twice in plan"),
+            )
+            .at_node(id),
+        ),
+        Some(s) => *s = true,
+    }
+}
+
+/// Structural verification: coverage, chains, branches, shape chains,
+/// fallbacks. Returns every finding.
+pub fn verify_structure(graph: &Graph, plan: &Plan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut seen = vec![false; graph.nodes.len()];
+    if let Some(s) = seen.first_mut() {
+        *s = true; // input placeholder is implicit
+    }
+    for seg in &plan.segments {
+        check_segment(graph, plan, seg, &mut seen, true, &mut diags);
+    }
+    for (id, covered) in seen.iter().enumerate() {
+        if !covered {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::PlanCoverage,
+                    subj(plan),
+                    format!(
+                        "node {id} ('{}') missing from plan",
+                        graph.node(id).name
+                    ),
+                )
+                .at_node(id),
+            );
+        }
+    }
+    diags
+}
+
+fn check_segment(
+    graph: &Graph,
+    plan: &Plan,
+    seg: &Segment,
+    seen: &mut [bool],
+    allow_branch: bool,
+    diags: &mut Vec<Diagnostic>,
+) {
+    match seg {
+        Segment::Single(id) => mark(plan, seen, *id, diags),
+        Segment::Stack(st) => check_stack(graph, plan, st, seen, diags),
+        Segment::Branch { arms, join } => {
+            if !allow_branch {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::BranchJoinMalformed,
+                        subj(plan),
+                        format!("nested branch segment at join {join}"),
+                    )
+                    .at_node(*join),
+                );
+            }
+            check_branch(graph, plan, arms, *join, seen, diags);
+        }
+    }
+}
+
+fn check_stack(
+    graph: &Graph,
+    plan: &Plan,
+    st: &Stack,
+    seen: &mut [bool],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let where_ = format!("{}: {}", subj(plan), stack_span(st));
+    for &id in &st.nodes {
+        mark(plan, seen, id, diags);
+    }
+    // Stack nodes must form a consecutive unary chain.
+    for w in st.nodes.windows(2) {
+        if let Some(n) = graph.nodes.get(w[1]) {
+            if n.inputs != [w[0]] {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::StackChainBroken,
+                        where_.clone(),
+                        format!("stack chain broken between {} and {}", w[0], w[1]),
+                    )
+                    .at_node(w[1]),
+                );
+            }
+        }
+    }
+    // Every fused node needs a breadth-first fallback kernel.
+    for &id in &st.nodes {
+        if let Some(n) = graph.nodes.get(id) {
+            if !n.layer.is_optimizable() {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::NoFallback,
+                        where_.clone(),
+                        format!(
+                            "node {id} ('{}', {}) is not optimizable: it has no fused \
+                             depth-first kernel and no breadth-first fallback inside a stack",
+                            n.name,
+                            n.layer.kind_name()
+                        ),
+                    )
+                    .at_node(id),
+                );
+            }
+        }
+    }
+    if st.sequences.is_empty()
+        || st
+            .sequences
+            .iter()
+            .any(|s| s.steps.is_empty() || s.steps.iter().any(|stp| stp.ops.is_empty()))
+    {
+        diags.push(Diagnostic::new(
+            DiagCode::BandShapeChain,
+            where_,
+            "stack contains an empty sequence or step",
+        ));
+        return;
+    }
+    // The flattened fused ops must be exactly the stack's nodes, in order.
+    let op_nodes: Vec<NodeId> = st
+        .sequences
+        .iter()
+        .flat_map(|s| &s.steps)
+        .flat_map(|s| &s.ops)
+        .map(|o| o.node)
+        .collect();
+    if op_nodes != st.nodes {
+        diags.push(Diagnostic::new(
+            DiagCode::BandShapeChain,
+            where_.clone(),
+            format!(
+                "fused ops cover nodes {op_nodes:?} but the stack lists {:?}",
+                st.nodes
+            ),
+        ));
+    }
+    // Shape chain: steps within a sequence, then sequence boundaries.
+    // Band buffers are sized from these shapes; a break here means an
+    // under- (or mis-)sized buffer at run time.
+    for seq in &st.sequences {
+        for w in seq.steps.windows(2) {
+            if w[0].out_shape() != w[1].in_shape() {
+                diags.push(Diagnostic::new(
+                    DiagCode::BandShapeChain,
+                    where_.clone(),
+                    format!(
+                        "step shapes do not chain: {} -> {}",
+                        w[0].out_shape(),
+                        w[1].in_shape()
+                    ),
+                ));
+            }
+        }
+    }
+    for w in st.sequences.windows(2) {
+        if w[0].out_shape() != w[1].in_shape() {
+            diags.push(Diagnostic::new(
+                DiagCode::BandShapeChain,
+                where_.clone(),
+                format!(
+                    "sequence shapes do not chain: {} -> {}",
+                    w[0].out_shape(),
+                    w[1].in_shape()
+                ),
+            ));
+        }
+    }
+    // Endpoints must agree with the graph.
+    if let (Some(&first), Some(&last)) = (st.nodes.first(), st.nodes.last()) {
+        if let (Some(fnode), Some(lnode)) = (graph.nodes.get(first), graph.nodes.get(last)) {
+            if let Some(producer) = fnode.inputs.first().and_then(|&e| graph.nodes.get(e)) {
+                if let Some(seq0) = st.sequences.first() {
+                    if &producer.shape != seq0.in_shape() {
+                        diags.push(Diagnostic::new(
+                            DiagCode::BandShapeChain,
+                            where_.clone(),
+                            format!(
+                                "stack input shape {} != producer shape {}",
+                                seq0.in_shape(),
+                                producer.shape
+                            ),
+                        ));
+                    }
+                }
+            }
+            if let Some(seq_last) = st.sequences.last() {
+                if &lnode.shape != seq_last.out_shape() {
+                    diags.push(Diagnostic::new(
+                        DiagCode::BandShapeChain,
+                        where_,
+                        format!(
+                            "stack output shape {} != node {last} shape {}",
+                            seq_last.out_shape(),
+                            lnode.shape
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Structural checks for one branch region: the join is an `Add`/
+/// `Concat` with one arm per input, every arm is a unary chain hanging
+/// off one shared entry, and each arm's output is the matching join
+/// input (the entry itself for an identity skip arm).
+fn check_branch(
+    graph: &Graph,
+    plan: &Plan,
+    arms: &[Vec<Segment>],
+    join: NodeId,
+    seen: &mut [bool],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let Some(jn) = graph.nodes.get(join) else {
+        mark(plan, seen, join, diags);
+        return;
+    };
+    if !matches!(jn.layer, Layer::Add | Layer::Concat) {
+        diags.push(
+            Diagnostic::new(
+                DiagCode::BranchJoinMalformed,
+                subj(plan),
+                format!(
+                    "branch join {join} ('{}') is {}, not add/concat",
+                    jn.name,
+                    jn.layer.kind_name()
+                ),
+            )
+            .at_node(join),
+        );
+    }
+    if arms.len() != jn.inputs.len() {
+        diags.push(
+            Diagnostic::new(
+                DiagCode::BranchJoinMalformed,
+                subj(plan),
+                format!(
+                    "branch at {join}: {} arms for {} join inputs",
+                    arms.len(),
+                    jn.inputs.len()
+                ),
+            )
+            .at_node(join),
+        );
+    }
+    // Derive the region entry from the first non-empty arm's head.
+    let entry = match arms.iter().find_map(|arm| arm.first()) {
+        Some(seg) => match first_node_of(seg)
+            .and_then(|f| graph.nodes.get(f).map(|n| (f, n.inputs.clone())))
+        {
+            Some((_, inputs)) if inputs.len() == 1 => inputs[0],
+            Some((f, _)) => {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::BranchArmMismatch,
+                        subj(plan),
+                        format!("branch arm head {f} is not unary"),
+                    )
+                    .at_node(f),
+                );
+                for arm in arms {
+                    for seg in arm {
+                        check_segment(graph, plan, seg, seen, false, diags);
+                    }
+                }
+                mark(plan, seen, join, diags);
+                return;
+            }
+            None => {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::BranchArmMismatch,
+                        subj(plan),
+                        format!("branch at {join}: arm starts with an empty or nested segment"),
+                    )
+                    .at_node(join),
+                );
+                for arm in arms {
+                    for seg in arm {
+                        check_segment(graph, plan, seg, seen, false, diags);
+                    }
+                }
+                mark(plan, seen, join, diags);
+                return;
+            }
+        },
+        None => jn.inputs.first().copied().unwrap_or(0), // all identity skips
+    };
+    for (arm, &join_input) in arms.iter().zip(&jn.inputs) {
+        let mut prev = entry;
+        for seg in arm {
+            check_segment(graph, plan, seg, seen, false, diags);
+            let Some(first) = first_node_of(seg) else {
+                diags.push(
+                    Diagnostic::new(
+                        DiagCode::BranchArmMismatch,
+                        subj(plan),
+                        format!("branch at {join}: nested or empty segment in arm"),
+                    )
+                    .at_node(join),
+                );
+                break;
+            };
+            if let Some(n) = graph.nodes.get(first) {
+                if n.inputs != [prev] {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::BranchArmMismatch,
+                            subj(plan),
+                            format!("branch arm broken at node {first} (expected input {prev})"),
+                        )
+                        .at_node(first),
+                    );
+                }
+            }
+            match seg.output_node() {
+                Some(p) => prev = p,
+                None => {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::BranchArmMismatch,
+                            subj(plan),
+                            format!("branch at {join}: empty segment in arm"),
+                        )
+                        .at_node(join),
+                    );
+                    break;
+                }
+            }
+        }
+        if join_input != prev {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::BranchArmMismatch,
+                    subj(plan),
+                    format!("branch arm output {prev} != join input {join_input}"),
+                )
+                .at_node(join),
+            );
+        }
+    }
+    mark(plan, seen, join, diags);
+}
+
+/// The entry tensor a branch's skip reservation pins, if derivable.
+fn branch_entry_shape<'a>(
+    graph: &'a Graph,
+    arms: &[Vec<Segment>],
+    join: NodeId,
+) -> Option<&'a Shape> {
+    let entry = match arms.iter().find_map(|arm| arm.first()) {
+        Some(seg) => {
+            let first = first_node_of(seg)?;
+            *graph.nodes.get(first)?.inputs.first()?
+        }
+        None => *graph.nodes.get(join)?.inputs.first()?,
+    };
+    graph.nodes.get(entry).map(|n| &n.shape)
+}
+
+/// Resource verification: budget, halo, reservations, band geometry.
+/// Must receive the same `device` and `opts` the plan was built with —
+/// the point is to re-derive the packer's own arithmetic.
+pub fn verify_resources(
+    graph: &Graph,
+    plan: &Plan,
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for seg in &plan.segments {
+        match seg {
+            Segment::Single(_) => {}
+            Segment::Stack(st) => {
+                check_stack_resources(plan, st, device, opts, false, &mut diags)
+            }
+            Segment::Branch { arms, join } => {
+                // Re-derive the skip reservation exactly as the planner
+                // does: entry plane bytes on top of the caller's
+                // reservation, floored at 1/8 inside effective_budget.
+                let arm_opts = branch_entry_shape(graph, arms, *join).map(|shape| {
+                    CollapseOptions {
+                        reserved_bytes: opts
+                            .reserved_bytes
+                            .saturating_add(live_plane_bytes(shape)),
+                        ..*opts
+                    }
+                });
+                let arm_opts = arm_opts.as_ref().unwrap_or(opts);
+                for arm in arms {
+                    for seg in arm {
+                        if let Segment::Stack(st) = seg {
+                            check_stack_resources(plan, st, device, arm_opts, true, &mut diags);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    diags
+}
+
+fn check_stack_resources(
+    plan: &Plan,
+    st: &Stack,
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+    in_arm: bool,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let budget = effective_budget(device, opts);
+    for (qi, seq) in st.sequences.iter().enumerate() {
+        if seq.steps.is_empty() || seq.steps.iter().any(|s| s.ops.is_empty()) {
+            continue; // structure pass reports BSL027 for these
+        }
+        let where_ = format!("{}: {}, sequence {qi}", subj(plan), stack_span(st));
+        let Some((out_h, _)) = geometry(seq.out_shape()) else {
+            continue;
+        };
+        if seq.steps.iter().any(|s| geometry(s.in_shape()).is_none()) {
+            continue;
+        }
+        // --- BSL025: halo underflow ---
+        if seq.tile_rows == 0 {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::HaloUnderflow,
+                    where_,
+                    "tile_rows is 0: every band back-propagates to zero rows",
+                )
+                .note("collapse/seal clamp min_tile_rows to >= 1; a zero here means the plan was corrupted after sealing"),
+            );
+            continue;
+        }
+        if let Some(step) = seq.steps.iter().find(|s| {
+            let (k, stride) = s.row_window();
+            k == 0 || stride == 0
+        }) {
+            diags.push(Diagnostic::new(
+                DiagCode::HaloUnderflow,
+                where_,
+                format!(
+                    "step '{}' has a zero kernel/stride row window: band back-propagation is undefined",
+                    step.sig()
+                ),
+            ));
+            continue;
+        }
+        if out_h == 0 {
+            diags.push(Diagnostic::new(
+                DiagCode::HaloUnderflow,
+                where_,
+                "sequence output has zero rows",
+            ));
+            continue;
+        }
+        // Prove: for every band offset, the back-propagated band height
+        // stays >= 1 at every step. All bands have height `rows` except
+        // the final partial band — checking both heights covers every
+        // offset.
+        let rows = seq.tile_rows.min(out_h);
+        let n_bands = out_h.div_ceil(rows);
+        let last_rows = out_h - (n_bands - 1) * rows;
+        let mut underflow = false;
+        for h in [rows, last_rows] {
+            let mut r = h;
+            for step in seq.steps.iter().rev() {
+                let in_h = geometry(step.in_shape()).map_or(1, |(ih, _)| ih);
+                r = step.in_rows(r).min(in_h);
+                if r == 0 {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::HaloUnderflow,
+                            where_.clone(),
+                            format!(
+                                "a band of {h} output rows back-propagates to zero rows at step '{}'",
+                                step.sig()
+                            ),
+                        )
+                        .note("the clamped band heights must stay >= 1 for every band offset"),
+                    );
+                    underflow = true;
+                    break;
+                }
+            }
+            if underflow {
+                break;
+            }
+        }
+        if underflow {
+            continue;
+        }
+        // --- BSL029: wasteful band height (clamped at run time) ---
+        if seq.tile_rows > out_h {
+            diags.push(Diagnostic::new(
+                DiagCode::TileRowsExceedHeight,
+                where_.clone(),
+                format!(
+                    "tile_rows {} exceeds the sequence output height {out_h}",
+                    seq.tile_rows
+                ),
+            ));
+        }
+        // --- BSL024 / BSL026: working set vs budget ---
+        // Multi-step sequences only: the packer guarantees a multi-step
+        // sequence fits (it splits otherwise), so an overrun proves the
+        // plan or its accounting was corrupted. A single-step sequence
+        // cannot be split further and may legitimately exceed the
+        // budget (documented allowance; see module docs).
+        if seq.steps.len() > 1 {
+            let ws = seq.working_set_bytes(seq.tile_rows);
+            if ws > budget {
+                let (code, ctx) = if in_arm {
+                    (
+                        DiagCode::SkipReservationBroken,
+                        format!(
+                            " (skip-reserved budget: {} B reserved of {} B limit)",
+                            opts.reserved_bytes,
+                            opts.budget_bytes.unwrap_or(device.resource_limit())
+                        ),
+                    )
+                } else {
+                    (DiagCode::BudgetOverrun, String::new())
+                };
+                diags.push(
+                    Diagnostic::new(
+                        code,
+                        where_.clone(),
+                        format!(
+                            "working set {ws} B at tile_rows {} exceeds the effective budget {budget} B{ctx}",
+                            seq.tile_rows
+                        ),
+                    )
+                    .note("multi-step sequences must fit the collapse budget; the packer splits any that do not"),
+                );
+            }
+        }
+    }
+}
+
+/// Both halves of the plan verifier in one call.
+pub fn verify_plan(
+    graph: &Graph,
+    plan: &Plan,
+    device: &DeviceSpec,
+    opts: &CollapseOptions,
+) -> Vec<Diagnostic> {
+    let mut diags = verify_structure(graph, plan);
+    diags.extend(verify_resources(graph, plan, device, opts));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Layer, PoolKind, Window2d};
+    use crate::optimizer::optimize;
+
+    fn pool3() -> Layer {
+        Layer::Pool2d {
+            kind: PoolKind::Max,
+            window: Window2d::square(3, 1, 1),
+            ceil_mode: false,
+            count_include_pad: true,
+        }
+    }
+
+    fn chain_graph() -> Graph {
+        let mut g = Graph::new("chain", Shape::nchw(1, 8, 32, 32));
+        g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+        g.push("relu", Layer::Relu);
+        g.push("pool", pool3());
+        g
+    }
+
+    #[test]
+    fn valid_plan_is_clean() {
+        let g = chain_graph();
+        let dev = DeviceSpec::paper_cpu();
+        let opts = CollapseOptions::default();
+        let plan = optimize(&g, &dev, &opts);
+        let diags = verify_plan(&g, &plan, &dev, &opts);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn zoo_paper_plans_are_clean() {
+        for name in ["vgg16_bn", "resnet18", "densenet121", "squeezenet1_0"] {
+            let g = crate::zoo::build(name, crate::zoo::paper_config(name, 1));
+            let dev = DeviceSpec::paper_cpu();
+            let opts = CollapseOptions::default();
+            let plan = optimize(&g, &dev, &opts);
+            let diags = verify_plan(&g, &plan, &dev, &opts);
+            assert!(diags.is_empty(), "{name}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn tile_rows_zero_is_halo_underflow() {
+        let g = chain_graph();
+        let dev = DeviceSpec::paper_cpu();
+        let opts = CollapseOptions::default();
+        let mut plan = optimize(&g, &dev, &opts);
+        for seg in &mut plan.segments {
+            if let Segment::Stack(st) = seg {
+                st.sequences[0].tile_rows = 0;
+            }
+        }
+        let diags = verify_resources(&g, &plan, &dev, &opts);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::HaloUnderflow),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn oversized_tile_rows_is_a_warning() {
+        let g = chain_graph();
+        let dev = DeviceSpec::paper_cpu();
+        let opts = CollapseOptions::default();
+        let mut plan = optimize(&g, &dev, &opts);
+        for seg in &mut plan.segments {
+            if let Segment::Stack(st) = seg {
+                let out_h = st.sequences[0].out_shape().height();
+                st.sequences[0].tile_rows = out_h + 5;
+            }
+        }
+        let diags = verify_resources(&g, &plan, &dev, &opts);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.code == DiagCode::TileRowsExceedHeight
+                    && d.severity == crate::analysis::Severity::Warning),
+            "{diags:?}"
+        );
+    }
+}

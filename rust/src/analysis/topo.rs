@@ -1,0 +1,488 @@
+//! Pass 3: concurrency topology lint.
+//!
+//! The runtime's threads, channels, locks and shutdown protocol are
+//! declared here *as data* — a [`Topology`] — and checked statically
+//! (BSL040–BSL045) instead of being re-audited by hand after every
+//! change. Each concurrent subsystem registers its own topology
+//! ([`crate::server::Server`], the HTTP listener, the CPU band pool);
+//! `brainslug check` and the test suite verify all of them.
+//!
+//! The model is deliberately small: named thread groups with an exit
+//! condition, named channels with capacities and endpoints, named gate
+//! flags, and an ordered shutdown script. That is enough to catch the
+//! deadlock classes this codebase has actually hit:
+//!
+//! * a rendezvous (capacity-0) channel cycle — both sides block in
+//!   send, nobody reaches recv (BSL040);
+//! * shutdown tokens sent before the admission gate closes — a racing
+//!   producer re-fills the queue and a worker consumes the token meant
+//!   for another, leaving a thread parked forever (BSL041, the PR 6
+//!   drain-ordering bug class);
+//! * a thread that is neither scope-joined nor joined by the shutdown
+//!   script — a silent leak (BSL042);
+//! * a join whose termination condition is never established by the
+//!   preceding shutdown steps — join blocks forever (BSL044).
+
+use super::diag::{DiagCode, Diagnostic};
+
+/// Why a thread group eventually exits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExitCondition {
+    /// Exits after receiving a dedicated token on this channel
+    /// (one token per thread in the group).
+    TokenOn(String),
+    /// Exits when this channel disconnects (every sender dropped).
+    DisconnectOf(String),
+    /// Exits when this gate flag is observed closed (polling loop).
+    FlagSet(String),
+    /// Joined implicitly by a `thread::scope` at the spawn site.
+    ScopeEnd,
+}
+
+/// A group of identical threads.
+#[derive(Debug, Clone)]
+pub struct ThreadSpec {
+    pub name: String,
+    pub count: usize,
+    pub exit: ExitCondition,
+}
+
+/// A channel with its capacity and endpoints. Endpoints name declared
+/// thread groups, or `"main"` for the owning/calling thread.
+#[derive(Debug, Clone)]
+pub struct ChannelSpec {
+    pub name: String,
+    /// `sync_channel` bound; 0 means rendezvous.
+    pub capacity: usize,
+    pub senders: Vec<String>,
+    pub receivers: Vec<String>,
+    /// Gate flag that must be closed before shutdown tokens are sent on
+    /// this channel (admission control).
+    pub gate: Option<String>,
+}
+
+/// One step of the ordered shutdown script.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShutdownStep {
+    /// Close an admission gate (no new work enters after this).
+    CloseGate(String),
+    /// Send `count` shutdown tokens on a channel.
+    SendTokens { channel: String, count: usize },
+    /// Drop every sender handle of a channel (disconnects receivers).
+    DropSenders(String),
+    /// Join every thread in a group.
+    Join(String),
+}
+
+/// Declarative model of one concurrent subsystem.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    pub name: String,
+    pub threads: Vec<ThreadSpec>,
+    pub channels: Vec<ChannelSpec>,
+    pub gates: Vec<String>,
+    pub shutdown: Vec<ShutdownStep>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Self {
+        Topology {
+            name: name.into(),
+            ..Topology::default()
+        }
+    }
+
+    pub fn thread(mut self, name: impl Into<String>, count: usize, exit: ExitCondition) -> Self {
+        self.threads.push(ThreadSpec {
+            name: name.into(),
+            count,
+            exit,
+        });
+        self
+    }
+
+    pub fn channel(
+        mut self,
+        name: impl Into<String>,
+        capacity: usize,
+        senders: &[&str],
+        receivers: &[&str],
+        gate: Option<&str>,
+    ) -> Self {
+        self.channels.push(ChannelSpec {
+            name: name.into(),
+            capacity,
+            senders: senders.iter().map(|s| s.to_string()).collect(),
+            receivers: receivers.iter().map(|s| s.to_string()).collect(),
+            gate: gate.map(|g| g.to_string()),
+        });
+        self
+    }
+
+    pub fn gate(mut self, name: impl Into<String>) -> Self {
+        self.gates.push(name.into());
+        self
+    }
+
+    pub fn on_shutdown(mut self, step: ShutdownStep) -> Self {
+        self.shutdown.push(step);
+        self
+    }
+
+    /// Compose another subsystem's topology into this one (e.g. the
+    /// HTTP front door embeds the batching server it shuts down last).
+    pub fn extend(mut self, other: Topology) -> Self {
+        self.threads.extend(other.threads);
+        self.channels.extend(other.channels);
+        self.gates.extend(other.gates);
+        self.shutdown.extend(other.shutdown);
+        self
+    }
+
+    fn thread_spec(&self, name: &str) -> Option<&ThreadSpec> {
+        self.threads.iter().find(|t| t.name == name)
+    }
+
+    fn has_endpoint(&self, name: &str) -> bool {
+        name == "main" || self.thread_spec(name).is_some()
+    }
+}
+
+/// Check one topology. Returns every finding.
+pub fn check_topology(t: &Topology) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let subj = |detail: &str| format!("topology '{}': {detail}", t.name);
+
+    // --- BSL043: declarations must be closed ---
+    for ch in &t.channels {
+        for ep in ch.senders.iter().chain(&ch.receivers) {
+            if !t.has_endpoint(ep) {
+                diags.push(Diagnostic::new(
+                    DiagCode::BadEndpoint,
+                    subj(&format!("channel '{}'", ch.name)),
+                    format!("endpoint '{ep}' is not a declared thread group or 'main'"),
+                ));
+            }
+        }
+        if ch.senders.is_empty() || ch.receivers.is_empty() {
+            diags.push(Diagnostic::new(
+                DiagCode::BadEndpoint,
+                subj(&format!("channel '{}'", ch.name)),
+                "channel must have at least one sender and one receiver",
+            ));
+        }
+        if let Some(g) = &ch.gate {
+            if !t.gates.contains(g) {
+                diags.push(Diagnostic::new(
+                    DiagCode::BadEndpoint,
+                    subj(&format!("channel '{}'", ch.name)),
+                    format!("gate '{g}' is not declared"),
+                ));
+            }
+        }
+    }
+    for step in &t.shutdown {
+        match step {
+            ShutdownStep::CloseGate(g) => {
+                if !t.gates.contains(g) {
+                    diags.push(Diagnostic::new(
+                        DiagCode::BadEndpoint,
+                        subj("shutdown"),
+                        format!("CloseGate('{g}'): gate is not declared"),
+                    ));
+                }
+            }
+            ShutdownStep::SendTokens { channel, .. } | ShutdownStep::DropSenders(channel) => {
+                if !t.channels.iter().any(|c| &c.name == channel) {
+                    diags.push(Diagnostic::new(
+                        DiagCode::BadEndpoint,
+                        subj("shutdown"),
+                        format!("shutdown step names undeclared channel '{channel}'"),
+                    ));
+                }
+            }
+            ShutdownStep::Join(name) => {
+                if t.thread_spec(name).is_none() {
+                    diags.push(Diagnostic::new(
+                        DiagCode::BadEndpoint,
+                        subj("shutdown"),
+                        format!("Join('{name}'): thread group is not declared"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // --- BSL040: rendezvous cycle ---
+    // Edge s -> r for every capacity-0 channel: s blocks in send until r
+    // reaches recv. A cycle among these edges can deadlock with every
+    // participant parked in send.
+    let zero: Vec<&ChannelSpec> = t.channels.iter().filter(|c| c.capacity == 0).collect();
+    if !zero.is_empty() {
+        let parties: Vec<&str> = {
+            let mut v: Vec<&str> = t.threads.iter().map(|t| t.name.as_str()).collect();
+            v.push("main");
+            v
+        };
+        let index = |name: &str| parties.iter().position(|p| *p == name);
+        let n = parties.len();
+        let mut adj = vec![vec![]; n];
+        for ch in &zero {
+            for s in &ch.senders {
+                for r in &ch.receivers {
+                    if let (Some(si), Some(ri)) = (index(s), index(r)) {
+                        adj[si].push((ri, ch.name.clone()));
+                    }
+                }
+            }
+        }
+        // DFS cycle detection (colors: 0 white, 1 on stack, 2 done).
+        let mut color = vec![0u8; n];
+        fn dfs(
+            v: usize,
+            adj: &[Vec<(usize, String)>],
+            color: &mut [u8],
+            trail: &mut Vec<String>,
+        ) -> Option<Vec<String>> {
+            color[v] = 1;
+            for (w, ch) in &adj[v] {
+                trail.push(ch.clone());
+                if color[*w] == 1 {
+                    return Some(trail.clone());
+                }
+                if color[*w] == 0 {
+                    if let Some(c) = dfs(*w, adj, color, trail) {
+                        return Some(c);
+                    }
+                }
+                trail.pop();
+            }
+            color[v] = 2;
+            None
+        }
+        for v in 0..n {
+            if color[v] == 0 {
+                if let Some(cycle) = dfs(v, &adj, &mut color, &mut Vec::new()) {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::ZeroCapacityCycle,
+                            subj("channels"),
+                            format!(
+                                "rendezvous (capacity-0) channel cycle through [{}]: all parties can block in send",
+                                cycle.join(", ")
+                            ),
+                        )
+                        .note("give at least one channel in the cycle a non-zero capacity, or break the cycle"),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    // --- BSL041 / BSL044 / BSL045: shutdown script ordering ---
+    let mut closed_gates: Vec<&str> = Vec::new();
+    let mut tokens_sent: Vec<(&str, usize)> = Vec::new(); // (channel, total)
+    let mut dropped: Vec<&str> = Vec::new();
+    let mut joined: Vec<&str> = Vec::new();
+    for step in &t.shutdown {
+        match step {
+            ShutdownStep::CloseGate(g) => closed_gates.push(g),
+            ShutdownStep::SendTokens { channel, count } => {
+                if let Some(ch) = t.channels.iter().find(|c| &c.name == channel) {
+                    if let Some(gate) = &ch.gate {
+                        if !closed_gates.contains(&gate.as_str()) {
+                            diags.push(
+                                Diagnostic::new(
+                                    DiagCode::SendBeforeGateClose,
+                                    subj("shutdown"),
+                                    format!(
+                                        "shutdown tokens sent on '{channel}' before gate '{gate}' closes: \
+                                         a racing producer can enqueue past the tokens and strand a worker"
+                                    ),
+                                )
+                                .note("close the admission gate first, then send one token per worker"),
+                            );
+                        }
+                    }
+                }
+                tokens_sent.push((channel, *count));
+            }
+            ShutdownStep::DropSenders(channel) => dropped.push(channel),
+            ShutdownStep::Join(name) => {
+                joined.push(name);
+                let Some(spec) = t.thread_spec(name) else {
+                    continue; // BSL043 already reported
+                };
+                let established = match &spec.exit {
+                    ExitCondition::ScopeEnd => true,
+                    ExitCondition::FlagSet(g) => closed_gates.contains(&g.as_str()),
+                    ExitCondition::TokenOn(ch) => {
+                        let total: usize = tokens_sent
+                            .iter()
+                            .filter(|(c, _)| *c == ch)
+                            .map(|(_, n)| *n)
+                            .sum();
+                        total >= spec.count
+                    }
+                    ExitCondition::DisconnectOf(ch) => {
+                        dropped.contains(&ch.as_str())
+                            || t.channels
+                                .iter()
+                                .find(|c| &c.name == ch)
+                                .is_some_and(|c| {
+                                    // Disconnect also happens once every
+                                    // sending thread group has been joined
+                                    // (their sender handles drop on exit).
+                                    !c.senders.is_empty()
+                                        && c.senders.iter().all(|s| {
+                                            s != "main" && joined.contains(&s.as_str())
+                                        })
+                                })
+                    }
+                };
+                if !established {
+                    diags.push(
+                        Diagnostic::new(
+                            DiagCode::JoinWithoutTermination,
+                            subj("shutdown"),
+                            format!(
+                                "Join('{name}') before its exit condition {:?} is established: join can block forever",
+                                spec.exit
+                            ),
+                        )
+                        .note("order the shutdown script so the condition (tokens sent, senders dropped, gate closed) precedes the join"),
+                    );
+                }
+            }
+        }
+    }
+
+    // --- BSL042: unjoined thread leak ---
+    for th in &t.threads {
+        if th.exit != ExitCondition::ScopeEnd && !joined.contains(&th.name.as_str()) {
+            diags.push(
+                Diagnostic::new(
+                    DiagCode::UnjoinedThread,
+                    subj(&format!("thread group '{}'", th.name)),
+                    "thread is neither scope-joined nor joined by the shutdown script (leak)",
+                )
+                .note("add a Join step, or spawn inside a thread::scope"),
+            );
+        }
+    }
+
+    // --- BSL045: gate declared but never closed (warning) ---
+    for g in &t.gates {
+        if !t
+            .shutdown
+            .iter()
+            .any(|s| matches!(s, ShutdownStep::CloseGate(x) if x == g))
+        {
+            diags.push(Diagnostic::new(
+                DiagCode::GateNeverClosed,
+                subj(&format!("gate '{g}'")),
+                "gate is declared but no shutdown step ever closes it",
+            ));
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::DiagCode;
+
+    fn server_like(workers: usize, queue: usize) -> Topology {
+        Topology::new("test-server")
+            .gate("closed")
+            .thread("worker", workers, ExitCondition::TokenOn("dispatch".into()))
+            .channel("dispatch", queue, &["main"], &["worker"], Some("closed"))
+            .on_shutdown(ShutdownStep::CloseGate("closed".into()))
+            .on_shutdown(ShutdownStep::SendTokens {
+                channel: "dispatch".into(),
+                count: workers,
+            })
+            .on_shutdown(ShutdownStep::Join("worker".into()))
+    }
+
+    #[test]
+    fn well_formed_server_topology_is_clean() {
+        assert!(check_topology(&server_like(4, 64)).is_empty());
+    }
+
+    #[test]
+    fn tokens_before_gate_close_is_drain_ordering_bug() {
+        let mut t = server_like(4, 64);
+        t.shutdown.swap(0, 1); // send tokens, then close the gate
+        let diags = check_topology(&t);
+        assert!(diags.iter().any(|d| d.code == DiagCode::SendBeforeGateClose));
+    }
+
+    #[test]
+    fn missing_join_is_a_leak() {
+        let mut t = server_like(2, 8);
+        t.shutdown.pop();
+        let diags = check_topology(&t);
+        assert!(diags.iter().any(|d| d.code == DiagCode::UnjoinedThread));
+    }
+
+    #[test]
+    fn too_few_tokens_blocks_join() {
+        let mut t = server_like(4, 64);
+        if let ShutdownStep::SendTokens { count, .. } = &mut t.shutdown[1] {
+            *count = 2; // 4 workers, 2 tokens
+        }
+        let diags = check_topology(&t);
+        assert!(diags.iter().any(|d| d.code == DiagCode::JoinWithoutTermination));
+    }
+
+    #[test]
+    fn zero_capacity_cycle_detected() {
+        let t = Topology::new("cycle")
+            .thread("a", 1, ExitCondition::ScopeEnd)
+            .thread("b", 1, ExitCondition::ScopeEnd)
+            .channel("ab", 0, &["a"], &["b"], None)
+            .channel("ba", 0, &["b"], &["a"], None);
+        let diags = check_topology(&t);
+        assert!(diags.iter().any(|d| d.code == DiagCode::ZeroCapacityCycle));
+    }
+
+    #[test]
+    fn undeclared_endpoint_is_flagged() {
+        let t = Topology::new("bad")
+            .thread("w", 1, ExitCondition::ScopeEnd)
+            .channel("c", 1, &["ghost"], &["w"], None);
+        let diags = check_topology(&t);
+        assert!(diags.iter().any(|d| d.code == DiagCode::BadEndpoint));
+    }
+
+    #[test]
+    fn disconnect_join_satisfied_by_joining_senders() {
+        // conn threads exit when the conns channel disconnects, which the
+        // script establishes by joining the acceptor (sole sender) first.
+        let t = Topology::new("listener-like")
+            .gate("stop")
+            .thread("acceptor", 1, ExitCondition::FlagSet("stop".into()))
+            .thread("conn", 4, ExitCondition::DisconnectOf("conns".into()))
+            .channel("conns", 64, &["acceptor"], &["conn"], None)
+            .on_shutdown(ShutdownStep::CloseGate("stop".into()))
+            .on_shutdown(ShutdownStep::Join("acceptor".into()))
+            .on_shutdown(ShutdownStep::Join("conn".into()));
+        assert!(check_topology(&t).is_empty());
+    }
+
+    #[test]
+    fn unclosed_gate_is_a_warning() {
+        let t = Topology::new("warn")
+            .gate("closed")
+            .thread("w", 1, ExitCondition::ScopeEnd);
+        let diags = check_topology(&t);
+        assert!(diags
+            .iter()
+            .any(|d| d.code == DiagCode::GateNeverClosed
+                && d.severity == crate::analysis::Severity::Warning));
+    }
+}

@@ -154,8 +154,7 @@ impl TuneOutcome {
 /// the host's parallelism (capped at 8), plus the exact core count.
 pub fn default_thread_sweep() -> Vec<usize> {
     let cores = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+        .map_or(1, |n| n.get())
         .min(8);
     let mut v: Vec<usize> = [1usize, 2, 4, 8]
         .into_iter()

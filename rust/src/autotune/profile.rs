@@ -163,8 +163,7 @@ impl ProfileStore {
             return PathBuf::from(p);
         }
         let home = std::env::var_os("HOME")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("."));
+            .map_or_else(|| PathBuf::from("."), PathBuf::from);
         home.join(".brainslug").join("profiles.json")
     }
 

@@ -28,12 +28,9 @@ impl Args {
                 // `--key=value` or `--key value` or boolean `--key`.
                 if let Some((k, v)) = name.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    flags.insert(name.to_string(), it.next().unwrap());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    let v = it.next().unwrap_or_default();
+                    flags.insert(name.to_string(), v);
                 } else {
                     flags.insert(name.to_string(), "true".to_string());
                 }

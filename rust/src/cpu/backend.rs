@@ -231,7 +231,10 @@ impl CpuBackend {
         let out = walker::run_stack(stack, &x, &bn, self.threads);
         // Interior nodes were never materialized; their consumers are
         // all internal to the stack.
-        let last = *stack.nodes.last().unwrap();
+        let last = *stack
+            .nodes
+            .last()
+            .expect("plan verifier rejects empty stacks");
         for &nid in &stack.nodes {
             if nid != last {
                 remaining[nid] = 0;

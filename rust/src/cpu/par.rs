@@ -64,6 +64,15 @@ where
     run_items(threads, items, || (), |(i, plane), _scratch| f(i, plane));
 }
 
+/// Declarative concurrency topology of the band-worker pool for the
+/// static lint. Trivially safe by construction — scoped workers with no
+/// channels, joined implicitly at scope end — but declared anyway so
+/// the lint inventory covers every place the runtime spawns threads.
+pub fn topology(threads: usize) -> crate::analysis::Topology {
+    use crate::analysis::{ExitCondition, Topology};
+    Topology::new("cpu-band-pool").thread("band-worker", threads, ExitCondition::ScopeEnd)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -100,9 +100,7 @@ impl DeviceSpec {
     /// The host this repo actually measures on (container CPU, XLA:CPU
     /// backend). Used by the measured-mode harness for tile sizing.
     pub fn host_cpu() -> Self {
-        let cores = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
+        let cores = std::thread::available_parallelism().map_or(4, |n| n.get());
         DeviceSpec {
             name: "host-cpu".into(),
             kind: DeviceKind::Cpu,

@@ -42,6 +42,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::analysis;
 use crate::autotune::{self, ProfileStore, TuneLevel};
 use crate::device::DeviceSpec;
 use crate::graph::Graph;
@@ -415,6 +416,24 @@ impl EngineBuilder {
                 let p = optimize(&graph, &self.device, &opts);
                 p.validate(&graph)
                     .map_err(|e| anyhow!("plan validation for '{}': {e}", graph.name))?;
+                // Debug builds additionally run the full static
+                // verifier (resource proofs on top of the structural
+                // checks `validate` already delegates to). Any
+                // Severity::Error is a planner bug — reject the plan.
+                if cfg!(debug_assertions) {
+                    let mut diags = analysis::lint_graph(&graph);
+                    diags.extend(analysis::verify_resources(&graph, &p, &self.device, &opts));
+                    if let Some(d) = diags
+                        .iter()
+                        .find(|d| d.severity == analysis::Severity::Error)
+                    {
+                        bail!(
+                            "static verification of plan for '{}' failed: {}",
+                            graph.name,
+                            d.render_oneline()
+                        );
+                    }
+                }
                 Some(Arc::new(p))
             }
         };

@@ -9,9 +9,41 @@ use std::collections::HashMap;
 
 use super::layer::Layer;
 use super::shape::Shape;
+use crate::analysis::{DiagCode, Severity};
 
 /// Node identifier: index into `Graph::nodes`.
 pub type NodeId = usize;
+
+/// Structured graph-validation error: a stable [`DiagCode`], the
+/// offending node (id + name when known), and a human-readable reason.
+/// `Display` renders one line, so existing `{e}` call sites keep their
+/// output; the fields let callers (the JSON loader, `brainslug check`)
+/// point at the offending node instead of re-parsing a string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphError {
+    /// Stable `BSL0xx` diagnostic code (see `crate::analysis::diag`).
+    pub code: DiagCode,
+    pub node: Option<NodeId>,
+    pub node_name: Option<String>,
+    pub reason: String,
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (self.node, &self.node_name) {
+            (Some(id), Some(name)) => write!(
+                f,
+                "[{}] node {id} ('{name}'): {}",
+                self.code.as_str(),
+                self.reason
+            ),
+            (Some(id), _) => write!(f, "[{}] node {id}: {}", self.code.as_str(), self.reason),
+            _ => write!(f, "[{}] {}", self.code.as_str(), self.reason),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// Precomputed consumer adjacency of a graph.
 ///
@@ -115,25 +147,73 @@ impl Graph {
     }
 
     /// Append a layer consuming `inputs`; returns the new node id and
-    /// updates the graph output to it.
+    /// updates the graph output to it. Panics on malformed nodes — the
+    /// zoo builders construct known-good graphs; loaders of untrusted
+    /// graphs use [`Self::try_add`].
     pub fn add(&mut self, name: impl Into<String>, layer: Layer, inputs: &[NodeId]) -> NodeId {
+        self.try_add(name, layer, inputs)
+            .unwrap_or_else(|e| panic!("graph '{}': {e}", self.name))
+    }
+
+    /// Non-panicking [`Self::add`]: validates edges, arity, and op
+    /// config *before* shape inference (whose window helpers assert on
+    /// degenerate windows), returning a [`GraphError`] that names the
+    /// offending node.
+    pub fn try_add(
+        &mut self,
+        name: impl Into<String>,
+        layer: Layer,
+        inputs: &[NodeId],
+    ) -> Result<NodeId, GraphError> {
         let id = self.nodes.len();
+        let name = name.into();
+        let fail = |code: DiagCode, reason: String, name: &str| GraphError {
+            code,
+            node: Some(id),
+            node_name: Some(name.to_string()),
+            reason,
+        };
         for &i in inputs {
-            assert!(i < id, "input {i} does not exist yet (node {id})");
+            if i >= id {
+                return Err(fail(
+                    DiagCode::NonTopologicalEdge,
+                    format!("input {i} does not exist yet"),
+                    &name,
+                ));
+            }
+        }
+        let (min_in, max_in) = layer.arity();
+        if inputs.len() < min_in || inputs.len() > max_in {
+            return Err(fail(
+                DiagCode::ArityMismatch,
+                format!(
+                    "{} got {} input(s), expects at least {min_in}",
+                    layer.kind_name(),
+                    inputs.len()
+                ),
+                &name,
+            ));
         }
         let in_shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.nodes[i].shape).collect();
-        let shape = layer
-            .infer_shape(&in_shapes)
-            .unwrap_or_else(|e| panic!("shape inference failed at node {id} ({}): {e}", self.name));
+        if let Err(reason) = layer.check_config(&in_shapes) {
+            return Err(fail(DiagCode::DegenerateOp, reason, &name));
+        }
+        let shape = layer.infer_shape(&in_shapes).map_err(|reason| {
+            let code = match layer {
+                Layer::Add | Layer::Concat => DiagCode::JoinShapeMismatch,
+                _ => DiagCode::DegenerateOp,
+            };
+            fail(code, reason, &name)
+        })?;
         self.nodes.push(Node {
             id,
-            name: name.into(),
+            name,
             layer,
             inputs: inputs.to_vec(),
             shape,
         });
         self.output = id;
-        id
+        Ok(id)
     }
 
     /// Convenience: append a unary layer consuming the current output.
@@ -227,48 +307,27 @@ impl Graph {
         })
     }
 
-    /// Validate structural invariants; returns an error description.
-    pub fn validate(&self) -> Result<(), String> {
-        if self.nodes.is_empty() {
-            return Err("empty graph".into());
+    /// Validate structural invariants. Delegates to the full graph lint
+    /// (`crate::analysis::lint_graph`) and surfaces the first
+    /// `Severity::Error` finding as a structured [`GraphError`];
+    /// warnings (e.g. dtype mixes at a concat) do not fail validation —
+    /// run `brainslug check` to see them.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let first_error = crate::analysis::lint_graph(self)
+            .into_iter()
+            .find(|d| d.severity == Severity::Error);
+        match first_error {
+            None => Ok(()),
+            Some(d) => Err(GraphError {
+                code: d.code,
+                node: d.node,
+                node_name: d
+                    .node
+                    .and_then(|id| self.nodes.get(id))
+                    .map(|n| n.name.clone()),
+                reason: d.message,
+            }),
         }
-        if !matches!(self.nodes[0].layer, Layer::Input { .. }) {
-            return Err("node 0 must be the input placeholder".into());
-        }
-        for (idx, n) in self.nodes.iter().enumerate() {
-            if n.id != idx {
-                return Err(format!("node {idx} has mismatched id {}", n.id));
-            }
-            for &i in &n.inputs {
-                if i >= idx {
-                    return Err(format!("node {idx} has non-topological input {i}"));
-                }
-            }
-            if idx > 0 && matches!(n.layer, Layer::Input { .. }) {
-                return Err(format!("interior input node at {idx}"));
-            }
-            let in_shapes: Vec<&Shape> = n.inputs.iter().map(|&i| &self.nodes[i].shape).collect();
-            if idx > 0 {
-                let inferred = n.layer.infer_shape(&in_shapes)?;
-                if inferred != n.shape {
-                    return Err(format!(
-                        "node {idx}: stored shape {} != inferred {}",
-                        n.shape, inferred
-                    ));
-                }
-            }
-        }
-        if self.output >= self.nodes.len() {
-            return Err("output id out of range".into());
-        }
-        // Every non-output node must be consumed.
-        let cons = self.consumer_map();
-        for n in &self.nodes {
-            if n.id != self.output && cons.count(n.id) == 0 {
-                return Err(format!("dangling node {} ({})", n.id, n.name));
-            }
-        }
-        Ok(())
     }
 
     /// Histogram of layer kinds (for reports and Table 2's layer counts).

@@ -193,19 +193,25 @@ pub fn graph_from_json(j: &Json) -> anyhow::Result<Graph> {
         let layer = layer_from_json(nj)?;
         let inputs = nj.req("inputs")?.usize_vec()?;
         let node_name = nj.str_field("name")?;
-        let id = g.add(node_name, layer, &inputs);
+        // try_add (not add): a malformed file must produce an error
+        // naming the offending node, never a panic.
+        let id = g
+            .try_add(node_name, layer, &inputs)
+            .map_err(|e| anyhow::anyhow!("malformed graph json: {e}"))?;
         // Cross-check stored shape against inference.
         let stored = shape_from_json(nj.req("shape")?)?;
         if g.node(id).shape != stored {
             anyhow::bail!(
-                "node {id}: shape mismatch (stored {}, inferred {})",
+                "malformed graph json: node {id} ('{}'): shape mismatch (stored {}, inferred {})",
+                g.node(id).name,
                 stored,
                 g.node(id).shape
             );
         }
     }
     g.output = j.usize_field("output")?;
-    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    g.validate()
+        .map_err(|e| anyhow::anyhow!("malformed graph json: {e}"))?;
     Ok(g)
 }
 

@@ -179,6 +179,72 @@ impl Layer {
         }
     }
 
+    /// Expected input arity as `(min, max)`; `max == usize::MAX` means
+    /// unbounded (Concat).
+    pub fn arity(&self) -> (usize, usize) {
+        match self {
+            Layer::Input { .. } => (0, 0),
+            Layer::Add => (2, 2),
+            Layer::Concat => (2, usize::MAX),
+            _ => (1, 1),
+        }
+    }
+
+    /// Static config sanity for the given inputs: everything that would
+    /// make [`Self::infer_shape`]'s window helpers assert (zero stride,
+    /// window larger than the padded input) or define a degenerate op
+    /// (zero-size kernel, zero output channels/features, zero-size
+    /// adaptive target). [`super::Graph::try_add`] and the graph lint
+    /// run this *before* `infer_shape`, which panics on these inputs.
+    pub fn check_config(&self, inputs: &[&Shape]) -> Result<(), String> {
+        fn window_ok(w: &Window2d, input: Option<&&Shape>) -> Result<(), String> {
+            if w.kernel.0 == 0 || w.kernel.1 == 0 {
+                return Err(format!("zero-size window {}", w.sig()));
+            }
+            if w.stride.0 == 0 || w.stride.1 == 0 {
+                return Err(format!("zero stride in window {}", w.sig()));
+            }
+            if let Some(i) = input {
+                if i.rank() == 4
+                    && (i.height() + 2 * w.pad.0 < w.kernel.0
+                        || i.width() + 2 * w.pad.1 < w.kernel.1)
+                {
+                    return Err(format!(
+                        "window {} larger than padded input {i}",
+                        w.sig()
+                    ));
+                }
+            }
+            Ok(())
+        }
+        match self {
+            Layer::Conv2d {
+                out_channels,
+                window,
+                ..
+            } => {
+                if *out_channels == 0 {
+                    return Err("conv2d with zero output channels".into());
+                }
+                window_ok(window, inputs.first())
+            }
+            Layer::Linear { out_features, .. } => {
+                if *out_features == 0 {
+                    return Err("linear with zero output features".into());
+                }
+                Ok(())
+            }
+            Layer::Pool2d { window, .. } => window_ok(window, inputs.first()),
+            Layer::AdaptiveAvgPool { out_hw } => {
+                if out_hw.0 == 0 || out_hw.1 == 0 {
+                    return Err("adaptive pool with zero-size target".into());
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
     /// Infer the output shape from input shapes (most layers are unary).
     pub fn infer_shape(&self, inputs: &[&Shape]) -> Result<Shape, String> {
         let unary = || -> Result<&Shape, String> {

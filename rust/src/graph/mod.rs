@@ -12,7 +12,7 @@ pub mod json;
 pub mod layer;
 pub mod shape;
 
-pub use dag::{BranchRegion, Consumers, Graph, Node, NodeId};
+pub use dag::{BranchRegion, Consumers, Graph, GraphError, Node, NodeId};
 pub use json::{graph_from_json, graph_to_json, node_param_tags};
 pub use layer::{ceil_out_dim, Layer, PoolKind, Window2d};
 pub use shape::{conv_out_dim, DType, Shape};

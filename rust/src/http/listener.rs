@@ -186,6 +186,31 @@ impl HttpServer {
     }
 }
 
+/// Declarative concurrency topology of the HTTP front door for the
+/// static lint, embedding the batching server it owns. Mirrors
+/// [`HttpServer::start`] / [`HttpServer::shutdown`] exactly: the
+/// acceptor polls the `stop` flag; connection threads exit when the
+/// bounded `conns` channel disconnects, which happens precisely when
+/// the acceptor (its only sender) is joined; the embedded server is
+/// stopped last because draining connections may still need live
+/// workers.
+pub fn topology(conn_threads: usize, conn_queue: usize) -> crate::analysis::Topology {
+    use crate::analysis::{ExitCondition, ShutdownStep, Topology};
+    Topology::new("http-listener")
+        .gate("stop")
+        .thread("acceptor", 1, ExitCondition::FlagSet("stop".into()))
+        .thread(
+            "conn",
+            conn_threads,
+            ExitCondition::DisconnectOf("conns".into()),
+        )
+        .channel("conns", conn_queue, &["acceptor"], &["conn"], None)
+        .on_shutdown(ShutdownStep::CloseGate("stop".into()))
+        .on_shutdown(ShutdownStep::Join("acceptor".into()))
+        .on_shutdown(ShutdownStep::Join("conn".into()))
+        .extend(crate::server::topology(4, 64))
+}
+
 /// Canned 503 for connections shed at the accept stage; best-effort
 /// (the client may already be gone).
 fn shed(mut stream: TcpStream) {

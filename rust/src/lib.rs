@@ -27,10 +27,31 @@
 //! validates the plan, and binds an [`engine::Backend`] (real PJRT
 //! execution or artifact-free `memsim` simulation), so callers write
 //! `Engine::builder().zoo_small("vgg11_bn", 8).build()?.run(input)`
-//! instead of wiring the pipeline by hand.
+//! instead of wiring the pipeline by hand. [`analysis`] is the static
+//! verification subsystem behind `brainslug check`: graph lint, plan
+//! verifier and concurrency-topology lint, every finding carrying a
+//! stable `BSL0xx` diagnostic code.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// No unsafe anywhere in the crate: the depth-first walkers index with
+// checked slices, and concurrency goes through std channels/locks.
+#![deny(unsafe_code)]
+// Library code must not unwrap lock/channel/option results — poison and
+// disconnect are handled or propagated as typed errors. Tests and
+// benches are exempt via clippy.toml (`allow-unwrap-in-tests`); the few
+// deliberate remaining sites use `expect` with an invariant message.
+#![warn(clippy::unwrap_used)]
+// Pedantic/restriction selections we actually want (the rest of
+// `pedantic` is too noisy for numeric kernel code full of index
+// arithmetic and `as` casts; see DESIGN.md §Static Analysis for the
+// allow-list rationale):
+#![warn(clippy::map_unwrap_or)]
+#![warn(clippy::dbg_macro)]
+#![warn(clippy::todo)]
+#![warn(clippy::unimplemented)]
+
+pub mod analysis;
 pub mod autotune;
 pub mod bench;
 pub mod cli;

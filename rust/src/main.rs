@@ -25,6 +25,16 @@
 //! * `bench-serve`   — closed/open-loop load harness over real sockets
 //!   (Figure 18); `--single` is the CI smoke client.
 //! * `dot`           — GraphViz dump of a network.
+//! * `check`         — static verification: graph lint, plan verifier
+//!   and concurrency-topology lint with stable `BSL0xx` codes.
+
+// Same lint posture as the library (see lib.rs). The one unsafe block
+// (raw `signal(2)` FFI in `install_signal_handlers`) carries a
+// documented `#[allow]`.
+#![deny(unsafe_code)]
+#![warn(clippy::unwrap_used)]
+#![warn(clippy::map_unwrap_or)]
+#![warn(clippy::dbg_macro)]
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -64,6 +74,7 @@ fn main() {
         "bench-serve" => cmd_bench_serve(&args),
         "tune" => cmd_tune(&args),
         "dot" => cmd_dot(&args),
+        "check" => cmd_check(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -104,6 +115,9 @@ USAGE: brainslug <command> [flags]
   tune          --net NAME [--batch N] [--backend cpu] [--threads N]
                 [--budget fast|full] [--device PRESET] [--profile-path FILE]
   dot           --net NAME [--batch N] [--small] [--json]
+  check         [--net NAME | --all-zoo] [--batch N] [--device PRESET]
+                [--collapse-budget BYTES] [--deny warnings]
+                [--format text|json]
 
 Network names accept family aliases (vgg, resnet, densenet, squeezenet,
 inception). `--backend sim` needs no artifacts directory at all.
@@ -143,6 +157,14 @@ pays once, every later run is faster with zero flags (`--no-profile`
 opts out). The cache key includes the batch size (it is part of the
 graph), so tune at the batch you will serve: `tune --net X --batch 8`
 pairs with `serve --net X --batch 8`.
+
+`check` is the static verifier: it lints the graph (shape/dtype
+inference, BSL001–BSL012), re-proves the optimizer plan's resource
+invariants (budget packing, halo back-propagation, skip reservations,
+BSL020–BSL029), and lints the runtime's declared thread/channel
+topologies (BSL040–BSL045). Every finding carries a stable BSL0xx
+code; `--deny warnings` makes warnings fail the exit code (CI runs
+`check --all-zoo --deny warnings`). See DESIGN.md §Static Analysis.
 
 Library quickstart (the whole pipeline is one builder):
 
@@ -262,10 +284,9 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let one = args.get("net").map(|s| s.to_string());
     args.reject_unknown()?;
 
-    let names: Vec<&str> = if all || one.is_none() {
-        zoo::ALL_NETWORKS.to_vec()
-    } else {
-        vec![one.as_deref().unwrap()]
+    let names: Vec<&str> = match one.as_deref() {
+        Some(name) if !all => vec![name],
+        _ => zoo::ALL_NETWORKS.to_vec(),
     };
 
     let mut table = Table::new(&[
@@ -457,7 +478,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // tuning at the same batch: `tune --batch N` then `serve --batch N`.
     let batch = args
         .get_positive_usize("batch")?
-        .unwrap_or(*bench::measured_batches().last().unwrap());
+        .or_else(|| bench::measured_batches().last().copied())
+        .unwrap_or(128);
     let mut engine = Engine::builder()
         .zoo_small(&name, batch)
         .device(device)
@@ -497,7 +519,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let mut ok = 0;
     for c in clients {
-        if c.join().unwrap().is_ok() {
+        // A panicked client thread counts as a failed request.
+        if matches!(c.join(), Ok(Ok(_))) {
             ok += 1;
         }
     }
@@ -531,6 +554,7 @@ static SIGNAL_STOP: AtomicBool = AtomicBool::new(false);
 /// raw libc `signal` symbol — the offline toolchain has no `libc`
 /// crate, and an atomic store is async-signal-safe.
 #[cfg(unix)]
+#[allow(unsafe_code)] // raw libc `signal` FFI; no `libc` crate offline
 fn install_signal_handlers() {
     extern "C" fn on_signal(_signum: i32) {
         SIGNAL_STOP.store(true, Ordering::SeqCst);
@@ -817,8 +841,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let device = device_from_args(args, DeviceSpec::host_cpu())?;
     let profile_path = args
         .get("profile-path")
-        .map(PathBuf::from)
-        .unwrap_or_else(ProfileStore::default_path);
+        .map_or_else(ProfileStore::default_path, PathBuf::from);
     args.reject_unknown()?;
 
     let resolved = zoo::resolve(&name);
@@ -931,6 +954,81 @@ fn cmd_dot(args: &Args) -> Result<()> {
         println!("{}", j.to_string_pretty());
     } else {
         println!("{}", g.to_dot());
+    }
+    Ok(())
+}
+
+/// `check`: the static verifier. Lints each requested network's graph,
+/// re-proves its optimized plan (structure + resources) against the
+/// selected device/budget, then lints the runtime's declared
+/// concurrency topologies. Exit is non-zero on any error, or on any
+/// warning under `--deny warnings`.
+fn cmd_check(args: &Args) -> Result<()> {
+    use brainslug::analysis;
+    use brainslug::optimizer::optimize;
+
+    let all = args.get_bool("all-zoo");
+    let one = args.get("net").map(|s| s.to_string());
+    let batch = args.get_positive_usize("batch")?.unwrap_or(1);
+    let device = device_from_args(args, DeviceSpec::paper_cpu())?;
+    let opts = collapse_opts_from_args(args, CollapseOptions::default())?;
+    let deny_warnings = match args.get("deny") {
+        None => false,
+        Some("warnings") => true,
+        Some(other) => bail!("--deny takes 'warnings', got '{other}'"),
+    };
+    let format = args.get_or("format", "text").to_string();
+    if format != "text" && format != "json" {
+        bail!("--format takes text|json, got '{format}'");
+    }
+    args.reject_unknown()?;
+
+    let names: Vec<String> = match (&one, all) {
+        (Some(name), false) => {
+            let canon = zoo::resolve(name);
+            if zoo::try_build(canon, zoo::small_config(canon, 1)).is_none() {
+                bail!("unknown network '{name}'");
+            }
+            vec![canon.to_string()]
+        }
+        _ => zoo::ALL_NETWORKS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let mut report = analysis::Report::new();
+    for name in &names {
+        let g = zoo::build(name, zoo::paper_config(name, batch));
+        report.extend(analysis::lint_graph(&g));
+        let plan = optimize(&g, &device, &opts);
+        report.extend(analysis::verify_plan(&g, &plan, &device, &opts));
+    }
+    for topo in analysis::standard_topologies() {
+        report.extend(analysis::check_topology(&topo));
+    }
+
+    if format == "json" {
+        let mut j = report.to_json();
+        j.set(
+            "networks",
+            Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        j.set("device", Json::Str(device.name.clone()));
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "checked {} network(s) on {} + {} concurrency topolog(ies)",
+            names.len(),
+            device.name,
+            analysis::standard_topologies().len()
+        );
+        print!("{}", report.render_text());
+    }
+    if !report.is_clean(deny_warnings) {
+        bail!(
+            "check failed: {} error(s), {} warning(s){}",
+            report.error_count(),
+            report.warning_count(),
+            if deny_warnings { " (warnings denied)" } else { "" }
+        );
     }
     Ok(())
 }

@@ -65,7 +65,7 @@ pub fn layer_flops(graph: &Graph, node: &Node) -> f64 {
             out.numel() as f64 * per_out
         }
         Layer::AdaptiveAvgPool { .. } => {
-            input.map(|i| i.numel() as f64).unwrap_or(0.0) + out.numel() as f64
+            input.map_or(0.0, |i| i.numel() as f64) + out.numel() as f64
         }
         // Folded inference BN: one multiply + one add per element.
         Layer::BatchNorm2d { .. } => 2.0 * out.numel() as f64,

@@ -266,7 +266,11 @@ pub fn reservation_holds(device: &DeviceSpec, reserved_bytes: usize) -> bool {
 /// [`CollapseOptions::reserved_bytes`], starting from the injected
 /// [`CollapseOptions::budget_bytes`] when one is set (the autotuner's
 /// budget-scale knob) and the device preset otherwise.
-fn effective_budget(device: &DeviceSpec, opts: &CollapseOptions) -> usize {
+///
+/// Public so the static plan verifier
+/// (`crate::analysis::verify_resources`) re-derives the *same* budget
+/// the packer used instead of approximating it.
+pub fn effective_budget(device: &DeviceSpec, opts: &CollapseOptions) -> usize {
     let limit = opts.budget_bytes.unwrap_or(device.resource_limit());
     limit
         .saturating_sub(opts.reserved_bytes)
@@ -318,9 +322,11 @@ pub fn collapse(ops: &[Operation], device: &DeviceSpec, opts: &CollapseOptions) 
         };
         let over_mem = probe.working_set_bytes(min_rows) > budget;
         if (over_len || over_mem) && current.len() > 1 {
-            let st = current.pop().unwrap();
-            sequences.push(seal(current, device, opts));
-            current = vec![st];
+            // len > 1 was just checked, so the pop always yields a step.
+            if let Some(st) = current.pop() {
+                sequences.push(seal(current, device, opts));
+                current = vec![st];
+            }
         }
     }
     if !current.is_empty() {

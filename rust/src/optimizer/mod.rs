@@ -23,6 +23,6 @@ pub mod collapse;
 pub mod ops;
 pub mod plan;
 
-pub use collapse::{collapse, reservation_holds, CollapseOptions, Sequence, Step};
+pub use collapse::{collapse, effective_budget, reservation_holds, CollapseOptions, Sequence, Step};
 pub use ops::{OpKind, Operation};
 pub use plan::{fnv64_hex, optimize, Plan, Segment, Stack};

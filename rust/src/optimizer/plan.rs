@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 
 use crate::device::DeviceSpec;
-use crate::graph::{BranchRegion, Graph, Layer, NodeId, Shape};
+use crate::graph::{BranchRegion, Graph, NodeId, Shape};
 
 use super::collapse::{collapse, CollapseOptions, Sequence};
 use super::ops::Operation;
@@ -165,123 +165,20 @@ impl Plan {
     }
 
     /// Every node of the graph appears in exactly one segment; stack
-    /// chains and branch regions are structurally well-formed; verify.
+    /// chains and branch regions are structurally well-formed. Thin
+    /// wrapper over the static plan verifier
+    /// (`crate::analysis::verify_structure`): the first error is
+    /// rendered as one line for legacy `Result<_, String>` callers;
+    /// `brainslug check` surfaces the full diagnostic list, including
+    /// the resource proofs (`crate::analysis::verify_resources`).
     pub fn validate(&self, graph: &Graph) -> Result<(), String> {
-        let mut seen = vec![false; graph.nodes.len()];
-        seen[0] = true; // input placeholder is implicit
-        for seg in &self.segments {
-            check_segment(graph, seg, &mut seen, true)?;
+        let first_error = crate::analysis::verify_structure(graph, self)
+            .into_iter()
+            .find(|d| d.severity == crate::analysis::Severity::Error);
+        match first_error {
+            None => Ok(()),
+            Some(d) => Err(d.render_oneline()),
         }
-        if let Some(missing) = seen.iter().position(|s| !s) {
-            return Err(format!("node {missing} missing from plan"));
-        }
-        Ok(())
-    }
-}
-
-fn mark(seen: &mut [bool], id: NodeId) -> Result<(), String> {
-    if seen[id] {
-        return Err(format!("node {id} appears twice in plan"));
-    }
-    seen[id] = true;
-    Ok(())
-}
-
-fn check_stack(graph: &Graph, st: &Stack, seen: &mut [bool]) -> Result<(), String> {
-    for &id in &st.nodes {
-        mark(seen, id)?;
-    }
-    // Stack nodes must form a consecutive unary chain.
-    for w in st.nodes.windows(2) {
-        let node = graph.node(w[1]);
-        if node.inputs != [w[0]] {
-            return Err(format!("stack chain broken between {} and {}", w[0], w[1]));
-        }
-    }
-    Ok(())
-}
-
-fn check_segment(
-    graph: &Graph,
-    seg: &Segment,
-    seen: &mut [bool],
-    allow_branch: bool,
-) -> Result<(), String> {
-    match seg {
-        Segment::Single(id) => mark(seen, *id),
-        Segment::Stack(st) => check_stack(graph, st, seen),
-        Segment::Branch { arms, join } => {
-            if !allow_branch {
-                return Err(format!("nested branch segment at join {join}"));
-            }
-            check_branch(graph, arms, *join, seen)
-        }
-    }
-}
-
-/// Structural checks for one branch region: the join is an `Add`/
-/// `Concat` with one arm per input, every arm is a unary chain hanging
-/// off one shared entry, and each arm's output is the matching join
-/// input (the entry itself for an identity skip arm).
-fn check_branch(
-    graph: &Graph,
-    arms: &[Vec<Segment>],
-    join: NodeId,
-    seen: &mut [bool],
-) -> Result<(), String> {
-    let jn = graph.node(join);
-    if !matches!(jn.layer, Layer::Add | Layer::Concat) {
-        return Err(format!("branch join {join} is not an add/concat"));
-    }
-    if arms.len() != jn.inputs.len() {
-        return Err(format!(
-            "branch at {join}: {} arms for {} join inputs",
-            arms.len(),
-            jn.inputs.len()
-        ));
-    }
-    let entry = match arms.iter().find_map(|arm| arm.first()).map(first_node_of) {
-        Some(first) => {
-            let first = first?;
-            match graph.node(first).inputs.as_slice() {
-                [e] => *e,
-                _ => return Err(format!("branch arm head {first} is not unary")),
-            }
-        }
-        None => jn.inputs[0], // all arms are identity skips
-    };
-    for (arm, &join_input) in arms.iter().zip(&jn.inputs) {
-        let mut prev = entry;
-        for seg in arm {
-            check_segment(graph, seg, seen, false)?;
-            let first = first_node_of(seg)?;
-            if graph.node(first).inputs != [prev] {
-                return Err(format!(
-                    "branch arm broken at node {first} (expected input {prev})"
-                ));
-            }
-            prev = seg
-                .output_node()
-                .ok_or_else(|| "empty segment in branch arm".to_string())?;
-        }
-        if join_input != prev {
-            return Err(format!(
-                "branch arm output {prev} != join input {join_input}"
-            ));
-        }
-    }
-    mark(seen, join)
-}
-
-fn first_node_of(seg: &Segment) -> Result<NodeId, String> {
-    match seg {
-        Segment::Single(id) => Ok(*id),
-        Segment::Stack(st) => st
-            .nodes
-            .first()
-            .copied()
-            .ok_or_else(|| "empty stack in branch arm".to_string()),
-        Segment::Branch { join, .. } => Err(format!("nested branch segment at join {join}")),
     }
 }
 

@@ -108,12 +108,21 @@ impl Runtime {
 
     /// Number of loaded (compiled) executables.
     pub fn loaded_count(&self) -> usize {
-        self.executables.lock().unwrap().len()
+        // Poison-safe: a panicked compile thread must not wedge stats.
+        self.executables
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .len()
     }
 
     /// Get (compiling and caching on first use) an executable by name.
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.lock().unwrap().get(name) {
+        if let Some(exe) = self
+            .executables
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(name)
+        {
             return Ok(exe.clone());
         }
         let spec = self.manifest.get(name)?;
@@ -126,11 +135,14 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        *self
+            .compile_seconds
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) += t0.elapsed().as_secs_f64();
         let exe = std::sync::Arc::new(exe);
         self.executables
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .insert(name.to_string(), exe.clone());
         Ok(exe)
     }

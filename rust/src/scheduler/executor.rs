@@ -170,7 +170,10 @@ impl Executor {
         // Interior nodes were never materialized; mark their consumers
         // as satisfied (they are all internal to the stack except the
         // last node's).
-        let last = *stack.nodes.last().unwrap();
+        let last = *stack
+            .nodes
+            .last()
+            .expect("plan verifier rejects empty stacks");
         for &id in &stack.nodes {
             if id != last {
                 remaining[id] = 0;

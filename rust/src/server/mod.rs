@@ -648,6 +648,33 @@ impl Server {
     }
 }
 
+/// Declarative concurrency topology of one [`Server`] for the static
+/// lint (`brainslug check` / [`crate::analysis::check_topology`]).
+/// Mirrors exactly what [`Server::start`] spawns and what
+/// [`Server::stop`] does, in order: flip the `closed` gate under the
+/// write lock, send one shutdown token per worker on the bounded
+/// dispatch queue, join the workers. Changing the threading model here
+/// requires changing this model too — the lint keeps the two honest.
+pub fn topology(workers: usize, queue_depth: usize) -> crate::analysis::Topology {
+    use crate::analysis::{ExitCondition, ShutdownStep, Topology};
+    Topology::new("server")
+        .gate("closed")
+        .thread("worker", workers, ExitCondition::TokenOn("dispatch".into()))
+        .channel(
+            "dispatch",
+            queue_depth,
+            &["main"],
+            &["worker"],
+            Some("closed"),
+        )
+        .on_shutdown(ShutdownStep::CloseGate("closed".into()))
+        .on_shutdown(ShutdownStep::SendTokens {
+            channel: "dispatch".into(),
+            count: workers,
+        })
+        .on_shutdown(ShutdownStep::Join("worker".into()))
+}
+
 /// One worker's serve loop: lock the shared queue, gather up to `batch`
 /// requests (or until `max_wait`), release the lock, execute, scatter.
 /// Execution happens outside the lock so the pool overlaps batches.
@@ -727,7 +754,7 @@ fn batch_loop(
                 // Reply with an explicit error instead of dropping the
                 // channels (which surfaced as a cryptic "receiving on an
                 // empty and disconnected channel" at the caller).
-                log::error!("batch execution failed: {e:#}");
+                eprintln!("server: batch execution failed: {e:#}");
                 let msg = format!("{e:#}");
                 for r in &pending {
                     let _ = r

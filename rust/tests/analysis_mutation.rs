@@ -1,0 +1,419 @@
+//! Mutation tests for the static verifier: build *valid* graphs and
+//! plans, seed a specific corruption, and assert the verifier rejects
+//! it with the expected stable `BSL0xx` code. Each test is one
+//! corruption class; together they pin the verifier's contract (a
+//! refactor that silently stops catching one of these fails here, not
+//! in production).
+
+use brainslug::analysis::{self, DiagCode, Severity};
+use brainslug::device::DeviceSpec;
+use brainslug::graph::{Graph, Layer, PoolKind, Shape, Window2d};
+use brainslug::optimizer::{optimize, CollapseOptions, Plan, Segment};
+
+fn pool3() -> Layer {
+    Layer::Pool2d {
+        kind: PoolKind::Max,
+        window: Window2d::square(3, 1, 1),
+        ceil_mode: false,
+        count_include_pad: true,
+    }
+}
+
+/// conv → bn → relu → pool: plans as [Single(conv), Stack(bn,relu,pool)].
+fn conv_chain() -> Graph {
+    let mut g = Graph::new("conv_chain", Shape::nchw(1, 8, 32, 32));
+    g.push(
+        "conv",
+        Layer::Conv2d {
+            out_channels: 8,
+            window: Window2d::square(3, 1, 1),
+            bias: true,
+        },
+    );
+    g.push("bn", Layer::BatchNorm2d { eps: 1e-5 });
+    g.push("relu", Layer::Relu);
+    g.push("pool", pool3());
+    g
+}
+
+/// 4 shape-preserving pools at c=32, h=224 — on a 4 KiB budget the
+/// packer must split them into several sequences (mirrors the
+/// `memory_budget_splits_sequences` collapse test).
+fn pool_tower() -> (Graph, DeviceSpec) {
+    let mut g = Graph::new("pool_tower", Shape::nchw(1, 32, 224, 224));
+    for i in 0..4 {
+        g.push(format!("p{i}"), pool3());
+    }
+    let dev = DeviceSpec {
+        fast_mem_bytes: 4 * 1024,
+        ..DeviceSpec::paper_gpu()
+    };
+    (g, dev)
+}
+
+/// input → bn(entry) → [pool, pool | identity] → add → relu.
+/// On paper_cpu the 128×128 entry plane's skip reservation floors the
+/// arm budget to 2 KiB, which forces the two arm pools into separate
+/// single-step sequences.
+fn residual_pools() -> Graph {
+    let mut g = Graph::new("residual_pools", Shape::nchw(1, 8, 128, 128));
+    let entry = g.push("bn_in", Layer::BatchNorm2d { eps: 1e-5 });
+    let p1 = g.add("p1", pool3(), &[entry]);
+    let p2 = g.add("p2", pool3(), &[p1]);
+    g.add("add", Layer::Add, &[p2, entry]);
+    g.push("relu_out", Layer::Relu);
+    g
+}
+
+fn default_plan(g: &Graph, dev: &DeviceSpec) -> Plan {
+    let plan = optimize(g, dev, &CollapseOptions::default());
+    // Sanity: the uncorrupted plan must verify clean — otherwise the
+    // corruption assertions below prove nothing.
+    let diags = analysis::verify_plan(g, &plan, dev, &CollapseOptions::default());
+    assert!(
+        diags.iter().all(|d| d.severity != Severity::Error),
+        "valid plan produced errors: {diags:?}"
+    );
+    plan
+}
+
+fn codes(diags: &[analysis::Diagnostic]) -> Vec<DiagCode> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+// ---------------------------------------------------------------- plan
+
+#[test]
+fn bsl020_deleted_segment_breaks_coverage() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let removed = plan.segments.remove(0);
+    assert!(matches!(removed, Segment::Single(_)), "{removed:?}");
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(codes(&diags).contains(&DiagCode::PlanCoverage), "{diags:?}");
+}
+
+#[test]
+fn bsl020_duplicated_segment_is_double_coverage() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let dup = plan.segments[0].clone();
+    plan.segments.push(dup);
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(codes(&diags).contains(&DiagCode::PlanCoverage), "{diags:?}");
+}
+
+#[test]
+fn bsl021_swapped_stack_nodes_break_the_chain() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let mut swapped = false;
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            if st.nodes.len() >= 2 {
+                st.nodes.swap(0, 1);
+                swapped = true;
+            }
+        }
+    }
+    assert!(swapped, "expected a multi-node stack");
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(
+        codes(&diags).contains(&DiagCode::StackChainBroken),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl022_join_retarget_is_malformed_branch() {
+    let g = residual_pools();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let mut hit = false;
+    for seg in &mut plan.segments {
+        if let Segment::Branch { join, .. } = seg {
+            *join -= 1; // now points at a pool, not the add
+            hit = true;
+        }
+    }
+    assert!(hit, "expected a branch segment");
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(
+        codes(&diags).contains(&DiagCode::BranchJoinMalformed),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl023_truncated_arm_misses_join_input() {
+    let g = residual_pools();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let mut hit = false;
+    for seg in &mut plan.segments {
+        if let Segment::Branch { arms, .. } = seg {
+            for arm in arms.iter_mut() {
+                if !arm.is_empty() {
+                    arm.pop();
+                    hit = true;
+                    break;
+                }
+            }
+        }
+    }
+    assert!(hit, "expected a non-empty branch arm");
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(
+        codes(&diags).contains(&DiagCode::BranchArmMismatch),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl024_merged_sequences_overrun_the_budget() {
+    let (g, dev) = pool_tower();
+    let mut plan = default_plan(&g, &dev);
+    let mut merged = false;
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            assert!(
+                st.sequences.len() > 1,
+                "4 KiB budget must split the tower; got {} sequence(s)",
+                st.sequences.len()
+            );
+            // Undo the packer's split: cram every step into the first
+            // sequence, as if the budget accounting had been skipped.
+            let mut seqs = std::mem::take(&mut st.sequences);
+            let mut first = seqs.remove(0);
+            for s in seqs {
+                first.steps.extend(s.steps);
+            }
+            st.sequences = vec![first];
+            merged = true;
+        }
+    }
+    assert!(merged);
+    let diags = analysis::verify_resources(&g, &plan, &dev, &CollapseOptions::default());
+    assert!(codes(&diags).contains(&DiagCode::BudgetOverrun), "{diags:?}");
+}
+
+#[test]
+fn bsl025_zero_tile_rows_is_halo_underflow() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            st.sequences[0].tile_rows = 0;
+        }
+    }
+    let diags = analysis::verify_resources(&g, &plan, &dev, &CollapseOptions::default());
+    assert!(
+        codes(&diags).contains(&DiagCode::HaloUnderflow),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl026_merged_arm_sequences_break_the_skip_reservation() {
+    let g = residual_pools();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    let mut merged = false;
+    for seg in &mut plan.segments {
+        if let Segment::Branch { arms, .. } = seg {
+            for arm in arms.iter_mut() {
+                for arm_seg in arm.iter_mut() {
+                    if let Segment::Stack(st) = arm_seg {
+                        if st.sequences.len() > 1 {
+                            let mut seqs = std::mem::take(&mut st.sequences);
+                            let mut first = seqs.remove(0);
+                            for s in seqs {
+                                first.steps.extend(s.steps);
+                            }
+                            st.sequences = vec![first];
+                            merged = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        merged,
+        "expected the skip reservation to split the arm pools into >1 sequences"
+    );
+    let diags = analysis::verify_resources(&g, &plan, &dev, &CollapseOptions::default());
+    assert!(
+        codes(&diags).contains(&DiagCode::SkipReservationBroken),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl027_swapped_steps_break_the_band_shape_chain() {
+    let (g, dev) = pool_tower();
+    let mut plan = default_plan(&g, &dev);
+    let mut hit = false;
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            if st.sequences.len() >= 2 {
+                // Swap whole sequences: ops order no longer matches the
+                // stack's node list (an undersized/mis-sized band
+                // buffer at run time).
+                st.sequences.swap(0, 1);
+                hit = true;
+            }
+        }
+    }
+    assert!(hit);
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(
+        codes(&diags).contains(&DiagCode::BandShapeChain),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl028_unfusable_node_in_stack_has_no_fallback() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    // Pretend the conv was fused into the stack: conv has no
+    // depth-first kernel, so the stack would have no way to execute it.
+    let conv_id = 1;
+    let mut hit = false;
+    plan.segments.retain(|s| !matches!(s, Segment::Single(id) if *id == conv_id));
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            st.nodes.insert(0, conv_id);
+            hit = true;
+        }
+    }
+    assert!(hit);
+    let diags = analysis::verify_structure(&g, &plan);
+    assert!(codes(&diags).contains(&DiagCode::NoFallback), "{diags:?}");
+}
+
+#[test]
+fn bsl029_oversized_tile_rows_is_a_warning() {
+    let g = conv_chain();
+    let dev = DeviceSpec::paper_cpu();
+    let mut plan = default_plan(&g, &dev);
+    for seg in &mut plan.segments {
+        if let Segment::Stack(st) = seg {
+            let out_h = st.sequences[0].out_shape().height();
+            st.sequences[0].tile_rows = out_h + 5;
+        }
+    }
+    let diags = analysis::verify_resources(&g, &plan, &dev, &CollapseOptions::default());
+    let d = diags
+        .iter()
+        .find(|d| d.code == DiagCode::TileRowsExceedHeight)
+        .unwrap_or_else(|| panic!("no BSL029 in {diags:?}"));
+    assert_eq!(d.severity, Severity::Warning);
+}
+
+// --------------------------------------------------------------- graph
+
+#[test]
+fn bsl008_stored_shape_drift_is_caught() {
+    let mut g = conv_chain();
+    g.nodes[2].shape = Shape::nchw(1, 8, 7, 7);
+    let diags = analysis::lint_graph(&g);
+    assert!(
+        codes(&diags).contains(&DiagCode::StoredShapeMismatch),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl003_forward_edge_is_rejected() {
+    let mut g = conv_chain();
+    g.nodes[2].inputs = vec![3]; // bn now "consumes" relu: a cycle
+    let diags = analysis::lint_graph(&g);
+    assert!(
+        codes(&diags).contains(&DiagCode::NonTopologicalEdge),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl010_out_of_range_output_is_rejected() {
+    let mut g = conv_chain();
+    g.output = 999;
+    let diags = analysis::lint_graph(&g);
+    assert!(codes(&diags).contains(&DiagCode::BadOutput), "{diags:?}");
+}
+
+// ------------------------------------------------------------ topology
+
+#[test]
+fn bsl041_tokens_before_gate_close() {
+    let mut t = brainslug::server::topology(4, 64);
+    t.shutdown.swap(0, 1);
+    let diags = analysis::check_topology(&t);
+    assert!(
+        codes(&diags).contains(&DiagCode::SendBeforeGateClose),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl042_dropped_join_leaks_workers() {
+    let mut t = brainslug::server::topology(4, 64);
+    t.shutdown.pop();
+    let diags = analysis::check_topology(&t);
+    assert!(
+        codes(&diags).contains(&DiagCode::UnjoinedThread),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bsl044_conn_join_before_acceptor_join_can_block() {
+    let mut t = brainslug::http::listener::topology(8, 64);
+    // Join the conn pool before the acceptor: the conns channel never
+    // disconnects (its sole sender is still alive), so the join blocks.
+    let (a, c) = (1, 2);
+    assert!(matches!(
+        (&t.shutdown[a], &t.shutdown[c]),
+        (
+            analysis::ShutdownStep::Join(x),
+            analysis::ShutdownStep::Join(y)
+        ) if x == "acceptor" && y == "conn"
+    ));
+    t.shutdown.swap(a, c);
+    let diags = analysis::check_topology(&t);
+    assert!(
+        codes(&diags).contains(&DiagCode::JoinWithoutTermination),
+        "{diags:?}"
+    );
+}
+
+// ------------------------------------------------------ whole pipeline
+
+#[test]
+fn shipped_zoo_and_topologies_pass_with_deny_warnings() {
+    use brainslug::zoo;
+    let dev = DeviceSpec::paper_cpu();
+    let opts = CollapseOptions::default();
+    let mut report = analysis::Report::new();
+    for name in zoo::ALL_NETWORKS {
+        let g = zoo::build(name, zoo::paper_config(name, 1));
+        report.extend(analysis::lint_graph(&g));
+        let plan = optimize(&g, &dev, &opts);
+        report.extend(analysis::verify_plan(&g, &plan, &dev, &opts));
+    }
+    for t in analysis::standard_topologies() {
+        report.extend(analysis::check_topology(&t));
+    }
+    assert!(
+        report.is_clean(true),
+        "shipped zoo must pass --deny warnings: {}",
+        report.render_text()
+    );
+}

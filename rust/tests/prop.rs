@@ -725,3 +725,34 @@ fn cache_sim_df_never_worse_across_random_configs() {
         );
     }
 }
+
+#[test]
+fn static_checker_passes_every_random_valid_dag() {
+    use brainslug::analysis::{self, Severity};
+    for seed in 0..150 {
+        let g = random_chain(seed);
+        let device = random_device(seed);
+        let opts = CollapseOptions::default();
+        let plan = optimize(&g, &device, &opts);
+        let mut diags = analysis::lint_graph(&g);
+        diags.extend(analysis::verify_plan(&g, &plan, &device, &opts));
+        let errors: Vec<_> = diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .collect();
+        assert!(errors.is_empty(), "seed {seed}: {errors:?}");
+    }
+    for seed in 0..100 {
+        let (g, _) = random_branchy(seed);
+        let device = random_device(seed);
+        let opts = CollapseOptions::default();
+        let plan = optimize(&g, &device, &opts);
+        let mut diags = analysis::lint_graph(&g);
+        diags.extend(analysis::verify_plan(&g, &plan, &device, &opts));
+        let errors: Vec<_> = diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .collect();
+        assert!(errors.is_empty(), "branchy seed {seed}: {errors:?}");
+    }
+}
