@@ -8,7 +8,8 @@
 //! Code space:
 //! - `BSL001`–`BSL019`: graph lint ([`crate::analysis::graph_lint`])
 //! - `BSL020`–`BSL039`: plan verifier ([`crate::analysis::plan_verify`])
-//! - `BSL040`–`BSL059`: concurrency topology lint ([`crate::analysis::topo`])
+//! - `BSL040`–`BSL049`: concurrency topology lint ([`crate::analysis::topo`])
+//! - `BSL050`–`BSL059`: schedule model checker ([`crate::conc`])
 
 use crate::json::Json;
 
@@ -105,6 +106,28 @@ pub enum DiagCode {
     JoinWithoutTermination,
     /// Gate declared but never closed during shutdown.
     GateNeverClosed,
+    // --- schedule model checker ---
+    /// An explored schedule deadlocked: every live thread blocked (or
+    /// the execution exceeded its step budget). The violating schedule
+    /// is attached as a replayable note.
+    ModelDeadlock,
+    /// Cycle in the lock-acquisition-order graph accumulated from real
+    /// acquisition traces across explored schedules.
+    LockOrderCycle,
+    /// `Condvar::wait` used without a predicate loop (`wait_while`);
+    /// vulnerable to spurious wakeups and missed re-checks.
+    BareCondvarWait,
+    /// Deadlock in which threads block on a condvar that previously
+    /// fired notifies into an empty wait-set (a lost notification).
+    LostNotify,
+    /// Send attempted on a channel whose receiver was already gone.
+    SendAfterClose,
+    /// Shutdown token observed on a gated channel while the gate was
+    /// still open — requests can slip in FIFO-behind the tokens.
+    GateAfterTokens,
+    /// Protocol reached join/quiescence with open obligations: queued
+    /// work never received, or accepted work never completed.
+    NonQuiescentJoin,
 }
 
 impl DiagCode {
@@ -139,16 +162,26 @@ impl DiagCode {
             DiagCode::BadEndpoint => "BSL043",
             DiagCode::JoinWithoutTermination => "BSL044",
             DiagCode::GateNeverClosed => "BSL045",
+            DiagCode::ModelDeadlock => "BSL050",
+            DiagCode::LockOrderCycle => "BSL051",
+            DiagCode::BareCondvarWait => "BSL052",
+            DiagCode::LostNotify => "BSL053",
+            DiagCode::SendAfterClose => "BSL054",
+            DiagCode::GateAfterTokens => "BSL055",
+            DiagCode::NonQuiescentJoin => "BSL056",
         }
     }
 
-    /// Default severity. Only two codes are warnings: everything else
-    /// makes the artifact unsound.
+    /// Default severity. Warnings are suspicious-but-runnable patterns
+    /// (bare condvar waits, sends the caller already handles the `Err`
+    /// of); everything else makes the artifact unsound.
     pub fn severity(&self) -> Severity {
         match self {
             DiagCode::JoinDtypeMix
             | DiagCode::TileRowsExceedHeight
-            | DiagCode::GateNeverClosed => Severity::Warning,
+            | DiagCode::GateNeverClosed
+            | DiagCode::BareCondvarWait
+            | DiagCode::SendAfterClose => Severity::Warning,
             _ => Severity::Error,
         }
     }
@@ -185,6 +218,13 @@ impl DiagCode {
             DiagCode::BadEndpoint => "channel/gate references an undeclared endpoint",
             DiagCode::JoinWithoutTermination => "thread joined before its exit condition is established",
             DiagCode::GateNeverClosed => "gate declared but never closed during shutdown",
+            DiagCode::ModelDeadlock => "explored schedule deadlocks: every live thread is blocked",
+            DiagCode::LockOrderCycle => "cycle in the observed lock-acquisition-order graph",
+            DiagCode::BareCondvarWait => "condvar wait without a predicate loop (use wait_while)",
+            DiagCode::LostNotify => "deadlock behind a notify that fired into an empty wait-set",
+            DiagCode::SendAfterClose => "send attempted on a channel whose receiver is gone",
+            DiagCode::GateAfterTokens => "shutdown token sent on a gated channel before the gate closed",
+            DiagCode::NonQuiescentJoin => "join/quiescence reached with queued or unanswered work",
         }
     }
 }
@@ -379,6 +419,13 @@ mod tests {
             DiagCode::BadEndpoint,
             DiagCode::JoinWithoutTermination,
             DiagCode::GateNeverClosed,
+            DiagCode::ModelDeadlock,
+            DiagCode::LockOrderCycle,
+            DiagCode::BareCondvarWait,
+            DiagCode::LostNotify,
+            DiagCode::SendAfterClose,
+            DiagCode::GateAfterTokens,
+            DiagCode::NonQuiescentJoin,
         ];
         let mut seen = std::collections::BTreeSet::new();
         for c in all {
@@ -390,6 +437,9 @@ mod tests {
         assert_eq!(DiagCode::BudgetOverrun.as_str(), "BSL024");
         assert_eq!(DiagCode::HaloUnderflow.as_str(), "BSL025");
         assert_eq!(DiagCode::SendBeforeGateClose.as_str(), "BSL041");
+        assert_eq!(DiagCode::ModelDeadlock.as_str(), "BSL050");
+        assert_eq!(DiagCode::GateAfterTokens.as_str(), "BSL055");
+        assert_eq!(DiagCode::NonQuiescentJoin.as_str(), "BSL056");
     }
 
     #[test]

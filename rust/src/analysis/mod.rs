@@ -1,6 +1,6 @@
 //! Static verification subsystem (`brainslug check`).
 //!
-//! Three passes, every finding a [`Diagnostic`] with a stable `BSL0xx`
+//! Four passes, every finding a [`Diagnostic`] with a stable `BSL0xx`
 //! code (the full table lives in [`diag::DiagCode`] and DESIGN.md
 //! §Static Analysis):
 //!
@@ -19,6 +19,15 @@
 //! 3. [`topo`] (BSL040–BSL045) — the runtime's thread/channel/gate
 //!    topology declared as data and checked for rendezvous cycles,
 //!    drain-ordering races, unjoined threads and blocking joins.
+//! 4. [`crate::conc`] (BSL050–BSL056, opt-in via `--schedules N`
+//!    because it executes code) — schedule model checking: replicas of
+//!    the real drain/queue/pool protocols run under a controlled
+//!    scheduler that explores bounded-preemption interleavings plus
+//!    seeded random walks, turning observed deadlocks, lock-order
+//!    cycles, lost notifies, gate/token ordering violations and
+//!    stranded work into diagnostics with replayable counterexample
+//!    schedules. Pass 3 checks the *declared* shape; pass 4 checks the
+//!    *behavior* of the code that claims to implement it.
 //!
 //! Severity policy: everything that proves a real defect is
 //! [`Severity::Error`]; stylistic or clamped-at-runtime findings

@@ -1,0 +1,220 @@
+//! The `brainslug check` schedule-exploration pass: run the standard
+//! protocol replicas under the controlled scheduler and map everything
+//! found onto BSL050–BSL056 diagnostics.
+//!
+//! The replicas live next to the code they model —
+//! [`crate::server::drain_protocol`] (queue + gate + shutdown tokens),
+//! [`crate::http::listener::drain_protocol`] (accept → pool handoff →
+//! drain ordering) and [`crate::cpu::par::pool_protocol`] (scoped band
+//! pool) — so a change to a runtime protocol lands in the same review
+//! as the change to its model. Each replica takes a bug-switch struct
+//! whose default is the shipped protocol; the switches re-introduce the
+//! historical bugs (the PR 2 shutdown-while-queued loss and the PR 6
+//! token-overtakes-request drain race) so the test suite can prove the
+//! checker still catches them.
+
+use std::sync::Arc;
+
+use crate::analysis::{DiagCode, Diagnostic, Report};
+
+use super::sched::{explore, ExploreOptions, ExploreReport, ModelWarning, Violation};
+
+/// How many trailing trace events a counterexample diagnostic carries.
+const TRACE_NOTES: usize = 8;
+
+/// Exploration bounds for `brainslug check --schedules N`: `N` caps the
+/// DFS pass, with a quarter of `N` seeded random walks for the long
+/// tail past the preemption bound.
+pub fn options_for(schedules: usize, seed: u64) -> ExploreOptions {
+    ExploreOptions {
+        dfs_executions: schedules,
+        random_schedules: (schedules / 4).max(8),
+        seed,
+        ..ExploreOptions::default()
+    }
+}
+
+fn schedule_note(schedule: &[usize]) -> String {
+    let tids: Vec<String> = schedule.iter().map(|t| t.to_string()).collect();
+    format!(
+        "counterexample schedule ({} decisions, one tid each): {}",
+        schedule.len(),
+        tids.join(" ")
+    )
+}
+
+/// Map one protocol's exploration outcome onto diagnostics. A clean
+/// report maps to no diagnostics; a violation carries its replayable
+/// schedule and the tail of the event trace as notes.
+pub fn report_to_diags(report: &ExploreReport) -> Vec<Diagnostic> {
+    let subject = format!("schedule model '{}'", report.name);
+    let mut diags = Vec::new();
+    if let Some(finding) = &report.finding {
+        let (code, message) = match &finding.violation {
+            Violation::Deadlock { blocked } => (
+                DiagCode::ModelDeadlock,
+                format!(
+                    "deadlock after {} executions: {}",
+                    report.executions,
+                    blocked.join(", ")
+                ),
+            ),
+            Violation::LostNotify { condvar, wasted } => (
+                DiagCode::LostNotify,
+                format!(
+                    "deadlock behind condvar '{condvar}': {wasted} notify(s) fired while \
+                     nothing was waiting, then a waiter parked forever"
+                ),
+            ),
+            Violation::GateAfterTokens { channel, gate } => (
+                DiagCode::GateAfterTokens,
+                format!(
+                    "shutdown token entered channel '{channel}' while gate '{gate}' was \
+                     still open: a late request can land behind the token and be dropped"
+                ),
+            ),
+            Violation::NonQuiescent { open } => (
+                DiagCode::NonQuiescentJoin,
+                format!(
+                    "protocol finished with unanswered work: {}",
+                    open.join(", ")
+                ),
+            ),
+            Violation::LockOrderCycle { cycle } => (
+                DiagCode::LockOrderCycle,
+                format!("observed acquisition order forms a cycle: {}", cycle.join(" -> ")),
+            ),
+        };
+        let mut d = Diagnostic::new(code, subject.clone(), message)
+            .note(schedule_note(&finding.counterexample.schedule))
+            .note("replay with ExploreOptions { replay: Some(schedule), .. } to reproduce");
+        let tail = finding
+            .counterexample
+            .events
+            .len()
+            .saturating_sub(TRACE_NOTES);
+        for ev in &finding.counterexample.events[tail..] {
+            d = d.note(format!("trace: {ev}"));
+        }
+        diags.push(d);
+    }
+    for w in &report.warnings {
+        let (code, message) = match w {
+            ModelWarning::BareWait { condvar } => (
+                DiagCode::BareCondvarWait,
+                format!(
+                    "condvar '{condvar}' is waited on without a predicate loop; a spurious \
+                     wakeup or early notify breaks it (use wait_while)"
+                ),
+            ),
+            ModelWarning::SendAfterClose { channel } => (
+                DiagCode::SendAfterClose,
+                format!(
+                    "send on channel '{channel}' after its receiver was dropped is reachable"
+                ),
+            ),
+        };
+        diags.push(Diagnostic::new(code, subject.clone(), message));
+    }
+    diags
+}
+
+/// The protocol suite `brainslug check` explores: the shipped (bug-free)
+/// configurations of the three runtime protocols, sized small enough
+/// that the DFS pass gets real coverage of the interleaving space.
+fn protocol_suite() -> Vec<(&'static str, Arc<dyn Fn() + Send + Sync>)> {
+    vec![
+        (
+            "server-drain",
+            Arc::new(|| {
+                crate::server::drain_protocol(2, 2, 2, crate::server::DrainBugs::default());
+            }) as Arc<dyn Fn() + Send + Sync>,
+        ),
+        (
+            "listener-drain",
+            Arc::new(|| {
+                crate::http::listener::drain_protocol(
+                    2,
+                    2,
+                    3,
+                    crate::http::listener::ListenerBugs::default(),
+                );
+            }),
+        ),
+        (
+            "cpu-band-pool",
+            Arc::new(|| {
+                crate::cpu::par::pool_protocol(2, 4);
+            }),
+        ),
+    ]
+}
+
+/// Run the schedule-exploration pass over the standard protocol suite.
+/// This is `brainslug check --schedules N` (and the model-check test
+/// suite's clean-tree assertion).
+pub fn check_protocols(schedules: usize, seed: u64) -> Report {
+    let opts = options_for(schedules, seed);
+    let mut report = Report::new();
+    for (name, body) in protocol_suite() {
+        let explored = explore(name, &opts, body);
+        report.extend(report_to_diags(&explored));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conc::sched::{Counterexample, Finding};
+
+    #[test]
+    fn violation_maps_to_its_code_with_replayable_schedule() {
+        let report = ExploreReport {
+            name: "synthetic".into(),
+            executions: 12,
+            finding: Some(Finding {
+                violation: Violation::GateAfterTokens {
+                    channel: "dispatch".into(),
+                    gate: "closed".into(),
+                },
+                counterexample: Counterexample {
+                    schedule: vec![0, 1, 1, 0],
+                    events: vec!["e1".into(), "e2".into()],
+                },
+            }),
+            warnings: vec![ModelWarning::BareWait {
+                condvar: "cv".into(),
+            }],
+        };
+        let diags = report_to_diags(&report);
+        assert_eq!(diags.len(), 2);
+        assert_eq!(diags[0].code, DiagCode::GateAfterTokens);
+        assert!(diags[0].notes.iter().any(|n| n.contains("0 1 1 0")));
+        assert!(diags[0].notes.iter().any(|n| n.contains("trace: e2")));
+        assert_eq!(diags[1].code, DiagCode::BareCondvarWait);
+    }
+
+    #[test]
+    fn clean_report_maps_to_no_diags() {
+        let report = ExploreReport {
+            name: "clean".into(),
+            executions: 64,
+            finding: None,
+            warnings: vec![],
+        };
+        assert!(report_to_diags(&report).is_empty());
+    }
+
+    #[test]
+    fn shipped_protocol_suite_explores_clean() {
+        // The acceptance bar: the unmodified tree, explored with the
+        // default CI budget, has zero findings and zero warnings.
+        let report = check_protocols(128, 0x5EED_0BB5);
+        assert!(
+            report.is_clean(true),
+            "shipped protocols must model-check clean:\n{}",
+            report.render_text()
+        );
+    }
+}

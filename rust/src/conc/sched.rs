@@ -1,0 +1,1272 @@
+//! The controlled scheduler behind [`crate::conc`].
+//!
+//! Model threads are *real* OS threads serialized by a token: exactly
+//! one thread runs between two scheduling points, everyone else parks
+//! on the scheduler's condvar. Every operation on a
+//! [`crate::conc::sync`] primitive is a scheduling point, so the set of
+//! reachable interleavings is exactly the set of schedules this module
+//! can enumerate (CHESS/loom-style systematic testing). Two explorers
+//! share the execution machinery:
+//!
+//! - **Bounded-preemption DFS**: enumerate schedule prefixes, forcing a
+//!   different runnable thread at one decision and replaying the
+//!   deterministic default policy after it. Preemptions (switching away
+//!   from a thread that could continue) are bounded, which is where
+//!   most real concurrency bugs live with surprisingly small bounds.
+//! - **Seeded random walks**: for state spaces too big to enumerate,
+//!   pick every decision with the shared SplitMix64 stream
+//!   ([`crate::rng`]), so a failing schedule is reproducible from its
+//!   seed alone.
+//!
+//! Every decision of an execution is recorded; a violating execution's
+//! decision list (one thread id per scheduling point) *is* the
+//! counterexample, replayable bit-for-bit via
+//! [`ExploreOptions::replay`].
+//!
+//! Model reductions (documented, deliberate): `recv_timeout` is modeled
+//! as "the timeout may always fire immediately" (a strict superset of
+//! real behaviors for our protocols, which never rely on a timeout
+//! *not* firing); time and pacing do not exist; mutex handoff wakes all
+//! blocked threads and lets the schedule pick the winner.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+
+use crate::rng::splitmix64;
+
+/// Panic payload used to unwind model threads during teardown after a
+/// violation. Not an error: the quiet panic hook swallows it.
+struct Abort;
+
+/// Suppress the default "thread panicked" spew for teardown unwinds;
+/// real panics still reach the previous hook untouched.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<Abort>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+thread_local! {
+    /// (scheduler, thread id) of the model thread running on this OS
+    /// thread, if any. `None` means production mode: every facade op
+    /// takes the plain `std::sync` path.
+    static CTX: RefCell<Option<(Arc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The scheduler/tid pair for the calling thread, when it is a model
+/// thread of a live exploration.
+pub fn current_ctx() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// What a thread is doing, from the scheduler's point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Ready,
+    /// Parked until the object it waits on is signaled.
+    Blocked(usize),
+    Finished,
+}
+
+#[derive(Debug)]
+struct ThreadState {
+    status: Status,
+    /// Object id other threads block on to join this thread.
+    join_obj: usize,
+    /// Lock objects currently held, in acquisition order (for the
+    /// lock-order graph).
+    held: Vec<usize>,
+}
+
+/// Payload kind of a queued channel slot. `Value` slots are work the
+/// protocol owes an answer for; `Token` slots are shutdown signals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotKind {
+    Value,
+    Token,
+}
+
+/// Modeled state of one synchronization object.
+#[derive(Debug)]
+enum Obj {
+    Mutex {
+        owner: Option<usize>,
+        label: String,
+    },
+    Condvar {
+        waiters: Vec<usize>,
+        /// Notifies that fired into an empty wait-set.
+        wasted: u64,
+        label: String,
+    },
+    Chan {
+        cap: usize,
+        queue: VecDeque<SlotKind>,
+        senders: usize,
+        recv_alive: bool,
+        /// Gate object guarding this channel's intake, if bound.
+        gate: Option<usize>,
+        label: String,
+    },
+    Gate {
+        closed: bool,
+        readers: usize,
+        label: String,
+    },
+    /// Join target for one model thread.
+    Thread { label: String },
+}
+
+impl Obj {
+    fn label(&self) -> &str {
+        match self {
+            Obj::Mutex { label, .. }
+            | Obj::Condvar { label, .. }
+            | Obj::Chan { label, .. }
+            | Obj::Gate { label, .. }
+            | Obj::Thread { label } => label,
+        }
+    }
+}
+
+/// One scheduling decision: which threads were runnable, which ran.
+#[derive(Debug, Clone)]
+pub struct Choice {
+    pub options: Vec<usize>,
+    pub chosen: usize,
+}
+
+/// A property violation found in one execution.
+#[derive(Debug, Clone)]
+pub enum Violation {
+    /// Every live thread is blocked (or the step budget ran out, which
+    /// we treat as a livelock variant of the same failure).
+    Deadlock { blocked: Vec<String> },
+    /// Deadlock behind a condvar that swallowed notifies while its
+    /// wait-set was empty.
+    LostNotify { condvar: String, wasted: u64 },
+    /// A shutdown token entered a gated channel while the gate was
+    /// still open.
+    GateAfterTokens { channel: String, gate: String },
+    /// Execution finished with queued work or open obligations.
+    NonQuiescent { open: Vec<String> },
+    /// Cycle in the lock-acquisition-order graph (accumulated across
+    /// executions; the counterexample is the run that closed it).
+    LockOrderCycle { cycle: Vec<String> },
+}
+
+/// Non-fatal suspicious patterns, deduplicated across executions.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ModelWarning {
+    /// `Condvar::wait` without a predicate loop.
+    BareWait { condvar: String },
+    /// A send was attempted on a channel whose receiver is gone.
+    SendAfterClose { channel: String },
+}
+
+/// Everything recorded about one finished execution.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub choices: Vec<Choice>,
+    pub events: Vec<String>,
+    pub violation: Option<Violation>,
+    pub warnings: Vec<ModelWarning>,
+    /// Observed lock-order edges `(held label, acquired label)`.
+    pub lock_edges: Vec<(String, String)>,
+    /// Payload of the first non-teardown panic, if any.
+    pub panic: Option<String>,
+}
+
+enum Mode {
+    /// Follow `prefix`, then the deterministic minimal-preemption
+    /// default policy.
+    Guided,
+    /// Pick every decision with a SplitMix64 stream.
+    Random(u64),
+}
+
+struct Core {
+    threads: Vec<ThreadState>,
+    objects: Vec<Obj>,
+    /// Thread holding the token; `None` between executions / when done.
+    running: Option<usize>,
+    /// Last thread that held the token (minimal-preemption default).
+    last_running: usize,
+    live: usize,
+    prefix: Vec<usize>,
+    mode: Mode,
+    choices: Vec<Choice>,
+    events: Vec<String>,
+    violation: Option<Violation>,
+    warnings: BTreeSet<ModelWarning>,
+    lock_edges: BTreeSet<(String, String)>,
+    /// Open obligations: accepted work that has not been completed.
+    obligations: BTreeMap<u64, String>,
+    next_obligation: u64,
+    steps: usize,
+    max_steps: usize,
+    aborting: bool,
+    panic: Option<String>,
+}
+
+/// The per-execution scheduler. One instance drives exactly one
+/// execution; the explorer creates a fresh one per schedule.
+pub struct Scheduler {
+    core: Mutex<Core>,
+    cv: Condvar,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Outcome of one attempt at a modeled operation.
+enum Attempt<R> {
+    Done(R),
+    /// Park until `obj` is signaled, then retry.
+    Block(usize),
+}
+
+impl Scheduler {
+    fn new(prefix: Vec<usize>, mode: Mode, max_steps: usize) -> Scheduler {
+        Scheduler {
+            core: Mutex::new(Core {
+                threads: Vec::new(),
+                objects: Vec::new(),
+                running: None,
+                last_running: 0,
+                live: 0,
+                prefix,
+                mode,
+                choices: Vec::new(),
+                events: Vec::new(),
+                violation: None,
+                warnings: BTreeSet::new(),
+                lock_edges: BTreeSet::new(),
+                obligations: BTreeMap::new(),
+                next_obligation: 0,
+                steps: 0,
+                max_steps,
+                aborting: false,
+                panic: None,
+            }),
+            cv: Condvar::new(),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    // ----- scheduling machinery ------------------------------------
+
+    /// Record one decision and hand the token to the chosen thread.
+    /// Must be called by the thread currently holding the token (or
+    /// exiting with it).
+    fn choice_point(&self, core: &mut Core) {
+        if core.aborting {
+            return;
+        }
+        core.steps += 1;
+        if core.steps > core.max_steps && core.violation.is_none() {
+            core.violation = Some(Violation::Deadlock {
+                blocked: vec![format!(
+                    "step budget of {} exhausted (livelock?)",
+                    core.max_steps
+                )],
+            });
+            self.abort(core);
+            return;
+        }
+        let options: Vec<usize> = core
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if options.is_empty() {
+            if core.live == 0 {
+                // Execution complete: quiescence check, then release
+                // the explorer.
+                self.check_quiescence(core);
+                core.running = None;
+                self.cv.notify_all();
+                return;
+            }
+            // Every live thread is blocked: deadlock. Classify
+            // lost-notify deadlocks by inspecting what they block on.
+            let mut blocked = Vec::new();
+            let mut lost: Option<(String, u64)> = None;
+            for (i, t) in core.threads.iter().enumerate() {
+                if let Status::Blocked(obj) = t.status {
+                    blocked.push(format!(
+                        "thread {i} blocked on {}",
+                        core.objects[obj].label()
+                    ));
+                    if let Obj::Condvar { wasted, label, .. } = &core.objects[obj] {
+                        if *wasted > 0 && lost.is_none() {
+                            lost = Some((label.clone(), *wasted));
+                        }
+                    }
+                }
+            }
+            // Keep an earlier violation (e.g. gate-after-tokens) if one
+            // was already recorded during this execution.
+            if core.violation.is_none() {
+                core.violation = Some(match lost {
+                    Some((condvar, wasted)) => Violation::LostNotify { condvar, wasted },
+                    None => Violation::Deadlock { blocked },
+                });
+            }
+            self.abort(core);
+            return;
+        }
+        let decision = core.choices.len();
+        let forced = core.prefix.get(decision).copied();
+        let chosen = match forced {
+            // Replay/backtrack prefix. A forced tid that is not
+            // runnable (possible only if the program changed under the
+            // schedule) falls through to the default policy.
+            Some(tid) if options.contains(&tid) => tid,
+            _ => match &mut core.mode {
+                Mode::Random(state) => {
+                    let r = splitmix64(state);
+                    options[(r % options.len() as u64) as usize]
+                }
+                Mode::Guided => {
+                    if options.contains(&core.last_running) {
+                        core.last_running
+                    } else {
+                        options[0]
+                    }
+                }
+            },
+        };
+        core.choices.push(Choice { options, chosen });
+        core.last_running = chosen;
+        core.running = Some(chosen);
+        self.cv.notify_all();
+    }
+
+    /// Begin teardown: wake everyone; parked model threads unwind with
+    /// the `Abort` payload.
+    fn abort(&self, core: &mut Core) {
+        core.aborting = true;
+        core.running = None;
+        self.cv.notify_all();
+    }
+
+    /// Park until this thread holds the token (status must be `Ready`).
+    /// Panics with `Abort` when teardown begins.
+    fn wait_for_token<'a>(
+        &'a self,
+        mut core: MutexGuard<'a, Core>,
+        tid: usize,
+    ) -> MutexGuard<'a, Core> {
+        while core.running != Some(tid) {
+            if core.aborting {
+                drop(core);
+                std::panic::panic_any(Abort);
+            }
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        core
+    }
+
+    /// Run one modeled operation for thread `tid`: yield (scheduling
+    /// point), then attempt; on `Block`, park until signaled and retry.
+    /// `attempt` must be idempotent until it commits.
+    fn op<R>(&self, tid: usize, mut attempt: impl FnMut(&mut Core) -> Attempt<R>) -> R {
+        let mut core = self.lock();
+        if core.aborting {
+            // Teardown. Release-type ops still reach here from guard
+            // drops while other frames unwind with `Abort`; run them
+            // inline (they never block) instead of panicking inside a
+            // panic. A blocking op here is a fresh frame, safe to
+            // unwind.
+            loop {
+                match attempt(&mut core) {
+                    Attempt::Done(r) => return r,
+                    Attempt::Block(_) => {
+                        drop(core);
+                        std::panic::panic_any(Abort);
+                    }
+                }
+            }
+        }
+        self.choice_point(&mut core);
+        core = self.wait_for_token(core, tid);
+        loop {
+            match attempt(&mut core) {
+                Attempt::Done(r) => return r,
+                Attempt::Block(obj) => {
+                    core.threads[tid].status = Status::Blocked(obj);
+                    self.choice_point(&mut core);
+                    core = self.wait_for_token(core, tid);
+                }
+            }
+        }
+    }
+
+    /// Mark every thread parked on `obj` runnable again; each rechecks
+    /// its condition when scheduled.
+    fn signal(core: &mut Core, obj: usize) {
+        for t in core.threads.iter_mut() {
+            if t.status == Status::Blocked(obj) {
+                t.status = Status::Ready;
+            }
+        }
+    }
+
+    /// A pure scheduling point with no state change.
+    pub fn yield_now(&self, tid: usize) {
+        self.op(tid, |_| Attempt::Done(()));
+    }
+
+    // ----- threads --------------------------------------------------
+
+    /// Register a new model thread (runnable, not yet started).
+    fn register_thread(&self, label: &str) -> usize {
+        let mut core = self.lock();
+        let join_obj = core.objects.len();
+        core.objects.push(Obj::Thread {
+            label: format!("thread '{label}'"),
+        });
+        let tid = core.threads.len();
+        core.threads.push(ThreadState {
+            status: Status::Ready,
+            join_obj,
+            held: Vec::new(),
+        });
+        core.live += 1;
+        core.events.push(format!("spawn thread {tid} ('{label}')"));
+        tid
+    }
+
+    /// OS-spawn the body of a registered model thread. The wrapper
+    /// parks until first scheduled, runs the body, and reports exit.
+    fn os_spawn(self: &Arc<Self>, tid: usize, body: impl FnOnce() + Send + 'static) {
+        let sched = self.clone();
+        let handle = std::thread::spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((sched.clone(), tid)));
+            // The initial park is inside the catch: teardown can begin
+            // before this thread ever gets the token.
+            let inner = sched.clone();
+            let result = catch_unwind(AssertUnwindSafe(move || {
+                let core = inner.lock();
+                let core = inner.wait_for_token(core, tid);
+                drop(core);
+                body();
+            }));
+            CTX.with(|c| *c.borrow_mut() = None);
+            sched.thread_exit(tid, result.err());
+        });
+        self.handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(handle);
+    }
+
+    /// Spawn a child model thread from a running model thread and
+    /// return its tid. The spawn itself is a scheduling point.
+    pub fn spawn_child(
+        self: &Arc<Self>,
+        parent: usize,
+        label: &str,
+        body: impl FnOnce() + Send + 'static,
+    ) -> usize {
+        let tid = self.register_thread(label);
+        self.os_spawn(tid, body);
+        self.yield_now(parent);
+        tid
+    }
+
+    /// Block until thread `tid` finishes.
+    pub fn join_thread(&self, me: usize, tid: usize) {
+        self.op(me, |core| {
+            if core.threads[tid].status == Status::Finished {
+                Attempt::Done(())
+            } else {
+                Attempt::Block(core.threads[tid].join_obj)
+            }
+        });
+    }
+
+    fn thread_exit(&self, tid: usize, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut core = self.lock();
+        core.threads[tid].status = Status::Finished;
+        core.live -= 1;
+        let join_obj = core.threads[tid].join_obj;
+        Self::signal(&mut core, join_obj);
+        if let Some(payload) = panic {
+            if payload.downcast_ref::<Abort>().is_none() {
+                // Real panic from protocol code: record it and tear the
+                // execution down so the explorer can propagate it.
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                core.events.push(format!("thread {tid} panicked: {msg}"));
+                if core.panic.is_none() {
+                    core.panic = Some(msg);
+                }
+                self.abort(&mut core);
+                return;
+            }
+            // Teardown unwind: hand off without recording a decision.
+            if core.live == 0 {
+                core.running = None;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        if core.aborting {
+            self.cv.notify_all();
+            return;
+        }
+        core.events.push(format!("thread {tid} exits"));
+        // Hand the token to the next runnable thread (a real decision:
+        // the exiting thread no longer counts among the options).
+        self.choice_point(&mut core);
+    }
+
+    /// End-of-execution check: channels must hold no unconsumed work
+    /// and every opened obligation must have been completed.
+    fn check_quiescence(&self, core: &mut Core) {
+        if core.violation.is_some() {
+            return;
+        }
+        let mut open: Vec<String> = Vec::new();
+        for obj in &core.objects {
+            if let Obj::Chan { queue, label, .. } = obj {
+                let values = queue.iter().filter(|s| **s == SlotKind::Value).count();
+                if values > 0 {
+                    open.push(format!(
+                        "{values} work item(s) still queued on {label}"
+                    ));
+                }
+            }
+        }
+        for label in core.obligations.values() {
+            open.push(format!("obligation '{label}' opened but never completed"));
+        }
+        if !open.is_empty() {
+            core.violation = Some(Violation::NonQuiescent { open });
+        }
+    }
+
+    // ----- object registration -------------------------------------
+
+    fn register(&self, obj: Obj) -> usize {
+        let mut core = self.lock();
+        let id = core.objects.len();
+        core.events.push(format!("new {}", obj.label()));
+        core.objects.push(obj);
+        id
+    }
+
+    pub fn register_mutex(&self, label: &str) -> usize {
+        self.register(
+            Obj::Mutex {
+                owner: None,
+                label: format!("mutex '{label}'"),
+            },
+        )
+    }
+
+    pub fn register_condvar(&self, label: &str) -> usize {
+        self.register(
+            Obj::Condvar {
+                waiters: Vec::new(),
+                wasted: 0,
+                label: format!("condvar '{label}'"),
+            },
+        )
+    }
+
+    pub fn register_chan(&self, cap: usize, label: &str) -> usize {
+        self.register(
+            Obj::Chan {
+                cap: cap.max(1),
+                queue: VecDeque::new(),
+                senders: 1,
+                recv_alive: true,
+                gate: None,
+                label: format!("channel '{label}'"),
+            },
+        )
+    }
+
+    pub fn register_gate(&self, label: &str) -> usize {
+        self.register(
+            Obj::Gate {
+                closed: false,
+                readers: 0,
+                label: format!("gate '{label}'"),
+            },
+        )
+    }
+
+    /// Declare that tokens on channel `chan` must only be sent after
+    /// gate `gate` closed (the drain-ordering contract, BSL055).
+    pub fn bind_gate(&self, chan: usize, gate: usize) {
+        let mut core = self.lock();
+        if let Obj::Chan { gate: g, .. } = &mut core.objects[chan] {
+            *g = Some(gate);
+        }
+    }
+
+    // ----- mutex ----------------------------------------------------
+
+    pub fn mutex_lock(&self, tid: usize, id: usize) {
+        self.op(tid, |core| {
+            match &core.objects[id] {
+                Obj::Mutex { owner: Some(_), .. } => return Attempt::Block(id),
+                Obj::Mutex { owner: None, .. } => {}
+                _ => return Attempt::Done(()),
+            }
+            if let Obj::Mutex { owner, .. } = &mut core.objects[id] {
+                *owner = Some(tid);
+            }
+            // Lock-order edges from everything already held.
+            let held = core.threads[tid].held.clone();
+            let to = core.objects[id].label().to_string();
+            for h in held {
+                let from = core.objects[h].label().to_string();
+                core.lock_edges.insert((from, to.clone()));
+            }
+            core.threads[tid].held.push(id);
+            core.events.push(format!("thread {tid} acquires {to}"));
+            Attempt::Done(())
+        });
+    }
+
+    pub fn mutex_unlock(&self, tid: usize, id: usize) {
+        self.op(tid, |core| {
+            if let Obj::Mutex { owner, .. } = &mut core.objects[id] {
+                *owner = None;
+            }
+            core.threads[tid].held.retain(|&h| h != id);
+            core.events
+                .push(format!("thread {tid} releases {}", core.objects[id].label()));
+            Self::signal(core, id);
+            Attempt::Done(())
+        });
+    }
+
+    // ----- condvar --------------------------------------------------
+
+    /// Condvar wait: atomically release `mutex`, park on the condvar,
+    /// and re-acquire the mutex once notified. `bare` marks a wait used
+    /// without a predicate loop (flagged as BSL052).
+    pub fn condvar_wait(&self, tid: usize, id: usize, mutex: usize, bare: bool) {
+        let mut phase = 0u8;
+        self.op(tid, |core| {
+            loop {
+                match phase {
+                    0 => {
+                        if bare {
+                            let label = core.objects[id].label().to_string();
+                            core.warnings.insert(ModelWarning::BareWait { condvar: label });
+                        }
+                        if let Obj::Mutex { owner, .. } = &mut core.objects[mutex] {
+                            *owner = None;
+                        }
+                        core.threads[tid].held.retain(|&h| h != mutex);
+                        Self::signal(core, mutex);
+                        if let Obj::Condvar { waiters, .. } = &mut core.objects[id] {
+                            waiters.push(tid);
+                        }
+                        core.events
+                            .push(format!("thread {tid} waits on {}", core.objects[id].label()));
+                        phase = 1;
+                    }
+                    1 => {
+                        let waiting = match &core.objects[id] {
+                            Obj::Condvar { waiters, .. } => waiters.contains(&tid),
+                            _ => false,
+                        };
+                        if waiting {
+                            return Attempt::Block(id);
+                        }
+                        phase = 2;
+                    }
+                    _ => {
+                        if let Obj::Mutex { owner, .. } = &mut core.objects[mutex] {
+                            if owner.is_none() {
+                                *owner = Some(tid);
+                                core.threads[tid].held.push(mutex);
+                                return Attempt::Done(());
+                            }
+                        }
+                        return Attempt::Block(mutex);
+                    }
+                }
+            }
+        });
+    }
+
+    pub fn condvar_notify(&self, tid: usize, id: usize, all: bool) {
+        self.op(tid, |core| {
+            if let Obj::Condvar { waiters, wasted, .. } = &mut core.objects[id] {
+                if waiters.is_empty() {
+                    // Correct condvar semantics: a notify with nobody
+                    // waiting is lost. Remember it so a later deadlock
+                    // on this condvar is classified as lost-notify.
+                    *wasted += 1;
+                } else if all {
+                    waiters.clear();
+                } else {
+                    waiters.remove(0);
+                }
+            }
+            core.events.push(format!(
+                "thread {tid} notifies {}",
+                core.objects[id].label()
+            ));
+            Self::signal(core, id);
+            Attempt::Done(())
+        });
+    }
+
+    // ----- channels -------------------------------------------------
+
+    /// Blocking send. Returns `false` when the receiver is gone (the
+    /// facade maps that to `SendError`).
+    pub fn chan_send(&self, tid: usize, id: usize, kind: SlotKind) -> bool {
+        self.op(tid, |core| Self::try_push(core, tid, id, kind))
+    }
+
+    /// Non-blocking send: `Ok(true)` sent, `Ok(false)` disconnected,
+    /// `Err(())` full.
+    pub fn chan_try_send(&self, tid: usize, id: usize, kind: SlotKind) -> Result<bool, ()> {
+        self.op(tid, |core| match Self::try_push(core, tid, id, kind) {
+            Attempt::Done(sent) => Attempt::Done(Ok(sent)),
+            Attempt::Block(_) => Attempt::Done(Err(())),
+        })
+    }
+
+    fn try_push(core: &mut Core, tid: usize, id: usize, kind: SlotKind) -> Attempt<bool> {
+        let (full, closed, gate) = match &core.objects[id] {
+            Obj::Chan {
+                cap,
+                queue,
+                recv_alive,
+                gate,
+                ..
+            } => (queue.len() >= *cap, !*recv_alive, *gate),
+            _ => return Attempt::Done(false),
+        };
+        if closed {
+            let label = core.objects[id].label().to_string();
+            core.warnings
+                .insert(ModelWarning::SendAfterClose { channel: label });
+            return Attempt::Done(false);
+        }
+        if full {
+            return Attempt::Block(id);
+        }
+        // The drain contract: a token on a gated channel is only legal
+        // once the gate is closed — otherwise a request admitted under
+        // the still-open gate can land FIFO-behind the token and be
+        // dropped by the worker that consumed the token.
+        if kind == SlotKind::Token {
+            if let Some(g) = gate {
+                if let Obj::Gate { closed: false, .. } = &core.objects[g] {
+                    let channel = core.objects[id].label().to_string();
+                    let gate_label = core.objects[g].label().to_string();
+                    core.events.push(format!(
+                        "thread {tid} sends shutdown token on {channel} while {gate_label} is open"
+                    ));
+                    if core.violation.is_none() {
+                        core.violation = Some(Violation::GateAfterTokens {
+                            channel,
+                            gate: gate_label,
+                        });
+                    }
+                    // Not recoverable: tear down and report.
+                    return Attempt::Done(true);
+                }
+            }
+        }
+        if let Obj::Chan { queue, .. } = &mut core.objects[id] {
+            queue.push_back(kind);
+        }
+        core.events.push(format!(
+            "thread {tid} sends {:?} on {}",
+            kind,
+            core.objects[id].label()
+        ));
+        Self::signal(core, id);
+        Attempt::Done(true)
+    }
+
+    /// Blocking receive: `Some(kind)` or `None` when empty and all
+    /// senders are gone.
+    pub fn chan_recv(&self, tid: usize, id: usize) -> Option<SlotKind> {
+        self.op(tid, |core| {
+            let popped = match &mut core.objects[id] {
+                Obj::Chan { queue, senders, .. } => {
+                    if let Some(kind) = queue.pop_front() {
+                        Ok(Some(kind))
+                    } else if *senders == 0 {
+                        Ok(None)
+                    } else {
+                        Err(())
+                    }
+                }
+                _ => Ok(None),
+            };
+            match popped {
+                Ok(Some(kind)) => {
+                    let label = core.objects[id].label().to_string();
+                    core.events
+                        .push(format!("thread {tid} receives {kind:?} from {label}"));
+                    Self::signal(core, id);
+                    Attempt::Done(Some(kind))
+                }
+                Ok(None) => Attempt::Done(None),
+                Err(()) => Attempt::Block(id),
+            }
+        })
+    }
+
+    /// Timed receive, modeled as "the timeout may fire immediately":
+    /// `Ok(kind)`, `Err(true)` disconnected, `Err(false)` timed out.
+    pub fn chan_recv_timeout(&self, tid: usize, id: usize) -> Result<SlotKind, bool> {
+        self.op(tid, |core| {
+            let popped = match &mut core.objects[id] {
+                Obj::Chan { queue, senders, .. } => {
+                    if let Some(kind) = queue.pop_front() {
+                        Ok(kind)
+                    } else if *senders == 0 {
+                        Err(true)
+                    } else {
+                        Err(false)
+                    }
+                }
+                _ => Err(true),
+            };
+            if popped.is_ok() {
+                Self::signal(core, id);
+            }
+            Attempt::Done(popped)
+        })
+    }
+
+    pub fn chan_sender_cloned(&self, id: usize) {
+        let mut core = self.lock();
+        if let Obj::Chan { senders, .. } = &mut core.objects[id] {
+            *senders += 1;
+        }
+    }
+
+    pub fn chan_sender_dropped(&self, id: usize) {
+        let mut core = self.lock();
+        if let Obj::Chan { senders, .. } = &mut core.objects[id] {
+            *senders = senders.saturating_sub(1);
+            if *senders == 0 {
+                Self::signal(&mut core, id);
+            }
+        }
+    }
+
+    pub fn chan_receiver_dropped(&self, id: usize) {
+        let mut core = self.lock();
+        if let Obj::Chan { recv_alive, .. } = &mut core.objects[id] {
+            *recv_alive = false;
+        }
+        Self::signal(&mut core, id);
+    }
+
+    // ----- gate -----------------------------------------------------
+
+    /// Read-acquire the gate: `true` admitted (caller must pair with
+    /// [`Self::gate_exit`]), `false` already closed.
+    pub fn gate_enter(&self, tid: usize, id: usize) -> bool {
+        self.op(tid, |core| match &mut core.objects[id] {
+            Obj::Gate { closed, readers, .. } => {
+                if *closed {
+                    Attempt::Done(false)
+                } else {
+                    *readers += 1;
+                    Attempt::Done(true)
+                }
+            }
+            _ => Attempt::Done(false),
+        })
+    }
+
+    pub fn gate_exit(&self, tid: usize, id: usize) {
+        let mut core = self.lock();
+        if let Obj::Gate { readers, .. } = &mut core.objects[id] {
+            *readers = readers.saturating_sub(1);
+        }
+        let _ = tid;
+        Self::signal(&mut core, id);
+    }
+
+    /// Write-acquire and flip the gate closed; blocks until the last
+    /// reader exits (RwLock<bool> semantics of the real drain gate).
+    pub fn gate_close(&self, tid: usize, id: usize) {
+        self.op(tid, |core| {
+            match &core.objects[id] {
+                Obj::Gate { readers, .. } if *readers > 0 => return Attempt::Block(id),
+                Obj::Gate { .. } => {}
+                _ => return Attempt::Done(()),
+            }
+            if let Obj::Gate { closed, .. } = &mut core.objects[id] {
+                *closed = true;
+            }
+            let label = core.objects[id].label().to_string();
+            core.events.push(format!("thread {tid} closes {label}"));
+            Self::signal(core, id);
+            Attempt::Done(())
+        });
+    }
+
+    pub fn gate_is_closed(&self, tid: usize, id: usize) -> bool {
+        self.op(tid, |core| match &core.objects[id] {
+            Obj::Gate { closed, .. } => Attempt::Done(*closed),
+            _ => Attempt::Done(false),
+        })
+    }
+
+    // ----- obligations ---------------------------------------------
+
+    /// Open an obligation: accepted work the protocol owes an answer
+    /// for. The execution is non-quiescent (BSL056) until completed.
+    pub fn obligation_open(&self, tid: usize, label: &str) -> u64 {
+        self.op(tid, |core| {
+            let id = core.next_obligation;
+            core.next_obligation += 1;
+            core.obligations.insert(id, label.to_string());
+            core.events
+                .push(format!("thread {tid} opens obligation '{label}'"));
+            Attempt::Done(id)
+        })
+    }
+
+    pub fn obligation_complete(&self, tid: usize, id: u64) {
+        self.op(tid, |core| {
+            if let Some(label) = core.obligations.remove(&id) {
+                core.events
+                    .push(format!("thread {tid} completes obligation '{label}'"));
+            }
+            Attempt::Done(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------
+
+/// Bounds and mode of one [`explore`] call.
+#[derive(Debug, Clone)]
+pub struct ExploreOptions {
+    /// Cap on DFS executions (0 disables the DFS pass).
+    pub dfs_executions: usize,
+    /// Maximum preemptive context switches per explored schedule.
+    pub preemption_bound: usize,
+    /// Seeded random schedules to run after the DFS pass.
+    pub random_schedules: usize,
+    pub seed: u64,
+    /// Per-execution scheduling-point budget (overrun = livelock).
+    pub max_steps: usize,
+    /// Replay exactly this decision list instead of exploring.
+    pub replay: Option<Vec<usize>>,
+}
+
+impl Default for ExploreOptions {
+    fn default() -> Self {
+        ExploreOptions {
+            dfs_executions: 256,
+            preemption_bound: 2,
+            random_schedules: 64,
+            seed: 0x5EED_0BB5,
+            max_steps: 20_000,
+            replay: None,
+        }
+    }
+}
+
+/// A violating schedule, replayable via [`ExploreOptions::replay`].
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    /// One chosen thread id per scheduling point.
+    pub schedule: Vec<usize>,
+    /// Trailing event trace of the violating execution.
+    pub events: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Finding {
+    pub violation: Violation,
+    pub counterexample: Counterexample,
+}
+
+/// Result of exploring one protocol.
+#[derive(Debug)]
+pub struct ExploreReport {
+    pub name: String,
+    pub executions: usize,
+    pub finding: Option<Finding>,
+    pub warnings: Vec<ModelWarning>,
+}
+
+/// Run `body` once under a fresh scheduler following `prefix` (or a
+/// random walk), and collect the outcome.
+fn run_once(
+    prefix: Vec<usize>,
+    mode: Mode,
+    max_steps: usize,
+    body: &Arc<dyn Fn() + Send + Sync>,
+) -> RunOutcome {
+    install_quiet_hook();
+    let sched = Arc::new(Scheduler::new(prefix, mode, max_steps));
+    let root = sched.register_thread("root");
+    {
+        let mut core = sched.lock();
+        core.running = Some(root);
+    }
+    let b = body.clone();
+    sched.os_spawn(root, move || b());
+    // Wait for the execution to finish (all model threads exited). The
+    // timeout is a safety valve for scheduler bugs only: a healthy
+    // execution ends via choice_point/abort.
+    {
+        let mut core = sched.lock();
+        let mut stalls = 0u32;
+        while core.live > 0 {
+            let (c, timeout) = sched
+                .cv
+                .wait_timeout(core, std::time::Duration::from_secs(10))
+                .unwrap_or_else(|p| p.into_inner());
+            core = c;
+            if timeout.timed_out() {
+                stalls += 1;
+                if stalls >= 3 && !core.aborting {
+                    core.violation = Some(Violation::Deadlock {
+                        blocked: vec!["execution stalled (scheduler watchdog)".into()],
+                    });
+                    sched.abort(&mut core);
+                }
+            }
+        }
+    }
+    for h in sched
+        .handles
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .drain(..)
+    {
+        let _ = h.join();
+    }
+    let mut core = sched.lock();
+    RunOutcome {
+        choices: core.choices.drain(..).collect(),
+        events: core.events.drain(..).collect(),
+        violation: core.violation.take(),
+        warnings: core.warnings.iter().cloned().collect(),
+        lock_edges: core.lock_edges.iter().cloned().collect(),
+        panic: core.panic.take(),
+    }
+}
+
+/// Number of preemptive switches in a decision list: decisions where
+/// the previously running thread was still runnable but another thread
+/// was chosen.
+fn preemptions(choices: &[Choice]) -> usize {
+    let mut count = 0;
+    let mut prev = 0usize; // root
+    for c in choices {
+        if c.chosen != prev && c.options.contains(&prev) {
+            count += 1;
+        }
+        prev = c.chosen;
+    }
+    count
+}
+
+fn make_counterexample(out: &RunOutcome) -> Counterexample {
+    const TAIL: usize = 40;
+    let schedule: Vec<usize> = out.choices.iter().map(|c| c.chosen).collect();
+    let mut events = Vec::new();
+    if out.events.len() > TAIL {
+        events.push(format!("… {} earlier events", out.events.len() - TAIL));
+    }
+    let start = out.events.len().saturating_sub(TAIL);
+    events.extend(out.events[start..].iter().cloned());
+    Counterexample { schedule, events }
+}
+
+/// Find a cycle in the accumulated lock-order graph, if any.
+fn find_lock_cycle(edges: &BTreeSet<(String, String)>) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    // Iterative DFS with colors; on a back edge, reconstruct the cycle
+    // from the active path.
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new(); // 1 = on path, 2 = done
+    for &start in adj.keys().collect::<Vec<_>>().iter() {
+        if color.get(start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        let mut path: Vec<&str> = vec![start];
+        let mut iters: Vec<usize> = vec![0];
+        color.insert(start, 1);
+        while let Some(&node) = path.last() {
+            let next = adj
+                .get(node)
+                .and_then(|ns| ns.get(*iters.last().unwrap_or(&0)))
+                .copied();
+            if let Some(n) = next {
+                if let Some(last) = iters.last_mut() {
+                    *last += 1;
+                }
+                match color.get(n).copied().unwrap_or(0) {
+                    1 => {
+                        // Back edge: slice the cycle out of the path.
+                        let pos = path.iter().position(|&p| p == n).unwrap_or(0);
+                        let mut cycle: Vec<String> =
+                            path[pos..].iter().map(|s| (*s).to_string()).collect();
+                        cycle.push(n.to_string());
+                        return Some(cycle);
+                    }
+                    2 => {}
+                    _ => {
+                        color.insert(n, 1);
+                        path.push(n);
+                        iters.push(0);
+                    }
+                }
+            } else {
+                color.insert(node, 2);
+                path.pop();
+                iters.pop();
+            }
+        }
+    }
+    None
+}
+
+/// Systematically explore the schedules of `body` (which must be
+/// re-runnable: each execution starts from fresh facade objects created
+/// inside it). Returns the first violation found with its replayable
+/// counterexample, or a clean report.
+pub fn explore(
+    name: &str,
+    opts: &ExploreOptions,
+    body: Arc<dyn Fn() + Send + Sync>,
+) -> ExploreReport {
+    let mut report = ExploreReport {
+        name: name.to_string(),
+        executions: 0,
+        finding: None,
+        warnings: Vec::new(),
+    };
+    let mut all_edges: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut warnings: BTreeSet<ModelWarning> = BTreeSet::new();
+    let mut absorb = |report: &mut ExploreReport,
+                      out: RunOutcome,
+                      all_edges: &mut BTreeSet<(String, String)>,
+                      warnings: &mut BTreeSet<ModelWarning>|
+     -> bool {
+        report.executions += 1;
+        warnings.extend(out.warnings.iter().cloned());
+        all_edges.extend(out.lock_edges.iter().cloned());
+        if let Some(msg) = &out.panic {
+            // A protocol assertion failed under this schedule: surface
+            // it as a deadlock-class finding with the schedule attached
+            // rather than crashing the whole check pass.
+            report.finding = Some(Finding {
+                violation: Violation::Deadlock {
+                    blocked: vec![format!("protocol panicked: {msg}")],
+                },
+                counterexample: make_counterexample(&out),
+            });
+            return true;
+        }
+        if let Some(v) = out.violation {
+            report.finding = Some(Finding {
+                violation: v,
+                counterexample: make_counterexample(&out),
+            });
+            return true;
+        }
+        if let Some(cycle) = find_lock_cycle(all_edges) {
+            report.finding = Some(Finding {
+                violation: Violation::LockOrderCycle { cycle },
+                counterexample: make_counterexample(&out),
+            });
+            return true;
+        }
+        false
+    };
+
+    if let Some(schedule) = &opts.replay {
+        let out = run_once(schedule.clone(), Mode::Guided, opts.max_steps, &body);
+        absorb(&mut report, out, &mut all_edges, &mut warnings);
+        report.warnings = warnings.into_iter().collect();
+        return report;
+    }
+
+    // Pass 1: bounded-preemption DFS over schedule prefixes.
+    let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+    while let Some(prefix) = stack.pop() {
+        if report.executions >= opts.dfs_executions {
+            break;
+        }
+        let out = run_once(prefix.clone(), Mode::Guided, opts.max_steps, &body);
+        let choices = out.choices.clone();
+        if absorb(&mut report, out, &mut all_edges, &mut warnings) {
+            report.warnings = warnings.into_iter().collect();
+            return report;
+        }
+        // Branch: at each decision past the forced prefix, try every
+        // other runnable thread, keeping the shared prefix up to it.
+        let chosen: Vec<usize> = choices.iter().map(|c| c.chosen).collect();
+        for i in (prefix.len()..choices.len()).rev() {
+            for &alt in &choices[i].options {
+                if alt == choices[i].chosen {
+                    continue;
+                }
+                let mut candidate: Vec<Choice> = choices[..i].to_vec();
+                candidate.push(Choice {
+                    options: choices[i].options.clone(),
+                    chosen: alt,
+                });
+                if preemptions(&candidate) > opts.preemption_bound {
+                    continue;
+                }
+                let mut p: Vec<usize> = chosen[..i].to_vec();
+                p.push(alt);
+                stack.push(p);
+            }
+        }
+    }
+
+    // Pass 2: seeded random walks for the long tail.
+    for k in 0..opts.random_schedules {
+        let seed = opts.seed.wrapping_add(k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let out = run_once(Vec::new(), Mode::Random(seed), opts.max_steps, &body);
+        if absorb(&mut report, out, &mut all_edges, &mut warnings) {
+            break;
+        }
+    }
+    report.warnings = warnings.into_iter().collect();
+    report
+}

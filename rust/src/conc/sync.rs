@@ -1,0 +1,702 @@
+//! Drop-in synchronization facade: `std::sync` in production, modeled
+//! primitives under the controlled scheduler during exploration.
+//!
+//! Every type here mirrors its `std::sync` counterpart's API (same
+//! method names, same error types), so porting a protocol is a type
+//! swap, not a rewrite. Construction decides the mode once: an object
+//! created on a model thread (inside [`crate::conc::explore`]) registers
+//! with that execution's scheduler and routes every operation through
+//! it; an object created anywhere else carries no model state and every
+//! operation is exactly the `std::sync` call — the only production
+//! overhead is one thread-local read at construction.
+//!
+//! The facade adds three things `std::sync` does not have, used by the
+//! drain protocols and the checker:
+//!
+//! - [`Gate`]: the `Arc<RwLock<bool>>` shutdown-gate idiom as a type
+//!   (enter under the read side, close under the write side).
+//! - [`SyncSender::send_token`]: a send tagged as a *shutdown token*,
+//!   so the checker can enforce the gate-before-tokens drain contract
+//!   (BSL055) from real traces.
+//! - [`model::Obligation`]: accepted work the protocol owes an answer
+//!   for; an obligation still open at quiescence is BSL056.
+
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, LockResult, PoisonError};
+use std::time::Duration;
+
+use super::sched::{current_ctx, Scheduler, SlotKind};
+
+/// Handle tying a facade object to the scheduler of the execution it
+/// was created in.
+struct ModelRef {
+    sched: Arc<Scheduler>,
+    id: usize,
+}
+
+impl ModelRef {
+    /// Register-if-modeling: `Some` only on a live model thread.
+    fn new(register: impl FnOnce(&Scheduler) -> usize) -> Option<ModelRef> {
+        current_ctx().map(|(sched, _)| {
+            let id = register(&sched);
+            ModelRef { sched, id }
+        })
+    }
+
+    /// The calling thread's tid, when it belongs to the same execution
+    /// this object was registered in.
+    fn tid(&self) -> Option<usize> {
+        match current_ctx() {
+            Some((s, tid)) if Arc::ptr_eq(&s, &self.sched) => Some(tid),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------
+
+/// [`std::sync::Mutex`] facade. In model mode the scheduler serializes
+/// threads, so the inner std lock is always uncontended; it still
+/// provides the `&mut T` access and poison bookkeeping.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+    model: Option<ModelRef>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Mutex<T> {
+        Self::labeled(value, "mutex")
+    }
+
+    /// Like `new`, with a label used in diagnostics and lock-order
+    /// cycle reports.
+    pub fn labeled(value: T, label: &str) -> Mutex<T> {
+        Mutex {
+            inner: std::sync::Mutex::new(value),
+            model: ModelRef::new(|s| s.register_mutex(label)),
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let model_tid = match &self.model {
+            Some(m) => match m.tid() {
+                Some(tid) => {
+                    m.sched.mutex_lock(tid, m.id);
+                    Some(tid)
+                }
+                None => None,
+            },
+            None => None,
+        };
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard {
+                inner: Some(g),
+                owner: self,
+                model_tid,
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                inner: Some(p.into_inner()),
+                owner: self,
+                model_tid,
+            })),
+        }
+    }
+}
+
+/// Guard returned by [`Mutex::lock`]. Releases the real lock first,
+/// then reports the logical release to the scheduler (which is a
+/// scheduling point), so no thread is ever parked while holding the
+/// real lock.
+pub struct MutexGuard<'a, T> {
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    owner: &'a Mutex<T>,
+    model_tid: Option<usize>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            Some(g) => g,
+            None => unreachable!("mutex guard used after release"),
+        }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            Some(g) => g,
+            None => unreachable!("mutex guard used after release"),
+        }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Real lock first, logical release (a scheduling point) after.
+        self.inner = None;
+        if let (Some(tid), Some(m)) = (self.model_tid, &self.owner.model) {
+            m.sched.mutex_unlock(tid, m.id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------
+
+/// [`std::sync::Condvar`] facade. A bare [`Condvar::wait`] is flagged
+/// BSL052 by the checker; [`Condvar::wait_while`] is the endorsed form.
+pub struct Condvar {
+    inner: std::sync::Condvar,
+    model: Option<ModelRef>,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Self::labeled("condvar")
+    }
+
+    pub fn labeled(label: &str) -> Condvar {
+        Condvar {
+            inner: std::sync::Condvar::new(),
+            model: ModelRef::new(|s| s.register_condvar(label)),
+        }
+    }
+
+    /// Wait without a predicate loop. Works, but the checker flags it
+    /// (BSL052): spurious wakeups and lost notifies are on the caller.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        self.wait_impl(guard, true)
+    }
+
+    /// Wait until `condition` returns false (checked under the lock).
+    pub fn wait_while<'a, T, F>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        mut condition: F,
+    ) -> LockResult<MutexGuard<'a, T>>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        while condition(&mut guard) {
+            guard = match self.wait_impl(guard, false) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        Ok(guard)
+    }
+
+    fn wait_impl<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        bare: bool,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        let owner = guard.owner;
+        if let (Some(cv), Some(mx)) = (&self.model, &owner.model) {
+            if let Some(tid) = cv.tid() {
+                // Release the real lock, suppress the guard's logical
+                // release (condvar_wait performs it atomically with the
+                // park), and re-take the real lock once re-admitted.
+                guard.inner = None;
+                guard.model_tid = None;
+                drop(guard);
+                cv.sched.condvar_wait(tid, cv.id, mx.id, bare);
+                let std_guard = owner.inner.lock().unwrap_or_else(|p| p.into_inner());
+                return Ok(MutexGuard {
+                    inner: Some(std_guard),
+                    owner,
+                    model_tid: Some(tid),
+                });
+            }
+        }
+        // Production path: plain std wait on the inner guard.
+        let std_guard = match guard.inner.take() {
+            Some(g) => g,
+            None => unreachable!("mutex guard used after release"),
+        };
+        guard.model_tid = None;
+        drop(guard);
+        match self.inner.wait(std_guard) {
+            Ok(g) => Ok(MutexGuard {
+                inner: Some(g),
+                owner,
+                model_tid: None,
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                inner: Some(p.into_inner()),
+                owner,
+                model_tid: None,
+            })),
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some(cv) = &self.model {
+            if let Some(tid) = cv.tid() {
+                cv.sched.condvar_notify(tid, cv.id, false);
+                return;
+            }
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some(cv) = &self.model {
+            if let Some(tid) = cv.tid() {
+                cv.sched.condvar_notify(tid, cv.id, true);
+                return;
+            }
+        }
+        self.inner.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded channel
+// ---------------------------------------------------------------------
+
+/// Shared state of one modeled channel: the scheduler holds the slot
+/// *tags* (value vs token) and the blocking logic; the typed payloads
+/// live here. Only the running thread touches either, so the inner
+/// mutex is always uncontended.
+struct ModelChan<T> {
+    values: std::sync::Mutex<VecDeque<T>>,
+    model: ModelRef,
+}
+
+impl<T> ModelChan<T> {
+    fn push(&self, value: T) {
+        self.values
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push_back(value);
+    }
+
+    fn pop(&self) -> Option<T> {
+        self.values
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop_front()
+    }
+}
+
+enum SenderImpl<T> {
+    Std(mpsc::SyncSender<T>),
+    Model(Arc<ModelChan<T>>),
+}
+
+enum ReceiverImpl<T> {
+    Std(mpsc::Receiver<T>),
+    Model(Arc<ModelChan<T>>),
+}
+
+/// [`std::sync::mpsc::SyncSender`] facade.
+pub struct SyncSender<T>(SenderImpl<T>);
+
+/// [`std::sync::mpsc::Receiver`] facade.
+pub struct Receiver<T>(ReceiverImpl<T>);
+
+/// [`std::sync::mpsc::sync_channel`] facade.
+pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+    sync_channel_labeled(bound, "channel")
+}
+
+/// Like [`sync_channel`], with a label for diagnostics.
+pub fn sync_channel_labeled<T>(bound: usize, label: &str) -> (SyncSender<T>, Receiver<T>) {
+    if let Some((sched, _)) = current_ctx() {
+        let id = sched.register_chan(bound, label);
+        let chan = Arc::new(ModelChan {
+            values: std::sync::Mutex::new(VecDeque::new()),
+            model: ModelRef { sched, id },
+        });
+        (
+            SyncSender(SenderImpl::Model(chan.clone())),
+            Receiver(ReceiverImpl::Model(chan)),
+        )
+    } else {
+        let (tx, rx) = mpsc::sync_channel(bound);
+        (SyncSender(SenderImpl::Std(tx)), Receiver(ReceiverImpl::Std(rx)))
+    }
+}
+
+impl<T> SyncSender<T> {
+    fn model_send(
+        chan: &Arc<ModelChan<T>>,
+        value: T,
+        kind: SlotKind,
+    ) -> Result<(), mpsc::SendError<T>> {
+        match chan.model.tid() {
+            Some(tid) => {
+                if chan.model.sched.chan_send(tid, chan.model.id, kind) {
+                    chan.push(value);
+                    Ok(())
+                } else {
+                    Err(mpsc::SendError(value))
+                }
+            }
+            // Misuse escape hatch: a non-model thread touching a model
+            // channel bypasses the scheduler (documented, not reached
+            // by the protocols under check).
+            None => {
+                chan.push(value);
+                Ok(())
+            }
+        }
+    }
+
+    /// Blocking send (a regular work item).
+    pub fn send(&self, value: T) -> Result<(), mpsc::SendError<T>> {
+        match &self.0 {
+            SenderImpl::Std(tx) => tx.send(value),
+            SenderImpl::Model(chan) => Self::model_send(chan, value, SlotKind::Value),
+        }
+    }
+
+    /// Blocking send of a *shutdown token*. Identical to [`Self::send`]
+    /// in production; under the model the slot is tagged so the checker
+    /// can enforce the gate-before-tokens drain contract (BSL055).
+    pub fn send_token(&self, value: T) -> Result<(), mpsc::SendError<T>> {
+        match &self.0 {
+            SenderImpl::Std(tx) => tx.send(value),
+            SenderImpl::Model(chan) => Self::model_send(chan, value, SlotKind::Token),
+        }
+    }
+
+    pub fn try_send(&self, value: T) -> Result<(), mpsc::TrySendError<T>> {
+        match &self.0 {
+            SenderImpl::Std(tx) => tx.try_send(value),
+            SenderImpl::Model(chan) => match chan.model.tid() {
+                Some(tid) => {
+                    match chan.model.sched.chan_try_send(tid, chan.model.id, SlotKind::Value) {
+                        Ok(true) => {
+                            chan.push(value);
+                            Ok(())
+                        }
+                        Ok(false) => Err(mpsc::TrySendError::Disconnected(value)),
+                        Err(()) => Err(mpsc::TrySendError::Full(value)),
+                    }
+                }
+                None => {
+                    chan.push(value);
+                    Ok(())
+                }
+            },
+        }
+    }
+
+    /// Declare that shutdown tokens on this channel are only legal once
+    /// `gate` is closed (no-op in production; BSL055 under the model).
+    pub fn bind_gate(&self, gate: &Gate) {
+        if let (SenderImpl::Model(chan), Some(g)) = (&self.0, &gate.model) {
+            chan.model.sched.bind_gate(chan.model.id, g.id);
+        }
+    }
+}
+
+impl<T> Clone for SyncSender<T> {
+    fn clone(&self) -> Self {
+        match &self.0 {
+            SenderImpl::Std(tx) => SyncSender(SenderImpl::Std(tx.clone())),
+            SenderImpl::Model(chan) => {
+                chan.model.sched.chan_sender_cloned(chan.model.id);
+                SyncSender(SenderImpl::Model(chan.clone()))
+            }
+        }
+    }
+}
+
+impl<T> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        if let SenderImpl::Model(chan) = &self.0 {
+            chan.model.sched.chan_sender_dropped(chan.model.id);
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    pub fn recv(&self) -> Result<T, mpsc::RecvError> {
+        match &self.0 {
+            ReceiverImpl::Std(rx) => rx.recv(),
+            ReceiverImpl::Model(chan) => match chan.model.tid() {
+                Some(tid) => match chan.model.sched.chan_recv(tid, chan.model.id) {
+                    Some(_kind) => chan.pop().ok_or(mpsc::RecvError),
+                    None => Err(mpsc::RecvError),
+                },
+                None => chan.pop().ok_or(mpsc::RecvError),
+            },
+        }
+    }
+
+    /// Timed receive. Under the model, time does not exist: the timeout
+    /// may always fire immediately, which over-approximates every real
+    /// timing (sound for protocols that treat a timeout as "close the
+    /// batch early", never as a synchronization edge).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, mpsc::RecvTimeoutError> {
+        match &self.0 {
+            ReceiverImpl::Std(rx) => rx.recv_timeout(timeout),
+            ReceiverImpl::Model(chan) => match chan.model.tid() {
+                Some(tid) => match chan.model.sched.chan_recv_timeout(tid, chan.model.id) {
+                    Ok(_kind) => chan.pop().ok_or(mpsc::RecvTimeoutError::Disconnected),
+                    Err(true) => Err(mpsc::RecvTimeoutError::Disconnected),
+                    Err(false) => Err(mpsc::RecvTimeoutError::Timeout),
+                },
+                None => chan.pop().ok_or(mpsc::RecvTimeoutError::Timeout),
+            },
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if let ReceiverImpl::Model(chan) = &self.0 {
+            chan.model.sched.chan_receiver_dropped(chan.model.id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gate
+// ---------------------------------------------------------------------
+
+/// The shutdown-gate idiom (`Arc<RwLock<bool>>`) as a first-class type:
+/// request intake enters under the read side, shutdown closes under the
+/// write side. Closing blocks until every admitted enterer has exited,
+/// which is exactly the FIFO-ordering fence the drain protocol needs —
+/// no request admitted before the close can land behind the shutdown
+/// tokens.
+pub struct Gate {
+    inner: std::sync::RwLock<bool>,
+    model: Option<ModelRef>,
+}
+
+impl Default for Gate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gate {
+    pub fn new() -> Gate {
+        Self::labeled("gate")
+    }
+
+    pub fn labeled(label: &str) -> Gate {
+        Gate {
+            inner: std::sync::RwLock::new(false),
+            model: ModelRef::new(|s| s.register_gate(label)),
+        }
+    }
+
+    /// Enter under the read side: `Some(guard)` while open (hold the
+    /// guard across the protected action, e.g. the enqueue), `None`
+    /// once closed.
+    pub fn enter(&self) -> Option<GateGuard<'_>> {
+        if let Some(m) = &self.model {
+            if let Some(tid) = m.tid() {
+                return if m.sched.gate_enter(tid, m.id) {
+                    Some(GateGuard {
+                        gate: self,
+                        std_guard: None,
+                        model_tid: Some(tid),
+                    })
+                } else {
+                    None
+                };
+            }
+        }
+        let g = self.inner.read().unwrap_or_else(|p| p.into_inner());
+        if *g {
+            None
+        } else {
+            Some(GateGuard {
+                gate: self,
+                std_guard: Some(g),
+                model_tid: None,
+            })
+        }
+    }
+
+    /// Close under the write side: blocks until current enterers exit;
+    /// afterwards every [`Self::enter`] returns `None`.
+    pub fn close(&self) {
+        if let Some(m) = &self.model {
+            if let Some(tid) = m.tid() {
+                m.sched.gate_close(tid, m.id);
+                return;
+            }
+        }
+        let mut g = self.inner.write().unwrap_or_else(|p| p.into_inner());
+        *g = true;
+    }
+
+    /// Non-blocking observation (a scheduling point under the model).
+    pub fn is_closed(&self) -> bool {
+        if let Some(m) = &self.model {
+            if let Some(tid) = m.tid() {
+                return m.sched.gate_is_closed(tid, m.id);
+            }
+        }
+        *self.inner.read().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Read-side admission ticket from [`Gate::enter`].
+pub struct GateGuard<'a> {
+    gate: &'a Gate,
+    std_guard: Option<std::sync::RwLockReadGuard<'a, bool>>,
+    model_tid: Option<usize>,
+}
+
+impl Drop for GateGuard<'_> {
+    fn drop(&mut self) {
+        self.std_guard = None;
+        if let (Some(tid), Some(m)) = (self.model_tid, &self.gate.model) {
+            m.sched.gate_exit(tid, m.id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------
+
+/// [`std::sync::atomic::AtomicBool`] facade: loads and stores are
+/// scheduling points under the model (flag polling protocols get their
+/// interleavings explored), plain atomics in production.
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+    model: Option<Arc<Scheduler>>,
+}
+
+impl AtomicBool {
+    pub fn new(value: bool) -> AtomicBool {
+        AtomicBool {
+            inner: std::sync::atomic::AtomicBool::new(value),
+            model: current_ctx().map(|(s, _)| s),
+        }
+    }
+
+    fn yield_point(&self) {
+        if let Some(s) = &self.model {
+            if let Some((cur, tid)) = current_ctx() {
+                if Arc::ptr_eq(&cur, s) {
+                    s.yield_now(tid);
+                }
+            }
+        }
+    }
+
+    pub fn load(&self, order: Ordering) -> bool {
+        self.yield_point();
+        self.inner.load(order)
+    }
+
+    pub fn store(&self, value: bool, order: Ordering) {
+        self.yield_point();
+        self.inner.store(value, order);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model-thread spawning and obligations
+// ---------------------------------------------------------------------
+
+/// Thread spawning and work obligations for protocol bodies. Outside
+/// an exploration these fall back to `std::thread` / no-ops, so a
+/// protocol replica also runs as a plain test.
+pub mod model {
+    use super::*;
+
+    enum HandleImpl {
+        Std(std::thread::JoinHandle<()>),
+        Model { sched: Arc<Scheduler>, tid: usize },
+    }
+
+    /// Join handle for a spawned protocol thread.
+    pub struct JoinHandle(HandleImpl);
+
+    impl JoinHandle {
+        pub fn join(self) {
+            match self.0 {
+                HandleImpl::Std(h) => {
+                    let _ = h.join();
+                }
+                HandleImpl::Model { sched, tid } => match current_ctx() {
+                    Some((cur, me)) if Arc::ptr_eq(&cur, &sched) => {
+                        sched.join_thread(me, tid);
+                    }
+                    _ => {}
+                },
+            }
+        }
+    }
+
+    /// Spawn a protocol thread: a model thread under exploration, a
+    /// plain `std::thread` otherwise.
+    pub fn spawn(label: &str, f: impl FnOnce() + Send + 'static) -> JoinHandle {
+        match current_ctx() {
+            Some((sched, me)) => {
+                let tid = sched.spawn_child(me, label, f);
+                JoinHandle(HandleImpl::Model { sched, tid })
+            }
+            None => JoinHandle(HandleImpl::Std(std::thread::spawn(f))),
+        }
+    }
+
+    /// True on a model thread of a live exploration.
+    pub fn active() -> bool {
+        current_ctx().is_some()
+    }
+
+    /// Accepted work the protocol owes an answer for. Open it when the
+    /// work is admitted, complete it when answered; an obligation alive
+    /// at quiescence is a BSL056 violation with the schedule attached.
+    /// No-op outside an exploration.
+    pub struct Obligation {
+        sched: Option<Arc<Scheduler>>,
+        id: u64,
+    }
+
+    /// Open an obligation on the current model thread.
+    pub fn obligation(label: &str) -> Obligation {
+        match current_ctx() {
+            Some((sched, tid)) => {
+                let id = sched.obligation_open(tid, label);
+                Obligation {
+                    sched: Some(sched),
+                    id,
+                }
+            }
+            None => Obligation { sched: None, id: 0 },
+        }
+    }
+
+    impl Obligation {
+        /// The work was answered. Dropping without completing leaves
+        /// the obligation open — deliberately: a dropped reply channel
+        /// is exactly the bug class this models.
+        pub fn complete(self) {
+            if let Some(sched) = &self.sched {
+                if let Some((cur, tid)) = current_ctx() {
+                    if Arc::ptr_eq(&cur, sched) {
+                        sched.obligation_complete(tid, self.id);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -73,6 +73,55 @@ pub fn topology(threads: usize) -> crate::analysis::Topology {
     Topology::new("cpu-band-pool").thread("band-worker", threads, ExitCondition::ScopeEnd)
 }
 
+/// Model-checked replica of the band-pool protocol for the schedule
+/// checker (`brainslug check --schedules`).
+///
+/// [`run_items`] itself uses `std::thread::scope` so workers can borrow
+/// non-`'static` band slices — scoped spawns cannot be routed through
+/// the model (its threads must be `'static`), so the replica models the
+/// same shape with owned state: a contiguous split of `items` work
+/// units, one obligation per item, per-worker scratch accumulation
+/// merged under a shared results mutex, and an explicit join standing
+/// in for the scope end. What this checks: the split covers every item
+/// exactly once under every schedule (quiescence, BSL056), the merge
+/// lock is cycle-free (BSL051), and the pool always joins (BSL050).
+pub fn pool_protocol(threads: usize, items: usize) {
+    use crate::conc::sync::{model, Mutex};
+    use std::sync::Arc;
+
+    let results = Arc::new(Mutex::labeled(Vec::<usize>::new(), "band-results"));
+    let workers = threads.max(1).min(items.max(1));
+    let mut handles = Vec::with_capacity(workers);
+    let mut next = 0usize;
+    let mut left = items;
+    for w in 0..workers {
+        // Balanced contiguous split, mirroring `run_items`.
+        let take = left / (workers - w);
+        left -= take;
+        let group: Vec<usize> = (next..next + take).collect();
+        next += take;
+        let results = results.clone();
+        handles.push(model::spawn(&format!("band-worker-{w}"), move || {
+            // Per-worker scratch with per-item obligations…
+            let mut scratch = Vec::with_capacity(group.len());
+            for item in group {
+                scratch.push((item, model::obligation(&format!("band-{item}"))));
+            }
+            // …merged once under the shared lock, like a result gather.
+            let mut merged = results.lock().unwrap_or_else(|p| p.into_inner());
+            for (item, ob) in scratch {
+                merged.push(item);
+                ob.complete();
+            }
+        }));
+    }
+    for h in handles {
+        h.join();
+    }
+    let merged = results.lock().unwrap_or_else(|p| p.into_inner());
+    assert_eq!(merged.len(), items, "band pool lost or duplicated items");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,12 +23,16 @@
 use std::io::{BufRead, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::TrySendError;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+// The accept → pool handoff goes through the `conc::sync` facade:
+// `std::sync` in production, schedule-explored via [`drain_protocol`]
+// under the model checker.
+use crate::conc::sync::{sync_channel_labeled, Mutex};
 use crate::server::Server;
 
 use super::router::{route, AppState};
@@ -38,7 +42,7 @@ use super::wire::{read_request, write_response, Response, WireError, WireLimits}
 /// threads' idle ticks; bounds shutdown latency.
 const POLL_TICK: Duration = Duration::from_millis(10);
 
-/// How long a keep-alive connection may sit idle before we close it.
+/// Default for [`HttpConfig::idle_timeout`].
 const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Listener configuration.
@@ -52,6 +56,9 @@ pub struct HttpConfig {
     pub conn_threads: usize,
     /// Pending-connection channel bound; overflow is shed with 503.
     pub conn_queue: usize,
+    /// How long a keep-alive connection may sit idle before we close it
+    /// (default 30 s).
+    pub idle_timeout: Duration,
     pub limits: WireLimits,
 }
 
@@ -61,6 +68,7 @@ impl HttpConfig {
             addr: addr.into(),
             conn_threads: 8,
             conn_queue: 64,
+            idle_timeout: IDLE_TIMEOUT,
             limits: WireLimits::default(),
         }
     }
@@ -97,8 +105,8 @@ impl HttpServer {
             started: Instant::now(),
         };
         let stop = Arc::new(AtomicBool::new(false));
-        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_queue.max(1));
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let (conn_tx, conn_rx) = sync_channel_labeled::<TcpStream>(cfg.conn_queue.max(1), "conns");
+        let conn_rx = Arc::new(Mutex::labeled(conn_rx, "conns-rx"));
 
         let mut conn_threads = Vec::with_capacity(cfg.conn_threads.max(1));
         for _ in 0..cfg.conn_threads.max(1) {
@@ -106,20 +114,27 @@ impl HttpServer {
             let state = state.clone();
             let stop = stop.clone();
             let limits = cfg.limits;
+            let idle_timeout = cfg.idle_timeout;
             conn_threads.push(std::thread::spawn(move || loop {
                 // Receiver disconnects when the acceptor (sole sender)
-                // exits — that is the pool's shutdown signal.
+                // exits — that is the pool's shutdown signal. Crucially
+                // the pool keeps draining handed-off sockets until that
+                // disconnect: bailing out early on the stop flag would
+                // strand accepted connections (see `drain_protocol`'s
+                // `abandon_queue_on_stop` bug switch, BSL056).
                 let stream = match conn_rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
                     Ok(s) => s,
                     Err(_) => return,
                 };
-                serve_connection(stream, &state, &limits, &stop);
+                serve_connection(stream, &state, &limits, &stop, idle_timeout);
             }));
         }
 
         let acceptor = {
             let stop = stop.clone();
             std::thread::spawn(move || {
+                // Ordering: Relaxed — polling a boolean signal; see the
+                // contract comment in `shutdown`.
                 while !stop.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => match conn_tx.try_send(stream) {
@@ -171,6 +186,13 @@ impl HttpServer {
     /// Graceful shutdown: stop accepting, finish in-flight requests,
     /// drain the dispatch queue, join everything.
     pub fn shutdown(mut self) {
+        // Ordering: Relaxed suffices for the stop flag everywhere. It
+        // is a pure boolean signal — no data is published through it
+        // (the sockets travel through the channel, whose send/recv is
+        // the synchronizing edge), pollers only need eventual
+        // visibility (guaranteed for atomic stores), and the `join`s
+        // below are full happens-before edges for everything that
+        // follows.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(acceptor) = self.acceptor.take() {
             let _ = acceptor.join();
@@ -211,6 +233,89 @@ pub fn topology(conn_threads: usize, conn_queue: usize) -> crate::analysis::Topo
         .extend(crate::server::topology(4, 64))
 }
 
+/// Bug switches for [`drain_protocol`]. `Default` (all `false`) is the
+/// shipped listener protocol.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ListenerBugs {
+    /// Break the drain contract: connection threads bail out when they
+    /// see the stop flag instead of serving the sockets already handed
+    /// off — an accepted connection is dropped unanswered (BSL056).
+    pub abandon_queue_on_stop: bool,
+}
+
+/// Model-checked replica of the listener's coordination protocol —
+/// the sync skeleton of [`HttpServer::start`] / [`HttpServer::shutdown`]:
+/// one acceptor handing sockets to a bounded channel (shedding on
+/// `Full`, like [`shed`]), a pool of connection threads draining it
+/// until disconnect, shutdown via stop flag → join acceptor → join
+/// pool. Each accepted connection is an obligation; serving (or
+/// shedding with a 503) completes it. Explored by
+/// `brainslug check --schedules` and the model-check test suite.
+pub fn drain_protocol(conn_threads: usize, conn_queue: usize, conns: usize, bugs: ListenerBugs) {
+    use crate::conc::sync::{model, AtomicBool as StopFlag};
+
+    let stop = Arc::new(StopFlag::new(false));
+    let (conn_tx, conn_rx) = sync_channel_labeled::<model::Obligation>(conn_queue.max(1), "conns");
+    let conn_rx = Arc::new(Mutex::labeled(conn_rx, "conns-rx"));
+
+    let mut pool = Vec::with_capacity(conn_threads);
+    for k in 0..conn_threads {
+        let conn_rx = conn_rx.clone();
+        let stop = stop.clone();
+        pool.push(model::spawn(&format!("conn-{k}"), move || loop {
+            let conn = {
+                match conn_rx.lock() {
+                    Ok(q) => q.recv(),
+                    Err(_) => return,
+                }
+            };
+            match conn {
+                Ok(ob) => {
+                    if bugs.abandon_queue_on_stop && stop.load(Ordering::Relaxed) {
+                        // Buggy: drop the socket unanswered.
+                        drop(ob);
+                    } else {
+                        // serve_connection answers it (even mid-shutdown,
+                        // with `Connection: close`).
+                        ob.complete();
+                    }
+                }
+                Err(_) => return, // acceptor gone and queue drained
+            }
+        }));
+    }
+
+    let acceptor = {
+        let stop = stop.clone();
+        model::spawn("acceptor", move || {
+            for i in 0..conns {
+                if stop.load(Ordering::Relaxed) {
+                    return; // conn_tx drops here, disconnecting the pool
+                }
+                let ob = model::obligation(&format!("conn-{i}"));
+                match conn_tx.try_send(ob) {
+                    Ok(()) => {}
+                    // Pool saturated: shed() answers 503 at the door.
+                    Err(TrySendError::Full(ob)) => ob.complete(),
+                    // Pool gone entirely (not reachable pre-shutdown,
+                    // kept for parity with the real accept loop).
+                    Err(TrySendError::Disconnected(ob)) => {
+                        ob.complete();
+                        return;
+                    }
+                }
+            }
+        })
+    };
+
+    // shutdown(): flag, then join in handoff order.
+    stop.store(true, Ordering::Relaxed);
+    acceptor.join();
+    for h in pool {
+        h.join();
+    }
+}
+
 /// Canned 503 for connections shed at the accept stage; best-effort
 /// (the client may already be gone).
 fn shed(mut stream: TcpStream) {
@@ -225,7 +330,13 @@ fn shed(mut stream: TcpStream) {
 
 /// Serve one connection until it closes, errors, times out idle, or
 /// the server begins shutdown.
-fn serve_connection(stream: TcpStream, state: &AppState, limits: &WireLimits, stop: &AtomicBool) {
+fn serve_connection(
+    stream: TcpStream,
+    state: &AppState,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     // Short read timeout = the idle-wait tick: between requests we spin
@@ -247,7 +358,7 @@ fn serve_connection(stream: TcpStream, state: &AppState, limits: &WireLimits, st
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
-                    if idle_start.elapsed() > IDLE_TIMEOUT {
+                    if idle_start.elapsed() > idle_timeout {
                         return;
                     }
                 }

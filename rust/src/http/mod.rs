@@ -237,6 +237,86 @@ mod tests {
     }
 
     #[test]
+    fn idle_keep_alive_connection_is_closed_after_timeout() {
+        use std::time::{Duration, Instant};
+        let server = ServerConfig::new(sim_builder(1)).start().unwrap();
+        let mut cfg = HttpConfig::new("127.0.0.1:0");
+        // One 250 ms read-timeout tick passes without tripping it, the
+        // second exceeds it — the connection must close well under 10 s.
+        cfg.idle_timeout = Duration::from_millis(300);
+        let http = HttpServer::start(server, cfg).unwrap();
+        let mut stream = TcpStream::connect(http.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        // Read the keep-alive response (connection stays open).
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 512];
+        while !String::from_utf8_lossy(&raw).contains("{\"ok\":true}") {
+            let n = stream.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed before answering: {:?}", raw);
+            raw.extend_from_slice(&buf[..n]);
+        }
+        assert!(String::from_utf8_lossy(&raw).starts_with("HTTP/1.1 200"));
+        // Now go idle: the server must close the socket (EOF), not hold
+        // it for the default 30 s.
+        let t0 = Instant::now();
+        let mut rest = String::new();
+        stream.read_to_string(&mut rest).unwrap(); // EOF, not timeout
+        assert!(rest.is_empty(), "unexpected extra bytes: {rest}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "idle close took {:?}",
+            t0.elapsed()
+        );
+        http.shutdown();
+    }
+
+    #[test]
+    fn saturated_conn_pool_sheds_at_the_door_with_503() {
+        use std::time::Duration;
+        let server = ServerConfig::new(sim_builder(1)).start().unwrap();
+        let mut cfg = HttpConfig::new("127.0.0.1:0");
+        // One conn thread, one queue slot: the third concurrent
+        // connection must be shed by the acceptor.
+        cfg.conn_threads = 1;
+        cfg.conn_queue = 1;
+        let http = HttpServer::start(server, cfg).unwrap();
+
+        // Connection A: served, then parked in the keep-alive idle wait
+        // — this pins the only conn thread.
+        let mut a = TcpStream::connect(http.addr()).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        a.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 512];
+        while !String::from_utf8_lossy(&raw).contains("{\"ok\":true}") {
+            let n = a.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed A early");
+            raw.extend_from_slice(&buf[..n]);
+        }
+
+        // Connection B: accepted into the one queue slot, never served
+        // while A pins the thread.
+        let _b = TcpStream::connect(http.addr()).unwrap();
+        // Let the acceptor move B into the channel before C arrives.
+        std::thread::sleep(Duration::from_millis(200));
+
+        // Connection C: pool and queue full → shed with 503 + Retry-After.
+        let mut c = TcpStream::connect(http.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = c.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+        let mut shed_raw = String::new();
+        c.read_to_string(&mut shed_raw).unwrap(); // shed closes the socket
+        assert!(shed_raw.starts_with("HTTP/1.1 503 "), "{shed_raw}");
+        assert!(shed_raw.contains("retry-after: 1"), "{shed_raw}");
+        assert!(shed_raw.contains("connection: close"), "{shed_raw}");
+
+        http.shutdown();
+    }
+
+    #[test]
     fn shutdown_closes_the_listener() {
         let http = start_http(ServerConfig::new(sim_builder(1)));
         let addr = http.addr();

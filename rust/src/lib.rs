@@ -30,7 +30,11 @@
 //! instead of wiring the pipeline by hand. [`analysis`] is the static
 //! verification subsystem behind `brainslug check`: graph lint, plan
 //! verifier and concurrency-topology lint, every finding carrying a
-//! stable `BSL0xx` diagnostic code.
+//! stable `BSL0xx` diagnostic code. [`conc`] extends that from declared
+//! shape to observed behavior: a loom-style controlled scheduler
+//! model-checks replicas of the real drain/queue/pool protocols and
+//! reports violations (BSL050–BSL056) with replayable counterexample
+//! schedules.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -55,6 +59,7 @@ pub mod analysis;
 pub mod autotune;
 pub mod bench;
 pub mod cli;
+pub mod conc;
 pub mod cpu;
 pub mod device;
 pub mod engine;

@@ -117,7 +117,7 @@ USAGE: brainslug <command> [flags]
   dot           --net NAME [--batch N] [--small] [--json]
   check         [--net NAME | --all-zoo] [--batch N] [--device PRESET]
                 [--collapse-budget BYTES] [--deny warnings]
-                [--format text|json]
+                [--format text|json] [--schedules N] [--seed S]
 
 Network names accept family aliases (vgg, resnet, densenet, squeezenet,
 inception). `--backend sim` needs no artifacts directory at all.
@@ -162,9 +162,15 @@ pairs with `serve --net X --batch 8`.
 inference, BSL001–BSL012), re-proves the optimizer plan's resource
 invariants (budget packing, halo back-propagation, skip reservations,
 BSL020–BSL029), and lints the runtime's declared thread/channel
-topologies (BSL040–BSL045). Every finding carries a stable BSL0xx
-code; `--deny warnings` makes warnings fail the exit code (CI runs
-`check --all-zoo --deny warnings`). See DESIGN.md §Static Analysis.
+topologies (BSL040–BSL045). With `--schedules N` it also *executes*
+model-checked replicas of the runtime's drain/queue/pool protocols
+under a controlled scheduler — N bounded-preemption schedules plus
+seeded random walks per protocol (`--seed S` rotates the stream) —
+reporting ordering violations (BSL050–BSL056) with replayable
+counterexample schedules. Every finding carries a stable BSL0xx code;
+`--deny warnings` makes warnings fail the exit code (CI runs
+`check --all-zoo --deny warnings --schedules 256`). See DESIGN.md
+§Static Analysis and §Schedule Model Checking.
 
 Library quickstart (the whole pipeline is one builder):
 
@@ -557,7 +563,12 @@ static SIGNAL_STOP: AtomicBool = AtomicBool::new(false);
 #[allow(unsafe_code)] // raw libc `signal` FFI; no `libc` crate offline
 fn install_signal_handlers() {
     extern "C" fn on_signal(_signum: i32) {
-        SIGNAL_STOP.store(true, Ordering::SeqCst);
+        // Ordering: Relaxed — this flag is a pure boolean signal with
+        // nothing published through it (the poll loop below reacts by
+        // *starting* shutdown, it never reads data the handler wrote),
+        // so there is no release/acquire pairing to preserve. Matches
+        // the Relaxed poll in `serve_http`.
+        SIGNAL_STOP.store(true, Ordering::Relaxed);
     }
     extern "C" {
         fn signal(signum: i32, handler: usize) -> usize;
@@ -961,8 +972,10 @@ fn cmd_dot(args: &Args) -> Result<()> {
 /// `check`: the static verifier. Lints each requested network's graph,
 /// re-proves its optimized plan (structure + resources) against the
 /// selected device/budget, then lints the runtime's declared
-/// concurrency topologies. Exit is non-zero on any error, or on any
-/// warning under `--deny warnings`.
+/// concurrency topologies. With `--schedules N` it additionally runs
+/// the schedule model checker over replicas of the real runtime
+/// protocols (see `brainslug::conc`). Exit is non-zero on any error,
+/// or on any warning under `--deny warnings`.
 fn cmd_check(args: &Args) -> Result<()> {
     use brainslug::analysis;
     use brainslug::optimizer::optimize;
@@ -981,6 +994,13 @@ fn cmd_check(args: &Args) -> Result<()> {
     if format != "text" && format != "json" {
         bail!("--format takes text|json, got '{format}'");
     }
+    let schedules = args.get_positive_usize("schedules")?;
+    let seed = match args.get("seed") {
+        None => brainslug::conc::ExploreOptions::default().seed,
+        Some(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("--seed takes a u64, got '{s}'"))?,
+    };
     args.reject_unknown()?;
 
     let names: Vec<String> = match (&one, all) {
@@ -1004,6 +1024,12 @@ fn cmd_check(args: &Args) -> Result<()> {
     for topo in analysis::standard_topologies() {
         report.extend(analysis::check_topology(&topo));
     }
+    // Pass 4 (opt-in, it executes code): schedule model checking of the
+    // runtime protocol replicas. N bounds the DFS; the random-walk count
+    // scales off it inside `check_protocols`.
+    if let Some(n) = schedules {
+        report.extend(brainslug::conc::check_protocols(n, seed).diags);
+    }
 
     if format == "json" {
         let mut j = report.to_json();
@@ -1012,13 +1038,20 @@ fn cmd_check(args: &Args) -> Result<()> {
             Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
         );
         j.set("device", Json::Str(device.name.clone()));
+        if let Some(n) = schedules {
+            j.set("schedules", Json::Num(n as f64));
+        }
         println!("{}", j.to_string_pretty());
     } else {
         println!(
-            "checked {} network(s) on {} + {} concurrency topolog(ies)",
+            "checked {} network(s) on {} + {} concurrency topolog(ies){}",
             names.len(),
             device.name,
-            analysis::standard_topologies().len()
+            analysis::standard_topologies().len(),
+            match schedules {
+                Some(n) => format!(" + schedule exploration ({n} DFS executions/protocol)"),
+                None => String::new(),
+            }
         );
         print!("{}", report.render_text());
     }

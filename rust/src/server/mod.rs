@@ -41,11 +41,18 @@
 //! wall-clock time and queueing is genuine.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::mpsc::{channel, Sender, TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
+
+// The coordination spine — dispatch queue, queue mutex, shutdown gate —
+// goes through the `conc::sync` facade: plain `std::sync` in production
+// (one thread-local read at construction), modeled and schedule-explored
+// under `brainslug check --schedules` / the model-check test suite. See
+// [`drain_protocol`] for the explored replica of the drain dance.
+use crate::conc::sync::{Gate, Mutex, Receiver, SyncSender};
 
 use crate::engine::{Engine, EngineBuilder};
 use crate::graph::Shape;
@@ -100,6 +107,11 @@ impl LatencyHistogram {
     }
 
     /// Record one latency observation (microseconds).
+    ///
+    /// Ordering: Relaxed — bucket counts are independent monotone
+    /// counters and percentile readers tolerate a torn (per-bucket
+    /// atomic, cross-bucket unordered) snapshot by construction; see
+    /// the [`ServerStats`] memory-ordering contract.
     pub fn record(&self, us: u64) {
         self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
     }
@@ -191,6 +203,29 @@ pub enum QueuePolicy {
 /// Server statistics, aggregated across all workers. Per-worker batch
 /// counts are kept separately ([`ServerStats::worker_batches`]) so load
 /// imbalance is observable.
+///
+/// ## Memory-ordering contract (audited)
+///
+/// Every access in this struct is `Ordering::Relaxed`, deliberately:
+///
+/// - Each field is an *independent monotone counter or gauge*. No
+///   reader derives a cross-field invariant that needs the counters to
+///   be mutually ordered (conservation assertions like
+///   `batches*B == requests+padded` are only checked after `stop()`
+///   joins the workers, and a `join` is a full happens-before edge that
+///   makes every Relaxed write visible).
+/// - Nothing is *published through* these atomics: no reader loads a
+///   counter and then dereferences data the writer prepared before the
+///   store, so there is no release/acquire pairing to preserve.
+///   (Contrast with a seqlock or a ready-flag, which would need
+///   `Release` on the store and `Acquire` on the load.)
+/// - Snapshot readers (`to_json`, the `serve` summary) only promise a
+///   *tearing-tolerant* view: each field is individually atomic, the
+///   set is not. `SeqCst` would not fix tearing — only a lock would —
+///   so paying for it buys nothing.
+/// - Relaxed atomics still forbid torn reads and lost increments
+///   (`fetch_add` is atomic read-modify-write at every ordering), which
+///   is the whole requirement here.
 #[derive(Debug, Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
@@ -322,7 +357,7 @@ pub struct ServerHandle {
     /// read side, `stop` flips the flag under the write side *before*
     /// sending the shutdown tokens, so every accepted request is
     /// FIFO-ordered ahead of every token and drains to a real reply.
-    closed: Arc<RwLock<bool>>,
+    closed: Arc<Gate>,
 }
 
 impl ServerHandle {
@@ -346,19 +381,16 @@ impl ServerHandle {
             enqueued: Instant::now(),
         });
         {
-            // Hold the read side across the send: once `stop` has taken
-            // the write side no new request can slip in behind the
-            // shutdown tokens. Blocking sends under the read lock are
-            // fine — workers keep draining the queue until the tokens
-            // (which `stop` can only send after this guard drops)
-            // arrive, so blocked senders always make progress.
-            let closed = self
-                .closed
-                .read()
-                .unwrap_or_else(|poisoned| poisoned.into_inner());
-            if *closed {
-                return Err(InferError::Stopped);
-            }
+            // Hold the gate's read side across the send: once `stop`
+            // has taken the write side no new request can slip in
+            // behind the shutdown tokens. Blocking sends under the read
+            // side are fine — workers keep draining the queue until the
+            // tokens (which `stop` can only send after this guard
+            // drops) arrive, so blocked senders always make progress.
+            let _admitted = match self.closed.enter() {
+                Some(guard) => guard,
+                None => return Err(InferError::Stopped),
+            };
             match self.policy {
                 QueuePolicy::Block => {
                     if self.tx.send(msg).is_err() {
@@ -381,6 +413,11 @@ impl ServerHandle {
         // caller blocked in `send` is not *in* the queue, so the peak
         // stays bounded by the configured depth (modulo the benign
         // decrement-first race documented on `queue_depth`).
+        // Ordering: Relaxed suffices — the gauge is advisory (readers
+        // clamp at zero) and the send itself is the synchronizing edge
+        // that hands the request to the worker; nothing is published
+        // through this counter. Likewise `fetch_max` below: the peak is
+        // monotone, and RMW atomicity alone guarantees no lost update.
         let depth = self.stats.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         if depth > 0 {
             self.stats
@@ -478,7 +515,7 @@ pub struct Server {
     model: String,
     joins: Vec<std::thread::JoinHandle<()>>,
     shutdown: SyncSender<Msg>,
-    closed: Arc<RwLock<bool>>,
+    closed: Arc<Gate>,
 }
 
 impl Server {
@@ -509,8 +546,12 @@ impl Server {
         // times (see `EngineBuilder::preload_profiles`).
         let engine = engine.preload_profiles();
         let stats = Arc::new(ServerStats::with_workers(workers));
-        let (tx, rx) = sync_channel::<Msg>(queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let closed = Arc::new(Gate::labeled("closed"));
+        let (tx, rx) = crate::conc::sync::sync_channel_labeled::<Msg>(queue_depth, "dispatch");
+        // Declare the drain contract to the model checker: shutdown
+        // tokens on `dispatch` are only legal once `closed` is shut.
+        tx.bind_gate(&closed);
+        let rx = Arc::new(Mutex::labeled(rx, "dispatch-rx"));
         let (ready_tx, ready_rx) = channel::<Result<(Shape, String)>>();
         let mut joins = Vec::with_capacity(workers);
         for worker in 0..workers {
@@ -574,7 +615,6 @@ impl Server {
         let batch = input_shape.batch();
         let mut dims = input_shape.dims.clone();
         dims[0] = 1;
-        let closed = Arc::new(RwLock::new(false));
         let handle = ServerHandle {
             tx: tx.clone(),
             image_shape: Shape::new(dims, input_shape.dtype),
@@ -630,15 +670,15 @@ impl Server {
     /// with a clean "server stopped" error instead of racing the
     /// tokens.
     pub fn stop(mut self) {
-        {
-            let mut closed = self
-                .closed
-                .write()
-                .unwrap_or_else(|poisoned| poisoned.into_inner());
-            *closed = true;
-        }
+        // Close the gate first: blocks until in-flight `try_infer`
+        // enqueues (which hold the read side) land, then rejects
+        // everything after — the tokens below are provably behind every
+        // accepted request in the FIFO queue. `send_token` is a plain
+        // send in production; under the model checker it tags the slot
+        // so flipping these two steps is a BSL055 violation.
+        self.closed.close();
         for _ in 0..self.joins.len() {
-            if self.shutdown.send(Msg::Shutdown).is_err() {
+            if self.shutdown.send_token(Msg::Shutdown).is_err() {
                 break;
             }
         }
@@ -673,6 +713,110 @@ pub fn topology(workers: usize, queue_depth: usize) -> crate::analysis::Topology
             count: workers,
         })
         .on_shutdown(ShutdownStep::Join("worker".into()))
+}
+
+/// Bug switches for [`drain_protocol`]. `Default` (all `false`) is the
+/// shipped protocol; each switch re-introduces one historical bug so the
+/// model-check suite can prove the checker still finds them.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DrainBugs {
+    /// Revert the PR 6 drain-ordering fix: send the per-worker shutdown
+    /// tokens *before* closing the intake gate. A request admitted in
+    /// the window lands behind a token in the FIFO queue and its reply
+    /// channel is dropped — BSL055 (token on a still-open gate).
+    pub tokens_before_gate: bool,
+    /// Revert the PR 2 shutdown-while-queued fix: submit without the
+    /// gate at all (and leave the channel unbound), so a request can
+    /// enqueue after the tokens and strand in the queue when the last
+    /// worker exits — BSL056 (non-quiescent join).
+    pub ungated: bool,
+}
+
+/// Model-checked replica of the [`Server`] coordination protocol —
+/// exactly the sync skeleton of [`Server::start`] / [`ServerHandle::try_infer`]
+/// / [`Server::stop`] / [`batch_loop`], with engine execution replaced
+/// by completing a [`crate::conc::sync::model::Obligation`] per
+/// accepted request. Explored by `brainslug check --schedules` (clean
+/// configuration) and the model-check test suite (bug configurations).
+///
+/// Also runs as a plain multi-threaded smoke test outside the model
+/// (the facade falls back to `std::sync`).
+pub fn drain_protocol(workers: usize, queue_depth: usize, requests: usize, bugs: DrainBugs) {
+    use crate::conc::sync::{model, sync_channel_labeled};
+
+    enum Job {
+        Work(model::Obligation),
+        Shutdown,
+    }
+
+    let gate = Arc::new(Gate::labeled("closed"));
+    let (tx, rx) = sync_channel_labeled::<Job>(queue_depth, "dispatch");
+    if !bugs.ungated {
+        tx.bind_gate(&gate);
+    }
+    let rx = Arc::new(Mutex::labeled(rx, "dispatch-rx"));
+
+    // Worker pool: the gather half of `batch_loop` (recv under the
+    // shared queue mutex, one `Shutdown` consumed per worker).
+    let mut pool = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let rx = rx.clone();
+        pool.push(model::spawn(&format!("worker-{w}"), move || loop {
+            let msg = {
+                let q = match rx.lock() {
+                    Ok(q) => q,
+                    Err(_) => return,
+                };
+                q.recv()
+            };
+            match msg {
+                Ok(Job::Work(ob)) => ob.complete(),
+                Ok(Job::Shutdown) | Err(_) => return,
+            }
+        }));
+    }
+
+    // Client: `try_infer`'s admission dance. Every *accepted* request
+    // opens an obligation that only the serving worker completes; a
+    // rejected request owes nothing.
+    let client = {
+        let gate = gate.clone();
+        let tx = tx.clone();
+        model::spawn("client", move || {
+            for i in 0..requests {
+                if bugs.ungated {
+                    let _ = tx.send(Job::Work(model::obligation(&format!("request-{i}"))));
+                } else {
+                    match gate.enter() {
+                        Some(_admitted) => {
+                            // Hold the read side across the send, like
+                            // `try_infer` — this is the FIFO fence.
+                            let _ =
+                                tx.send(Job::Work(model::obligation(&format!("request-{i}"))));
+                        }
+                        None => return, // stopped: reject fast, owe nothing
+                    }
+                }
+            }
+        })
+    };
+
+    // Shutdown (`Server::stop`), racing the client's submissions.
+    if bugs.tokens_before_gate {
+        for _ in 0..workers {
+            let _ = tx.send_token(Job::Shutdown);
+        }
+        gate.close();
+    } else {
+        gate.close();
+        for _ in 0..workers {
+            let _ = tx.send_token(Job::Shutdown);
+        }
+    }
+    client.join();
+    for h in pool {
+        h.join();
+    }
 }
 
 /// One worker's serve loop: lock the shared queue, gather up to `batch`
@@ -732,6 +876,10 @@ fn batch_loop(
         match engine.run(input) {
             Ok((out, _stats)) => {
                 let out_elems = out.shape.numel() / batch;
+                // Ordering: all Relaxed — independent statistical
+                // counters (see the `ServerStats` contract). The reply
+                // `send` two lines down is what publishes the result to
+                // the caller; these counters piggyback no data.
                 stats.batches.fetch_add(1, Ordering::Relaxed);
                 stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
                 stats
@@ -1145,7 +1293,7 @@ mod tests {
         let mut failing = sim_engine(2)
             .build_with(|_, _, _| Ok(Box::new(FailingBackend) as Box<dyn crate::engine::Backend>))
             .unwrap();
-        let (tx, rx) = sync_channel(4);
+        let (tx, rx) = crate::conc::sync::sync_channel(4);
         let (reply_tx, reply_rx) = channel();
         let stats = Arc::new(ServerStats::with_workers(1));
         let elems = failing.graph().input_shape().numel() / 2;

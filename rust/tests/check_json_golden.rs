@@ -1,0 +1,98 @@
+//! Golden test for the `brainslug check --format json` report schema.
+//!
+//! Downstream CI tooling parses this JSON (the check job uploads it as
+//! an artifact), so the shape is a public contract: top-level
+//! `diagnostics` / `errors` / `warnings` from `Report::to_json`, plus
+//! the `networks` / `device` / `schedules` keys the CLI adds. Each
+//! diagnostic carries `code`, `severity`, `subject`, `message`, and —
+//! only when present — `node` and `notes`. Keys render in sorted order
+//! (the JSON object is a BTreeMap), so the full pretty rendering is
+//! deterministic and can be pinned verbatim. If this test breaks, the
+//! schema changed: update DESIGN.md §Static Analysis alongside it.
+
+use brainslug::analysis::{DiagCode, Diagnostic, Report};
+use brainslug::json::Json;
+
+/// Mirror of the assembly in `cmd_check`: the report body plus the
+/// CLI-level context keys.
+fn render(report: &Report, networks: &[&str], device: &str, schedules: Option<usize>) -> String {
+    let mut j = report.to_json();
+    j.set(
+        "networks",
+        Json::Arr(networks.iter().map(|n| Json::Str((*n).into())).collect()),
+    );
+    j.set("device", Json::Str(device.into()));
+    if let Some(n) = schedules {
+        j.set("schedules", Json::Num(n as f64));
+    }
+    j.to_string_pretty()
+}
+
+#[test]
+fn clean_report_schema_is_pinned() {
+    let report = Report::new();
+    let got = render(&report, &["vgg16"], "paper-cpu", None);
+    let want = r#"{
+  "device": "paper-cpu",
+  "diagnostics": [],
+  "errors": 0,
+  "networks": [
+    "vgg16"
+  ],
+  "warnings": 0
+}
+"#;
+    assert_eq!(got, want);
+}
+
+#[test]
+fn schedule_finding_schema_is_pinned() {
+    // One model-checker error with a counterexample note and one
+    // warning: exercises every optional field the schema allows.
+    let mut report = Report::new();
+    report.push(
+        Diagnostic::new(
+            DiagCode::GateAfterTokens,
+            "schedule model 'server-drain'",
+            "shutdown token sent on channel 'dispatch' before gate 'closed' closed",
+        )
+        .note("counterexample schedule (4 decisions, one tid each): 0 1 1 0")
+        .note("replay with ExploreOptions { replay: Some(schedule), .. } to reproduce"),
+    );
+    report.push(Diagnostic::new(
+        DiagCode::BareCondvarWait,
+        "schedule model 'server-drain'",
+        "condvar waited on without a predicate loop",
+    ));
+    let got = render(&report, &["vgg16", "resnet18"], "paper-cpu", Some(256));
+    let want = r#"{
+  "device": "paper-cpu",
+  "diagnostics": [
+    {
+      "code": "BSL055",
+      "message": "shutdown token sent on channel 'dispatch' before gate 'closed' closed",
+      "notes": [
+        "counterexample schedule (4 decisions, one tid each): 0 1 1 0",
+        "replay with ExploreOptions { replay: Some(schedule), .. } to reproduce"
+      ],
+      "severity": "error",
+      "subject": "schedule model 'server-drain'"
+    },
+    {
+      "code": "BSL052",
+      "message": "condvar waited on without a predicate loop",
+      "severity": "warning",
+      "subject": "schedule model 'server-drain'"
+    }
+  ],
+  "errors": 1,
+  "networks": [
+    "vgg16",
+    "resnet18"
+  ],
+  "schedules": 256,
+  "warnings": 1
+}
+"#;
+    assert_eq!(got, want);
+}

@@ -1,0 +1,199 @@
+//! End-to-end schedule model checking of the shipped runtime protocols.
+//!
+//! The acceptance bar for the checker is historical: two real bugs were
+//! fixed in this repo's past — the shutdown-while-queued race in the
+//! batch server (tokens could be consumed before the admission gate
+//! closed, stranding queued work) and the listener drain-ordering bug
+//! (pool threads bailing on a stop flag and abandoning accepted
+//! connections). Each replica exposes a bug switch that re-introduces
+//! the pre-fix behavior *in test only*; the checker must find both with
+//! a replayable counterexample schedule, and must find nothing in the
+//! shipped (default) configurations.
+
+use brainslug::conc::{explore, report_to_diags, ExploreOptions, Violation};
+use brainslug::http::listener::{self, ListenerBugs};
+use brainslug::server::{self, DrainBugs};
+use std::sync::Arc;
+
+fn opts(dfs: usize) -> ExploreOptions {
+    ExploreOptions {
+        dfs_executions: dfs,
+        ..ExploreOptions::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shipped configurations explore clean.
+// ---------------------------------------------------------------------
+
+#[test]
+fn shipped_server_drain_explores_clean() {
+    let report = explore(
+        "server-drain",
+        &opts(256),
+        Arc::new(|| server::drain_protocol(2, 2, 2, DrainBugs::default())),
+    );
+    assert!(report.finding.is_none(), "{:?}", report.finding);
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+#[test]
+fn shipped_listener_drain_explores_clean() {
+    let report = explore(
+        "listener-drain",
+        &opts(256),
+        Arc::new(|| listener::drain_protocol(2, 2, 3, ListenerBugs::default())),
+    );
+    assert!(report.finding.is_none(), "{:?}", report.finding);
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+#[test]
+fn shipped_band_pool_explores_clean() {
+    let report = explore(
+        "cpu-band-pool",
+        &opts(256),
+        Arc::new(|| brainslug::cpu::par::pool_protocol(2, 4)),
+    );
+    assert!(report.finding.is_none(), "{:?}", report.finding);
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+// ---------------------------------------------------------------------
+// Reverting the shutdown-gate fix: shutdown tokens sent *before* the
+// admission gate closes. The channel is bound to the gate, so the model
+// flags the first token that races the close — BSL055.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reverted_shutdown_gate_fix_is_found_as_bsl055() {
+    let bugs = DrainBugs {
+        tokens_before_gate: true,
+        ..DrainBugs::default()
+    };
+    let report = explore(
+        "server-drain-reverted-gate",
+        &opts(512),
+        Arc::new(move || server::drain_protocol(2, 2, 2, bugs)),
+    );
+    let finding = report.finding.expect("pre-fix bug must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::GateAfterTokens { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    assert!(
+        !finding.counterexample.schedule.is_empty(),
+        "counterexample must carry a replayable schedule"
+    );
+
+    // The diagnostic surface agrees: BSL055, with the schedule in a note.
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL055"), "{diags:?}");
+    let d = diags.iter().find(|d| d.code.as_str() == "BSL055").unwrap();
+    assert!(
+        d.notes.iter().any(|n| n.contains("counterexample schedule")),
+        "{:?}",
+        d.notes
+    );
+    assert!(
+        d.notes.iter().any(|n| n.contains("replay with")),
+        "{:?}",
+        d.notes
+    );
+}
+
+// ---------------------------------------------------------------------
+// Reverting the admission-gate entirely (clients send without holding a
+// gate guard): under the schedule where workers consume both shutdown
+// tokens before the late client sends, the queued request is stranded —
+// its obligation stays open at join time. BSL056.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reverted_admission_gate_is_found_as_bsl056() {
+    let bugs = DrainBugs {
+        ungated: true,
+        ..DrainBugs::default()
+    };
+    let report = explore(
+        "server-drain-ungated",
+        &opts(512),
+        Arc::new(move || server::drain_protocol(2, 2, 2, bugs)),
+    );
+    let finding = report.finding.expect("pre-fix bug must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::NonQuiescent { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL056"), "{diags:?}");
+}
+
+// ---------------------------------------------------------------------
+// Reverting the listener drain fix: pool threads check the stop flag
+// after dequeuing and abandon the connection instead of answering it.
+// The accepted connection's obligation stays open — BSL056.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reverted_listener_drain_fix_is_found_as_bsl056() {
+    let bugs = ListenerBugs {
+        abandon_queue_on_stop: true,
+    };
+    let report = explore(
+        "listener-drain-reverted",
+        &opts(512),
+        Arc::new(move || listener::drain_protocol(2, 2, 3, bugs)),
+    );
+    let finding = report.finding.expect("pre-fix bug must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::NonQuiescent { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL056"), "{diags:?}");
+}
+
+// ---------------------------------------------------------------------
+// Counterexamples replay: pinning the violating schedule reproduces the
+// same violation class deterministically, with no search.
+// ---------------------------------------------------------------------
+
+#[test]
+fn counterexample_schedule_replays_deterministically() {
+    let bugs = DrainBugs {
+        tokens_before_gate: true,
+        ..DrainBugs::default()
+    };
+    let report = explore(
+        "server-drain-replay-src",
+        &opts(512),
+        Arc::new(move || server::drain_protocol(2, 2, 2, bugs)),
+    );
+    let finding = report.finding.expect("need a finding to replay");
+    let schedule = finding.counterexample.schedule.clone();
+
+    for round in 0..3 {
+        let replay_opts = ExploreOptions {
+            replay: Some(schedule.clone()),
+            ..ExploreOptions::default()
+        };
+        let replayed = explore(
+            "server-drain-replay",
+            &replay_opts,
+            Arc::new(move || server::drain_protocol(2, 2, 2, bugs)),
+        );
+        assert_eq!(replayed.executions, 1, "replay runs exactly one schedule");
+        let f = replayed
+            .finding
+            .unwrap_or_else(|| panic!("replay round {round} lost the violation"));
+        assert!(
+            matches!(f.violation, Violation::GateAfterTokens { .. }),
+            "replay round {round} reclassified: {:?}",
+            f.violation
+        );
+    }
+}
