@@ -1,0 +1,254 @@
+//! Figure 21 (repro extension): availability and tail latency under a
+//! seeded fault storm — the experiment behind the fault-injection and
+//! worker-supervision layer.
+//!
+//! Three phases against one HTTP-served engine:
+//!
+//! 1. **baseline** — closed-loop load with injection armed but all
+//!    rates at zero: proves the disarmed layer costs nothing visible
+//!    and every request succeeds.
+//! 2. **storm** — every injection point hot at once (worker panics,
+//!    slow batches, queue stalls, socket resets, partial writes) plus
+//!    one guaranteed panic trigger. Clients retry with jittered
+//!    backoff. The bar: every logical request ends in a *reply or a
+//!    typed error* — nothing hangs — and the server's restart counter
+//!    matches the injector's fired-panic count exactly.
+//! 3. **recovery** — rates back to zero, wait for `/healthz` to report
+//!    `ready` again, rerun the baseline load: throughput must be back
+//!    within 10% of the pre-storm baseline.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use brainslug::bench::{self, Table};
+use brainslug::fault::{FaultInjector, FaultPoint};
+use brainslug::http::{self, HttpConfig, HttpServer, LoadReport, RetryPolicy};
+use brainslug::json::{self, Json};
+use brainslug::rng::fill_f32;
+use brainslug::server::{QueuePolicy, ServerConfig};
+
+/// Compiled batch size of the served engine.
+const BATCH: usize = 4;
+/// Wall-clock cost of one batch after pacing calibration.
+const TARGET_BATCH_S: f64 = 4e-3;
+const WORKERS: usize = 2;
+const CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 12;
+/// Injector seed; override with BRAINSLUG_FAULT_SEED (the CI fault
+/// matrix sweeps it).
+const FAULT_SEED: u64 = 21;
+
+/// Storm-phase rates per injection point (per draw).
+const STORM_RATES: [(FaultPoint, f64); 5] = [
+    (FaultPoint::WorkerPanic, 0.05),
+    (FaultPoint::SlowExec, 0.08),
+    (FaultPoint::QueueStall, 0.05),
+    (FaultPoint::SocketReset, 0.04),
+    (FaultPoint::PartialWrite, 0.20),
+];
+
+fn start_http(scale: f64, inj: Arc<FaultInjector>) -> HttpServer {
+    let server = ServerConfig::new(bench::serving_engine(BATCH, scale))
+        .workers(WORKERS)
+        .queue_depth(4 * BATCH)
+        .queue_policy(QueuePolicy::Block)
+        .max_wait(Duration::from_millis(2))
+        .faults(inj)
+        .start()
+        .expect("server start");
+    let mut cfg = HttpConfig::new("127.0.0.1:0");
+    cfg.conn_threads = CLIENTS + 4;
+    HttpServer::start(server, cfg).expect("http start")
+}
+
+fn main() -> anyhow::Result<()> {
+    // Calibrate pacing against the unpaced model time (fig16 scheme).
+    let mut probe = bench::serving_engine(BATCH, 0.0).build()?;
+    let input = probe.synthetic_input();
+    let (_, stats) = probe.run(input)?;
+    let scale = TARGET_BATCH_S / stats.total_s.max(1e-12);
+
+    let seed = brainslug::fault::seed_from_env(FAULT_SEED);
+    let inj = Arc::new(FaultInjector::new(seed));
+    let http = start_http(scale, inj.clone());
+    let addr = http.addr().to_string();
+    let state = http.state().clone();
+    let body = run_body(&state.model, state.image_elems);
+
+    println!("# Figure 21 — availability and p99 under a seeded fault storm");
+    println!(
+        "batch={BATCH} batch-cost={:.0}ms workers={WORKERS} clients={CLIENTS} \
+         reqs/client={REQS_PER_CLIENT} fault-seed={seed}",
+        TARGET_BATCH_S * 1e3
+    );
+    let mut table = Table::new(&[
+        "phase", "sent", "ok", "rejected", "expired", "errors", "retries", "req/s", "p50-ms",
+        "p99-ms",
+    ]);
+    let mut rows = Vec::new();
+
+    // Phase 1: baseline (injection armed, every rate zero).
+    let baseline = http::closed_loop(&addr, CLIENTS, REQS_PER_CLIENT, body.as_bytes());
+    assert_eq!(
+        baseline.ok, baseline.sent,
+        "baseline: {} errors, {} rejected",
+        baseline.errors, baseline.rejected
+    );
+    emit(&mut table, &mut rows, "baseline", &baseline);
+
+    // Phase 2: the storm. Rates on everywhere, plus one guaranteed
+    // panic so the supervision path is exercised at every seed.
+    for (point, rate) in STORM_RATES {
+        inj.set_rate(point, rate);
+    }
+    inj.trigger(FaultPoint::WorkerPanic);
+    let retry = RetryPolicy {
+        max_attempts: 5,
+        base_ms: 5,
+        cap_ms: 500,
+        budget: 200,
+        seed,
+    };
+    let storm = http::closed_loop_with(&addr, CLIENTS, REQS_PER_CLIENT, body.as_bytes(), Some(retry));
+    // Availability bar: every logical request was *answered* — by a
+    // 200, a typed shed (503/504), or a transport error the client
+    // observed. Nothing may hang (closed_loop would still be blocked).
+    assert_eq!(
+        storm.sent as usize,
+        CLIENTS * REQS_PER_CLIENT,
+        "storm lost track of requests"
+    );
+    assert!(
+        storm.ok as f64 >= 0.75 * storm.sent as f64,
+        "storm availability collapsed: ok={} of {} (errors={} rejected={} expired={})",
+        storm.ok,
+        storm.sent,
+        storm.errors,
+        storm.rejected,
+        storm.expired
+    );
+    let panics = inj.fired(FaultPoint::WorkerPanic);
+    assert!(panics >= 1, "the triggered panic must have fired");
+    let restarts = state.stats.restarts.load(Ordering::Relaxed);
+    assert_eq!(
+        restarts, panics,
+        "every injected panic must surface as exactly one supervised restart"
+    );
+    emit(&mut table, &mut rows, "storm", &storm);
+
+    // Phase 3: recovery. Disarm, wait for Ready, rerun the baseline.
+    for (point, _) in STORM_RATES {
+        inj.set_rate(point, 0.0);
+    }
+    wait_ready(&addr);
+    let recovery = http::closed_loop(&addr, CLIENTS, REQS_PER_CLIENT, body.as_bytes());
+    assert_eq!(
+        recovery.ok, recovery.sent,
+        "recovery: {} errors, {} rejected",
+        recovery.errors, recovery.rejected
+    );
+    assert!(
+        recovery.throughput_rps() >= 0.9 * baseline.throughput_rps(),
+        "post-storm throughput {:.0}/s fell more than 10% below baseline {:.0}/s",
+        recovery.throughput_rps(),
+        baseline.throughput_rps()
+    );
+    emit(&mut table, &mut rows, "recovery", &recovery);
+
+    // The server's own accounting agrees with the injector's.
+    let stats_resp = http::one_shot(&addr, "GET", "/v1/stats", None)?;
+    let parsed = json::parse(std::str::from_utf8(&stats_resp.body)?)?;
+    assert_eq!(
+        parsed.usize_field("restarts").expect("restarts field") as u64,
+        panics,
+        "/v1/stats restarts disagrees with the injector"
+    );
+    assert_eq!(
+        parsed.str_field("health").expect("health field"),
+        "ready",
+        "server must end the experiment Ready"
+    );
+    http.shutdown();
+
+    table.print();
+    for row in &mut rows {
+        row.set("fault_seed", Json::Num(seed as f64));
+        row.set("restarts", Json::Num(restarts as f64));
+        row.set("panics_fired", Json::Num(panics as f64));
+    }
+    bench::emit_bench_json("fig21_fault_recovery", rows);
+    Ok(())
+}
+
+/// Poll `/healthz` until the state machine reports `ready` again (the
+/// last replica rebuild finished), bounded at 5 s.
+fn wait_ready(addr: &str) {
+    for _ in 0..100 {
+        if let Ok(resp) = http::one_shot(addr, "GET", "/healthz", None) {
+            if resp.status == 200 {
+                if let Ok(parsed) = json::parse(&String::from_utf8_lossy(&resp.body)) {
+                    if parsed.str_field("state").is_ok_and(|s| s == "ready") {
+                        return;
+                    }
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server did not return to Ready within 5 s of the storm ending");
+}
+
+fn emit(table: &mut Table, rows: &mut Vec<Json>, phase: &str, report: &LoadReport) {
+    table.row(vec![
+        phase.into(),
+        report.sent.to_string(),
+        report.ok.to_string(),
+        report.rejected.to_string(),
+        report.expired.to_string(),
+        report.errors.to_string(),
+        report.retries.to_string(),
+        format!("{:.0}", report.throughput_rps()),
+        format!("{:.2}", report.p50_ms()),
+        format!("{:.2}", report.p99_ms()),
+    ]);
+    let mut row = Json::object();
+    row.set("bench", Json::Str("fig21_fault_recovery".into()));
+    row.set("phase", Json::Str(phase.into()));
+    row.set("workers", Json::from_usize(WORKERS));
+    row.set("batch", Json::from_usize(BATCH));
+    row.set("sent", Json::Num(report.sent as f64));
+    row.set("ok", Json::Num(report.ok as f64));
+    row.set("rejected", Json::Num(report.rejected as f64));
+    row.set("expired", Json::Num(report.expired as f64));
+    row.set("errors", Json::Num(report.errors as f64));
+    row.set("retries", Json::Num(report.retries as f64));
+    row.set(
+        "availability",
+        Json::Num(if report.sent == 0 {
+            1.0
+        } else {
+            report.ok as f64 / report.sent as f64
+        }),
+    );
+    row.set("throughput_rps", Json::Num(report.throughput_rps()));
+    row.set("mean_ms", Json::Num(report.mean_ms()));
+    row.set("p50_ms", Json::Num(report.p50_ms()));
+    row.set("p99_ms", Json::Num(report.p99_ms()));
+    rows.push(row);
+}
+
+fn run_body(model: &str, elems: usize) -> String {
+    let mut o = Json::object();
+    o.set("model", Json::Str(model.to_string()));
+    o.set(
+        "input",
+        Json::Arr(
+            fill_f32(21, elems)
+                .into_iter()
+                .map(|v| Json::Num(v as f64))
+                .collect(),
+        ),
+    );
+    o.to_string_compact()
+}

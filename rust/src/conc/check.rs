@@ -5,13 +5,15 @@
 //! The replicas live next to the code they model —
 //! [`crate::server::drain_protocol`] (queue + gate + shutdown tokens),
 //! [`crate::http::listener::drain_protocol`] (accept → pool handoff →
-//! drain ordering) and [`crate::cpu::par::pool_protocol`] (scoped band
-//! pool) — so a change to a runtime protocol lands in the same review
-//! as the change to its model. Each replica takes a bug-switch struct
-//! whose default is the shipped protocol; the switches re-introduce the
-//! historical bugs (the PR 2 shutdown-while-queued loss and the PR 6
-//! token-overtakes-request drain race) so the test suite can prove the
-//! checker still catches them.
+//! drain ordering), [`crate::cpu::par::pool_protocol`] (scoped band
+//! pool) and [`crate::fault::supervisor_protocol`] (worker crash →
+//! restart with shutdown-token conservation) — so a change to a runtime
+//! protocol lands in the same review as the change to its model. Each
+//! replica takes a bug-switch struct whose default is the shipped
+//! protocol; the switches re-introduce the historical bugs (the PR 2
+//! shutdown-while-queued loss, the PR 6 token-overtakes-request drain
+//! race, and the supervisor lost-restart race) so the test suite can
+//! prove the checker still catches them.
 
 use std::sync::Arc;
 
@@ -120,7 +122,7 @@ pub fn report_to_diags(report: &ExploreReport) -> Vec<Diagnostic> {
 }
 
 /// The protocol suite `brainslug check` explores: the shipped (bug-free)
-/// configurations of the three runtime protocols, sized small enough
+/// configurations of the four runtime protocols, sized small enough
 /// that the DFS pass gets real coverage of the interleaving space.
 fn protocol_suite() -> Vec<(&'static str, Arc<dyn Fn() + Send + Sync>)> {
     vec![
@@ -145,6 +147,18 @@ fn protocol_suite() -> Vec<(&'static str, Arc<dyn Fn() + Send + Sync>)> {
             "cpu-band-pool",
             Arc::new(|| {
                 crate::cpu::par::pool_protocol(2, 4);
+            }),
+        ),
+        (
+            "fault-supervisor",
+            Arc::new(|| {
+                crate::fault::supervisor_protocol(
+                    2,
+                    2,
+                    1,
+                    1,
+                    crate::fault::SupervisorBugs::default(),
+                );
             }),
         ),
     ]

@@ -20,7 +20,7 @@
 //! [`crate::server::Server::stop`] drains every queued request to a
 //! real reply → workers join.
 
-use std::io::{BufRead, BufReader};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::TrySendError;
@@ -33,6 +33,7 @@ use anyhow::{Context, Result};
 // `std::sync` in production, schedule-explored via [`drain_protocol`]
 // under the model checker.
 use crate::conc::sync::{sync_channel_labeled, Mutex};
+use crate::fault::FaultPoint;
 use crate::server::Server;
 
 use super::router::{route, AppState};
@@ -44,6 +45,9 @@ const POLL_TICK: Duration = Duration::from_millis(10);
 
 /// Default for [`HttpConfig::idle_timeout`].
 const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default for [`HttpConfig::header_deadline`].
+const HEADER_DEADLINE: Duration = Duration::from_secs(5);
 
 /// Listener configuration.
 #[derive(Debug, Clone)]
@@ -59,6 +63,11 @@ pub struct HttpConfig {
     /// How long a keep-alive connection may sit idle before we close it
     /// (default 30 s).
     pub idle_timeout: Duration,
+    /// Once a request's first byte has arrived, how long the client has
+    /// to deliver the *rest* of it (headers + body). A slow-loris peer
+    /// trickling header bytes is answered with 408 and closed instead
+    /// of pinning a connection thread forever (default 5 s).
+    pub header_deadline: Duration,
     pub limits: WireLimits,
 }
 
@@ -69,6 +78,7 @@ impl HttpConfig {
             conn_threads: 8,
             conn_queue: 64,
             idle_timeout: IDLE_TIMEOUT,
+            header_deadline: HEADER_DEADLINE,
             limits: WireLimits::default(),
         }
     }
@@ -102,6 +112,8 @@ impl HttpServer {
             workers: server.workers(),
             model: server.model_name().to_string(),
             image_elems: server.handle().image_shape().numel(),
+            queue_capacity: server.queue_capacity(),
+            faults: server.faults(),
             started: Instant::now(),
         };
         let stop = Arc::new(AtomicBool::new(false));
@@ -115,6 +127,7 @@ impl HttpServer {
             let stop = stop.clone();
             let limits = cfg.limits;
             let idle_timeout = cfg.idle_timeout;
+            let header_deadline = cfg.header_deadline;
             conn_threads.push(std::thread::spawn(move || loop {
                 // Receiver disconnects when the acceptor (sole sender)
                 // exits — that is the pool's shutdown signal. Crucially
@@ -126,7 +139,7 @@ impl HttpServer {
                     Ok(s) => s,
                     Err(_) => return,
                 };
-                serve_connection(stream, &state, &limits, &stop, idle_timeout);
+                serve_connection(stream, &state, &limits, &stop, idle_timeout, header_deadline);
             }));
         }
 
@@ -328,21 +341,118 @@ fn shed(mut stream: TcpStream) {
     let _ = write_response(&mut stream, &resp, true);
 }
 
-/// Serve one connection until it closes, errors, times out idle, or
-/// the server begins shutdown.
+/// [`TcpStream`] wrapper enforcing a per-request read deadline.
+///
+/// Disarmed (`deadline: None`) it is a transparent passthrough — the
+/// idle wait between keep-alive requests is governed by `idle_timeout`
+/// in [`serve_connection`] instead. Armed, it absorbs the 250 ms
+/// socket-timeout ticks and keeps retrying until bytes arrive, the
+/// deadline passes (`expired` is set and the read fails), or shutdown
+/// begins. This is what turns a slow-loris client — one that trickles
+/// header bytes just fast enough to defeat the socket timeout — into a
+/// bounded 408 instead of a pinned connection thread.
+struct DeadlineStream<'a> {
+    stream: TcpStream,
+    /// Absolute deadline for the bytes of the in-progress request.
+    deadline: Option<Instant>,
+    /// Set when a read failed because `deadline` passed; lets the
+    /// caller distinguish "peer too slow" (408) from "peer gone".
+    expired: bool,
+    stop: &'a AtomicBool,
+}
+
+impl Read for DeadlineStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(deadline) = self.deadline else {
+            return self.stream.read(buf);
+        };
+        loop {
+            if Instant::now() >= deadline {
+                self.expired = true;
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "request read deadline expired",
+                ));
+            }
+            // Ordering: Relaxed — boolean signal, same contract as the
+            // other stop-flag polls in this module.
+            if self.stop.load(Ordering::Relaxed) {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "server shutting down",
+                ));
+            }
+            match self.stream.read(buf) {
+                // Socket-timeout tick with no data: re-check the
+                // deadline and the stop flag, then wait again.
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                other => return other,
+            }
+        }
+    }
+}
+
+impl Write for DeadlineStream<'_> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.stream.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+/// Write adapter for [`FaultPoint::PartialWrite`]: delivers a few bytes
+/// per call and periodically fails with `Interrupted`, exercising the
+/// retry loop in [`super::wire::write_full`] over a real socket.
+/// Deterministic given its seed.
+struct ChoppyWriter<'a, W: Write> {
+    inner: &'a mut W,
+    rng: u64,
+}
+
+impl<W: Write> Write for ChoppyWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let r = crate::rng::splitmix64(&mut self.rng);
+        if r % 5 == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                "injected fault: partial-write",
+            ));
+        }
+        let n = buf.len().min(1 + (r % 7) as usize);
+        self.inner.write(&buf[..n])
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Serve one connection until it closes, errors, times out (idle or
+/// mid-request), or the server begins shutdown.
 fn serve_connection(
     stream: TcpStream,
     state: &AppState,
     limits: &WireLimits,
     stop: &AtomicBool,
     idle_timeout: Duration,
+    header_deadline: Duration,
 ) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     // Short read timeout = the idle-wait tick: between requests we spin
     // on fill_buf so keep-alive waits stay interruptible by `stop`.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(DeadlineStream {
+        stream,
+        deadline: None,
+        expired: false,
+        stop,
+    });
     loop {
         // Idle wait: block (bounded by the read timeout) until the next
         // request's first byte, EOF, or shutdown.
@@ -365,7 +475,22 @@ fn serve_connection(
                 Err(_) => return,
             }
         }
-        let resp = match read_request(&mut reader, limits) {
+        // A request has begun: simulate the peer's NIC dying under us.
+        if let Some(f) = &state.faults {
+            if f.fire(FaultPoint::SocketReset) {
+                return;
+            }
+        }
+        // First byte seen → the client owns a bounded budget for the
+        // rest of the request.
+        {
+            let ds = reader.get_mut();
+            ds.deadline = Some(Instant::now() + header_deadline);
+            ds.expired = false;
+        }
+        let parsed = read_request(&mut reader, limits);
+        reader.get_mut().deadline = None;
+        let resp = match parsed {
             Ok(req) => {
                 let mut resp = route(state, &req);
                 resp.close |= !req.keep_alive;
@@ -386,14 +511,34 @@ fn serve_connection(
                 resp.close = true;
                 resp
             }
-            // Peer vanished or timed out mid-request: nothing sensible
-            // to say, and nobody to say it to.
+            // The peer had a live request in flight but trickled or
+            // stalled past the deadline: tell it so, then hang up.
+            Err(WireError::Io(_)) if reader.get_ref().expired => {
+                let mut resp = Response::error(408, "request not received within deadline");
+                resp.close = true;
+                resp
+            }
+            // Peer vanished mid-request: nothing sensible to say, and
+            // nobody to say it to.
             Err(WireError::Io(_)) | Err(WireError::Eof) => return,
         };
         // During shutdown, answer the request we already read but tell
         // the client not to reuse the connection.
         let closing = resp.close || stop.load(Ordering::Relaxed);
-        if write_response(reader.get_mut(), &resp, closing).is_err() || closing {
+        let wrote = match &state.faults {
+            // Partial-write storm: chop the response into 1–7 byte
+            // slices with injected `Interrupted`s; `write_full` must
+            // still deliver every byte.
+            Some(f) if f.fire(FaultPoint::PartialWrite) => {
+                let mut choppy = ChoppyWriter {
+                    inner: reader.get_mut(),
+                    rng: f.seed().wrapping_add(f.draws(FaultPoint::PartialWrite)),
+                };
+                write_response(&mut choppy, &resp, closing)
+            }
+            _ => write_response(reader.get_mut(), &resp, closing),
+        };
+        if wrote.is_err() || closing {
             return;
         }
     }

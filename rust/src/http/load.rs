@@ -63,7 +63,22 @@ impl ClientConn {
         path: &str,
         body: Option<&[u8]>,
     ) -> std::io::Result<ClientResponse> {
+        self.request_with(method, path, &[], body)
+    }
+
+    /// [`ClientConn::request`] with extra request headers (e.g.
+    /// `x-brainslug-deadline-ms`, `x-brainslug-fault`).
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> std::io::Result<ClientResponse> {
         let mut head = format!("{method} {path} HTTP/1.1\r\nhost: brainslug\r\n");
+        for (name, value) in headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
         if let Some(body) = body {
             head.push_str(&format!(
                 "content-type: application/json\r\ncontent-length: {}\r\n",
@@ -138,6 +153,68 @@ pub fn one_shot(
     ClientConn::connect(addr)?.request(method, path, body)
 }
 
+/// [`one_shot`] with extra request headers.
+pub fn one_shot_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&[u8]>,
+) -> std::io::Result<ClientResponse> {
+    ClientConn::connect(addr)?.request_with(method, path, headers, body)
+}
+
+/// Client-side retry discipline for [`closed_loop_with`]: retry shed
+/// (503) and transport-failed requests with full-jitter exponential
+/// backoff, honoring the server's `Retry-After` hint, spending from a
+/// bounded per-client budget so a dying server exhausts the harness in
+/// bounded time instead of amplifying load forever. 504 (deadline
+/// exceeded) is deliberately *not* retried — the request's time budget
+/// is spent, and blind retry would double-charge the server.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Attempts per logical request, including the first.
+    pub max_attempts: u32,
+    /// Backoff ceiling doubles from here per attempt.
+    pub base_ms: u64,
+    /// Hard cap on any single backoff sleep.
+    pub cap_ms: u64,
+    /// Total retries one client thread may spend across its whole run.
+    pub budget: u64,
+    /// Jitter seed (deterministic per client: mixed with the client
+    /// index).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_ms: 10,
+            cap_ms: 2_000,
+            budget: 100,
+            seed: 0x5EED_4E74,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based): full jitter in
+    /// `[0, min(cap, base·2^attempt)]`, floored by the server's
+    /// `Retry-After` (seconds), re-capped at `cap_ms`.
+    fn backoff_ms(&self, attempt: u32, retry_after_s: Option<u64>, rng: &mut u64) -> u64 {
+        let ceil = self.cap_ms.min(self.base_ms.saturating_mul(1 << attempt.min(16)));
+        let jittered = if ceil == 0 {
+            0
+        } else {
+            crate::rng::splitmix64(rng) % (ceil + 1)
+        };
+        jittered
+            .max(retry_after_s.unwrap_or(0).saturating_mul(1000))
+            .min(self.cap_ms)
+    }
+}
+
 /// Aggregated result of one load-generation run.
 #[derive(Debug, Default)]
 pub struct LoadReport {
@@ -145,8 +222,12 @@ pub struct LoadReport {
     pub ok: u64,
     /// 503 replies — load the server shed deliberately.
     pub rejected: u64,
-    /// Transport failures and non-200/503 statuses.
+    /// 504 replies — requests shed because their deadline passed.
+    pub expired: u64,
+    /// Transport failures and non-200/503/504 statuses.
     pub errors: u64,
+    /// Extra attempts spent by [`RetryPolicy`] (0 without one).
+    pub retries: u64,
     pub wall_s: f64,
     /// Latency of every reply (ok + rejected), milliseconds, sorted.
     pub latencies_ms: Vec<f64>,
@@ -193,6 +274,10 @@ impl LoadReport {
                 self.rejected += 1;
                 self.latencies_ms.push(latency_ms);
             }
+            Some(504) => {
+                self.expired += 1;
+                self.latencies_ms.push(latency_ms);
+            }
             _ => self.errors += 1,
         }
     }
@@ -201,7 +286,9 @@ impl LoadReport {
         self.sent += other.sent;
         self.ok += other.ok;
         self.rejected += other.rejected;
+        self.expired += other.expired;
         self.errors += other.errors;
+        self.retries += other.retries;
         self.latencies_ms.extend(other.latencies_ms);
     }
 
@@ -225,36 +312,78 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// client (re-established after transport errors or server-initiated
 /// closes).
 pub fn closed_loop(addr: &str, clients: usize, reqs_per_client: usize, body: &[u8]) -> LoadReport {
+    closed_loop_with(addr, clients, reqs_per_client, body, None)
+}
+
+/// [`closed_loop`] with an optional client-side [`RetryPolicy`]. With a
+/// policy, a logical request that is shed (503) or fails in transport
+/// is retried after backoff, and only the *final* attempt's outcome is
+/// absorbed into the report (intermediate 503s become `retries`, not
+/// `rejected`); latency runs from the first attempt to the final
+/// reply, so retries inflate the tail honestly.
+pub fn closed_loop_with(
+    addr: &str,
+    clients: usize,
+    reqs_per_client: usize,
+    body: &[u8],
+    retry: Option<RetryPolicy>,
+) -> LoadReport {
     let started = Instant::now();
     let joins: Vec<_> = (0..clients.max(1))
-        .map(|_| {
+        .map(|client| {
             let addr = addr.to_string();
             let body = body.to_vec();
             std::thread::spawn(move || {
                 let mut local = LoadReport::default();
                 let mut conn = ClientConn::connect(&addr).ok();
+                let mut budget = retry.map_or(0, |p| p.budget);
+                let mut rng = retry
+                    .map_or(0, |p| p.seed)
+                    .wrapping_add((client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 for _ in 0..reqs_per_client {
                     let t0 = Instant::now();
-                    let result = match conn.as_mut() {
-                        Some(c) => c.request("POST", "/v1/run", Some(&body)),
-                        None => Err(std::io::Error::new(
-                            std::io::ErrorKind::NotConnected,
-                            "connect failed",
-                        )),
-                    };
-                    match result {
-                        Ok(resp) => {
-                            // The server closes the stream after some
-                            // statuses (shutdown, 413); reconnect lazily.
-                            if resp.header("connection") == Some("close") {
-                                conn = None;
+                    let mut attempt: u32 = 0;
+                    loop {
+                        let result = match conn.as_mut() {
+                            Some(c) => c.request("POST", "/v1/run", Some(&body)),
+                            None => Err(std::io::Error::new(
+                                std::io::ErrorKind::NotConnected,
+                                "connect failed",
+                            )),
+                        };
+                        let (status, retry_after_s) = match result {
+                            Ok(resp) => {
+                                // The server closes the stream after some
+                                // statuses (shutdown, 413); reconnect lazily.
+                                if resp.header("connection") == Some("close") {
+                                    conn = None;
+                                }
+                                let ra = resp
+                                    .header("retry-after")
+                                    .and_then(|v| v.parse::<u64>().ok());
+                                (Some(resp.status), ra)
                             }
-                            local.absorb(Some(resp.status), ms_since(t0));
+                            Err(_) => {
+                                conn = None;
+                                (None, None)
+                            }
+                        };
+                        attempt += 1;
+                        let retriable = matches!(status, Some(503) | None);
+                        if let Some(p) = retry {
+                            if retriable && attempt < p.max_attempts && budget > 0 {
+                                budget -= 1;
+                                local.retries += 1;
+                                let wait = p.backoff_ms(attempt, retry_after_s, &mut rng);
+                                std::thread::sleep(Duration::from_millis(wait));
+                                if conn.is_none() {
+                                    conn = ClientConn::connect(&addr).ok();
+                                }
+                                continue;
+                            }
                         }
-                        Err(_) => {
-                            local.absorb(None, ms_since(t0));
-                            conn = None;
-                        }
+                        local.absorb(status, ms_since(t0));
+                        break;
                     }
                     if conn.is_none() {
                         conn = ClientConn::connect(&addr).ok();
@@ -383,13 +512,42 @@ mod tests {
         r.absorb(Some(200), 2.0);
         r.absorb(Some(200), 4.0);
         r.absorb(Some(503), 1.0);
+        r.absorb(Some(504), 3.0);
         r.absorb(None, 9.0);
         r.finish(Duration::from_secs(2));
-        assert_eq!((r.sent, r.ok, r.rejected, r.errors), (4, 2, 1, 1));
-        assert_eq!(r.latencies_ms, vec![1.0, 2.0, 4.0]);
+        assert_eq!(
+            (r.sent, r.ok, r.rejected, r.expired, r.errors),
+            (5, 2, 1, 1, 1)
+        );
+        assert_eq!(r.latencies_ms, vec![1.0, 2.0, 3.0, 4.0]);
         assert!((r.throughput_rps() - 1.0).abs() < 1e-9);
-        assert!((r.reject_rate() - 0.25).abs() < 1e-9);
-        assert!((r.mean_ms() - 7.0 / 3.0).abs() < 1e-9);
+        assert!((r.reject_rate() - 0.2).abs() < 1e-9);
+        assert!((r.mean_ms() - 10.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_retry_backoff_is_bounded_and_honors_retry_after() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            base_ms: 10,
+            cap_ms: 500,
+            budget: 10,
+            seed: 7,
+        };
+        let mut rng = 42u64;
+        for attempt in 1..=8 {
+            // Jitter-only: never above the per-attempt ceiling or cap.
+            let w = p.backoff_ms(attempt, None, &mut rng);
+            assert!(w <= p.cap_ms.min(p.base_ms * (1 << attempt.min(16))));
+            // A server hint floors the wait, but the cap still wins.
+            let w = p.backoff_ms(attempt, Some(3), &mut rng);
+            assert_eq!(w, p.cap_ms, "3 s hint > 500 ms cap");
+        }
+        // Determinism: same seed state → same sequence.
+        let (mut a, mut b) = (9u64, 9u64);
+        let sa: Vec<u64> = (1..6).map(|i| p.backoff_ms(i, None, &mut a)).collect();
+        let sb: Vec<u64> = (1..6).map(|i| p.backoff_ms(i, None, &mut b)).collect();
+        assert_eq!(sa, sb);
     }
 
     #[test]

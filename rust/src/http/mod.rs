@@ -17,9 +17,16 @@
 //!
 //! Backpressure is end-to-end: a full connection channel sheds at the
 //! accept stage with 503, and a full dispatch queue (under
-//! [`crate::server::QueuePolicy::Reject`]) surfaces as 503 +
-//! `Retry-After` per request. Shutdown is graceful by construction —
-//! see [`listener`] for the ordering contract.
+//! [`crate::server::QueuePolicy::Reject`]) surfaces as 503 + a
+//! queue-depth-aware `Retry-After` per request. Shutdown is graceful by
+//! construction — see [`listener`] for the ordering contract.
+//!
+//! The whole path is stormable under [`crate::fault`]: worker panics
+//! surface as transient 503s while the replica rebuilds, expired
+//! per-request deadlines (`x-brainslug-deadline-ms`) as 504, slow-loris
+//! clients as 408, and injected socket resets / partial writes exercise
+//! the reconnect and [`wire::write_full`] retry paths. See DESIGN.md
+//! §Fault Injection & Recovery.
 
 pub mod listener;
 pub mod load;
@@ -27,7 +34,10 @@ pub mod router;
 pub mod wire;
 
 pub use listener::{HttpConfig, HttpServer};
-pub use load::{closed_loop, one_shot, open_loop, ClientConn, ClientResponse, LoadReport};
+pub use load::{
+    closed_loop, closed_loop_with, one_shot, one_shot_with, open_loop, ClientConn, ClientResponse,
+    LoadReport, RetryPolicy,
+};
 pub use router::AppState;
 pub use wire::{Request, Response, WireError, WireLimits};
 
@@ -107,7 +117,9 @@ mod tests {
 
         let resp = one_shot(&addr, "GET", "/healthz", None).unwrap();
         assert_eq!(resp.status, 200);
-        assert_eq!(resp.body, b"{\"ok\":true}");
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(parsed.bool_field("ok").unwrap());
+        assert_eq!(parsed.str_field("state").unwrap(), "ready");
 
         let resp = one_shot(&addr, "GET", "/v1/stats", None).unwrap();
         assert_eq!(resp.status, 200);
@@ -166,7 +178,7 @@ mod tests {
         let mut raw = String::new();
         stream.read_to_string(&mut raw).unwrap();
         assert_eq!(raw.matches("HTTP/1.1 200 OK").count(), 2, "{raw}");
-        assert_eq!(raw.matches("{\"ok\":true}").count(), 2, "{raw}");
+        assert_eq!(raw.matches("\"ok\":true").count(), 2, "{raw}");
         http.shutdown();
     }
 
@@ -221,7 +233,9 @@ mod tests {
             match resp.status {
                 200 => ok += 1,
                 503 => {
-                    assert_eq!(resp.header("retry-after"), Some("1"));
+                    // Queue-depth-aware hint: always present, 1–8 s.
+                    let ra: u32 = resp.header("retry-after").unwrap().parse().unwrap();
+                    assert!((1..=8).contains(&ra), "retry-after {ra}");
                     saw_503_with_retry_after = true;
                 }
                 s => panic!("unexpected status {s}"),
@@ -313,6 +327,79 @@ mod tests {
         assert!(shed_raw.contains("retry-after: 1"), "{shed_raw}");
         assert!(shed_raw.contains("connection: close"), "{shed_raw}");
 
+        http.shutdown();
+    }
+
+    #[test]
+    fn fault_slow_loris_header_trickle_gets_408_and_close() {
+        use std::time::{Duration, Instant};
+        let server = ServerConfig::new(sim_builder(1)).start().unwrap();
+        let mut cfg = HttpConfig::new("127.0.0.1:0");
+        cfg.header_deadline = Duration::from_millis(400);
+        let http = HttpServer::start(server, cfg).unwrap();
+        let mut stream = TcpStream::connect(http.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        // Trickle header bytes at 150 ms intervals — fast enough that
+        // the 250 ms socket timeout never fires, so only the request
+        // deadline can end this. Writes stop before the deadline so the
+        // 408 is not lost to a TCP reset.
+        let t0 = Instant::now();
+        for chunk in [b"GET /hea".as_slice(), b"lthz HTT", b"P/1.1\r\nx"] {
+            stream.write_all(chunk).unwrap();
+            std::thread::sleep(Duration::from_millis(150));
+        }
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 408 "), "{raw}");
+        assert!(raw.contains("connection: close"), "{raw}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "loris held the thread for {:?}",
+            t0.elapsed()
+        );
+        http.shutdown();
+    }
+
+    #[test]
+    fn fault_injected_partial_write_still_delivers_full_response() {
+        use crate::fault::{FaultInjector, FaultPoint};
+        let inj = std::sync::Arc::new(FaultInjector::new(33));
+        let server = ServerConfig::new(sim_builder(1))
+            .faults(inj.clone())
+            .start()
+            .unwrap();
+        let http = HttpServer::start(server, HttpConfig::new("127.0.0.1:0")).unwrap();
+        let addr = http.addr().to_string();
+        // The next response is chopped into 1–7 byte slices with
+        // injected Interrupteds; write_full must still deliver it all.
+        inj.trigger(FaultPoint::PartialWrite);
+        let resp = one_shot(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(parsed.bool_field("ok").unwrap());
+        assert_eq!(inj.fired(FaultPoint::PartialWrite), 1);
+        http.shutdown();
+    }
+
+    #[test]
+    fn fault_injected_socket_reset_drops_one_connection_only() {
+        use crate::fault::{FaultInjector, FaultPoint};
+        let inj = std::sync::Arc::new(FaultInjector::new(34));
+        let server = ServerConfig::new(sim_builder(1))
+            .faults(inj.clone())
+            .start()
+            .unwrap();
+        let http = HttpServer::start(server, HttpConfig::new("127.0.0.1:0")).unwrap();
+        let addr = http.addr().to_string();
+        inj.trigger(FaultPoint::SocketReset);
+        // The victim connection is dropped without a reply…
+        assert!(one_shot(&addr, "GET", "/healthz", None).is_err());
+        // …and the server keeps serving everyone else.
+        let resp = one_shot(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(inj.fired(FaultPoint::SocketReset), 1);
         http.shutdown();
     }
 

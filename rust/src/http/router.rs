@@ -6,18 +6,29 @@
 //! |--------|-------------|--------------------------------------|----------------------------------|
 //! | POST   | `/v1/run`   | `{"model": "...", "input": [...]}`   | `{"model": ..., "output": [...]}`|
 //! | GET    | `/v1/stats` | —                                    | [`ServerStats::to_json`] + serving metadata |
-//! | GET    | `/healthz`  | —                                    | `{"ok": true}`                   |
+//! | GET    | `/healthz`  | —                                    | `{"ok": true, "state": "ready"}` |
 //!
 //! The hot path (`POST /v1/run`) never builds a JSON tree for the
 //! request: the two fields are pulled straight off the byte stream with
 //! the lazy scanners in [`crate::json`]. Backpressure from the bounded
-//! dispatch queue maps onto the wire as 503 + `Retry-After`.
+//! dispatch queue maps onto the wire as 503 + a queue-depth-aware
+//! `Retry-After`.
+//!
+//! Two request headers participate in the fault story (DESIGN.md
+//! §Fault Injection & Recovery):
+//!
+//! * `x-brainslug-deadline-ms: N` — relative deadline; the request is
+//!   shed with 504 if it cannot execute within `N` ms of arrival.
+//! * `x-brainslug-fault: <point>` — queue a one-shot fault trigger
+//!   ([`crate::fault::FaultInjector::trigger`]); honored only when the
+//!   server was started with fault injection armed, 400 otherwise.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::fault::{FaultInjector, FaultPoint};
 use crate::json::{self, Json};
-use crate::server::{InferError, ServerHandle, ServerStats};
+use crate::server::{suggested_retry_after, HealthPhase, InferError, ServerHandle, ServerStats};
 
 use super::wire::{Request, Response};
 
@@ -35,16 +46,31 @@ pub struct AppState {
     pub model: String,
     /// Expected `input` element count per request.
     pub image_elems: usize,
+    /// Dispatch-queue bound, the denominator of the queue-depth-aware
+    /// `Retry-After` hint.
+    pub queue_capacity: usize,
+    /// Armed fault injector, if the server was started with one. Gates
+    /// the `x-brainslug-fault` trigger header and the `fault_injection`
+    /// stats block.
+    pub faults: Option<Arc<FaultInjector>>,
     pub started: Instant,
+}
+
+impl AppState {
+    /// Current back-off hint for 503 responses, scaled by how full the
+    /// dispatch queue is right now.
+    fn retry_after_now(&self) -> u32 {
+        suggested_retry_after(self.stats.queue_depth_now(), self.queue_capacity)
+    }
 }
 
 /// Dispatch one request. Infallible by design: every failure becomes a
 /// response with the right status code.
 pub fn route(state: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/run") => run(state, &req.body),
+        ("POST", "/v1/run") => run(state, req),
         ("GET", "/v1/stats") => stats(state),
-        ("GET", "/healthz") => Response::json(200, "{\"ok\":true}".to_string()),
+        ("GET", "/healthz") => healthz(state),
         // Known paths with the wrong verb get 405 + Allow, per RFC.
         (_, "/v1/run") => {
             let mut resp = Response::error(405, "use POST");
@@ -60,10 +86,77 @@ pub fn route(state: &AppState, req: &Request) -> Response {
     }
 }
 
+/// The documented [`InferError`] → wire mapping, in one exhaustive
+/// match (no wildcard arm: adding an `InferError` variant without
+/// deciding its status code is a compile error here, and the mapping
+/// test in this module pins the decisions):
+///
+/// | variant            | status | headers                    | close |
+/// |--------------------|--------|----------------------------|-------|
+/// | `QueueFull`        | 503    | `Retry-After` (queue-aware)| no    |
+/// | `Stopped`          | 503    | `Retry-After: 1`           | yes   |
+/// | `BadInput`         | 400    | —                          | no    |
+/// | `Exec`             | 500    | —                          | no    |
+/// | `WorkerCrashed`    | 503    | `Retry-After` (queue-aware)| no    |
+/// | `DeadlineExceeded` | 504    | —                          | no    |
+pub fn infer_error_response(state: &AppState, err: &InferError) -> Response {
+    match err {
+        // Backpressure → 503 with a back-off hint scaled by queue
+        // depth. This is the wire face of QueuePolicy::Reject.
+        InferError::QueueFull { .. } => {
+            let mut resp = Response::error(503, &err.to_string());
+            resp.retry_after = Some(state.retry_after_now());
+            resp
+        }
+        // Shutdown → 503 and close, so keep-alive clients re-resolve.
+        InferError::Stopped => {
+            let mut resp = Response::error(503, &err.to_string());
+            resp.retry_after = Some(1);
+            resp.close = true;
+            resp
+        }
+        InferError::BadInput(_) => Response::error(400, &err.to_string()),
+        InferError::Exec(_) => Response::error(500, &err.to_string()),
+        // Transient: the replica is rebuilding; the connection itself
+        // is fine, so keep it open and invite a retry.
+        InferError::WorkerCrashed { .. } => {
+            let mut resp = Response::error(503, &err.to_string());
+            resp.retry_after = Some(state.retry_after_now());
+            resp
+        }
+        // The client's own deadline passed; retrying is its call — no
+        // Retry-After, the budget is spent.
+        InferError::DeadlineExceeded { .. } => Response::error(504, &err.to_string()),
+    }
+}
+
 /// `POST /v1/run`: lazy-extract `model` and `input`, submit to the
 /// dispatch queue, serialise the output tensor.
-fn run(state: &AppState, body: &[u8]) -> Response {
-    let Ok(text) = std::str::from_utf8(body) else {
+fn run(state: &AppState, req: &Request) -> Response {
+    // Fault trigger header first: it must queue even if this very
+    // request then crashes on it.
+    if let Some(v) = req.header("x-brainslug-fault") {
+        let Some(inj) = state.faults.as_ref() else {
+            return Response::error(400, "fault injection is not armed on this server");
+        };
+        match FaultPoint::parse(v) {
+            Some(p) => inj.trigger(p),
+            None => return Response::error(400, &format!("unknown fault point {v:?}")),
+        }
+    }
+    let deadline = match req.header("x-brainslug-deadline-ms") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) if ms > 0 => Some(Instant::now() + Duration::from_millis(ms)),
+            _ => {
+                return Response::error(
+                    400,
+                    &format!("invalid x-brainslug-deadline-ms {v:?} (want positive integer)"),
+                )
+            }
+        },
+    };
+    let Ok(text) = std::str::from_utf8(&req.body) else {
         return Response::error(400, "body is not valid UTF-8");
     };
     match json::scan_str_field(text, "model") {
@@ -92,7 +185,7 @@ fn run(state: &AppState, body: &[u8]) -> Response {
             ),
         );
     }
-    match state.handle.try_infer(input) {
+    match state.handle.try_infer_deadline(input, deadline) {
         Ok(tensor) => {
             let mut o = Json::object();
             o.set("model", Json::Str(state.model.clone()));
@@ -102,27 +195,13 @@ fn run(state: &AppState, body: &[u8]) -> Response {
             );
             Response::json(200, o.to_string_compact())
         }
-        // Backpressure → 503 with a back-off hint. This is the wire
-        // face of QueuePolicy::Reject.
-        Err(e @ InferError::QueueFull { .. }) => {
-            let mut resp = Response::error(503, &e.to_string());
-            resp.retry_after = Some(1);
-            resp
-        }
-        // Shutdown → 503 and close, so keep-alive clients re-resolve.
-        Err(e @ InferError::Stopped) => {
-            let mut resp = Response::error(503, &e.to_string());
-            resp.retry_after = Some(1);
-            resp.close = true;
-            resp
-        }
-        Err(e @ InferError::BadInput(_)) => Response::error(400, &e.to_string()),
-        Err(e @ InferError::Exec(_)) => Response::error(500, &e.to_string()),
+        Err(e) => infer_error_response(state, &e),
     }
 }
 
 /// `GET /v1/stats`: the shared [`ServerStats`] snapshot plus serving
-/// metadata the load harness needs (model name, expected input size).
+/// metadata the load harness needs (model name, expected input size),
+/// plus the `fault_injection` block when the injector is armed.
 fn stats(state: &AppState) -> Response {
     let mut o = state.stats.to_json(state.batch);
     o.set("model", Json::Str(state.model.clone()));
@@ -132,7 +211,31 @@ fn stats(state: &AppState) -> Response {
         "uptime_s",
         Json::Num(state.started.elapsed().as_secs_f64()),
     );
+    if let Some(inj) = state.faults.as_ref() {
+        o.set("fault_injection", inj.to_json());
+    }
     Response::json(200, o.to_string_compact())
+}
+
+/// `GET /healthz`: the health state machine on the wire. `Ready` and
+/// `Degraded` answer 200 (the server accepts work — degraded only
+/// means reduced capacity); `Starting` and `Draining` answer 503 with
+/// the queue-aware `Retry-After`, and `Draining` closes so probes
+/// re-resolve.
+fn healthz(state: &AppState) -> Response {
+    let phase = state.stats.health.phase();
+    let mut o = Json::object();
+    o.set("ok", Json::Bool(state.stats.health.is_serving()));
+    o.set("state", Json::Str(phase.name().to_string()));
+    match phase {
+        HealthPhase::Ready | HealthPhase::Degraded => Response::json(200, o.to_string_compact()),
+        HealthPhase::Starting | HealthPhase::Draining => {
+            let mut resp = Response::json(503, o.to_string_compact());
+            resp.retry_after = Some(state.retry_after_now());
+            resp.close = phase == HealthPhase::Draining;
+            resp
+        }
+    }
 }
 
 #[cfg(test)]
@@ -144,19 +247,21 @@ mod tests {
     use crate::optimizer::CollapseOptions;
     use crate::server::{QueuePolicy, Server, ServerConfig};
 
-    fn test_state() -> (Server, AppState) {
+    fn test_state_with(faults: Option<Arc<FaultInjector>>) -> (Server, AppState) {
         let builder = Engine::builder()
             .graph_owned(bench::block_net(1, 2, 2, 8))
             .device(DeviceSpec::tpu_core())
             .brainslug(CollapseOptions::default())
             .sim()
             .seed(11);
-        let server = ServerConfig::new(builder)
+        let mut config = ServerConfig::new(builder)
             .workers(1)
             .queue_depth(4)
-            .queue_policy(QueuePolicy::Block)
-            .start()
-            .expect("server start");
+            .queue_policy(QueuePolicy::Block);
+        if let Some(inj) = faults.clone() {
+            config = config.faults(inj);
+        }
+        let server = config.start().expect("server start");
         let state = AppState {
             handle: server.handle(),
             stats: server.stats.clone(),
@@ -164,20 +269,30 @@ mod tests {
             workers: server.workers(),
             model: server.model_name().to_string(),
             image_elems: server.handle().image_shape().numel(),
+            queue_capacity: server.queue_capacity(),
+            faults,
             started: Instant::now(),
         };
         (server, state)
     }
 
-    fn post_run(state: &AppState, body: &str) -> Response {
+    fn test_state() -> (Server, AppState) {
+        test_state_with(None)
+    }
+
+    fn post_run_with(state: &AppState, headers: Vec<(String, String)>, body: &str) -> Response {
         let req = Request {
             method: "POST".into(),
             path: "/v1/run".into(),
-            headers: Vec::new(),
+            headers,
             body: body.as_bytes().to_vec(),
             keep_alive: true,
         };
         route(state, &req)
+    }
+
+    fn post_run(state: &AppState, body: &str) -> Response {
+        post_run_with(state, Vec::new(), body)
     }
 
     fn get(state: &AppState, path: &str) -> Response {
@@ -189,6 +304,14 @@ mod tests {
             keep_alive: true,
         };
         route(state, &req)
+    }
+
+    fn run_body(state: &AppState) -> String {
+        format!(
+            "{{\"model\":\"{}\",\"input\":{}}}",
+            state.model,
+            Json::Arr(vec![Json::Num(0.0); state.image_elems]).to_string_compact()
+        )
     }
 
     #[test]
@@ -266,30 +389,134 @@ mod tests {
         let (server, state) = test_state();
         let resp = get(&state, "/healthz");
         assert_eq!(resp.status, 200);
-        assert_eq!(resp.body, b"{\"ok\":true}");
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(parsed.bool_field("ok").unwrap());
+        assert_eq!(parsed.str_field("state").unwrap(), "ready");
         let resp = get(&state, "/v1/stats");
         assert_eq!(resp.status, 200);
         let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(parsed.str_field("model").unwrap(), state.model);
         assert_eq!(parsed.usize_field("workers").unwrap(), 1);
         assert_eq!(parsed.usize_field("image_elems").unwrap(), state.image_elems);
+        assert_eq!(parsed.usize_field("restarts").unwrap(), 0);
+        assert_eq!(parsed.usize_field("deadline_dropped").unwrap(), 0);
+        assert_eq!(parsed.str_field("health").unwrap(), "ready");
         assert!(parsed.f64_field("uptime_s").unwrap() >= 0.0);
+        // Unarmed server: no fault_injection block.
+        assert!(parsed.get("fault_injection").is_none());
         server.stop();
     }
 
     #[test]
-    fn stopped_server_maps_to_503() {
+    fn stopped_server_maps_to_503_and_healthz_drains() {
         let (server, state) = test_state();
         server.stop();
-        let resp = post_run(
-            &state,
-            &format!(
-                "{{\"model\":\"{}\",\"input\":{}}}",
-                state.model,
-                Json::Arr(vec![Json::Num(0.0); state.image_elems]).to_string_compact()
-            ),
-        );
+        let resp = post_run(&state, &run_body(&state));
         assert_eq!(resp.status, 503);
         assert!(resp.close);
+        let resp = get(&state, "/healthz");
+        assert_eq!(resp.status, 503);
+        assert!(resp.close, "draining probes should re-resolve");
+        assert!(resp.retry_after.is_some());
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(!parsed.bool_field("ok").unwrap());
+        assert_eq!(parsed.str_field("state").unwrap(), "draining");
+    }
+
+    /// Satellite: the exhaustive `InferError` → wire mapping. The match
+    /// in [`infer_error_response`] has no wildcard arm, so a new
+    /// variant fails to compile there; this test pins the documented
+    /// status/header/close decisions for every variant.
+    #[test]
+    fn fault_infer_error_wire_mapping_is_exhaustive() {
+        let (server, state) = test_state();
+        let cases: Vec<(InferError, u16, bool, bool)> = vec![
+            // (error, status, has Retry-After, closes)
+            (InferError::QueueFull { capacity: 4 }, 503, true, false),
+            (InferError::Stopped, 503, true, true),
+            (InferError::BadInput("bad".into()), 400, false, false),
+            (InferError::Exec("boom".into()), 500, false, false),
+            (InferError::WorkerCrashed { worker: 0 }, 503, true, false),
+            (InferError::DeadlineExceeded { waited_ms: 7 }, 504, false, false),
+        ];
+        for (err, status, retries, closes) in cases {
+            let resp = infer_error_response(&state, &err);
+            assert_eq!(resp.status, status, "{err:?}");
+            assert_eq!(resp.retry_after.is_some(), retries, "{err:?}");
+            assert_eq!(resp.close, closes, "{err:?}");
+            // Every error body is the standard {"error": ...} shape.
+            let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(parsed.str_field("error").unwrap(), err.to_string());
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn fault_deadline_header_is_parsed_and_validated() {
+        let (server, state) = test_state();
+        // Generous deadline: request succeeds.
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-deadline-ms".into(), "10000".into())],
+            &run_body(&state),
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        // Invalid values are 400, not silently ignored.
+        for bad in ["0", "-3", "soon", ""] {
+            let resp = post_run_with(
+                &state,
+                vec![("x-brainslug-deadline-ms".into(), bad.into())],
+                &run_body(&state),
+            );
+            assert_eq!(resp.status, 400, "deadline {bad:?}");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn fault_trigger_header_crashes_then_recovers() {
+        let inj = Arc::new(FaultInjector::new(1));
+        let (server, state) = test_state_with(Some(inj.clone()));
+        // The request carrying the trigger is the next batch: it takes
+        // the crash and gets the transient 503.
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-fault".into(), "worker-panic".into())],
+            &run_body(&state),
+        );
+        assert_eq!(resp.status, 503, "{}", String::from_utf8_lossy(&resp.body));
+        assert!(resp.retry_after.is_some());
+        // The rebuilt replica answers the retry.
+        let resp = post_run(&state, &run_body(&state));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        // Stats surface the restart and the armed injector.
+        let parsed =
+            json::parse(std::str::from_utf8(&get(&state, "/v1/stats").body).unwrap()).unwrap();
+        assert_eq!(parsed.usize_field("restarts").unwrap(), 1);
+        let fi = parsed.get("fault_injection").expect("armed block");
+        assert_eq!(
+            fi.get("points").unwrap().get("worker-panic").unwrap().usize_field("fired").unwrap(),
+            1
+        );
+        // Unknown fault names are rejected.
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-fault".into(), "nonsense".into())],
+            &run_body(&state),
+        );
+        assert_eq!(resp.status, 400);
+        server.stop();
+    }
+
+    #[test]
+    fn fault_trigger_header_requires_armed_injector() {
+        let (server, state) = test_state();
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-fault".into(), "worker-panic".into())],
+            &run_body(&state),
+        );
+        assert_eq!(resp.status, 400);
+        server.stop();
     }
 }

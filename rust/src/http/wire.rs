@@ -267,11 +267,38 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Content Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
+}
+
+/// `write_all` replacement that keeps its promise on fault-injected
+/// (and real) sockets: `ErrorKind::Interrupted` is retried, a short
+/// `write` return advances the cursor and continues, and a zero-length
+/// accept is surfaced as `WriteZero` instead of spinning. Plain
+/// `write_all` already loops over short writes, but its `Interrupted`
+/// handling is the library's choice, not a tested contract of ours —
+/// and the listener's partial-write fault adapter exists precisely to
+/// pin this loop's behavior.
+pub fn write_full<W: Write>(w: &mut W, mut buf: &[u8]) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match w.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "stream refused further bytes",
+                ))
+            }
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Serialise `resp`. `close` forces `Connection: close` (the listener
@@ -296,8 +323,8 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response, close: bool) -> std:
     } else {
         "connection: keep-alive\r\n\r\n"
     });
-    w.write_all(head.as_bytes())?;
-    w.write_all(&resp.body)?;
+    write_full(w, head.as_bytes())?;
+    write_full(w, &resp.body)?;
     w.flush()
 }
 
@@ -440,6 +467,94 @@ mod tests {
     #[test]
     fn empty_stream_is_eof() {
         assert!(matches!(parse(""), Err(WireError::Eof)));
+    }
+
+    /// Mock stream that accepts at most `max_chunk` bytes per `write`
+    /// and fails every third call with `ErrorKind::Interrupted` first —
+    /// the short-write behavior a real socket shows under memory
+    /// pressure (and the listener's partial-write fault injection).
+    struct ShortWriter {
+        out: Vec<u8>,
+        max_chunk: usize,
+        calls: usize,
+    }
+
+    impl Write for ShortWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.calls += 1;
+            if self.calls % 3 == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "interrupted",
+                ));
+            }
+            let n = buf.len().min(self.max_chunk);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn short_writes_and_interrupts_still_deliver_the_full_response() {
+        // Regression: the writer used to assume `write_all` semantics;
+        // a short-writing stream must still receive a byte-identical
+        // response.
+        let mut resp = Response::json(200, "{\"ok\":true,\"state\":\"ready\"}".to_string());
+        resp.retry_after = Some(2);
+        let mut reference = Vec::new();
+        write_response(&mut reference, &resp, false).unwrap();
+
+        for max_chunk in [1usize, 3, 7] {
+            let mut w = ShortWriter {
+                out: Vec::new(),
+                max_chunk,
+                calls: 0,
+            };
+            write_response(&mut w, &resp, false).unwrap();
+            assert_eq!(
+                w.out, reference,
+                "chunk size {max_chunk} corrupted the response"
+            );
+        }
+    }
+
+    #[test]
+    fn write_zero_surfaces_as_write_zero_error() {
+        struct DeadWriter;
+        impl Write for DeadWriter {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_full(&mut DeadWriter, b"abc").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WriteZero);
+        // And a genuine transport error passes straight through.
+        struct BrokenWriter;
+        impl Write for BrokenWriter {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "peer gone",
+                ))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_full(&mut BrokenWriter, b"abc").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn reason_covers_the_fault_statuses() {
+        assert_eq!(reason(408), "Request Timeout");
+        assert_eq!(reason(504), "Gateway Timeout");
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! profile cache the engine reloads transparently; [`server`] is the
 //! batching inference front-end used by the end-to-end example; [`http`]
 //! puts that front-end behind a zero-dependency HTTP/1.1 + JSON wire
-//! protocol with a closed/open-loop load harness (`bench-serve`).
+//! protocol with a closed/open-loop load harness (`bench-serve`);
+//! [`fault`] is the seeded fault-injection layer that lets tests and
+//! benches storm that stack (worker panics, stalls, socket resets)
+//! and prove it degrades instead of dying.
 //!
 //! [`engine`] is the public facade over all of the above: an
 //! [`engine::EngineBuilder`] resolves the network, runs the optimizer,
@@ -63,6 +66,7 @@ pub mod conc;
 pub mod cpu;
 pub mod device;
 pub mod engine;
+pub mod fault;
 pub mod graph;
 pub mod http;
 pub mod json;

@@ -48,8 +48,9 @@ use brainslug::bench::{self, fmt_pct, fmt_time, Table};
 use brainslug::cli::Args;
 use brainslug::device::DeviceSpec;
 use brainslug::engine::{BackendKind, Engine, EngineBuilder, Mode};
+use brainslug::fault::{FaultInjector, FaultPoint};
 use brainslug::graph::graph_to_json;
-use brainslug::http::{self, HttpConfig, HttpServer};
+use brainslug::http::{self, HttpConfig, HttpServer, RetryPolicy};
 use brainslug::json::Json;
 use brainslug::memsim::{baseline_optimized_time, speedup_pct};
 use brainslug::optimizer::CollapseOptions;
@@ -108,9 +109,10 @@ USAGE: brainslug <command> [flags]
                 [--workers N] [--queue-depth D] [--queue-policy block|reject]
                 [--pace SCALE] [--device PRESET] [--profile-path FILE]
                 [--no-profile] [--http PORT] [--http-threads K]
-                [--max-body BYTES]
+                [--max-body BYTES] [--fault-seed S] [--fault-rate R]
   bench-serve   [--workers 1,2,4] [--concurrency 2,8] [--batch B]
                 [--requests N] [--batch-cost-ms MS]
+                [--fault-rate R] [--fault-seed S]
                 [--addr HOST:PORT [--single]]
   tune          --net NAME [--batch N] [--backend cpu] [--threads N]
                 [--budget fast|full] [--device PRESET] [--profile-path FILE]
@@ -134,7 +136,13 @@ measured against real wall-clock (see benches/fig16_serving_scaling).
 With `--http PORT` the pool goes behind a zero-dependency HTTP/1.1
 front door (POST /v1/run, GET /v1/stats, GET /healthz; port 0 picks an
 ephemeral port) and runs until SIGINT/SIGTERM, then drains gracefully.
-A `reject` queue policy surfaces on the wire as 503 + Retry-After.
+A `reject` queue policy surfaces on the wire as 503 + a queue-depth-
+aware Retry-After; `x-brainslug-deadline-ms: N` sheds requests that
+cannot run within N ms as 504. `--fault-seed S` / `--fault-rate R` arm
+the deterministic fault injector (worker panics, slow batches, queue
+stalls, socket resets, partial writes — see DESIGN.md §Fault Injection
+& Recovery); crashed workers are supervised and rebuilt, with restart
+counts in GET /v1/stats. BRAINSLUG_FAULT_SEED overrides the seed.
 
 `bench-serve` load-tests that front door over real sockets: a
 closed-loop sweep (workers x concurrency, keep-alive clients) plus one
@@ -142,9 +150,13 @@ open-loop overload point per worker count (paced arrivals at ~1.75x
 estimated capacity, latency measured from the *scheduled* arrival so
 queue build-up is charged to the tail, not hidden). Reports
 p50/p95/p99 latency, throughput, and rejected-request rate; writes
-BENCH_serve_http.json. `--addr` points it at an already-running
-server; with `--single` it fires one POST /v1/run + GET /healthz and
-exits non-zero unless both return 200 (the CI smoke).
+BENCH_serve_http.json. `--fault-rate R` (optionally `--fault-seed S`)
+storms the in-process sweep through the fault injector while clients
+retry with jittered backoff, adding retry/restart counts to each row.
+`--addr` points it at an already-running server; with `--single` it
+fires one POST /v1/run, one deadline-annotated run, and one
+GET /healthz — and, against a fault-armed server, injects a worker
+crash and requires a 200 after recovery (the CI smoke).
 
 `tune` searches the collapse-configuration space (budget scale,
 band-height caps) on the *real* CPU backend: a memsim cost-model
@@ -169,8 +181,10 @@ seeded random walks per protocol (`--seed S` rotates the stream) —
 reporting ordering violations (BSL050–BSL056) with replayable
 counterexample schedules. Every finding carries a stable BSL0xx code;
 `--deny warnings` makes warnings fail the exit code (CI runs
-`check --all-zoo --deny warnings --schedules 256`). See DESIGN.md
-§Static Analysis and §Schedule Model Checking.
+`check --all-zoo --deny warnings --schedules 256`). The explored suite
+covers the server drain, listener drain, band pool, and fault-
+supervisor restart protocols. See DESIGN.md §Static Analysis and
+§Schedule Model Checking.
 
 Library quickstart (the whole pipeline is one builder):
 
@@ -473,6 +487,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let http_threads = args.get_positive_usize("http-threads")?.unwrap_or(8);
     let max_body = args.get_positive_usize("max-body")?;
+    // Fault-injection flags: giving either one arms the injector
+    // (rates default to zero — `x-brainslug-fault` triggers still work).
+    let fault_seed: Option<u64> = match args.get("fault-seed") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| anyhow::anyhow!("--fault-seed: bad seed '{v}': {e}"))?,
+        ),
+    };
+    let fault_rate: Option<f64> = args.get_f64("fault-rate")?;
+    if let Some(r) = fault_rate {
+        if !(0.0..=1.0).contains(&r) {
+            bail!("--fault-rate must be in [0, 1], got {r}");
+        }
+    }
     let default_device = if matches!(backend, BackendKind::Cpu { .. }) {
         DeviceSpec::host_cpu()
     } else {
@@ -501,12 +530,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(scale) = pace {
         engine = engine.sim_paced(scale);
     }
-    let server = ServerConfig::new(engine)
+    let mut config = ServerConfig::new(engine)
         .workers(workers)
         .queue_depth(queue_depth)
         .queue_policy(queue_policy)
-        .max_wait(Duration::from_millis(5))
-        .start()?;
+        .max_wait(Duration::from_millis(5));
+    if fault_seed.is_some() || fault_rate.is_some() {
+        let seed = brainslug::fault::seed_from_env(fault_seed.unwrap_or(0));
+        let inj = Arc::new(FaultInjector::new(seed));
+        if let Some(r) = fault_rate {
+            for p in FaultPoint::ALL {
+                inj.set_rate(p, r);
+            }
+        }
+        println!(
+            "fault injection armed: seed {seed}, rate {:.3} on every point",
+            fault_rate.unwrap_or(0.0)
+        );
+        config = config.faults(inj);
+    }
+    let server = config.start()?;
     if let Some(port) = http_port {
         return serve_http(server, port, http_threads, max_body);
     }
@@ -688,9 +731,11 @@ fn serve_table() -> Table {
     ])
 }
 
-/// `bench-serve --single --addr H:P`: the CI smoke — one real
-/// `POST /v1/run` and one `GET /healthz`, non-zero exit unless both
-/// return 200 with sane bodies.
+/// `bench-serve --single --addr H:P`: the CI smoke — one plain
+/// `POST /v1/run`, one deadline-annotated run, one `GET /healthz`, and
+/// (when the server has fault injection armed) one injected worker
+/// crash followed by a recovery probe. Non-zero exit unless every leg
+/// behaves.
 fn bench_serve_single(addr: &str) -> Result<()> {
     let (model, elems, _) = discover_server(addr)?;
     let body = run_body_json(&model, &brainslug::rng::fill_f32(1, elems));
@@ -705,13 +750,71 @@ fn bench_serve_single(addr: &str) -> Result<()> {
     }
     let out = brainslug::json::parse(std::str::from_utf8(&run.body)?)?;
     let n_out = out.arr_field("output")?.len();
+    // A generous deadline must not change the outcome.
+    let deadlined = http::one_shot_with(
+        addr,
+        "POST",
+        "/v1/run",
+        &[("x-brainslug-deadline-ms", "10000")],
+        Some(body.as_bytes()),
+    )
+    .map_err(|e| anyhow::anyhow!("deadline-annotated POST /v1/run on {addr}: {e}"))?;
+    if deadlined.status != 200 {
+        bail!(
+            "deadline-annotated POST /v1/run returned {}: {}",
+            deadlined.status,
+            String::from_utf8_lossy(&deadlined.body)
+        );
+    }
     let health = http::one_shot(addr, "GET", "/healthz", None)
         .map_err(|e| anyhow::anyhow!("GET /healthz on {addr}: {e}"))?;
     if health.status != 200 {
         bail!("GET /healthz returned {}", health.status);
     }
+    // If the server was started with fault injection armed (the stats
+    // block advertises it), crash a worker mid-batch and prove the
+    // supervisor brings the replica back.
+    let stats = http::one_shot(addr, "GET", "/v1/stats", None)
+        .map_err(|e| anyhow::anyhow!("GET /v1/stats on {addr}: {e}"))?;
+    let stats_json = brainslug::json::parse(std::str::from_utf8(&stats.body)?)?;
+    let mut crash_leg = "fault injection not armed; crash leg skipped";
+    if stats_json.get("fault_injection").is_some() {
+        let crashed = http::one_shot_with(
+            addr,
+            "POST",
+            "/v1/run",
+            &[("x-brainslug-fault", "worker-panic")],
+            Some(body.as_bytes()),
+        )
+        .map_err(|e| anyhow::anyhow!("crash-trigger POST /v1/run on {addr}: {e}"))?;
+        // The triggering request rides the crashing batch (503) unless
+        // another worker picked it up first (200) — both are healthy.
+        if !matches!(crashed.status, 200 | 503) {
+            bail!(
+                "crash-trigger POST /v1/run returned {}: {}",
+                crashed.status,
+                String::from_utf8_lossy(&crashed.body)
+            );
+        }
+        // Recovery: the rebuilt replica must answer within ~5 s.
+        let mut recovered = false;
+        for _ in 0..50 {
+            if let Ok(resp) = http::one_shot(addr, "POST", "/v1/run", Some(body.as_bytes())) {
+                if resp.status == 200 {
+                    recovered = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        if !recovered {
+            bail!("server did not serve a 200 within 5 s of the injected worker crash");
+        }
+        crash_leg = "injected worker crash recovered to 200";
+    }
     println!(
-        "single-shot smoke OK against {addr}: POST /v1/run 200 (model {model}, {n_out} output values), GET /healthz 200"
+        "single-shot smoke OK against {addr}: POST /v1/run 200 (model {model}, {n_out} output \
+         values), deadline-annotated run 200, GET /healthz 200, {crash_leg}"
     );
     Ok(())
 }
@@ -753,14 +856,33 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let batch = args.get_positive_usize("batch")?.unwrap_or(4);
     let reqs_per_client = args.get_positive_usize("requests")?.unwrap_or(8);
     let batch_cost_ms = args.get_f64("batch-cost-ms")?.unwrap_or(4.0);
+    // Fault mode: arm every injection point at this rate on each
+    // in-process server and give the clients a retry budget.
+    let fault_rate: Option<f64> = args.get_f64("fault-rate")?;
+    if let Some(r) = fault_rate {
+        if !(0.0..=1.0).contains(&r) {
+            bail!("--fault-rate must be in [0, 1], got {r}");
+        }
+    }
+    let fault_seed: Option<u64> = match args.get("fault-seed") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| anyhow::anyhow!("--fault-seed: bad seed '{v}': {e}"))?,
+        ),
+    };
     args.reject_unknown()?;
     if single {
         let addr = addr.ok_or_else(|| anyhow::anyhow!("--single requires --addr HOST:PORT"))?;
         return bench_serve_single(&addr);
     }
     if let Some(addr) = addr {
+        if fault_rate.is_some() || fault_seed.is_some() {
+            bail!("--fault-rate/--fault-seed drive the in-process sweep; they cannot reach a server behind --addr");
+        }
         return bench_serve_external(&addr, &concurrencies, reqs_per_client);
     }
+    let fault_seed = brainslug::fault::seed_from_env(fault_seed.unwrap_or(0));
 
     // Calibrate the sim pacing so one batch costs ~batch_cost_ms of
     // wall-clock (same scheme as benches/fig16_serving_scaling).
@@ -779,23 +901,51 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         // Closed loop, Block policy: every request is eventually
         // served; queue wait shows up in the percentiles.
         for &c in &concurrencies {
-            let server = ServerConfig::new(bench::serving_engine(batch, scale))
+            let mut config = ServerConfig::new(bench::serving_engine(batch, scale))
                 .workers(w)
                 .queue_depth(4 * batch)
                 .queue_policy(QueuePolicy::Block)
-                .max_wait(Duration::from_millis(2))
-                .start()?;
+                .max_wait(Duration::from_millis(2));
+            let inj = fault_rate.map(|r| {
+                let inj = Arc::new(FaultInjector::new(fault_seed));
+                for p in FaultPoint::ALL {
+                    inj.set_rate(p, r);
+                }
+                inj
+            });
+            if let Some(inj) = inj.clone() {
+                config = config.faults(inj);
+            }
+            let server = config.start()?;
             let mut cfg = HttpConfig::new("127.0.0.1:0");
             cfg.conn_threads = c.max(8);
             let http = HttpServer::start(server, cfg)?;
             let state = http.state().clone();
             let body = run_body_json(&state.model, &brainslug::rng::fill_f32(7, state.image_elems));
-            let report = http::closed_loop(&http.addr().to_string(), c, reqs_per_client, body.as_bytes());
+            let retry = fault_rate.map(|_| RetryPolicy {
+                seed: fault_seed,
+                ..RetryPolicy::default()
+            });
+            let report = http::closed_loop_with(
+                &http.addr().to_string(),
+                c,
+                reqs_per_client,
+                body.as_bytes(),
+                retry,
+            );
+            let restarts = state.stats.restarts.load(Ordering::Relaxed);
             http.shutdown();
             serve_table_row(&mut table, "closed", w, format!("c={c}"), &report);
             let mut row = serve_row("closed", w, &report);
             row.set("batch", Json::from_usize(batch));
             row.set("concurrency", Json::from_usize(c));
+            if let Some(r) = fault_rate {
+                row.set("fault_rate", Json::Num(r));
+                row.set("fault_seed", Json::Num(fault_seed as f64));
+                row.set("retries", Json::Num(report.retries as f64));
+                row.set("expired", Json::Num(report.expired as f64));
+                row.set("restarts", Json::Num(restarts as f64));
+            }
             rows.push(row);
         }
         // Open loop, Reject policy, arrivals at ~1.75x estimated

@@ -40,7 +40,8 @@
 //! ([`EngineBuilder::sim_paced`]), where a batch occupies real
 //! wall-clock time and queueing is genuine.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Sender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -55,6 +56,7 @@ use anyhow::{anyhow, Result};
 use crate::conc::sync::{Gate, Mutex, Receiver, SyncSender};
 
 use crate::engine::{Engine, EngineBuilder};
+use crate::fault::{FaultInjector, FaultPoint};
 use crate::graph::Shape;
 use crate::json::Json;
 use crate::runtime::HostTensor;
@@ -143,7 +145,9 @@ impl LatencyHistogram {
 
 /// Why a submitted request failed — the typed seam the HTTP front door
 /// maps onto wire status codes (queue-full → 503 + `Retry-After`,
-/// shutdown → 503, bad input → 400, execution failure → 500). The
+/// shutdown → 503, bad input → 400, execution failure → 500, worker
+/// crash → 503 + `Retry-After`, missed deadline → 504; the exhaustive
+/// mapping lives in [`crate::http::router::infer_error_response`]). The
 /// `Display` strings are the stable messages the pre-HTTP `infer` API
 /// always returned.
 #[derive(Debug)]
@@ -157,6 +161,13 @@ pub enum InferError {
     /// Batch execution failed on a worker. The message already carries
     /// the worker's "batch execution failed: …" context verbatim.
     Exec(String),
+    /// The worker executing this request's batch panicked; the replica
+    /// is being rebuilt. Transient — the same request retried a moment
+    /// later lands on a healthy replica.
+    WorkerCrashed { worker: usize },
+    /// The request's deadline expired before (or while) a worker could
+    /// execute it; it was shed without wasting batch slots.
+    DeadlineExceeded { waited_ms: u64 },
 }
 
 impl std::fmt::Display for InferError {
@@ -167,19 +178,31 @@ impl std::fmt::Display for InferError {
             }
             InferError::Stopped => write!(f, "server stopped"),
             InferError::BadInput(msg) | InferError::Exec(msg) => write!(f, "{msg}"),
+            InferError::WorkerCrashed { worker } => {
+                write!(f, "worker {worker} crashed mid-batch; replica restarting, retry")
+            }
+            InferError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms in queue")
+            }
         }
     }
 }
 
 impl std::error::Error for InferError {}
 
-/// One inference request: a single image (batch dim 1) and a reply
-/// channel. The reply carries an explicit error when batch execution
-/// fails, so callers never see a bare disconnected-channel error.
+/// One inference request: a single image (batch dim 1), a typed reply
+/// channel, and an optional deadline. The reply carries an explicit
+/// [`InferError`] on every failure path, so callers never see a bare
+/// disconnected-channel error.
 struct Request {
     image: Vec<f32>,
-    reply: Sender<Result<HostTensor>>,
+    reply: Sender<std::result::Result<HostTensor, InferError>>,
     enqueued: Instant,
+    /// Absolute drop-dead time: a worker that gathers this request
+    /// after the deadline sheds it with
+    /// [`InferError::DeadlineExceeded`] instead of spending a batch
+    /// slot on an answer nobody is waiting for.
+    deadline: Option<Instant>,
 }
 
 /// Channel message: a request, or an explicit shutdown signal (cloned
@@ -198,6 +221,101 @@ pub enum QueuePolicy {
     /// Fail fast with a "queue full" error (counted in
     /// [`ServerStats::rejected`]).
     Reject,
+}
+
+/// Lifecycle phase reported by the health state machine — see
+/// [`HealthState`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthPhase {
+    /// Workers are still building their engine replicas.
+    Starting,
+    /// Serving normally.
+    Ready,
+    /// Serving, but at least one replica is being rebuilt after a
+    /// crash — capacity is reduced and clients should back off.
+    Degraded,
+    /// `stop()` has begun: accepted requests drain, new ones are
+    /// refused.
+    Draining,
+}
+
+impl HealthPhase {
+    /// Stable lowercase name — the `state` field of `GET /healthz` and
+    /// `GET /v1/stats`.
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthPhase::Starting => "starting",
+            HealthPhase::Ready => "ready",
+            HealthPhase::Degraded => "degraded",
+            HealthPhase::Draining => "draining",
+        }
+    }
+}
+
+/// The server's health state machine:
+/// `Starting → Ready ⇄ Degraded → Draining`. `Starting`, `Ready` and
+/// `Draining` are explicit one-way transitions; `Degraded` is *derived*
+/// — `Ready` with at least one replica mid-rebuild — so it clears
+/// itself the moment the last rebuild finishes, with no extra
+/// transition to forget.
+///
+/// Ordering: Relaxed throughout, per the [`ServerStats`] contract — the
+/// phase is an advisory gauge for `/healthz` (a probe tolerates reading
+/// the previous phase for an instant), and the `rebuilding` gauge is an
+/// independent counter whose increments/decrements are RMW-atomic.
+#[derive(Debug, Default)]
+pub struct HealthState {
+    /// 0 = Starting, 1 = Ready, 2 = Draining.
+    phase: AtomicU8,
+    /// Number of replicas currently rebuilding after a crash.
+    rebuilding: AtomicI64,
+}
+
+impl HealthState {
+    pub fn phase(&self) -> HealthPhase {
+        match self.phase.load(Ordering::Relaxed) {
+            0 => HealthPhase::Starting,
+            2 => HealthPhase::Draining,
+            _ => {
+                if self.rebuilding.load(Ordering::Relaxed) > 0 {
+                    HealthPhase::Degraded
+                } else {
+                    HealthPhase::Ready
+                }
+            }
+        }
+    }
+
+    /// Whether `/healthz` should answer 200 (the server accepts work).
+    pub fn is_serving(&self) -> bool {
+        matches!(self.phase(), HealthPhase::Ready | HealthPhase::Degraded)
+    }
+
+    pub(crate) fn set_ready(&self) {
+        self.phase.store(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_draining(&self) {
+        self.phase.store(2, Ordering::Relaxed);
+    }
+
+    pub(crate) fn rebuild_started(&self) {
+        self.rebuilding.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn rebuild_finished(&self) {
+        self.rebuilding.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Queue-depth-aware `Retry-After` hint (seconds) for 503 responses:
+/// an empty queue suggests an immediate-ish retry (1 s, the HTTP
+/// header's floor resolution), a full queue up to `1 + 4 = 5`, clamped
+/// at 8 for depth readings above capacity (possible transiently, see
+/// [`ServerStats::queue_depth`]).
+pub fn suggested_retry_after(queue_depth: u64, capacity: usize) -> u32 {
+    let cap = capacity.max(1) as u64;
+    (1 + (4 * queue_depth) / cap).min(8) as u32
 }
 
 /// Server statistics, aggregated across all workers. Per-worker batch
@@ -247,8 +365,20 @@ pub struct ServerStats {
     /// feed `GET /v1/stats` and the `serve` summary. Fixed buckets, one
     /// atomic increment per request on the hot path.
     pub latency: LatencyHistogram,
+    /// Worker crashes recovered by the supervisor (counted per crash,
+    /// *before* the crashed batch's callers are answered, so a client
+    /// that saw [`InferError::WorkerCrashed`] is guaranteed to see the
+    /// matching increment here).
+    pub restarts: AtomicU64,
+    /// Requests shed with [`InferError::DeadlineExceeded`] (at
+    /// admission or by a worker's pre-execution sweep).
+    pub deadline_dropped: AtomicU64,
+    /// Health state machine driving `/healthz` (see [`HealthState`]).
+    pub health: HealthState,
     /// Batches executed by each worker.
     worker_batches: Vec<AtomicU64>,
+    /// Crash recoveries per worker (index = worker id).
+    worker_restarts: Vec<AtomicU64>,
 }
 
 impl ServerStats {
@@ -256,6 +386,7 @@ impl ServerStats {
     pub fn with_workers(n: usize) -> Self {
         ServerStats {
             worker_batches: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            worker_restarts: (0..n).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
     }
@@ -289,6 +420,14 @@ impl ServerStats {
     /// Batches executed per worker (index = worker id).
     pub fn worker_batches(&self) -> Vec<u64> {
         self.worker_batches
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Crash recoveries per worker (index = worker id).
+    pub fn worker_restarts(&self) -> Vec<u64> {
+        self.worker_restarts
             .iter()
             .map(|c| c.load(Ordering::Relaxed))
             .collect()
@@ -333,9 +472,27 @@ impl ServerStats {
         o.set("p95_ms", Json::Num(p95));
         o.set("p99_ms", Json::Num(p99));
         o.set(
+            "restarts",
+            Json::Num(self.restarts.load(Ordering::Relaxed) as f64),
+        );
+        o.set(
+            "deadline_dropped",
+            Json::Num(self.deadline_dropped.load(Ordering::Relaxed) as f64),
+        );
+        o.set("health", Json::Str(self.health.phase().name().into()));
+        o.set(
             "worker_batches",
             Json::Arr(
                 self.worker_batches()
+                    .into_iter()
+                    .map(|b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        );
+        o.set(
+            "worker_restarts",
+            Json::Arr(
+                self.worker_restarts()
                     .into_iter()
                     .map(|b| Json::Num(b as f64))
                     .collect(),
@@ -367,6 +524,20 @@ impl ServerHandle {
     /// front ends can map backpressure and shutdown onto wire status
     /// codes without string matching.
     pub fn try_infer(&self, image: Vec<f32>) -> std::result::Result<HostTensor, InferError> {
+        self.try_infer_deadline(image, None)
+    }
+
+    /// [`Self::try_infer`] with an absolute deadline. An
+    /// already-expired deadline is refused at admission without
+    /// touching the queue; one that expires *in* the queue is shed by
+    /// the gathering worker before execution. Both paths return
+    /// [`InferError::DeadlineExceeded`] and count in
+    /// [`ServerStats::deadline_dropped`].
+    pub fn try_infer_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<HostTensor, InferError> {
         if image.len() != self.image_shape.numel() {
             return Err(InferError::BadInput(format!(
                 "image has {} elements, expected {}",
@@ -374,11 +545,18 @@ impl ServerHandle {
                 self.image_shape.numel()
             )));
         }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                self.stats.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+                return Err(InferError::DeadlineExceeded { waited_ms: 0 });
+            }
+        }
         let (tx, rx) = channel();
         let msg = Msg::Infer(Request {
             image,
             reply: tx,
             enqueued: Instant::now(),
+            deadline,
         });
         {
             // Hold the gate's read side across the send: once `stop`
@@ -426,7 +604,10 @@ impl ServerHandle {
         }
         match rx.recv() {
             Ok(Ok(t)) => Ok(t),
-            Ok(Err(e)) => Err(InferError::Exec(format!("{e:#}"))),
+            // The reply is typed end to end: execution failures, worker
+            // crashes and in-queue deadline drops arrive as the exact
+            // `InferError` the worker chose.
+            Ok(Err(e)) => Err(e),
             // Unreachable post the drain fix (accepted requests always
             // get a reply); kept as a defensive mapping.
             Err(_) => Err(InferError::Stopped),
@@ -452,6 +633,7 @@ pub struct ServerConfig {
     workers: usize,
     queue_depth: usize,
     queue_policy: QueuePolicy,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl ServerConfig {
@@ -467,6 +649,7 @@ impl ServerConfig {
             workers: 1,
             queue_depth: 64,
             queue_policy: QueuePolicy::Block,
+            faults: None,
         }
     }
 
@@ -499,6 +682,14 @@ impl ServerConfig {
         self
     }
 
+    /// Arm fault injection: workers consult `faults` at the
+    /// worker-panic, slow-exec and queue-stall points (default
+    /// unarmed, a `None` branch with zero cost).
+    pub fn faults(mut self, faults: Arc<FaultInjector>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// Start the server (see [`Server::start`]).
     pub fn start(self) -> Result<Server> {
         Server::start(self)
@@ -516,6 +707,8 @@ pub struct Server {
     joins: Vec<std::thread::JoinHandle<()>>,
     shutdown: SyncSender<Msg>,
     closed: Arc<Gate>,
+    queue_depth: usize,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl Server {
@@ -532,6 +725,7 @@ impl Server {
             workers,
             queue_depth,
             queue_policy,
+            faults,
         } = config;
         // Tune once, up front: a builder carrying `.autotune(level)`
         // must not re-run the whole timed search in every worker thread
@@ -559,6 +753,7 @@ impl Server {
             let rx = rx.clone();
             let stats = stats.clone();
             let ready_tx = ready_tx.clone();
+            let faults = faults.clone();
             joins.push(std::thread::spawn(move || {
                 let mut engine = match builder.build() {
                     Ok(e) => e,
@@ -572,7 +767,41 @@ impl Server {
                     engine.graph().name.clone(),
                 )));
                 drop(ready_tx);
-                batch_loop(worker, &mut engine, &rx, &stats, max_wait);
+                // Supervised serve loop: `batch_loop` runs one replica
+                // "life"; a crash (panic caught around execution) is
+                // answered by rebuilding the replica from the builder
+                // and going again. A shutdown token absorbed by the
+                // crashed batch is honored — forgetting it is the
+                // lost-restart race `fault::supervisor_protocol` pins
+                // as BSL050.
+                loop {
+                    match batch_loop(worker, &mut engine, &rx, &stats, max_wait, faults.as_deref())
+                    {
+                        LoopExit::Shutdown => return,
+                        LoopExit::Crashed { shutdown_pending } => {
+                            if shutdown_pending {
+                                return;
+                            }
+                            stats.health.rebuild_started();
+                            let rebuilt = builder.build();
+                            stats.health.rebuild_finished();
+                            match rebuilt {
+                                Ok(e) => engine = e,
+                                Err(err) => {
+                                    // Replica unrecoverable: stay live
+                                    // answering typed errors so no
+                                    // caller hangs, until shutdown.
+                                    eprintln!(
+                                        "server: worker {worker} replica rebuild failed: {err:#}; \
+                                         draining with errors"
+                                    );
+                                    drain_with_errors(worker, &rx, &stats);
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
             }));
         }
         drop(ready_tx);
@@ -623,6 +852,8 @@ impl Server {
             stats: stats.clone(),
             closed: closed.clone(),
         };
+        // Every replica built: the health machine leaves `Starting`.
+        stats.health.set_ready();
         Ok(Server {
             handle,
             stats,
@@ -631,6 +862,8 @@ impl Server {
             joins,
             shutdown: tx,
             closed,
+            queue_depth,
+            faults,
         })
     }
 
@@ -659,6 +892,17 @@ impl Server {
         self.stats.occupancy(self.batch)
     }
 
+    /// Bound of the dispatch queue — the capacity that
+    /// [`suggested_retry_after`] scales against.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// The armed fault injector, if any (`serve --fault-seed`).
+    pub fn faults(&self) -> Option<Arc<FaultInjector>> {
+        self.faults.clone()
+    }
+
     /// Stop the server and join all workers. Graceful by construction:
     /// the shutdown gate is flipped under the write side of the
     /// `closed` lock *before* the per-worker shutdown tokens are sent,
@@ -670,6 +914,11 @@ impl Server {
     /// with a clean "server stopped" error instead of racing the
     /// tokens.
     pub fn stop(mut self) {
+        // Announce the drain before refusing work: a probe that races
+        // `stop` may briefly see `draining` while its request still
+        // lands, which is the benign direction (clients back off
+        // early, no accepted request is lost).
+        self.stats.health.set_draining();
         // Close the gate first: blocks until in-flight `try_infer`
         // enqueues (which hold the read side) land, then rejects
         // everything after — the tokens below are provably behind every
@@ -819,31 +1068,59 @@ pub fn drain_protocol(workers: usize, queue_depth: usize, requests: usize, bugs:
     }
 }
 
+/// Why one replica "life" of [`batch_loop`] ended — consumed by the
+/// supervised outer loop in [`Server::start`].
+enum LoopExit {
+    /// A shutdown token was consumed (or the queue disconnected): the
+    /// worker is done for good.
+    Shutdown,
+    /// Execution panicked; the in-flight batch has already been
+    /// answered with [`InferError::WorkerCrashed`]. `shutdown_pending`
+    /// is `true` when the crashed batch's gather had also absorbed a
+    /// shutdown token — the supervisor must exit instead of restarting
+    /// (otherwise the token is burned and `stop()` deadlocks: the
+    /// lost-restart race pinned by `fault::supervisor_protocol`).
+    Crashed { shutdown_pending: bool },
+}
+
 /// One worker's serve loop: lock the shared queue, gather up to `batch`
-/// requests (or until `max_wait`), release the lock, execute, scatter.
-/// Execution happens outside the lock so the pool overlaps batches.
+/// requests (or until `max_wait`), release the lock, shed expired
+/// requests, execute, scatter. Execution happens outside the lock so
+/// the pool overlaps batches, and is wrapped in `catch_unwind` so a
+/// panicking replica answers its batch and reports to the supervisor
+/// instead of stranding callers.
 fn batch_loop(
     worker: usize,
     engine: &mut Engine,
     rx: &Arc<Mutex<Receiver<Msg>>>,
     stats: &Arc<ServerStats>,
     max_wait: Duration,
-) {
+    faults: Option<&FaultInjector>,
+) -> LoopExit {
     let in_shape = engine.graph().input_shape().clone();
     let batch = in_shape.batch();
     let image_elems = in_shape.numel() / batch;
     loop {
+        // Injection point `queue-stall`: a wedged dequeue. The queue
+        // keeps admitting (and timing out) requests while this worker
+        // sits out a beat, so backpressure and deadline shedding are
+        // exercised for real.
+        if let Some(f) = faults {
+            if f.fire(FaultPoint::QueueStall) {
+                std::thread::sleep(FaultInjector::stall());
+            }
+        }
         let (pending, shutdown_after) = {
             let q = match rx.lock() {
                 Ok(q) => q,
-                Err(_) => return, // another worker panicked mid-gather
+                Err(_) => return LoopExit::Shutdown, // poisoned: peer panicked mid-gather
             };
             let first = match q.recv() {
                 Ok(Msg::Infer(r)) => {
                     stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     r
                 }
-                Ok(Msg::Shutdown) | Err(_) => return,
+                Ok(Msg::Shutdown) | Err(_) => return LoopExit::Shutdown,
             };
             let mut pending = vec![first];
             let deadline = Instant::now() + max_wait;
@@ -867,14 +1144,55 @@ fn batch_loop(
             }
             (pending, shutdown_after)
         };
+        // Deadline sweep: answer expired requests with the typed 504
+        // error *before* spending batch slots on them. Checked here —
+        // after queue wait, before execution — because queue wait is
+        // where deadlines actually die under load.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(pending.len());
+        for r in pending {
+            match r.deadline {
+                Some(d) if now >= d => {
+                    stats.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+                    let waited_ms = r.enqueued.elapsed().as_millis() as u64;
+                    let _ = r.reply.send(Err(InferError::DeadlineExceeded { waited_ms }));
+                }
+                _ => live.push(r),
+            }
+        }
+        if live.is_empty() {
+            // Whole batch expired: nothing to run, but a consumed
+            // shutdown token must still be honored.
+            if shutdown_after {
+                return LoopExit::Shutdown;
+            }
+            continue;
+        }
         // Assemble the padded batch tensor.
         let mut data = vec![0.0f32; in_shape.numel()];
-        for (i, r) in pending.iter().enumerate() {
+        for (i, r) in live.iter().enumerate() {
             data[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
         }
         let input = HostTensor::new(in_shape.clone(), data);
-        match engine.run(input) {
-            Ok((out, _stats)) => {
+        // Injection points `worker-panic` / `slow-exec` live inside the
+        // unwind boundary with the engine: an injected panic takes the
+        // exact recovery path a real mid-execution panic would.
+        // `AssertUnwindSafe` is the supervision contract made explicit:
+        // on unwind the engine is assumed poisoned and is *never run
+        // again* — the supervisor rebuilds it from the builder.
+        let exec = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = faults {
+                if f.fire(FaultPoint::WorkerPanic) {
+                    panic!("injected fault: worker-panic");
+                }
+                if f.fire(FaultPoint::SlowExec) {
+                    std::thread::sleep(FaultInjector::stall());
+                }
+            }
+            engine.run(input)
+        }));
+        match exec {
+            Ok(Ok((out, _stats))) => {
                 let out_elems = out.shape.numel() / batch;
                 // Ordering: all Relaxed — independent statistical
                 // counters (see the `ServerStats` contract). The reply
@@ -884,10 +1202,10 @@ fn batch_loop(
                 stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
                 stats
                     .padded_slots
-                    .fetch_add((batch - pending.len()) as u64, Ordering::Relaxed);
+                    .fetch_add((batch - live.len()) as u64, Ordering::Relaxed);
                 let mut out_dims = out.shape.dims.clone();
                 out_dims[0] = 1;
-                for (i, r) in pending.iter().enumerate() {
+                for (i, r) in live.iter().enumerate() {
                     let slice = out.data[i * out_elems..(i + 1) * out_elems].to_vec();
                     let t =
                         HostTensor::new(Shape::new(out_dims.clone(), out.shape.dtype), slice);
@@ -898,21 +1216,59 @@ fn batch_loop(
                     let _ = r.reply.send(Ok(t));
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // Reply with an explicit error instead of dropping the
                 // channels (which surfaced as a cryptic "receiving on an
                 // empty and disconnected channel" at the caller).
                 eprintln!("server: batch execution failed: {e:#}");
                 let msg = format!("{e:#}");
-                for r in &pending {
+                for r in &live {
                     let _ = r
                         .reply
-                        .send(Err(anyhow!("batch execution failed: {msg}")));
+                        .send(Err(InferError::Exec(format!("batch execution failed: {msg}"))));
                 }
+            }
+            Err(_panic) => {
+                // Count the crash *before* answering the batch, so any
+                // client that observed `WorkerCrashed` is guaranteed to
+                // find the matching restart in `/v1/stats` (the reply
+                // send is the publishing edge; Relaxed RMWs done before
+                // it are visible to the receiver-side reader).
+                stats.restarts.fetch_add(1, Ordering::Relaxed);
+                stats.worker_restarts[worker].fetch_add(1, Ordering::Relaxed);
+                eprintln!("server: worker {worker} panicked mid-batch; answering batch and rebuilding");
+                for r in &live {
+                    let _ = r.reply.send(Err(InferError::WorkerCrashed { worker }));
+                }
+                return LoopExit::Crashed {
+                    shutdown_pending: shutdown_after,
+                };
             }
         }
         if shutdown_after {
-            return;
+            return LoopExit::Shutdown;
+        }
+    }
+}
+
+/// Last-resort serve loop for a worker whose replica could not be
+/// rebuilt: keep draining the shared queue, answering every request
+/// with the typed crash error (so no caller ever hangs on a dead
+/// replica), until a shutdown token arrives.
+fn drain_with_errors(worker: usize, rx: &Arc<Mutex<Receiver<Msg>>>, stats: &Arc<ServerStats>) {
+    loop {
+        let msg = {
+            match rx.lock() {
+                Ok(q) => q.recv(),
+                Err(_) => return,
+            }
+        };
+        match msg {
+            Ok(Msg::Infer(r)) => {
+                stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = r.reply.send(Err(InferError::WorkerCrashed { worker }));
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
         }
     }
 }
@@ -1302,13 +1658,16 @@ mod tests {
             image: vec![0.0; elems],
             reply: reply_tx,
             enqueued: Instant::now(),
+            deadline: None,
         }))
         .unwrap();
         drop(tx);
         let rx = Arc::new(Mutex::new(rx));
-        batch_loop(0, &mut failing, &rx, &stats, Duration::from_millis(1));
+        let exit = batch_loop(0, &mut failing, &rx, &stats, Duration::from_millis(1), None);
+        assert!(matches!(exit, LoopExit::Shutdown), "bail!-errors do not crash the replica");
         let reply = reply_rx.recv().unwrap();
         let err = reply.unwrap_err();
+        assert!(matches!(err, InferError::Exec(_)), "{err:?}");
         assert!(
             err.to_string().contains("batch execution failed"),
             "caller must see an explicit batch failure, got: {err}"
@@ -1318,5 +1677,146 @@ mod tests {
         assert_eq!(stats.requests.load(Ordering::Relaxed), 0);
         assert_eq!(stats.batches.load(Ordering::Relaxed), 0);
         assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fault_injected_worker_panic_is_supervised_and_survives() {
+        // A triggered panic crashes the replica mid-batch: the caller
+        // gets the typed `WorkerCrashed` error (not a hang, not a
+        // disconnected channel), the supervisor rebuilds the replica,
+        // and the next request is served normally. Restart accounting
+        // matches the injected panic count exactly.
+        let inj = Arc::new(crate::fault::FaultInjector::new(crate::fault::seed_from_env(42)));
+        let server = ServerConfig::new(sim_engine(2))
+            .workers(1)
+            .max_wait(Duration::from_millis(1))
+            .faults(inj.clone())
+            .start()
+            .unwrap();
+        let elems = server.handle().image_shape().numel();
+        inj.trigger(FaultPoint::WorkerPanic);
+        let err = server.handle().try_infer(vec![0.0; elems]).unwrap_err();
+        assert!(matches!(err, InferError::WorkerCrashed { worker: 0 }), "{err:?}");
+        // The crash was counted before the reply was sent.
+        assert_eq!(server.stats.restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.worker_restarts(), vec![1]);
+        assert_eq!(inj.fired(FaultPoint::WorkerPanic), 1);
+        // The rebuilt replica serves the retry.
+        let out = server.handle().try_infer(vec![0.0; elems]).unwrap();
+        assert_eq!(out.shape.batch(), 1);
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn fault_crash_during_shutdown_still_drains_cleanly() {
+        // Storm-while-stopping: panics on every batch must not lose
+        // shutdown tokens (the lost-restart race) — `stop()` joins all
+        // workers and every accepted request is answered, all with
+        // typed errors. Run a few rounds to give the races air.
+        for round in 0..3 {
+            let inj = Arc::new(crate::fault::FaultInjector::new(
+                crate::fault::seed_from_env(7).wrapping_add(round),
+            ));
+            inj.set_rate(FaultPoint::WorkerPanic, 1.0);
+            let server = ServerConfig::new(sim_engine(2))
+                .workers(2)
+                .queue_depth(4)
+                .max_wait(Duration::from_millis(1))
+                .faults(inj)
+                .start()
+                .unwrap();
+            let clients = spawn_requests(&server, 6);
+            std::thread::sleep(Duration::from_millis(2));
+            server.stop(); // must not hang: tokens survive the crashes
+            for c in clients {
+                let err = c.join().unwrap().unwrap_err();
+                let msg = err.to_string();
+                assert!(
+                    msg.contains("crashed mid-batch") || msg.contains("server stopped"),
+                    "round {round}: unexpected error {msg}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_deadline_expired_in_queue_is_shed_with_typed_error() {
+        // One slow worker (paced ~30 ms/batch): the first request
+        // occupies it, the second carries a 5 ms deadline and expires
+        // in the queue — the worker sheds it without running it.
+        let scale = pace_scale_for(1, 0.03);
+        let server = ServerConfig::new(sim_engine(1).sim_paced(scale))
+            .workers(1)
+            .queue_depth(4)
+            .max_wait(Duration::from_millis(1))
+            .start()
+            .unwrap();
+        let elems = server.handle().image_shape().numel();
+        let running = spawn_requests(&server, 1);
+        std::thread::sleep(Duration::from_millis(10)); // worker busy
+        let h = server.handle();
+        let err = h
+            .try_infer_deadline(
+                vec![0.0; elems],
+                Some(Instant::now() + Duration::from_millis(5)),
+            )
+            .unwrap_err();
+        match err {
+            InferError::DeadlineExceeded { waited_ms } => {
+                assert!(waited_ms >= 5, "shed before the deadline: {waited_ms} ms")
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(server.stats.deadline_dropped.load(Ordering::Relaxed), 1);
+        for c in running {
+            assert!(c.join().unwrap().is_ok());
+        }
+        // The shed request was never executed: one request served.
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn fault_expired_deadline_rejected_at_admission() {
+        let server = sim_server(2, Duration::from_millis(1));
+        let elems = server.handle().image_shape().numel();
+        let err = server
+            .handle()
+            .try_infer_deadline(vec![0.0; elems], Some(Instant::now() - Duration::from_millis(1)))
+            .unwrap_err();
+        assert!(matches!(err, InferError::DeadlineExceeded { waited_ms: 0 }), "{err:?}");
+        assert_eq!(server.stats.deadline_dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.requests.load(Ordering::Relaxed), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn fault_health_machine_walks_ready_to_draining() {
+        let server = sim_server(2, Duration::from_millis(1));
+        let stats = server.stats.clone();
+        assert_eq!(stats.health.phase(), HealthPhase::Ready);
+        assert!(stats.health.is_serving());
+        server.stop();
+        assert_eq!(stats.health.phase(), HealthPhase::Draining);
+        assert!(!stats.health.is_serving());
+        // Degraded is derived from the rebuild gauge, and clears.
+        let fresh = ServerStats::with_workers(1);
+        fresh.health.set_ready();
+        fresh.health.rebuild_started();
+        assert_eq!(fresh.health.phase(), HealthPhase::Degraded);
+        fresh.health.rebuild_finished();
+        assert_eq!(fresh.health.phase(), HealthPhase::Ready);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth() {
+        assert_eq!(suggested_retry_after(0, 64), 1);
+        assert_eq!(suggested_retry_after(32, 64), 3);
+        assert_eq!(suggested_retry_after(64, 64), 5);
+        // Transient over-capacity readings clamp instead of exploding.
+        assert_eq!(suggested_retry_after(10_000, 64), 8);
+        // Degenerate capacity must not divide by zero.
+        assert_eq!(suggested_retry_after(3, 0), 8);
     }
 }

@@ -1,16 +1,20 @@
 //! End-to-end schedule model checking of the shipped runtime protocols.
 //!
-//! The acceptance bar for the checker is historical: two real bugs were
+//! The acceptance bar for the checker is historical: real bugs were
 //! fixed in this repo's past — the shutdown-while-queued race in the
 //! batch server (tokens could be consumed before the admission gate
-//! closed, stranding queued work) and the listener drain-ordering bug
+//! closed, stranding queued work), the listener drain-ordering bug
 //! (pool threads bailing on a stop flag and abandoning accepted
-//! connections). Each replica exposes a bug switch that re-introduces
-//! the pre-fix behavior *in test only*; the checker must find both with
-//! a replayable counterexample schedule, and must find nothing in the
+//! connections), and the supervisor lost-restart race (a crashing
+//! worker forgetting a shutdown token it had already absorbed, so its
+//! reborn replica blocks in `recv` forever and shutdown deadlocks).
+//! Each replica exposes a bug switch that re-introduces the pre-fix
+//! behavior *in test only*; the checker must find every one with a
+//! replayable counterexample schedule, and must find nothing in the
 //! shipped (default) configurations.
 
 use brainslug::conc::{explore, report_to_diags, ExploreOptions, Violation};
+use brainslug::fault::{supervisor_protocol, SupervisorBugs};
 use brainslug::http::listener::{self, ListenerBugs};
 use brainslug::server::{self, DrainBugs};
 use std::sync::Arc;
@@ -54,6 +58,17 @@ fn shipped_band_pool_explores_clean() {
         "cpu-band-pool",
         &opts(256),
         Arc::new(|| brainslug::cpu::par::pool_protocol(2, 4)),
+    );
+    assert!(report.finding.is_none(), "{:?}", report.finding);
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+#[test]
+fn shipped_fault_supervisor_explores_clean() {
+    let report = explore(
+        "fault-supervisor",
+        &opts(256),
+        Arc::new(|| supervisor_protocol(2, 2, 1, 1, SupervisorBugs::default())),
     );
     assert!(report.finding.is_none(), "{:?}", report.finding);
     assert!(report.warnings.is_empty(), "{:?}", report.warnings);
@@ -158,6 +173,77 @@ fn reverted_listener_drain_fix_is_found_as_bsl056() {
 }
 
 // ---------------------------------------------------------------------
+// The supervisor lost-restart race: a worker that crashes after its
+// gather absorbed a shutdown token "forgets" the token across the
+// restart (the bug the real supervisor avoids by carrying
+// `shutdown_pending` through `LoopExit::Crashed`). The reborn worker
+// blocks in recv with no token left for it — join deadlocks. BSL050.
+// ---------------------------------------------------------------------
+
+#[test]
+fn supervisor_lost_restart_race_is_found_as_bsl050() {
+    let bugs = SupervisorBugs {
+        lose_shutdown_on_crash: true,
+        ..SupervisorBugs::default()
+    };
+    let report = explore(
+        "fault-supervisor-lost-restart",
+        &opts(512),
+        Arc::new(move || supervisor_protocol(2, 2, 1, 1, bugs)),
+    );
+    let finding = report.finding.expect("lost-restart race must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::Deadlock { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    assert!(
+        !finding.counterexample.schedule.is_empty(),
+        "counterexample must carry a replayable schedule"
+    );
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL050"), "{diags:?}");
+    let d = diags.iter().find(|d| d.code.as_str() == "BSL050").unwrap();
+    assert!(
+        d.notes.iter().any(|n| n.contains("counterexample schedule")),
+        "{:?}",
+        d.notes
+    );
+    assert!(
+        d.notes.iter().any(|n| n.contains("replay with")),
+        "{:?}",
+        d.notes
+    );
+}
+
+// ---------------------------------------------------------------------
+// The supervisor in-flight-drop bug: a crashing worker drops the batch
+// it had gathered instead of answering every request with a typed
+// error. The dropped requests' obligations stay open — BSL056.
+// ---------------------------------------------------------------------
+
+#[test]
+fn supervisor_dropped_inflight_is_found_as_bsl056() {
+    let bugs = SupervisorBugs {
+        drop_inflight_on_crash: true,
+        ..SupervisorBugs::default()
+    };
+    let report = explore(
+        "fault-supervisor-dropped-inflight",
+        &opts(512),
+        Arc::new(move || supervisor_protocol(2, 2, 1, 1, bugs)),
+    );
+    let finding = report.finding.expect("dropped-inflight bug must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::NonQuiescent { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL056"), "{diags:?}");
+}
+
+// ---------------------------------------------------------------------
 // Counterexamples replay: pinning the violating schedule reproduces the
 // same violation class deterministically, with no search.
 // ---------------------------------------------------------------------
@@ -192,6 +278,42 @@ fn counterexample_schedule_replays_deterministically() {
             .unwrap_or_else(|| panic!("replay round {round} lost the violation"));
         assert!(
             matches!(f.violation, Violation::GateAfterTokens { .. }),
+            "replay round {round} reclassified: {:?}",
+            f.violation
+        );
+    }
+}
+
+#[test]
+fn supervisor_counterexample_replays_deterministically() {
+    let bugs = SupervisorBugs {
+        lose_shutdown_on_crash: true,
+        ..SupervisorBugs::default()
+    };
+    let report = explore(
+        "fault-supervisor-replay-src",
+        &opts(512),
+        Arc::new(move || supervisor_protocol(2, 2, 1, 1, bugs)),
+    );
+    let finding = report.finding.expect("need a finding to replay");
+    let schedule = finding.counterexample.schedule.clone();
+
+    for round in 0..3 {
+        let replay_opts = ExploreOptions {
+            replay: Some(schedule.clone()),
+            ..ExploreOptions::default()
+        };
+        let replayed = explore(
+            "fault-supervisor-replay",
+            &replay_opts,
+            Arc::new(move || supervisor_protocol(2, 2, 1, 1, bugs)),
+        );
+        assert_eq!(replayed.executions, 1, "replay runs exactly one schedule");
+        let f = replayed
+            .finding
+            .unwrap_or_else(|| panic!("replay round {round} lost the violation"));
+        assert!(
+            matches!(f.violation, Violation::Deadlock { .. }),
             "replay round {round} reclassified: {:?}",
             f.violation
         );
