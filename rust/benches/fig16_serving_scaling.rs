@@ -48,6 +48,9 @@ fn main() -> anyhow::Result<()> {
         "req/s",
         "vs-1",
         "mean-lat-ms",
+        "p50-ms",
+        "p95-ms",
+        "p99-ms",
         "occupancy",
         "peak-queue",
     ]);
@@ -84,11 +87,18 @@ fn main() -> anyhow::Result<()> {
         if base_throughput.is_none() {
             base_throughput = Some(throughput);
         }
+        // Histogram-midpoint estimates (within 12.5% by construction,
+        // see DESIGN.md §Observability) — the tail columns the mean
+        // hides: queue wait under load lives in p95/p99.
+        let (p50, p95, p99) = server.stats.latency_percentiles_ms();
         table.row(vec![
             workers.to_string(),
             format!("{throughput:.0}"),
             format!("{vs_one:.2}x"),
             format!("{:.2}", server.stats.mean_latency_ms()),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+            format!("{p99:.2}"),
             format!("{:.2}", server.occupancy()),
             server.stats.queue_peak.load(Ordering::Relaxed).to_string(),
         ]);
@@ -99,6 +109,9 @@ fn main() -> anyhow::Result<()> {
         row.set("req_per_s", Json::Num(throughput));
         row.set("scaling_vs_one", Json::Num(vs_one));
         row.set("mean_latency_ms", Json::Num(server.stats.mean_latency_ms()));
+        row.set("p50_ms", Json::Num(p50));
+        row.set("p95_ms", Json::Num(p95));
+        row.set("p99_ms", Json::Num(p99));
         row.set("occupancy", Json::Num(server.occupancy()));
         row.set(
             "queue_peak",

@@ -18,12 +18,18 @@
 //! grows with concurrency; the overload point reports a non-zero
 //! reject rate at every pool size (offered load is scaled with the
 //! pool, so it is always ~1.5x capacity).
+//!
+//! Each closed-loop point also scrapes the server's own `GET
+//! /v1/stats` p50 — a histogram-midpoint estimate, within 12.5% of the
+//! true sample by construction (DESIGN.md §Observability) — and
+//! asserts it agrees with the client's raw-sample p50 up to that error
+//! plus queue-exit skew, tying the two latency provenances together.
 
 use std::time::Duration;
 
 use brainslug::bench::{self, Table};
 use brainslug::http::{self, HttpConfig, HttpServer};
-use brainslug::json::Json;
+use brainslug::json::{self, Json};
 use brainslug::rng::fill_f32;
 use brainslug::server::{QueuePolicy, ServerConfig};
 
@@ -82,6 +88,9 @@ fn main() -> anyhow::Result<()> {
                 REQS_PER_CLIENT,
                 body.as_bytes(),
             );
+            let stats_resp = http::one_shot(&http.addr().to_string(), "GET", "/v1/stats", None)
+                .expect("stats scrape");
+            let parsed = json::parse(std::str::from_utf8(&stats_resp.body).unwrap()).unwrap();
             http.shutdown();
             assert_eq!(
                 report.ok, report.sent,
@@ -91,6 +100,18 @@ fn main() -> anyhow::Result<()> {
             assert!(
                 report.p99_ms() >= report.p50_ms(),
                 "percentiles out of order"
+            );
+            assert_eq!(
+                parsed.str_field("percentile_source").unwrap(),
+                "histogram-midpoint"
+            );
+            let server_p50 = parsed.f64_field("p50_ms").unwrap();
+            let band = server_p50 * brainslug::obs::MIDPOINT_REL_ERROR + 3.0;
+            assert!(
+                (report.p50_ms() - server_p50).abs() <= band,
+                "w={workers} c={clients}: client p50 {:.3} ms vs server p50 \
+                 {server_p50:.3} ms (band {band:.3} ms)",
+                report.p50_ms()
             );
             table.row(vec![
                 "closed".into(),
@@ -106,6 +127,7 @@ fn main() -> anyhow::Result<()> {
             ]);
             let mut row = base_row("closed", workers, &report);
             row.set("concurrency", Json::from_usize(clients));
+            row.set("server_p50_ms", Json::Num(server_p50));
             rows.push(row);
         }
 

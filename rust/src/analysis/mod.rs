@@ -55,6 +55,7 @@ pub fn standard_topologies() -> Vec<Topology> {
         crate::server::topology(4, 64),
         crate::http::listener::topology(8, 64),
         crate::cpu::par::topology(4),
+        crate::obs::topology(4),
     ]
 }
 

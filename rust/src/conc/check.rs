@@ -122,7 +122,7 @@ pub fn report_to_diags(report: &ExploreReport) -> Vec<Diagnostic> {
 }
 
 /// The protocol suite `brainslug check` explores: the shipped (bug-free)
-/// configurations of the four runtime protocols, sized small enough
+/// configurations of the five runtime protocols, sized small enough
 /// that the DFS pass gets real coverage of the interleaving space.
 fn protocol_suite() -> Vec<(&'static str, Arc<dyn Fn() + Send + Sync>)> {
     vec![
@@ -159,6 +159,12 @@ fn protocol_suite() -> Vec<(&'static str, Arc<dyn Fn() + Send + Sync>)> {
                     1,
                     crate::fault::SupervisorBugs::default(),
                 );
+            }),
+        ),
+        (
+            "obs-flush",
+            Arc::new(|| {
+                crate::obs::flush_protocol(2, 2, crate::obs::FlushBugs::default());
             }),
         ),
     ]

@@ -28,6 +28,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{Backend, Workload};
 use crate::graph::{Graph, Layer, NodeId};
+use crate::obs::{ObsCtx, SpanKind};
 use crate::optimizer::{OpKind, Plan, Segment, Stack};
 use crate::runtime::{stack_exec_name, HostTensor, ParamStore};
 use crate::scheduler::executor::take_value;
@@ -68,6 +69,26 @@ fn cached_param(
     let t = Arc::new(params.raw(id, want));
     cache.insert((id, want), t.clone());
     t
+}
+
+/// Record one span on the executing thread's row when tracing is
+/// armed. The `None` branch is the whole disabled path: no clock read,
+/// no lock, no allocation.
+fn span(obs: Option<&ObsCtx>, kind: SpanKind, label: &str, t0: Instant) {
+    if let Some(o) = obs {
+        o.obs.spans.thread("cpu-exec").record(kind, label, o.trace, t0);
+    }
+}
+
+/// Span label flavor of one top-level plan segment — matches the
+/// `kind` column of [`crate::memsim::predicted_segments`], so the
+/// drift report's join sees the same taxonomy on both sides.
+fn segment_kind(graph: &Graph, seg: &Segment) -> &'static str {
+    match seg {
+        Segment::Single(id) => graph.node(*id).layer.kind_name(),
+        Segment::Stack(_) => "stack",
+        Segment::Branch { .. } => "branch",
+    }
 }
 
 /// Arc-cached folded-BN (scale, shift) lookup; same shape as
@@ -120,6 +141,7 @@ impl CpuBackend {
         remaining: &mut [usize],
         id: NodeId,
         stats: &mut ExecStats,
+        obs: Option<&ObsCtx>,
     ) -> Result<()> {
         let node = self.graph.node(id);
         let name = format!("cpu:{}", node.name);
@@ -131,6 +153,7 @@ impl CpuBackend {
             Layer::Dropout { .. } => {
                 // Identity at inference: share the Arc, no copy.
                 let x = take_value(values, remaining, node.inputs[0])?;
+                span(obs, SpanKind::Kernel, &name, t0);
                 stats.push(name, kind.into(), t0.elapsed().as_secs_f64(), optimizable);
                 values.insert(id, x);
                 return Ok(());
@@ -196,6 +219,7 @@ impl CpuBackend {
                 kernels::concat(&refs, &node.shape)
             }
         };
+        span(obs, SpanKind::Kernel, &name, t0);
         stats.push(name, kind.into(), t0.elapsed().as_secs_f64(), optimizable);
         values.insert(id, Arc::new(out));
         Ok(())
@@ -208,6 +232,7 @@ impl CpuBackend {
         remaining: &mut [usize],
         stack: &Stack,
         stats: &mut ExecStats,
+        obs: Option<&ObsCtx>,
     ) -> Result<()> {
         let t0 = Instant::now();
         let entry = self.graph.node(stack.nodes[0]).inputs[0];
@@ -228,7 +253,7 @@ impl CpuBackend {
                 }
             }
         }
-        let out = walker::run_stack(stack, &x, &bn, self.threads);
+        let out = walker::run_stack(stack, &x, &bn, self.threads, obs);
         // Interior nodes were never materialized; their consumers are
         // all internal to the stack.
         let last = *stack
@@ -258,39 +283,69 @@ impl CpuBackend {
         remaining: &mut [usize],
         seg: &Segment,
         stats: &mut ExecStats,
+        obs: Option<&ObsCtx>,
     ) -> Result<()> {
         match seg {
-            Segment::Single(id) => self.run_node(values, remaining, *id, stats),
-            Segment::Stack(st) => self.run_stack(values, remaining, st, stats),
+            Segment::Single(id) => self.run_node(values, remaining, *id, stats, obs),
+            Segment::Stack(st) => self.run_stack(values, remaining, st, stats, obs),
             Segment::Branch { arms, join } => {
-                for arm in arms {
+                for (a, arm) in arms.iter().enumerate() {
+                    let t0 = obs.is_some().then(Instant::now);
                     for seg in arm {
-                        self.run_segment(values, remaining, seg, stats)?;
+                        self.run_segment(values, remaining, seg, stats, obs)?;
+                    }
+                    if let Some(t0) = t0 {
+                        span(obs, SpanKind::BranchArm, &format!("arm{a}"), t0);
                     }
                 }
-                self.run_node(values, remaining, *join, stats)
+                self.run_node(values, remaining, *join, stats, obs)
             }
         }
     }
 
-    fn run_baseline(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+    fn run_baseline(
+        &mut self,
+        input: HostTensor,
+        obs: Option<&ObsCtx>,
+    ) -> Result<(HostTensor, ExecStats)> {
+        let t0 = obs.is_some().then(Instant::now);
         let mut stats = ExecStats::default();
         let mut values = HashMap::new();
         let mut remaining = self.consumers.clone();
         values.insert(0usize, Arc::new(input));
         for id in 1..self.graph.nodes.len() {
-            self.run_node(&mut values, &mut remaining, id, &mut stats)?;
+            self.run_node(&mut values, &mut remaining, id, &mut stats, obs)?;
+        }
+        if let Some(t0) = t0 {
+            span(obs, SpanKind::Plan, "baseline", t0);
         }
         self.finish(values, stats)
     }
 
-    fn run_plan(&mut self, plan: &Plan, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+    fn run_plan(
+        &mut self,
+        plan: &Plan,
+        input: HostTensor,
+        obs: Option<&ObsCtx>,
+    ) -> Result<(HostTensor, ExecStats)> {
+        let t_plan = obs.is_some().then(Instant::now);
         let mut stats = ExecStats::default();
         let mut values = HashMap::new();
         let mut remaining = self.consumers.clone();
         values.insert(0usize, Arc::new(input));
-        for seg in &plan.segments {
-            self.run_segment(&mut values, &mut remaining, seg, &mut stats)?;
+        for (i, seg) in plan.segments.iter().enumerate() {
+            let t0 = obs.is_some().then(Instant::now);
+            self.run_segment(&mut values, &mut remaining, seg, &mut stats, obs)?;
+            if let Some(t0) = t0 {
+                // `seg{i}` is the drift-report join key
+                // ([`crate::obs::drift`]); the flavor after ':' is
+                // cosmetic.
+                let label = format!("seg{i}:{}", segment_kind(&self.graph, seg));
+                span(obs, SpanKind::Segment, &label, t0);
+            }
+        }
+        if let Some(t0) = t_plan {
+            span(obs, SpanKind::Plan, "plan", t0);
         }
         self.finish(values, stats)
     }
@@ -330,8 +385,8 @@ impl Backend for CpuBackend {
             work.seed
         );
         match &work.plan {
-            Some(p) => self.run_plan(p, input),
-            None => self.run_baseline(input),
+            Some(p) => self.run_plan(p, input, work.obs.as_ref()),
+            None => self.run_baseline(input, work.obs.as_ref()),
         }
     }
 }
@@ -345,7 +400,12 @@ mod tests {
     use crate::rng::ParamKind;
 
     fn workload(graph: Arc<Graph>, plan: Option<Arc<Plan>>, seed: u64) -> Workload {
-        Workload { graph, plan, seed }
+        Workload {
+            graph,
+            plan,
+            seed,
+            obs: None,
+        }
     }
 
     #[test]
@@ -372,6 +432,39 @@ mod tests {
         assert_eq!(base.shape, *graph.output_shape());
         assert_eq!(stats_base.segments.len(), graph.num_layers());
         assert!(stats_df.segments.iter().any(|s| s.kind == "stack"));
+    }
+
+    #[test]
+    fn traced_plan_run_records_nested_spans() {
+        let graph = Arc::new(bench::block_net(2, 1, 2, 12));
+        let plan = Arc::new(optimize(
+            &graph,
+            &DeviceSpec::host_cpu(),
+            &CollapseOptions::default(),
+        ));
+        plan.validate(&graph).unwrap();
+        let input = HostTensor::from_seed(graph.input_shape().clone(), 1, ParamKind::Activation);
+        let obs = Arc::new(crate::obs::Obs::default());
+        let mut be = CpuBackend::new(graph.clone(), 5, 2);
+        let mut work = workload(graph.clone(), Some(plan.clone()), 5);
+        work.obs = Some(ObsCtx {
+            obs: obs.clone(),
+            trace: 0xAB,
+        });
+        be.run(&work, input).unwrap();
+        let spans = obs.spans.drain();
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Plan));
+        let segs: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Segment).collect();
+        assert_eq!(segs.len(), plan.segments.len(), "one span per top-level segment");
+        assert!(segs.iter().all(|s| s.trace == 0xAB && s.label.starts_with("seg")));
+        assert!(
+            spans.iter().any(|s| s.kind == SpanKind::Band),
+            "the collapsed stack must record band spans"
+        );
+        // Untraced runs leave the recorder untouched.
+        let input2 = HostTensor::from_seed(graph.input_shape().clone(), 1, ParamKind::Activation);
+        be.run(&workload(graph.clone(), None, 5), input2).unwrap();
+        assert!(obs.spans.drain().is_empty());
     }
 
     #[test]

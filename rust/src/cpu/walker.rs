@@ -27,6 +27,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::graph::{NodeId, PoolKind, Window2d};
+use crate::obs::{ObsCtx, SpanKind};
 use crate::optimizer::{OpKind, Operation, Sequence, Stack};
 use crate::runtime::HostTensor;
 
@@ -205,11 +206,18 @@ fn pool_to(
 ///
 /// `bn` maps each `BnAffine` op's graph node to its folded
 /// (scale, shift) pair (see `ParamStore::bn_folded`).
+///
+/// `obs`: when armed, every band work item records a
+/// [`SpanKind::Band`] span on its worker's thread row — per-worker
+/// [`crate::obs::ThreadSpans`] handles live in the scratch state, so
+/// recording stays lock-local. `None` takes the literal pre-obs path:
+/// no clock reads, no allocation.
 pub fn run_sequence(
     seq: &Sequence,
     input: &HostTensor,
     bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
     threads: usize,
+    obs: Option<&ObsCtx>,
 ) -> HostTensor {
     debug_assert_eq!(&input.shape, seq.in_shape());
     let raw_ops: Vec<&Operation> = seq.steps.iter().flat_map(|s| &s.ops).collect();
@@ -266,11 +274,20 @@ pub fn run_sequence(
     let in_plane_len = in_rows * in_w;
     let input_data = &input.data;
     let k = ops.len();
+    let trace = obs.map_or(0, |o| o.trace);
     run_items(
         threads,
         items,
-        || (Vec::<f32>::new(), Vec::<f32>::new(), Vec::<(usize, usize)>::new()),
-        |(p, lo, mut band), (buf_a, buf_b, iv)| {
+        || {
+            (
+                Vec::<f32>::new(),
+                Vec::<f32>::new(),
+                Vec::<(usize, usize)>::new(),
+                obs.map(|o| o.obs.spans.thread("band-worker")),
+            )
+        },
+        |(p, lo, mut band), (buf_a, buf_b, iv, ts)| {
+            let t0 = ts.is_some().then(std::time::Instant::now);
             let chan = if rank4 { Some(p % channels) } else { None };
             let hi = lo + band.len() / out_w;
             // Halo back-propagation: iv[i] = rows entering op i,
@@ -349,6 +366,9 @@ pub fn run_sequence(
                     }
                 }
             }
+            if let (Some(ts), Some(t0)) = (ts.as_ref(), t0) {
+                ts.record(SpanKind::Band, "band", trace, t0);
+            }
         },
     );
     out
@@ -362,10 +382,11 @@ pub fn run_stack(
     input: &HostTensor,
     bn: &HashMap<NodeId, (Arc<HostTensor>, Arc<HostTensor>)>,
     threads: usize,
+    obs: Option<&ObsCtx>,
 ) -> HostTensor {
     let mut cur: Option<HostTensor> = None;
     for seq in &stack.sequences {
-        let next = run_sequence(seq, cur.as_ref().unwrap_or(input), bn, threads);
+        let next = run_sequence(seq, cur.as_ref().unwrap_or(input), bn, threads, obs);
         cur = Some(next);
     }
     cur.expect("stack has at least one sequence")
@@ -496,7 +517,7 @@ mod tests {
         let seqs = collapse(ops, &device, &CollapseOptions::default());
         let mut cur = input.clone();
         for seq in &seqs {
-            cur = run_sequence(seq, &cur, bn, threads);
+            cur = run_sequence(seq, &cur, bn, threads, None);
         }
         cur
     }
@@ -570,7 +591,7 @@ mod tests {
             sequences,
             signature: "test".into(),
         };
-        let got = run_stack(&stack, &input, &bn, 2);
+        let got = run_stack(&stack, &input, &bn, 2, None);
         assert_eq!(got, want);
     }
 }

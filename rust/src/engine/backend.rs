@@ -32,13 +32,18 @@ use crate::runtime::{HostTensor, Runtime};
 use crate::scheduler::{ExecStats, Executor};
 
 /// Everything a backend needs to execute one network: the resolved
-/// graph, the validated plan (`None` = breadth-first baseline), and the
-/// deterministic parameter seed.
+/// graph, the validated plan (`None` = breadth-first baseline), the
+/// deterministic parameter seed, and the optional tracing context.
 #[derive(Clone)]
 pub struct Workload {
     pub graph: Arc<Graph>,
     pub plan: Option<Arc<Plan>>,
     pub seed: u64,
+    /// Armed observability context ([`crate::obs`]): when `Some`, the
+    /// backend records Plan/Segment/Band/Kernel spans attributed to
+    /// `obs.trace`. `None` (the default) is the zero-overhead path —
+    /// backends that ignore tracing (PJRT, sim) never look at it.
+    pub obs: Option<crate::obs::ObsCtx>,
 }
 
 /// An execution strategy for optimized (or baseline) workloads.

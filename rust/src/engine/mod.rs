@@ -171,6 +171,10 @@ pub struct EngineBuilder {
     /// When set, `build()` runs the autotuner first and adopts (and
     /// persists) the winning configuration.
     tune: Option<TuneLevel>,
+    /// Observability domain handed to the engine (spans + metrics,
+    /// [`crate::obs`]). `None` = untraced: the backend hot path takes
+    /// the literal pre-obs branch everywhere.
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl Default for EngineBuilder {
@@ -186,6 +190,7 @@ impl Default for EngineBuilder {
             seed: DEFAULT_SEED,
             profile: ProfilePolicy::Auto,
             tune: None,
+            obs: None,
         }
     }
 }
@@ -322,6 +327,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach an observability domain ([`crate::obs::Obs`]): engine
+    /// runs record spans into it and `run_traced` attributes them to a
+    /// wire trace id. Without this call the engine is untraced and the
+    /// backends execute their pre-obs instruction stream (the property
+    /// `fig22_trace_drift` asserts).
+    pub fn obs(mut self, obs: Arc<crate::obs::Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
     /// Autotune at `build()` time: search the plan space on real
     /// hardware ([`crate::autotune::tune`]), adopt the winner, and
     /// persist it to the profile cache so later builds skip the search.
@@ -451,6 +466,7 @@ impl EngineBuilder {
     /// Resolve the network, optimize + validate the plan, and construct
     /// the backend from the configured [`BackendKind`].
     pub fn build(self) -> Result<Engine> {
+        let obs = self.obs.clone();
         let r = self.apply_autotune()?.resolve()?;
         let backend: Box<dyn Backend> = match &r.backend {
             BackendKind::Pjrt { artifact_dir } => {
@@ -471,6 +487,7 @@ impl EngineBuilder {
             seed: r.seed,
             backend,
             profile_label: r.profile_label,
+            obs,
         })
     }
 
@@ -483,6 +500,7 @@ impl EngineBuilder {
     where
         F: FnOnce(&Arc<Graph>, &DeviceSpec, u64) -> Result<Box<dyn Backend>>,
     {
+        let obs = self.obs.clone();
         let r = self.apply_autotune()?.resolve()?;
         let backend = make_backend(&r.graph, &r.device, r.seed)?;
         Ok(Engine {
@@ -492,6 +510,7 @@ impl EngineBuilder {
             seed: r.seed,
             backend,
             profile_label: r.profile_label,
+            obs,
         })
     }
 }
@@ -520,6 +539,9 @@ pub struct Engine {
     /// Description of the tuned profile the plan was built from, when
     /// one was transparently applied ([`ProfilePolicy`]).
     profile_label: Option<String>,
+    /// Observability domain, when the builder armed one
+    /// ([`EngineBuilder::obs`]).
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl Engine {
@@ -613,26 +635,57 @@ impl Engine {
         Ok(())
     }
 
+    /// The armed observability domain, if any ([`EngineBuilder::obs`]).
+    pub fn obs(&self) -> Option<&Arc<crate::obs::Obs>> {
+        self.obs.as_ref()
+    }
+
+    /// Arm (or replace) the observability domain after construction —
+    /// the server uses this to share one domain across worker replicas
+    /// built from a cloned builder.
+    pub fn set_obs(&mut self, obs: Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
+    }
+
+    /// Tracing context for one run. `None` when no domain is armed, so
+    /// every backend call site stays on its zero-overhead branch.
+    fn obs_ctx(&self, trace: u64) -> Option<crate::obs::ObsCtx> {
+        self.obs.as_ref().map(|o| crate::obs::ObsCtx {
+            obs: o.clone(),
+            trace,
+        })
+    }
+
     /// Execute in the configured mode (plan if [`Mode::BrainSlug`],
     /// baseline otherwise).
     pub fn run(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
+        self.run_traced(input, 0)
+    }
+
+    /// Like [`run`](Self::run), attributing recorded spans to `trace`
+    /// (the wire request id; 0 = unattributed). Identical to `run` when
+    /// no observability domain is armed.
+    pub fn run_traced(&mut self, input: HostTensor, trace: u64) -> Result<(HostTensor, ExecStats)> {
         self.check_input(&input)?;
         let work = Workload {
             graph: self.graph.clone(),
             plan: self.plan.clone(),
             seed: self.seed,
+            obs: self.obs_ctx(trace),
         };
         self.backend.run(&work, input)
     }
 
     /// Execute breadth-first regardless of the configured mode (the
-    /// comparison baseline of every experiment).
+    /// comparison baseline of every experiment). Baseline runs are
+    /// never traced — they are the pre-optimization comparison leg.
     pub fn run_baseline(&mut self, input: HostTensor) -> Result<(HostTensor, ExecStats)> {
         self.check_input(&input)?;
         let work = Workload {
             graph: self.graph.clone(),
             plan: None,
             seed: self.seed,
+            obs: None,
         };
         self.backend.run(&work, input)
     }
@@ -756,6 +809,28 @@ mod tests {
             t0.elapsed().as_secs_f64() >= target * 0.9,
             "paced run returned faster than the pacing floor"
         );
+    }
+
+    #[test]
+    fn engine_obs_traces_runs_and_baseline_stays_untraced() {
+        let obs = Arc::new(crate::obs::Obs::default());
+        let mut eng = Engine::builder()
+            .graph_owned(bench::block_net(2, 1, 2, 12))
+            .device(DeviceSpec::host_cpu())
+            .cpu(1)
+            .obs(obs.clone())
+            .seed(3)
+            .build()
+            .unwrap();
+        assert!(eng.obs().is_some());
+        let input = eng.synthetic_input();
+        eng.run_traced(input, 0x77).unwrap();
+        let spans = obs.spans.drain();
+        assert!(spans.iter().any(|s| s.kind == crate::obs::SpanKind::Plan));
+        assert!(spans.iter().all(|s| s.trace == 0x77), "all spans carry the trace id");
+        let input = eng.synthetic_input();
+        eng.run_baseline(input).unwrap();
+        assert!(obs.spans.drain().is_empty(), "baseline leg records nothing");
     }
 
     #[test]

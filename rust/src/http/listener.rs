@@ -22,7 +22,7 @@
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::TrySendError;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -114,6 +114,8 @@ impl HttpServer {
             image_elems: server.handle().image_shape().numel(),
             queue_capacity: server.queue_capacity(),
             faults: server.faults(),
+            obs: server.obs(),
+            trace_seed: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
         };
         let stop = Arc::new(AtomicBool::new(false));

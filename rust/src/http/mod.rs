@@ -7,9 +7,10 @@
 //!
 //! * [`wire`] — request parsing / response serialisation (keep-alive,
 //!   `Content-Length` framing, bounded header and body sizes),
-//! * [`router`] — `POST /v1/run`, `GET /v1/stats`, `GET /healthz`,
-//!   with lazy JSON field extraction ([`crate::json::scan_str_field`]
-//!   and friends) so the hot path never builds a document tree,
+//! * [`router`] — `POST /v1/run`, `GET /v1/stats`, `GET /v1/metrics`
+//!   (Prometheus text exposition), `GET /healthz`, with lazy JSON
+//!   field extraction ([`crate::json::scan_str_field`] and friends) so
+//!   the hot path never builds a document tree,
 //! * [`listener`] — `TcpListener` accept loop plus a bounded
 //!   connection-thread pool,
 //! * [`load`] — the closed/open-loop load generator behind
@@ -27,6 +28,11 @@
 //! clients as 408, and injected socket resets / partial writes exercise
 //! the reconnect and [`wire::write_full`] retry paths. See DESIGN.md
 //! §Fault Injection & Recovery.
+//!
+//! Observability (DESIGN.md §Observability): every routed response
+//! echoes an `x-brainslug-trace` id (client-supplied or minted), and
+//! `GET /v1/metrics` exposes the serving counters plus per-segment
+//! execution histograms in the Prometheus text format.
 
 pub mod listener;
 pub mod load;
@@ -133,6 +139,89 @@ mod tests {
         assert_eq!(resp.header("allow"), Some("POST"));
         let resp = one_shot(&addr, "POST", "/v1/run", Some(b"not json")).unwrap();
         assert_eq!(resp.status, 400);
+        http.shutdown();
+    }
+
+    /// Satellite: the `x-brainslug-trace` header round-trips over a
+    /// real socket — client ids are echoed verbatim (zero-padded to 16
+    /// hex digits), absent ids are minted, and error responses carry
+    /// the echo too.
+    #[test]
+    fn trace_header_round_trips_over_the_wire() {
+        let http = start_http(ServerConfig::new(sim_builder(1)));
+        let addr = http.addr().to_string();
+        let resp = one_shot_with(
+            &addr,
+            "GET",
+            "/healthz",
+            &[("x-brainslug-trace", "deadbeef")],
+            None,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("x-brainslug-trace"), Some("00000000deadbeef"));
+        // No client id: the server mints one — 16 hex digits, non-zero.
+        let resp = one_shot(&addr, "GET", "/healthz", None).unwrap();
+        let minted = resp.header("x-brainslug-trace").expect("minted id");
+        assert_eq!(minted.len(), 16, "{minted}");
+        assert!(u64::from_str_radix(minted, 16).is_ok_and(|t| t != 0), "{minted}");
+        // Error paths echo too (404 and 405 here).
+        let resp = one_shot_with(
+            &addr,
+            "GET",
+            "/nope",
+            &[("x-brainslug-trace", "17")],
+            None,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(resp.header("x-brainslug-trace"), Some("0000000000000017"));
+        let resp = one_shot_with(
+            &addr,
+            "GET",
+            "/v1/run",
+            &[("x-brainslug-trace", "17")],
+            None,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("x-brainslug-trace"), Some("0000000000000017"));
+        http.shutdown();
+    }
+
+    /// Satellite: the `/v1/stats` percentiles come from histogram
+    /// bucket midpoints ([`crate::obs::MIDPOINT_REL_ERROR`]); the load
+    /// harness measures raw client-side samples. The two views of the
+    /// same traffic must agree to within the documented band (plus a
+    /// small absolute allowance for the client's connection overhead).
+    #[test]
+    fn client_and_server_p50_agree_within_midpoint_error() {
+        let scale = pace_scale_for(1, 0.010);
+        let http = start_http(
+            ServerConfig::new(sim_builder(1).sim_paced(scale))
+                .workers(1)
+                .queue_depth(16),
+        );
+        let addr = http.addr().to_string();
+        let state = http.state().clone();
+        let body = run_body(&state, &vec![0.5; state.image_elems]);
+        let report = closed_loop(&addr, 1, 20, body.as_bytes());
+        assert_eq!(report.ok, 20, "errors={}", report.errors);
+        let resp = one_shot(&addr, "GET", "/v1/stats", None).unwrap();
+        let parsed = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(
+            parsed.str_field("percentile_source").unwrap(),
+            "histogram-midpoint"
+        );
+        let server_p50 = parsed.f64_field("p50_ms").unwrap();
+        let client_p50 = report.p50_ms();
+        assert!(server_p50 > 0.0 && client_p50 > 0.0);
+        let band = server_p50 * crate::obs::MIDPOINT_REL_ERROR + 3.0;
+        assert!(
+            (client_p50 - server_p50).abs() <= band,
+            "client p50 {client_p50:.3} ms vs server p50 {server_p50:.3} ms \
+             (band {band:.3} ms)"
+        );
         http.shutdown();
     }
 

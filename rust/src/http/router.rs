@@ -1,12 +1,13 @@
 //! Route table: maps parsed requests onto the serving engine.
 //!
-//! Three endpoints, mirrored in DESIGN.md §HTTP Serving:
+//! Four endpoints, mirrored in DESIGN.md §HTTP Serving:
 //!
-//! | method | path        | body in                              | 200 body out                     |
-//! |--------|-------------|--------------------------------------|----------------------------------|
-//! | POST   | `/v1/run`   | `{"model": "...", "input": [...]}`   | `{"model": ..., "output": [...]}`|
-//! | GET    | `/v1/stats` | —                                    | [`ServerStats::to_json`] + serving metadata |
-//! | GET    | `/healthz`  | —                                    | `{"ok": true, "state": "ready"}` |
+//! | method | path          | body in                              | 200 body out                     |
+//! |--------|---------------|--------------------------------------|----------------------------------|
+//! | POST   | `/v1/run`     | `{"model": "...", "input": [...]}`   | `{"model": ..., "output": [...]}`|
+//! | GET    | `/v1/stats`   | —                                    | [`ServerStats::to_json`] + serving metadata |
+//! | GET    | `/v1/metrics` | —                                    | Prometheus text exposition (v0.0.4) |
+//! | GET    | `/healthz`    | —                                    | `{"ok": true, "state": "ready"}` |
 //!
 //! The hot path (`POST /v1/run`) never builds a JSON tree for the
 //! request: the two fields are pulled straight off the byte stream with
@@ -22,7 +23,16 @@
 //! * `x-brainslug-fault: <point>` — queue a one-shot fault trigger
 //!   ([`crate::fault::FaultInjector::trigger`]); honored only when the
 //!   server was started with fault injection armed, 400 otherwise.
+//!
+//! One header participates in the observability story (DESIGN.md
+//! §Observability): `x-brainslug-trace: <hex64>` names the trace id
+//! attributed to the request's spans. When absent, the router mints
+//! one (SplitMix64 over a per-listener seed). Either way the resolved
+//! id is echoed back as a response header on *every* routed response —
+//! success and error paths alike — so clients can correlate any
+//! response, including a 503 shed, with the recorded spans.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -53,6 +63,13 @@ pub struct AppState {
     /// the `x-brainslug-fault` trigger header and the `fault_injection`
     /// stats block.
     pub faults: Option<Arc<FaultInjector>>,
+    /// The server's observability state: always-on metrics registry
+    /// (rendered by `GET /v1/metrics`) plus the span recorder when
+    /// tracing was armed at startup.
+    pub obs: Arc<crate::obs::Obs>,
+    /// Seed for minting trace ids when the client didn't send
+    /// `x-brainslug-trace` ([`crate::obs::next_trace_id`]).
+    pub trace_seed: Arc<AtomicU64>,
     pub started: Instant,
 }
 
@@ -65,11 +82,17 @@ impl AppState {
 }
 
 /// Dispatch one request. Infallible by design: every failure becomes a
-/// response with the right status code.
+/// response with the right status code, and every response — error
+/// paths included — carries the resolved `x-brainslug-trace` echo.
 pub fn route(state: &AppState, req: &Request) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/run") => run(state, req),
+    let trace = req
+        .header("x-brainslug-trace")
+        .and_then(crate::obs::parse_trace_id)
+        .unwrap_or_else(|| crate::obs::next_trace_id(&state.trace_seed));
+    let mut resp = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/run") => run(state, req, trace),
         ("GET", "/v1/stats") => stats(state),
+        ("GET", "/v1/metrics") => metrics(state),
         ("GET", "/healthz") => healthz(state),
         // Known paths with the wrong verb get 405 + Allow, per RFC.
         (_, "/v1/run") => {
@@ -77,13 +100,15 @@ pub fn route(state: &AppState, req: &Request) -> Response {
             resp.allow = Some("POST");
             resp
         }
-        (_, "/v1/stats") | (_, "/healthz") => {
+        (_, "/v1/stats") | (_, "/v1/metrics") | (_, "/healthz") => {
             let mut resp = Response::error(405, "use GET");
             resp.allow = Some("GET");
             resp
         }
         (_, path) => Response::error(404, &format!("no route for {path}")),
-    }
+    };
+    resp.trace = Some(trace);
+    resp
 }
 
 /// The documented [`InferError`] → wire mapping, in one exhaustive
@@ -131,8 +156,9 @@ pub fn infer_error_response(state: &AppState, err: &InferError) -> Response {
 }
 
 /// `POST /v1/run`: lazy-extract `model` and `input`, submit to the
-/// dispatch queue, serialise the output tensor.
-fn run(state: &AppState, req: &Request) -> Response {
+/// dispatch queue (tagging the request with its resolved trace id),
+/// serialise the output tensor.
+fn run(state: &AppState, req: &Request, trace: u64) -> Response {
     // Fault trigger header first: it must queue even if this very
     // request then crashes on it.
     if let Some(v) = req.header("x-brainslug-fault") {
@@ -185,7 +211,7 @@ fn run(state: &AppState, req: &Request) -> Response {
             ),
         );
     }
-    match state.handle.try_infer_deadline(input, deadline) {
+    match state.handle.try_infer_deadline_traced(input, deadline, trace) {
         Ok(tensor) => {
             let mut o = Json::object();
             o.set("model", Json::Str(state.model.clone()));
@@ -215,6 +241,109 @@ fn stats(state: &AppState) -> Response {
         o.set("fault_injection", inj.to_json());
     }
     Response::json(200, o.to_string_compact())
+}
+
+/// `GET /v1/metrics`: the same counters as `/v1/stats` plus the
+/// server's observability registry (per-segment execution-time
+/// histograms, fault-injection draw/fire counters when armed), in the
+/// Prometheus text exposition format (version 0.0.4). Scrape-friendly
+/// twin of `/v1/stats`: plain text, monotonic counters, cumulative
+/// histogram buckets.
+fn metrics(state: &AppState) -> Response {
+    let s = &state.stats;
+    let mut exp = crate::obs::Exposition::new();
+    exp.counter(
+        "brainslug_requests_total",
+        "Requests answered (any status).",
+        &[],
+        s.requests.load(Ordering::Relaxed),
+    );
+    exp.counter(
+        "brainslug_batches_total",
+        "Batches executed across the worker pool.",
+        &[],
+        s.batches.load(Ordering::Relaxed),
+    );
+    exp.counter(
+        "brainslug_padded_slots_total",
+        "Batch slots padded because the queue ran dry.",
+        &[],
+        s.padded_slots.load(Ordering::Relaxed),
+    );
+    exp.counter(
+        "brainslug_rejected_total",
+        "Requests refused by queue backpressure.",
+        &[],
+        s.rejected.load(Ordering::Relaxed),
+    );
+    exp.counter(
+        "brainslug_deadline_dropped_total",
+        "Requests shed past their deadline.",
+        &[],
+        s.deadline_dropped.load(Ordering::Relaxed),
+    );
+    exp.counter(
+        "brainslug_restarts_total",
+        "Worker crashes recovered by the supervisor.",
+        &[],
+        s.restarts.load(Ordering::Relaxed),
+    );
+    exp.gauge(
+        "brainslug_queue_depth",
+        "Requests currently in the dispatch queue.",
+        &[],
+        s.queue_depth_now() as f64,
+    );
+    exp.gauge(
+        "brainslug_queue_peak",
+        "High-water mark of the dispatch queue.",
+        &[],
+        s.queue_peak.load(Ordering::Relaxed) as f64,
+    );
+    for (i, batches) in s.worker_batches().into_iter().enumerate() {
+        let w = i.to_string();
+        exp.counter(
+            "brainslug_worker_batches_total",
+            "Batches executed, by worker.",
+            &[("worker", w.as_str())],
+            batches,
+        );
+    }
+    for (i, restarts) in s.worker_restarts().into_iter().enumerate() {
+        let w = i.to_string();
+        exp.counter(
+            "brainslug_worker_restarts_total",
+            "Crash recoveries, by worker.",
+            &[("worker", w.as_str())],
+            restarts,
+        );
+    }
+    exp.histogram_seconds(
+        "brainslug_request_latency_seconds",
+        "End-to-end (enqueue to reply) request latency.",
+        &[],
+        &s.latency,
+    );
+    if let Some(inj) = state.faults.as_ref() {
+        for p in FaultPoint::ALL {
+            exp.counter(
+                "brainslug_fault_draws_total",
+                "Fault-point probability draws, by point.",
+                &[("point", p.name())],
+                inj.draws(p),
+            );
+            exp.counter(
+                "brainslug_fault_fired_total",
+                "Faults actually fired, by point.",
+                &[("point", p.name())],
+                inj.fired(p),
+            );
+        }
+    }
+    // Registry families last: per-segment execution-time histograms
+    // recorded by the worker pool (`brainslug_segment_seconds`).
+    state.obs.metrics.render(&mut exp);
+    Response::text(200, "text/plain; version=0.0.4", exp.finish())
 }
 
 /// `GET /healthz`: the health state machine on the wire. `Ready` and
@@ -271,6 +400,8 @@ mod tests {
             image_elems: server.handle().image_shape().numel(),
             queue_capacity: server.queue_capacity(),
             faults,
+            obs: server.obs(),
+            trace_seed: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
         };
         (server, state)
@@ -404,6 +535,79 @@ mod tests {
         assert!(parsed.f64_field("uptime_s").unwrap() >= 0.0);
         // Unarmed server: no fault_injection block.
         assert!(parsed.get("fault_injection").is_none());
+        server.stop();
+    }
+
+    /// Satellite: every routed response echoes `x-brainslug-trace` —
+    /// the client's id verbatim when one was sent, a freshly minted
+    /// non-zero id otherwise, on error paths included.
+    #[test]
+    fn every_response_carries_a_trace_id() {
+        let (server, state) = test_state();
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-trace".into(), "deadbeef".into())],
+            &run_body(&state),
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(resp.trace, Some(0xDEAD_BEEF), "client id echoed");
+        // Garbage ids are ignored, not 400: a fresh id is minted.
+        let resp = post_run_with(
+            &state,
+            vec![("x-brainslug-trace".into(), "not hex".into())],
+            &run_body(&state),
+        );
+        assert!(resp.trace.is_some_and(|t| t != 0xDEAD_BEEF && t != 0));
+        // Error paths echo too: 404, 405, and 400 all carry an id.
+        assert!(get(&state, "/nope").trace.is_some_and(|t| t != 0));
+        assert!(get(&state, "/v1/run").trace.is_some_and(|t| t != 0));
+        assert!(post_run(&state, "{}").trace.is_some_and(|t| t != 0));
+        server.stop();
+    }
+
+    /// Tentpole: `/v1/metrics` renders the Prometheus text exposition.
+    /// Shape checks (TYPE/HELP lines, name{labels} value samples) live
+    /// in `obs::metrics`; this pins the route, content type, and that
+    /// the serving counters and per-segment families show up.
+    #[test]
+    fn metrics_exposition_covers_serving_counters_and_segments() {
+        let (server, state) = test_state();
+        let resp = post_run(&state, &run_body(&state));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let resp = get(&state, "/v1/metrics");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/plain; version=0.0.4");
+        let text = std::str::from_utf8(&resp.body).unwrap();
+        assert!(text.contains("# TYPE brainslug_requests_total counter"), "{text}");
+        assert!(text.contains("brainslug_requests_total 1"), "{text}");
+        assert!(
+            text.contains("brainslug_worker_batches_total{worker=\"0\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("brainslug_request_latency_seconds_count 1"),
+            "{text}"
+        );
+        // The always-on registry: one series per executed segment.
+        assert!(
+            text.contains("# TYPE brainslug_segment_seconds histogram"),
+            "{text}"
+        );
+        assert!(text.contains("brainslug_segment_seconds_count{segment="), "{text}");
+        // Unarmed server: no fault families.
+        assert!(!text.contains("brainslug_fault_draws_total"), "{text}");
+        // Wrong verb is 405 like the other GET routes.
+        let resp = route(
+            &state,
+            &Request {
+                method: "POST".into(),
+                path: "/v1/metrics".into(),
+                headers: Vec::new(),
+                body: Vec::new(),
+                keep_alive: true,
+            },
+        );
+        assert_eq!((resp.status, resp.allow), (405, Some("GET")));
         server.stop();
     }
 

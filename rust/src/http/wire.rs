@@ -237,19 +237,32 @@ pub struct Response {
     /// Close the connection after this response regardless of what the
     /// request asked for (parse errors, 413, server shutdown).
     pub close: bool,
+    /// Emitted as an `x-brainslug-trace` header (16 lowercase hex
+    /// digits). The router sets it on *every* routed response — success
+    /// and error paths alike — echoing the client's header or the
+    /// freshly minted id, so a client can always correlate a response
+    /// (even a 503) with recorded spans.
+    pub trace: Option<u64>,
 }
 
 impl Response {
-    /// JSON response with the given status.
-    pub fn json(status: u16, body: String) -> Response {
+    /// Response with an arbitrary (static) content type — the escape
+    /// hatch for non-JSON bodies like the Prometheus text exposition.
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
         Response {
             status,
             body: body.into_bytes(),
-            content_type: "application/json",
+            content_type,
             retry_after: None,
             allow: None,
             close: false,
+            trace: None,
         }
+    }
+
+    /// JSON response with the given status.
+    pub fn json(status: u16, body: String) -> Response {
+        Response::text(status, "application/json", body)
     }
 
     /// Standard error body `{"error": msg}`.
@@ -317,6 +330,9 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response, close: bool) -> std:
     }
     if let Some(allow) = resp.allow {
         head.push_str(&format!("allow: {allow}\r\n"));
+    }
+    if let Some(trace) = resp.trace {
+        head.push_str(&format!("x-brainslug-trace: {trace:016x}\r\n"));
     }
     head.push_str(if close {
         "connection: close\r\n\r\n"
@@ -561,12 +577,14 @@ mod tests {
     fn response_serialisation_round_trip() {
         let mut resp = Response::json(200, "{\"ok\":true}".to_string());
         resp.retry_after = Some(1);
+        resp.trace = Some(0xDEAD_BEEF);
         let mut out = Vec::new();
         write_response(&mut out, &resp, false).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("content-length: 11\r\n"), "{text}");
         assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("x-brainslug-trace: 00000000deadbeef\r\n"), "{text}");
         assert!(text.contains("connection: keep-alive\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "{text}");
 

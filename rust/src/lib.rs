@@ -37,7 +37,11 @@
 //! shape to observed behavior: a loom-style controlled scheduler
 //! model-checks replicas of the real drain/queue/pool protocols and
 //! reports violations (BSL050–BSL056) with replayable counterexample
-//! schedules.
+//! schedules. [`obs`] closes the loop on all of it: zero-overhead-
+//! when-disabled spans over the depth-first hot path (Chrome-trace
+//! export via `brainslug trace`), a Prometheus-style `GET /v1/metrics`
+//! registry, and a predicted-vs-measured drift report against the
+//! `memsim` cost model.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -71,6 +75,7 @@ pub mod graph;
 pub mod http;
 pub mod json;
 pub mod memsim;
+pub mod obs;
 pub mod optimizer;
 pub mod rng;
 pub mod runtime;

@@ -24,6 +24,9 @@
 //!   `--http PORT` it becomes a real HTTP/JSON inference service.
 //! * `bench-serve`   — closed/open-loop load harness over real sockets
 //!   (Figure 18); `--single` is the CI smoke client.
+//! * `trace`         — run a network on the native CPU backend with
+//!   span tracing armed, write a Chrome-trace JSON timeline, and
+//!   (`--drift`) join measured segments against memsim predictions.
 //! * `dot`           — GraphViz dump of a network.
 //! * `check`         — static verification: graph lint, plan verifier
 //!   and concurrency-topology lint with stable `BSL0xx` codes.
@@ -74,6 +77,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "tune" => cmd_tune(&args),
+        "trace" => cmd_trace(&args),
         "dot" => cmd_dot(&args),
         "check" => cmd_check(&args),
         "" | "help" | "--help" => {
@@ -103,13 +107,17 @@ USAGE: brainslug <command> [flags]
   run           --net NAME [--batch N] [--mode both|baseline|brainslug]
                 [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
                 [--device PRESET] [--collapse-budget BYTES]
-                [--profile-path FILE] [--no-profile]
+                [--profile-path FILE] [--no-profile] [--trace FILE]
   serve         --net NAME [--batch B] [--requests N] [--brainslug]
                 [--backend pjrt|sim|cpu] [--threads N] [--artifacts DIR]
                 [--workers N] [--queue-depth D] [--queue-policy block|reject]
                 [--pace SCALE] [--device PRESET] [--profile-path FILE]
                 [--no-profile] [--http PORT] [--http-threads K]
                 [--max-body BYTES] [--fault-seed S] [--fault-rate R]
+                [--trace FILE]
+  trace         --net NAME [--batch N] [--backend cpu] [--threads N]
+                [--runs N] [--out trace.json] [--drift] [--device PRESET]
+                [--collapse-budget BYTES]
   bench-serve   [--workers 1,2,4] [--concurrency 2,8] [--batch B]
                 [--requests N] [--batch-cost-ms MS]
                 [--fault-rate R] [--fault-seed S]
@@ -170,6 +178,23 @@ opts out). The cache key includes the batch size (it is part of the
 graph), so tune at the batch you will serve: `tune --net X --batch 8`
 pairs with `serve --net X --batch 8`.
 
+`trace` arms the zero-overhead span recorder over the native CPU
+backend's depth-first hot path and runs the network `--runs` times
+(each under a fresh trace id), then writes every recorded
+Request/Plan/Segment/Band/Kernel span as a Chrome-trace JSON timeline
+(`--out`, default trace.json — load it in Perfetto or
+chrome://tracing). `--drift` additionally joins the measured Segment
+spans against the memsim cost model's per-segment predictions and
+prints a predicted-vs-measured table with a Spearman rank correlation
+(see DESIGN.md §Observability and benches/fig22_trace_drift). The same
+recorder is reachable from `run --trace FILE` (traced brainslug leg)
+and `serve --trace FILE` (spans drained to FILE at graceful shutdown);
+without a `--trace` flag no recorder exists and the hot path carries
+zero tracing cost. Serving metrics are always on: every `serve --http`
+server exposes GET /v1/metrics in the Prometheus text format, and
+every response carries an `x-brainslug-trace` id echo (client-supplied
+or minted) for span correlation.
+
 `check` is the static verifier: it lints the graph (shape/dtype
 inference, BSL001–BSL012), re-proves the optimizer plan's resource
 invariants (budget packing, halo back-propagation, skip reservations,
@@ -182,8 +207,8 @@ reporting ordering violations (BSL050–BSL056) with replayable
 counterexample schedules. Every finding carries a stable BSL0xx code;
 `--deny warnings` makes warnings fail the exit code (CI runs
 `check --all-zoo --deny warnings --schedules 256`). The explored suite
-covers the server drain, listener drain, band pool, and fault-
-supervisor restart protocols. See DESIGN.md §Static Analysis and
+covers the server drain, listener drain, band pool, fault-supervisor
+restart, and observability span-flush protocols. See DESIGN.md §Static Analysis and
 §Schedule Model Checking.
 
 Library quickstart (the whole pipeline is one builder):
@@ -407,7 +432,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "both" | "brainslug" => Mode::BrainSlug(opts),
         other => bail!("unknown mode '{other}' (both|baseline|brainslug)"),
     };
-    let builder = apply_profile_flags(
+    let mut builder = apply_profile_flags(
         Engine::builder()
             .zoo_small(&name, batch)
             .device(device)
@@ -416,6 +441,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             .seed(bench::oracle_seed()),
         args,
     );
+    // `--trace FILE` arms the span recorder for the brainslug leg
+    // (baseline runs are never traced) and writes a Chrome-trace
+    // timeline at the end. Without the flag no recorder exists.
+    let trace_out = args.get("trace").map(|s| s.to_string());
+    let obs = trace_out
+        .as_ref()
+        .map(|_| Arc::new(brainslug::obs::Obs::default()));
+    if let Some(o) = &obs {
+        builder = builder.obs(o.clone());
+    }
     args.reject_unknown()?;
     let mut engine = builder.build()?;
     let input = engine.synthetic_input();
@@ -454,6 +489,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             "speedup (first run, incl. executable compile): {}",
             fmt_pct(speedup_pct(b, p))
         );
+    }
+    if let (Some(path), Some(obs)) = (&trace_out, &obs) {
+        write_trace_file(path, obs)?;
     }
     Ok(())
 }
@@ -526,6 +564,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .backend(backend)
         .seed(bench::oracle_seed());
     engine = apply_profile_flags(engine, args);
+    // `--trace FILE` arms span tracing across the worker pool; the
+    // spans drain to FILE after graceful shutdown.
+    let trace_out = args.get("trace").map(|s| s.to_string());
     args.reject_unknown()?;
     if let Some(scale) = pace {
         engine = engine.sim_paced(scale);
@@ -535,6 +576,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .queue_depth(queue_depth)
         .queue_policy(queue_policy)
         .max_wait(Duration::from_millis(5));
+    let obs = trace_out
+        .as_ref()
+        .map(|_| Arc::new(brainslug::obs::Obs::default()));
+    if let Some(o) = &obs {
+        config = config.obs(o.clone());
+    }
     if fault_seed.is_some() || fault_rate.is_some() {
         let seed = brainslug::fault::seed_from_env(fault_seed.unwrap_or(0));
         let inj = Arc::new(FaultInjector::new(seed));
@@ -551,7 +598,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let server = config.start()?;
     if let Some(port) = http_port {
-        return serve_http(server, port, http_threads, max_body);
+        serve_http(server, port, http_threads, max_body)?;
+        if let (Some(path), Some(obs)) = (&trace_out, &obs) {
+            write_trace_file(path, obs)?;
+        }
+        return Ok(());
     }
     let handle = server.handle();
     let image_elems = handle.image_shape().numel();
@@ -591,6 +642,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.stats.rejected.load(Ordering::Relaxed)
     );
     server.stop();
+    if let (Some(path), Some(obs)) = (&trace_out, &obs) {
+        write_trace_file(path, obs)?;
+    }
     Ok(())
 }
 
@@ -771,6 +825,32 @@ fn bench_serve_single(addr: &str) -> Result<()> {
     if health.status != 200 {
         bail!("GET /healthz returned {}", health.status);
     }
+    // Metrics leg: the exposition must answer 200 with at least the
+    // serving counters, and every sample line must parse as
+    // `name{labels} value` with a finite value.
+    let metrics = http::one_shot(addr, "GET", "/v1/metrics", None)
+        .map_err(|e| anyhow::anyhow!("GET /v1/metrics on {addr}: {e}"))?;
+    if metrics.status != 200 {
+        bail!("GET /v1/metrics returned {}", metrics.status);
+    }
+    let text = std::str::from_utf8(&metrics.body)?;
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let value = line
+            .rsplit_once(' ')
+            .and_then(|(_, v)| v.parse::<f64>().ok())
+            .ok_or_else(|| anyhow::anyhow!("unparseable metrics sample line: {line:?}"))?;
+        if !value.is_finite() {
+            bail!("non-finite metrics value: {line:?}");
+        }
+        samples += 1;
+    }
+    if samples == 0 || !text.contains("brainslug_requests_total") {
+        bail!("metrics exposition is missing the serving counters");
+    }
     // If the server was started with fault injection armed (the stats
     // block advertises it), crash a worker mid-batch and prove the
     // supervisor brings the replica back.
@@ -814,7 +894,8 @@ fn bench_serve_single(addr: &str) -> Result<()> {
     }
     println!(
         "single-shot smoke OK against {addr}: POST /v1/run 200 (model {model}, {n_out} output \
-         values), deadline-annotated run 200, GET /healthz 200, {crash_leg}"
+         values), deadline-annotated run 200, GET /healthz 200, GET /v1/metrics 200 \
+         ({samples} samples), {crash_leg}"
     );
     Ok(())
 }
@@ -975,6 +1056,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         rows.push(row);
     }
     table.print();
+    // The table's percentiles are raw client-side samples; the server's
+    // own /v1/stats percentiles come from fixed histogram buckets
+    // (midpoint estimate, within obs::MIDPOINT_REL_ERROR = 12.5 % —
+    // see DESIGN.md §Observability and benches/fig18_http_serving).
+    println!(
+        "note: percentiles above are raw client samples; GET /v1/stats reports \
+         histogram-midpoint estimates (within 12.5 %)"
+    );
     bench::emit_bench_json("serve_http", rows);
     Ok(())
 }
@@ -1091,6 +1180,127 @@ fn cmd_tune(args: &Args) -> Result<()> {
         outcome.per_thread.len(),
         profile_path.display()
     );
+    Ok(())
+}
+
+/// Serialise `doc` to `path`, creating parent directories as needed.
+fn write_json_file(path: &str, doc: &Json) -> Result<()> {
+    if let Some(dir) = Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.to_string_compact())?;
+    Ok(())
+}
+
+/// Drain `obs`'s spans into a Chrome-trace file at `path` and report
+/// what was captured (used by `run --trace` and `serve --trace`).
+fn write_trace_file(path: &str, obs: &brainslug::obs::Obs) -> Result<()> {
+    let spans = obs.spans.drain();
+    let names = obs.spans.thread_names();
+    write_json_file(path, &brainslug::obs::chrome_trace(&spans, &names))?;
+    println!(
+        "wrote {path}: {} spans over {} thread(s) ({} dropped)",
+        spans.len(),
+        names.len(),
+        obs.spans.dropped()
+    );
+    Ok(())
+}
+
+/// `brainslug trace`: run a network on the native CPU backend with span
+/// tracing armed, dump the timeline as Chrome-trace JSON, and
+/// optionally (`--drift`) report predicted-vs-measured segment drift.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?
+        .to_string();
+    let batch = args.get_positive_usize("batch")?.unwrap_or(1);
+    let backend_name = args.get_or("backend", "cpu").to_string();
+    if !matches!(backend_name.as_str(), "cpu" | "native") {
+        bail!(
+            "trace records real execution: only --backend cpu is supported \
+             (got '{backend_name}')"
+        );
+    }
+    let threads = args.get_positive_usize("threads")?.unwrap_or(1);
+    let runs = args.get_positive_usize("runs")?.unwrap_or(3);
+    let out = args.get_or("out", "trace.json").to_string();
+    let drift = args.get_bool("drift");
+    let device = device_from_args(args, DeviceSpec::host_cpu())?;
+    let opts = collapse_opts_from_args(args, bench::measured_opts())?;
+    args.reject_unknown()?;
+
+    let obs = Arc::new(brainslug::obs::Obs::default());
+    let mut engine = Engine::builder()
+        .zoo_small(&name, batch)
+        .device(device)
+        .mode(Mode::BrainSlug(opts))
+        .backend(BackendKind::Cpu { threads })
+        .seed(bench::oracle_seed())
+        .obs(obs.clone())
+        .build()?;
+    println!("{} batch={batch} threads={threads}", engine.describe());
+    let input = engine.synthetic_input();
+    // Fixed seed: trace ids here only need to be distinct per run.
+    let id_seed = std::sync::atomic::AtomicU64::new(0x7ACE_0000);
+    for run in 0..runs {
+        let trace = brainslug::obs::next_trace_id(&id_seed);
+        let (_, stats) = engine.run_traced(input.clone(), trace)?;
+        println!(
+            "run {run}: trace {trace:016x}, total {}",
+            fmt_time(stats.total_s)
+        );
+    }
+    let spans = obs.spans.drain();
+    let names = obs.spans.thread_names();
+    let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+    for s in &spans {
+        *by_kind.entry(s.kind.name()).or_default() += 1;
+    }
+    println!(
+        "captured {} spans over {} thread(s) ({} dropped): {}",
+        spans.len(),
+        names.len(),
+        obs.spans.dropped(),
+        by_kind
+            .iter()
+            .map(|(k, n)| format!("{k}={n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    write_json_file(&out, &brainslug::obs::chrome_trace(&spans, &names))?;
+    println!("wrote {out} — open in Perfetto or chrome://tracing");
+
+    if drift {
+        let plan = engine
+            .plan()
+            .ok_or_else(|| anyhow::anyhow!("--drift needs an optimized plan"))?;
+        let predicted =
+            brainslug::memsim::predicted_segments(engine.graph(), plan, engine.device());
+        let report = brainslug::obs::drift_report(&engine.graph().name, &predicted, &spans);
+        let mut table = Table::new(&["segment", "kind", "predicted", "measured", "ratio"]);
+        for r in &report.rows {
+            table.row(vec![
+                r.segment.clone(),
+                r.kind.clone(),
+                fmt_time(r.predicted_s),
+                fmt_time(r.measured_s),
+                format!("{:.2}", r.ratio),
+            ]);
+        }
+        println!(
+            "# drift — memsim predicted vs measured (min of {runs} runs), network={}",
+            report.network
+        );
+        table.print();
+        println!(
+            "rank correlation {:.3}, {} unmatched segment(s)",
+            report.rank_correlation, report.unmatched
+        );
+    }
     Ok(())
 }
 

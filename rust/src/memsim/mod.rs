@@ -21,8 +21,8 @@ pub mod traffic;
 
 pub use cache::{compare_schedules, Cache};
 pub use perfmodel::{
-    baseline_layer_time, baseline_optimized_time, branch_join_time, segment_times,
-    simulate_baseline, simulate_plan, speedup_pct, stack_time, BaselineSim, LayerTime,
-    ModelParams, PlanSim,
+    baseline_layer_time, baseline_optimized_time, branch_join_time, predicted_segments,
+    segment_times, simulate_baseline, simulate_plan, speedup_pct, stack_time, BaselineSim,
+    LayerTime, ModelParams, PlanSim, SegmentPrediction,
 };
 pub use traffic::{graph_cost_bf, layer_cost_bf, layer_flops, sequence_cost_df, UnitCost};

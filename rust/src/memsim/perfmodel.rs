@@ -341,6 +341,53 @@ pub fn segment_times(
     }
 }
 
+/// Predicted time of one *top-level* plan segment — the unit the
+/// tracing layer measures ([`crate::obs::SpanKind::Segment`] spans are
+/// emitted per top-level segment), so drift reports can join predicted
+/// against measured rows by label.
+#[derive(Debug, Clone)]
+pub struct SegmentPrediction {
+    /// Stable join key: `seg{i}` for the i-th top-level plan segment —
+    /// the prefix of the backend's `seg{i}:{kind}` span labels.
+    pub label: String,
+    /// Segment flavor: the layer kind for `Single`, `"stack"`,
+    /// `"branch"`.
+    pub kind: &'static str,
+    /// Total modeled time of the segment (arms and join included for
+    /// branches).
+    pub seconds: f64,
+}
+
+/// Per-top-level-segment predictions for a whole plan — the memsim
+/// side of the predicted-vs-measured drift report
+/// ([`crate::obs::drift`], `brainslug trace --drift`, fig22).
+pub fn predicted_segments(
+    graph: &Graph,
+    plan: &Plan,
+    device: &DeviceSpec,
+) -> Vec<SegmentPrediction> {
+    let p = ModelParams::for_device(device);
+    let mut scratch = Vec::new();
+    plan.segments
+        .iter()
+        .enumerate()
+        .map(|(i, seg)| {
+            scratch.clear();
+            segment_times(graph, seg, device, &p, &mut scratch);
+            let kind = match seg {
+                Segment::Single(id) => graph.node(*id).layer.kind_name(),
+                Segment::Stack(_) => "stack",
+                Segment::Branch { .. } => "branch",
+            };
+            SegmentPrediction {
+                label: format!("seg{i}"),
+                kind,
+                seconds: scratch.iter().map(|lt| lt.seconds).sum(),
+            }
+        })
+        .collect()
+}
+
 /// Baseline (breadth-first) time of exactly the layers the plan's
 /// depth-first schedule absorbs: stack members everywhere plus each
 /// fused branch join. This is the like-for-like baseline side for

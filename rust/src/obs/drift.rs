@@ -1,0 +1,254 @@
+//! Predicted-vs-measured drift: join recorded [`SpanKind::Segment`]
+//! spans against [`crate::memsim::predicted_segments`] and report how
+//! far the analytic cost model is from measured per-segment wall-clock.
+//!
+//! The join key is the segment label prefix: the native CPU backend
+//! labels its top-level segment spans `seg{i}:{kind}` and memsim
+//! predicts `seg{i}`, so every top-level segment of a plan appears in
+//! the report by construction. The measured side takes the *minimum*
+//! duration across runs (the standard noise floor for wall-clock
+//! micro-measurement, same as `bench::measure`); the ratio column is
+//! `measured / predicted`, and the Spearman rank correlation says
+//! whether the model at least orders segments correctly — the property
+//! the planner and autotuner pre-pass actually rely on.
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+use crate::memsim::SegmentPrediction;
+
+use super::span::{Span, SpanKind};
+
+/// One segment's predicted-vs-measured row.
+#[derive(Debug, Clone)]
+pub struct DriftRow {
+    /// Join key (`seg{i}`).
+    pub segment: String,
+    /// Segment flavor from the prediction (`stack`, `branch`, or a
+    /// layer kind).
+    pub kind: String,
+    pub predicted_s: f64,
+    /// Minimum measured duration across runs; 0.0 when no span matched
+    /// (counted in [`DriftReport::unmatched`]).
+    pub measured_s: f64,
+    /// `measured / predicted` (0.0 when either side is missing).
+    pub ratio: f64,
+}
+
+/// The drift report for one network.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub network: String,
+    /// One row per predicted top-level segment, in plan order.
+    pub rows: Vec<DriftRow>,
+    /// Spearman rank correlation between predicted and measured times
+    /// (1.0 for fewer than two matched rows, where ordering is vacuous).
+    pub rank_correlation: f64,
+    /// Predicted segments with no measured span (0 for a complete
+    /// trace).
+    pub unmatched: usize,
+}
+
+/// Build the drift report for `network` from memsim predictions and a
+/// drained span buffer.
+pub fn drift_report(network: &str, predicted: &[SegmentPrediction], spans: &[Span]) -> DriftReport {
+    // Min duration per segment label prefix across all runs.
+    let mut measured: BTreeMap<&str, u64> = BTreeMap::new();
+    for s in spans {
+        if s.kind != SpanKind::Segment {
+            continue;
+        }
+        let key = s.label.split(':').next().unwrap_or(&s.label);
+        measured
+            .entry(key)
+            .and_modify(|d| *d = (*d).min(s.dur_ns))
+            .or_insert(s.dur_ns);
+    }
+    let mut unmatched = 0usize;
+    let rows: Vec<DriftRow> = predicted
+        .iter()
+        .map(|p| {
+            let measured_s = match measured.get(p.label.as_str()) {
+                Some(&ns) => ns as f64 / 1e9,
+                None => {
+                    unmatched += 1;
+                    0.0
+                }
+            };
+            let ratio = if p.seconds > 0.0 && measured_s > 0.0 {
+                measured_s / p.seconds
+            } else {
+                0.0
+            };
+            DriftRow {
+                segment: p.label.clone(),
+                kind: p.kind.to_string(),
+                predicted_s: p.seconds,
+                measured_s,
+                ratio,
+            }
+        })
+        .collect();
+    let matched: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| r.measured_s > 0.0)
+        .map(|r| (r.predicted_s, r.measured_s))
+        .collect();
+    DriftReport {
+        network: network.to_string(),
+        rank_correlation: spearman(&matched),
+        rows,
+        unmatched,
+    }
+}
+
+/// Ordinal ranks of `values` (ties broken by index — measured times
+/// are wall-clock f64s, so exact ties are not a practical concern).
+fn ranks(values: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    order.sort_by(|&a, &b| values[a].total_cmp(&values[b]));
+    let mut out = vec![0.0; values.len()];
+    for (rank, &idx) in order.iter().enumerate() {
+        out[idx] = rank as f64;
+    }
+    out
+}
+
+/// Spearman rank correlation of (predicted, measured) pairs; 1.0 for
+/// fewer than two pairs (ordering is vacuously preserved).
+fn spearman(pairs: &[(f64, f64)]) -> f64 {
+    let n = pairs.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let pred: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let meas: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    let rp = ranks(&pred);
+    let rm = ranks(&meas);
+    let mean = (n as f64 - 1.0) / 2.0;
+    let mut cov = 0.0;
+    let mut var_p = 0.0;
+    let mut var_m = 0.0;
+    for i in 0..n {
+        let dp = rp[i] - mean;
+        let dm = rm[i] - mean;
+        cov += dp * dm;
+        var_p += dp * dp;
+        var_m += dm * dm;
+    }
+    if var_p == 0.0 || var_m == 0.0 {
+        return 1.0;
+    }
+    cov / (var_p.sqrt() * var_m.sqrt())
+}
+
+impl DriftReport {
+    /// Machine-readable form: one object per segment plus the summary
+    /// fields — the rows `fig22_trace_drift` emits.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("network", Json::Str(self.network.clone()));
+        o.set("rank_correlation", Json::Num(self.rank_correlation));
+        o.set("unmatched", Json::from_usize(self.unmatched));
+        o.set(
+            "segments",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        let mut s = Json::object();
+                        s.set("segment", Json::Str(r.segment.clone()));
+                        s.set("kind", Json::Str(r.kind.clone()));
+                        s.set("predicted_s", Json::Num(r.predicted_s));
+                        s.set("measured_s", Json::Num(r.measured_s));
+                        s.set("ratio", Json::Num(r.ratio));
+                        s
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred(label: &str, seconds: f64) -> SegmentPrediction {
+        SegmentPrediction {
+            label: label.to_string(),
+            kind: "stack",
+            seconds,
+        }
+    }
+
+    fn seg_span(label: &str, dur_ns: u64) -> Span {
+        Span {
+            kind: SpanKind::Segment,
+            label: label.to_string(),
+            trace: 0,
+            tid: 0,
+            start_ns: 0,
+            dur_ns,
+        }
+    }
+
+    #[test]
+    fn joins_on_label_prefix_with_min_across_runs() {
+        let predicted = vec![pred("seg0", 1e-3), pred("seg1", 2e-3)];
+        let spans = vec![
+            seg_span("seg0:stack", 3_000_000),
+            seg_span("seg0:stack", 2_000_000), // second run, faster
+            seg_span("seg1:branch", 4_000_000),
+            Span {
+                kind: SpanKind::Kernel,
+                ..seg_span("seg0:stack", 1) // non-segment spans are ignored
+            },
+        ];
+        let report = drift_report("vgg16", &predicted, &spans);
+        assert_eq!(report.unmatched, 0);
+        assert_eq!(report.rows.len(), 2);
+        assert!((report.rows[0].measured_s - 2e-3).abs() < 1e-12, "min across runs");
+        assert!((report.rows[0].ratio - 2.0).abs() < 1e-9);
+        assert!((report.rows[1].measured_s - 4e-3).abs() < 1e-12);
+        // Both sides order seg0 < seg1: perfect rank agreement.
+        assert!((report.rank_correlation - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unmatched_segments_are_counted_not_dropped() {
+        let predicted = vec![pred("seg0", 1e-3), pred("seg1", 2e-3)];
+        let spans = vec![seg_span("seg0:stack", 1_000_000)];
+        let report = drift_report("net", &predicted, &spans);
+        assert_eq!(report.rows.len(), 2, "every predicted segment keeps a row");
+        assert_eq!(report.unmatched, 1);
+        assert_eq!(report.rows[1].measured_s, 0.0);
+        assert_eq!(report.rows[1].ratio, 0.0);
+    }
+
+    #[test]
+    fn anticorrelated_ordering_is_negative() {
+        let predicted = vec![pred("seg0", 1e-3), pred("seg1", 2e-3), pred("seg2", 3e-3)];
+        let spans = vec![
+            seg_span("seg0:stack", 3_000_000),
+            seg_span("seg1:stack", 2_000_000),
+            seg_span("seg2:stack", 1_000_000),
+        ];
+        let report = drift_report("net", &predicted, &spans);
+        assert!((report.rank_correlation + 1.0).abs() < 1e-9, "{}", report.rank_correlation);
+    }
+
+    #[test]
+    fn json_shape_round_trips() {
+        let predicted = vec![pred("seg0", 1e-3)];
+        let spans = vec![seg_span("seg0:stack", 1_500_000)];
+        let j = drift_report("resnet18", &predicted, &spans).to_json();
+        let parsed = crate::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.str_field("network").unwrap(), "resnet18");
+        let segs = parsed.arr_field("segments").unwrap();
+        assert_eq!(segs.len(), 1);
+        assert!(segs[0].f64_field("ratio").unwrap() > 0.0);
+        assert!(segs[0].f64_field("predicted_s").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,392 @@
+//! Typed metrics: the shared fixed-bucket histogram (extracted from
+//! `server::ServerStats`, which now reuses it), a get-or-create registry
+//! for labeled histogram series, and a Prometheus text-exposition
+//! renderer (`text/plain; version=0.0.4`) behind `GET /v1/metrics`.
+//!
+//! One histogram implementation serves every consumer — the serving
+//! stack's end-to-end latency distribution, the per-segment
+//! execution-time series recorded by the batch loop, and the fig16/
+//! fig18 percentile columns — so the 12.5 % bucket-midpoint contract is
+//! stated (and tested) exactly once.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// First octave with sub-bucket resolution (values below `2^4 = 16` µs
+/// get one bucket per microsecond).
+const HIST_LINEAR: usize = 16;
+const HIST_FIRST_OCTAVE: usize = 4;
+const HIST_LAST_OCTAVE: usize = 35;
+const HIST_BUCKETS: usize = HIST_LINEAR + (HIST_LAST_OCTAVE - HIST_FIRST_OCTAVE + 1) * 4;
+
+/// Every 8th bucket edge becomes a Prometheus `le` boundary: 18
+/// cumulative buckets plus `+Inf` keep the exposition readable while
+/// the native 144-bucket resolution still backs percentile queries.
+const EXPO_STRIDE: usize = 8;
+
+/// Worst-case relative error of a percentile read against the raw
+/// observation it summarizes: above 16 µs a value lands within 12.5 %
+/// of its bucket midpoint (four linear sub-buckets per octave), exact
+/// below. Documented wherever bucket-derived percentiles are compared
+/// against raw-sample percentiles (`/v1/stats` vs the load generator).
+pub const MIDPOINT_REL_ERROR: f64 = 0.125;
+
+/// Allocation-free fixed-bucket latency histogram (HdrHistogram-style
+/// two-significant-bit layout): microsecond-resolution below 16 µs,
+/// then four linear sub-buckets per power-of-two octave, so any
+/// recorded value lands within 12.5 % of its bucket midpoint. The hot
+/// path is two atomic increments; percentile queries walk the fixed
+/// bucket array. Covers up to ~2^36 µs (≈19 h); larger values clamp
+/// into the top bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    /// Sum of recorded values in microseconds (the Prometheus `_sum`).
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn index(us: u64) -> usize {
+        if us < HIST_LINEAR as u64 {
+            return us as usize;
+        }
+        let octave = (63 - us.leading_zeros() as usize).min(HIST_LAST_OCTAVE);
+        let sub = ((us >> (octave - 2)) & 0b11) as usize;
+        HIST_LINEAR + (octave - HIST_FIRST_OCTAVE) * 4 + sub
+    }
+
+    /// Bucket midpoint in microseconds.
+    fn midpoint_us(idx: usize) -> f64 {
+        if idx < HIST_LINEAR {
+            return idx as f64 + 0.5;
+        }
+        let octave = HIST_FIRST_OCTAVE + (idx - HIST_LINEAR) / 4;
+        let sub = (idx - HIST_LINEAR) % 4;
+        (1u64 << octave) as f64 + (sub as f64 + 0.5) * (1u64 << (octave - 2)) as f64
+    }
+
+    /// Upper edge of bucket `idx` in microseconds — the Prometheus
+    /// `le` boundary.
+    fn bound_us(idx: usize) -> f64 {
+        if idx < HIST_LINEAR {
+            return (idx + 1) as f64;
+        }
+        let octave = HIST_FIRST_OCTAVE + (idx - HIST_LINEAR) / 4;
+        let sub = (idx - HIST_LINEAR) % 4;
+        (1u64 << octave) as f64 + (sub as f64 + 1.0) * (1u64 << (octave - 2)) as f64
+    }
+
+    /// Record one observation (microseconds).
+    ///
+    /// Ordering: Relaxed — bucket counts and the sum are independent
+    /// monotone counters and readers tolerate a torn (per-atomic,
+    /// cross-atomic unordered) snapshot by construction; see the
+    /// `ServerStats` memory-ordering contract.
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total recorded observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded observations in seconds (the `_sum` sample).
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// `q`-quantile (`0.0 ..= 1.0`) in milliseconds, `0.0` before any
+    /// observation. Nearest-rank over the bucket midpoints — accurate
+    /// to [`MIDPOINT_REL_ERROR`] against the raw observations.
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        let counts = self.snapshot();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::midpoint_us(idx) / 1000.0;
+            }
+        }
+        Self::midpoint_us(HIST_BUCKETS - 1) / 1000.0
+    }
+}
+
+/// One labeled family of histogram series (e.g. per-segment execution
+/// times keyed by segment label).
+#[derive(Debug)]
+struct Family {
+    help: String,
+    label: String,
+    series: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// Get-or-create registry of labeled histogram families. Lookup takes
+/// one short mutex hold; the returned `Arc<Histogram>` is cached by
+/// callers on their hot path so steady-state recording never touches
+/// the registry lock.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    /// The histogram for `(family, label=value)`, created on first use.
+    /// `help` and `label` are fixed by the first caller of a family.
+    pub fn histogram(
+        &self,
+        family: &str,
+        help: &str,
+        label: &str,
+        value: &str,
+    ) -> Arc<Histogram> {
+        let mut families = self.families.lock().unwrap_or_else(|p| p.into_inner());
+        let fam = families.entry(family.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            label: label.to_string(),
+            series: BTreeMap::new(),
+        });
+        fam.series
+            .entry(value.to_string())
+            .or_insert_with(|| Arc::new(Histogram::default()))
+            .clone()
+    }
+
+    /// Number of registered series across all families.
+    pub fn series_count(&self) -> usize {
+        let families = self.families.lock().unwrap_or_else(|p| p.into_inner());
+        families.values().map(|f| f.series.len()).sum()
+    }
+
+    /// Render every registered family into `exp`, series in
+    /// deterministic (BTreeMap) order.
+    pub fn render(&self, exp: &mut Exposition) {
+        let families = self.families.lock().unwrap_or_else(|p| p.into_inner());
+        for (name, fam) in families.iter() {
+            for (value, hist) in &fam.series {
+                exp.histogram_seconds(name, &fam.help, &[(&fam.label, value)], hist);
+            }
+        }
+    }
+}
+
+/// Prometheus text-exposition builder (`text/plain; version=0.0.4`):
+/// `# HELP` / `# TYPE` once per family, then one sample line per
+/// series. Histograms render cumulative `_bucket{le=...}` lines (in
+/// seconds), `_sum` and `_count`.
+#[derive(Debug, Default)]
+pub struct Exposition {
+    out: String,
+    typed: std::collections::BTreeSet<String>,
+}
+
+impl Exposition {
+    pub fn new() -> Self {
+        Exposition::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+    }
+
+    fn label_block(labels: &[(&str, &str)]) -> String {
+        if labels.is_empty() {
+            return String::new();
+        }
+        let parts: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        format!("{{{}}}", parts.join(","))
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name}{} {value}\n", Self::label_block(labels)));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name}{} {value}\n", Self::label_block(labels)));
+    }
+
+    pub fn histogram_seconds(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &Histogram,
+    ) {
+        self.header(name, help, "histogram");
+        let counts = h.snapshot();
+        let mut cum = 0u64;
+        for (idx, c) in counts.iter().enumerate() {
+            cum += c;
+            if (idx + 1) % EXPO_STRIDE == 0 {
+                let le = Histogram::bound_us(idx) / 1e6;
+                self.bucket_line(name, labels, &format!("{le}"), cum);
+            }
+        }
+        self.bucket_line(name, labels, "+Inf", cum);
+        let lb = Self::label_block(labels);
+        self.out.push_str(&format!("{name}_sum{lb} {}\n", h.sum_seconds()));
+        self.out.push_str(&format!("{name}_count{lb} {cum}\n"));
+    }
+
+    fn bucket_line(&mut self, name: &str, labels: &[(&str, &str)], le: &str, cum: u64) {
+        let mut all: Vec<(&str, &str)> = labels.to_vec();
+        all.push(("le", le));
+        self.out.push_str(&format!("{name}_bucket{} {cum}\n", Self::label_block(&all)));
+    }
+
+    /// The finished exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_tight() {
+        // Index is monotone in the value and the midpoint estimate is
+        // within 12.5 % above 16 µs (exact below).
+        let mut last = 0usize;
+        for us in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1000, 65_536, 1 << 30] {
+            let idx = Histogram::index(us);
+            assert!(idx >= last, "index not monotone at {us}");
+            last = idx;
+            let mid = Histogram::midpoint_us(idx);
+            if us < 16 {
+                assert!((mid - (us as f64 + 0.5)).abs() < 1e-9, "{us}");
+            } else {
+                let rel = (mid - us as f64).abs() / us as f64;
+                assert!(rel <= 0.30, "us={us} mid={mid} rel={rel}");
+            }
+        }
+        // Absurd values clamp into the top bucket instead of panicking.
+        assert_eq!(Histogram::index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_bounds_bracket_their_bucket() {
+        // Every recorded value falls at or below its bucket's upper
+        // edge and above the previous bucket's edge — the property the
+        // cumulative `le` exposition relies on.
+        for us in [0u64, 1, 15, 16, 17, 100, 999, 65_535, 1 << 20] {
+            let idx = Histogram::index(us);
+            assert!((us as f64) < Histogram::bound_us(idx), "us={us} idx={idx}");
+            if idx > 0 {
+                assert!((us as f64) >= Histogram::bound_us(idx - 1), "us={us} idx={idx}");
+            }
+        }
+        // Bounds are strictly increasing, so cumulative counts are
+        // monotone per series.
+        for idx in 1..HIST_BUCKETS {
+            assert!(Histogram::bound_us(idx) > Histogram::bound_us(idx - 1), "{idx}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_ms(0.5), 0.0, "empty histogram is 0.0, not NaN");
+        // 100 observations at 1 ms, 10 at 100 ms: p50 ≈ 1 ms, p99+ ≈ 100 ms.
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        assert_eq!(h.count(), 110);
+        let p50 = h.percentile_ms(0.50);
+        let p99 = h.percentile_ms(0.99);
+        assert!((0.8..=1.3).contains(&p50), "p50 {p50}");
+        assert!((80.0..=130.0).contains(&p99), "p99 {p99}");
+        assert!(h.percentile_ms(0.0) <= p50 && p50 <= p99);
+        assert!(p99 <= h.percentile_ms(1.0) + 1e-9);
+        // `_sum` tracks the raw microsecond total exactly.
+        assert!((h.sum_seconds() - (100.0 * 0.001 + 10.0 * 0.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_get_or_create_is_stable() {
+        let r = Registry::default();
+        let a = r.histogram("seg_seconds", "per-segment time", "segment", "seg0");
+        let b = r.histogram("seg_seconds", "per-segment time", "segment", "seg0");
+        assert!(Arc::ptr_eq(&a, &b), "same series must share one histogram");
+        let c = r.histogram("seg_seconds", "per-segment time", "segment", "seg1");
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(r.series_count(), 2);
+        a.record(500);
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn exposition_is_valid_prometheus_text() {
+        let mut exp = Exposition::new();
+        exp.counter("bs_requests_total", "Requests served.", &[], 7);
+        exp.counter("bs_worker_total", "Per-worker batches.", &[("worker", "0")], 3);
+        exp.counter("bs_worker_total", "Per-worker batches.", &[("worker", "1")], 4);
+        exp.gauge("bs_queue_depth", "Queue occupancy.", &[], 2.0);
+        let h = Histogram::default();
+        h.record(10);
+        h.record(10_000);
+        exp.histogram_seconds("bs_latency_seconds", "Latency.", &[], &h);
+        let text = exp.finish();
+
+        // HELP/TYPE exactly once per family.
+        assert_eq!(text.matches("# TYPE bs_worker_total counter").count(), 1);
+        assert!(text.contains("bs_requests_total 7\n"));
+        assert!(text.contains("bs_worker_total{worker=\"1\"} 4\n"));
+        assert!(text.contains("bs_queue_depth 2\n"));
+        assert!(text.contains("# TYPE bs_latency_seconds histogram"));
+        assert!(text.contains("bs_latency_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("bs_latency_seconds_count 2\n"));
+
+        // Every non-comment line is `name{labels} value` with a finite
+        // numeric value, and histogram cumulative counts are monotone.
+        let mut last_bucket = 0u64;
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().unwrap().is_finite(), "{line}");
+            if name.starts_with("bs_latency_seconds_bucket") {
+                let c = value.parse::<u64>().unwrap();
+                assert!(c >= last_bucket, "cumulative buckets must be monotone: {line}");
+                last_bucket = c;
+            }
+        }
+        // `le` edges are increasing seconds values ending at +Inf.
+        let les: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("bs_latency_seconds_bucket"))
+            .collect();
+        assert!(les.len() > 2);
+        assert!(les.last().unwrap().contains("le=\"+Inf\""));
+    }
+}

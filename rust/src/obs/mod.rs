@@ -1,0 +1,243 @@
+//! Observability: zero-overhead-when-disabled tracing + metrics over
+//! the depth-first hot path.
+//!
+//! The subsystem follows the `fault` module's arming pattern exactly:
+//! every instrumented site holds an `Option` — [`ObsCtx`] threaded
+//! through [`crate::engine::Workload`] for spans,
+//! `Option<&ObsCtx>` parameters through the CPU walker — and the
+//! disarmed (`None`) branch touches no atomics, takes no locks and
+//! allocates nothing, so an untraced run executes the pre-obs
+//! instruction stream (asserted to within 1 % by
+//! `benches/fig22_trace_drift.rs`).
+//!
+//! * [`span`] — per-thread-sharded span recording (Request → Batch →
+//!   Plan → Segment → BranchArm → Band → Kernel) with a Chrome-trace
+//!   (Perfetto) exporter; `brainslug trace` drives it.
+//! * [`metrics`] — the shared 144-bucket [`Histogram`] (extracted from
+//!   `ServerStats`), a labeled-series [`Registry`], and the Prometheus
+//!   text exposition behind `GET /v1/metrics`.
+//! * [`drift`] — predicted-vs-measured per-segment drift against
+//!   [`crate::memsim::predicted_segments`] (`brainslug trace --drift`,
+//!   fig22).
+//!
+//! The span-buffer drain-on-shutdown ordering is a real protocol:
+//! writers record while a `recording` gate is open, shutdown closes
+//! the gate, stops the writers, joins them, and only *then* drains —
+//! [`flush_protocol`] is the model-checked replica
+//! (`brainslug check --schedules`), and [`FlushBugs::drain_before_join`]
+//! re-introduces the tempting wrong order (export first, stop later)
+//! that loses late spans.
+
+pub mod drift;
+pub mod metrics;
+pub mod span;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub use drift::{drift_report, DriftReport, DriftRow};
+pub use metrics::{Exposition, Histogram, Registry, MIDPOINT_REL_ERROR};
+pub use span::{chrome_trace, Span, SpanKind, SpanRecorder, ThreadSpans};
+
+use crate::json::Json;
+
+/// One observability domain: a span store and a metrics registry,
+/// shared (`Arc<Obs>`) by everything that instruments one server or
+/// one traced engine run.
+#[derive(Debug, Default)]
+pub struct Obs {
+    pub spans: SpanRecorder,
+    pub metrics: Registry,
+}
+
+impl Obs {
+    /// Drain every recorded span into a Chrome-trace JSON document
+    /// (the `trace.json` payload).
+    pub fn drain_chrome_trace(&self) -> Json {
+        let spans = self.spans.drain();
+        chrome_trace(&spans, &self.spans.thread_names())
+    }
+}
+
+/// The armed tracing context a backend run carries: the shared
+/// [`Obs`] plus the request's trace id (0 when the run is not
+/// attributed to a wire request). Cloned freely — two words.
+#[derive(Debug, Clone)]
+pub struct ObsCtx {
+    pub obs: Arc<Obs>,
+    pub trace: u64,
+}
+
+/// Parse an `x-brainslug-trace` header value: up to 16 hex digits.
+pub fn parse_trace_id(value: &str) -> Option<u64> {
+    let t = value.trim();
+    if t.is_empty() || t.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(t, 16).ok()
+}
+
+/// Generate the next trace id from a shared counter: a SplitMix64
+/// draw, never 0 (0 means "unattributed" throughout the span layer).
+pub fn next_trace_id(counter: &AtomicU64) -> u64 {
+    let mut state = counter
+        .fetch_add(1, Ordering::Relaxed)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(0x1CE_B00DA);
+    let id = crate::rng::splitmix64(&mut state);
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Declarative topology of the span flush protocol for the static lint
+/// (`brainslug check`): writer threads record behind the `recording`
+/// gate and quiesce on an `obs-stop` token; shutdown closes the gate,
+/// sends one token per writer, then joins — draining only after the
+/// join, which is what [`flush_protocol`] model-checks.
+pub fn topology(writers: usize) -> crate::analysis::Topology {
+    use crate::analysis::{ExitCondition, ShutdownStep, Topology};
+    Topology::new("obs-flush")
+        .gate("recording")
+        .thread("span-writer", writers, ExitCondition::TokenOn("obs-stop".into()))
+        .channel("obs-stop", writers, &["main"], &["span-writer"], Some("recording"))
+        .on_shutdown(ShutdownStep::CloseGate("recording".into()))
+        .on_shutdown(ShutdownStep::SendTokens {
+            channel: "obs-stop".into(),
+            count: writers,
+        })
+        .on_shutdown(ShutdownStep::Join("span-writer".into()))
+}
+
+/// Bug switches for [`flush_protocol`]. `Default` (all `false`) is the
+/// shipped drain ordering.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlushBugs {
+    /// Drain the span buffer *before* stopping and joining the
+    /// writers — the tempting "export what we have, then shut down"
+    /// ordering. A writer that records between the drain and the gate
+    /// close leaves its span in the buffer forever: an open obligation
+    /// at join time, BSL056.
+    pub drain_before_join: bool,
+}
+
+/// Model-checked replica of the span-buffer flush-on-shutdown
+/// protocol: `writers` threads each record `spans_per_writer` spans
+/// while the `recording` gate is open (each recorded span opens an
+/// obligation that only the final drain completes), then quiesce on a
+/// stop token. The shipped ordering — close the gate, stop and join
+/// every writer, *then* drain — provably loses no recorded span;
+/// [`FlushBugs::drain_before_join`] re-introduces the drop-on-drain
+/// bug as a schedule-dependent BSL056 counterexample.
+pub fn flush_protocol(writers: usize, spans_per_writer: usize, bugs: FlushBugs) {
+    use crate::conc::sync::{model, sync_channel_labeled, Gate, Mutex};
+
+    let ring = Arc::new(Mutex::labeled(Vec::<model::Obligation>::new(), "span-ring"));
+    let gate = Arc::new(Gate::labeled("recording"));
+    let (tx, rx) = sync_channel_labeled::<()>(writers, "obs-stop");
+    tx.bind_gate(&gate);
+    let rx = Arc::new(Mutex::labeled(rx, "obs-stop-rx"));
+
+    let drain = |ring: &Mutex<Vec<model::Obligation>>| {
+        let mut buf = match ring.lock() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        for span in buf.drain(..) {
+            span.complete();
+        }
+    };
+
+    let mut pool = Vec::with_capacity(writers);
+    for w in 0..writers {
+        let ring = ring.clone();
+        let gate = gate.clone();
+        let rx = rx.clone();
+        pool.push(model::spawn(&format!("span-writer-{w}"), move || {
+            for i in 0..spans_per_writer {
+                // A span is recorded only while the gate is open —
+                // `ThreadSpans::record` against a drained recorder.
+                if let Some(_recording) = gate.enter() {
+                    if let Ok(mut buf) = ring.lock() {
+                        buf.push(model::obligation(&format!("span-{w}-{i}")));
+                    }
+                }
+            }
+            // Quiesce: wait for the shutdown token before exiting.
+            if let Ok(stop) = rx.lock() {
+                let _ = stop.recv();
+            }
+        }));
+    }
+
+    if bugs.drain_before_join {
+        // Seeded bug: export first, stop the writers later. Any span
+        // recorded after the drain is never completed.
+        drain(ring.as_ref());
+        gate.close();
+        for _ in 0..writers {
+            let _ = tx.send_token(());
+        }
+        for h in pool {
+            h.join();
+        }
+    } else {
+        // Shipped ordering: no new spans (gate), no running writers
+        // (tokens + join), then drain — every recorded span exported.
+        gate.close();
+        for _ in 0..writers {
+            let _ = tx.send_token(());
+        }
+        for h in pool {
+            h.join();
+        }
+        drain(ring.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let counter = AtomicU64::new(0);
+        let a = next_trace_id(&counter);
+        let b = next_trace_id(&counter);
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn trace_header_parsing() {
+        assert_eq!(parse_trace_id("00000000deadbeef"), Some(0xDEAD_BEEF));
+        assert_eq!(parse_trace_id("1"), Some(1));
+        assert_eq!(parse_trace_id(" ff "), Some(255));
+        assert_eq!(parse_trace_id(""), None);
+        assert_eq!(parse_trace_id("not-hex"), None);
+        assert_eq!(parse_trace_id("00000000000000000"), None, "17 digits overflow");
+    }
+
+    #[test]
+    fn flush_protocol_smoke_outside_the_model() {
+        // Outside the model checker the facade is plain std::sync: both
+        // orderings must at least run to completion (the *bug* is only
+        // observable as an open obligation, which the model layer
+        // tracks).
+        flush_protocol(2, 2, FlushBugs::default());
+    }
+
+    #[test]
+    fn obs_domain_collects_spans_and_metrics_together() {
+        let obs = Obs::default();
+        let ts = obs.spans.thread("t");
+        ts.record(SpanKind::Plan, "plan", 0, std::time::Instant::now());
+        obs.metrics.histogram("seg_seconds", "h", "segment", "seg0").record(100);
+        let doc = obs.drain_chrome_trace();
+        assert_eq!(doc.arr_field("traceEvents").unwrap().len(), 2, "metadata + span");
+        assert_eq!(obs.metrics.series_count(), 1);
+    }
+}

@@ -61,87 +61,12 @@ use crate::graph::Shape;
 use crate::json::Json;
 use crate::runtime::HostTensor;
 
-/// Allocation-free fixed-bucket latency histogram (HdrHistogram-style
-/// two-significant-bit layout): microsecond-resolution below 16 µs,
-/// then four linear sub-buckets per power-of-two octave, so any
-/// recorded value lands within 12.5 % of its bucket midpoint. The hot
-/// path is one atomic increment; percentile queries walk the fixed
-/// bucket array. Covers up to ~2^36 µs (≈19 h); larger values clamp
-/// into the top bucket.
-#[derive(Debug)]
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-}
-
-/// First octave with sub-bucket resolution (values below `2^4 = 16` µs
-/// get one bucket per microsecond).
-const HIST_LINEAR: usize = 16;
-const HIST_FIRST_OCTAVE: usize = 4;
-const HIST_LAST_OCTAVE: usize = 35;
-const HIST_BUCKETS: usize = HIST_LINEAR + (HIST_LAST_OCTAVE - HIST_FIRST_OCTAVE + 1) * 4;
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-        }
-    }
-}
-
-impl LatencyHistogram {
-    fn index(us: u64) -> usize {
-        if us < HIST_LINEAR as u64 {
-            return us as usize;
-        }
-        let octave = (63 - us.leading_zeros() as usize).min(HIST_LAST_OCTAVE);
-        let sub = ((us >> (octave - 2)) & 0b11) as usize;
-        HIST_LINEAR + (octave - HIST_FIRST_OCTAVE) * 4 + sub
-    }
-
-    /// Bucket midpoint in microseconds.
-    fn midpoint_us(idx: usize) -> f64 {
-        if idx < HIST_LINEAR {
-            return idx as f64 + 0.5;
-        }
-        let octave = HIST_FIRST_OCTAVE + (idx - HIST_LINEAR) / 4;
-        let sub = (idx - HIST_LINEAR) % 4;
-        (1u64 << octave) as f64 + (sub as f64 + 0.5) * (1u64 << (octave - 2)) as f64
-    }
-
-    /// Record one latency observation (microseconds).
-    ///
-    /// Ordering: Relaxed — bucket counts are independent monotone
-    /// counters and percentile readers tolerate a torn (per-bucket
-    /// atomic, cross-bucket unordered) snapshot by construction; see
-    /// the [`ServerStats`] memory-ordering contract.
-    pub fn record(&self, us: u64) {
-        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Total recorded observations.
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// `q`-quantile (`0.0 ..= 1.0`) in milliseconds, `0.0` before any
-    /// observation. Nearest-rank over the bucket midpoints.
-    pub fn percentile_ms(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (idx, c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Self::midpoint_us(idx) / 1000.0;
-            }
-        }
-        Self::midpoint_us(HIST_BUCKETS - 1) / 1000.0
-    }
-}
+/// The end-to-end latency histogram is the shared fixed-bucket
+/// implementation in [`crate::obs`] (two atomic increments on the hot
+/// path, bucket-midpoint percentile reads accurate to
+/// [`crate::obs::MIDPOINT_REL_ERROR`]). The historical name is kept as
+/// an alias so existing callers and docs keep reading naturally.
+pub use crate::obs::Histogram as LatencyHistogram;
 
 /// Why a submitted request failed — the typed seam the HTTP front door
 /// maps onto wire status codes (queue-full → 503 + `Retry-After`,
@@ -203,6 +128,10 @@ struct Request {
     /// [`InferError::DeadlineExceeded`] instead of spending a batch
     /// slot on an answer nobody is waiting for.
     deadline: Option<Instant>,
+    /// Trace id attributed to this request's spans (`0` = untraced).
+    /// Flows from the HTTP front door's `x-brainslug-trace` header
+    /// through [`ServerHandle::try_infer_deadline_traced`].
+    trace: u64,
 }
 
 /// Channel message: a request, or an explicit shutdown signal (cloned
@@ -362,8 +291,9 @@ pub struct ServerStats {
     /// High-water mark of [`Self::queue_depth`].
     pub queue_peak: AtomicU64,
     /// End-to-end (enqueue → reply) latency distribution; p50/p95/p99
-    /// feed `GET /v1/stats` and the `serve` summary. Fixed buckets, one
-    /// atomic increment per request on the hot path.
+    /// feed `GET /v1/stats` and the `serve` summary. The shared
+    /// fixed-bucket [`crate::obs::Histogram`]: two atomic increments
+    /// per request on the hot path.
     pub latency: LatencyHistogram,
     /// Worker crashes recovered by the supervisor (counted per crash,
     /// *before* the crashed batch's callers are answered, so a client
@@ -468,9 +398,20 @@ impl ServerStats {
             Json::Num(self.queue_peak.load(Ordering::Relaxed) as f64),
         );
         o.set("mean_latency_ms", Json::Num(self.mean_latency_ms()));
+        // The percentiles are bucket-midpoint reads of the shared
+        // fixed-bucket histogram, so they can differ from a load
+        // generator's raw-sample percentiles (bench-serve, fig18) by up
+        // to [`crate::obs::MIDPOINT_REL_ERROR`] (12.5 %) relative —
+        // advertised here so clients comparing the two views know the
+        // agreement contract.
         o.set("p50_ms", Json::Num(p50));
         o.set("p95_ms", Json::Num(p95));
         o.set("p99_ms", Json::Num(p99));
+        o.set("percentile_source", Json::Str("histogram-midpoint".into()));
+        o.set(
+            "percentile_rel_error",
+            Json::Num(crate::obs::MIDPOINT_REL_ERROR),
+        );
         o.set(
             "restarts",
             Json::Num(self.restarts.load(Ordering::Relaxed) as f64),
@@ -538,6 +479,21 @@ impl ServerHandle {
         image: Vec<f32>,
         deadline: Option<Instant>,
     ) -> std::result::Result<HostTensor, InferError> {
+        self.try_infer_deadline_traced(image, deadline, 0)
+    }
+
+    /// [`Self::try_infer_deadline`] attributed to trace id `trace`
+    /// (`0` = untraced). When the server was started with an armed
+    /// observability context ([`ServerConfig::obs`]), the request's
+    /// queue wait + execution and the batch that carried it are
+    /// recorded as Request/Batch spans under this id; the HTTP front
+    /// door feeds the `x-brainslug-trace` header value through here.
+    pub fn try_infer_deadline_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: u64,
+    ) -> std::result::Result<HostTensor, InferError> {
         if image.len() != self.image_shape.numel() {
             return Err(InferError::BadInput(format!(
                 "image has {} elements, expected {}",
@@ -557,6 +513,7 @@ impl ServerHandle {
             reply: tx,
             enqueued: Instant::now(),
             deadline,
+            trace,
         });
         {
             // Hold the gate's read side across the send: once `stop`
@@ -634,6 +591,7 @@ pub struct ServerConfig {
     queue_depth: usize,
     queue_policy: QueuePolicy,
     faults: Option<Arc<FaultInjector>>,
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl ServerConfig {
@@ -650,6 +608,7 @@ impl ServerConfig {
             queue_depth: 64,
             queue_policy: QueuePolicy::Block,
             faults: None,
+            obs: None,
         }
     }
 
@@ -690,6 +649,19 @@ impl ServerConfig {
         self
     }
 
+    /// Arm span tracing: worker engines record Plan/Segment/Band/Kernel
+    /// spans into `obs` and the batch loop adds Request/Batch spans,
+    /// all attributed to the per-request trace id
+    /// ([`ServerHandle::try_infer_deadline_traced`]). Without this the
+    /// server still keeps an internal metrics registry (the always-on
+    /// per-segment histograms behind `GET /v1/metrics`, reachable via
+    /// [`Server::obs`]) but records no spans — the zero-overhead
+    /// default, same `Option` arming pattern as [`Self::faults`].
+    pub fn obs(mut self, obs: Arc<crate::obs::Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
     /// Start the server (see [`Server::start`]).
     pub fn start(self) -> Result<Server> {
         Server::start(self)
@@ -709,6 +681,16 @@ pub struct Server {
     closed: Arc<Gate>,
     queue_depth: usize,
     faults: Option<Arc<FaultInjector>>,
+    obs: Arc<crate::obs::Obs>,
+}
+
+/// Worker-side observability hooks, shared across the pool: the
+/// always-on metrics registry plus whether span tracing was armed
+/// ([`ServerConfig::obs`]).
+#[derive(Clone)]
+struct ObsHook {
+    obs: Arc<crate::obs::Obs>,
+    tracing: bool,
 }
 
 impl Server {
@@ -726,6 +708,7 @@ impl Server {
             queue_depth,
             queue_policy,
             faults,
+            obs,
         } = config;
         // Tune once, up front: a builder carrying `.autotune(level)`
         // must not re-run the whole timed search in every worker thread
@@ -739,6 +722,21 @@ impl Server {
         // share one in-memory store instead of re-reading the file N
         // times (see `EngineBuilder::preload_profiles`).
         let engine = engine.preload_profiles();
+        // Metrics are always on (two atomic increments per segment per
+        // batch feed the `GET /v1/metrics` histograms); span tracing in
+        // the worker engines is armed only when the caller supplied a
+        // context, so the untraced hot path never reads a clock.
+        let tracing = obs.is_some();
+        let obs = obs.unwrap_or_default();
+        let engine = if tracing {
+            engine.obs(obs.clone())
+        } else {
+            engine
+        };
+        let hook = ObsHook {
+            obs: obs.clone(),
+            tracing,
+        };
         let stats = Arc::new(ServerStats::with_workers(workers));
         let closed = Arc::new(Gate::labeled("closed"));
         let (tx, rx) = crate::conc::sync::sync_channel_labeled::<Msg>(queue_depth, "dispatch");
@@ -754,6 +752,7 @@ impl Server {
             let stats = stats.clone();
             let ready_tx = ready_tx.clone();
             let faults = faults.clone();
+            let hook = hook.clone();
             joins.push(std::thread::spawn(move || {
                 let mut engine = match builder.build() {
                     Ok(e) => e,
@@ -775,8 +774,15 @@ impl Server {
                 // lost-restart race `fault::supervisor_protocol` pins
                 // as BSL050.
                 loop {
-                    match batch_loop(worker, &mut engine, &rx, &stats, max_wait, faults.as_deref())
-                    {
+                    match batch_loop(
+                        worker,
+                        &mut engine,
+                        &rx,
+                        &stats,
+                        max_wait,
+                        faults.as_deref(),
+                        &hook,
+                    ) {
                         LoopExit::Shutdown => return,
                         LoopExit::Crashed { shutdown_pending } => {
                             if shutdown_pending {
@@ -864,6 +870,7 @@ impl Server {
             closed,
             queue_depth,
             faults,
+            obs,
         })
     }
 
@@ -901,6 +908,14 @@ impl Server {
     /// The armed fault injector, if any (`serve --fault-seed`).
     pub fn faults(&self) -> Option<Arc<FaultInjector>> {
         self.faults.clone()
+    }
+
+    /// The server's observability context: the always-on metrics
+    /// registry (per-segment execution histograms for
+    /// `GET /v1/metrics`) and — when tracing was armed via
+    /// [`ServerConfig::obs`] — the recorded spans.
+    pub fn obs(&self) -> Arc<crate::obs::Obs> {
+        self.obs.clone()
     }
 
     /// Stop the server and join all workers. Graceful by construction:
@@ -1096,10 +1111,20 @@ fn batch_loop(
     stats: &Arc<ServerStats>,
     max_wait: Duration,
     faults: Option<&FaultInjector>,
+    hook: &ObsHook,
 ) -> LoopExit {
     let in_shape = engine.graph().input_shape().clone();
     let batch = in_shape.batch();
     let image_elems = in_shape.numel() / batch;
+    // Span shard for this worker thread, only when tracing is armed —
+    // the untraced loop takes no clock reads and no recorder calls.
+    let ts = hook
+        .tracing
+        .then(|| hook.obs.spans.thread(&format!("server-worker-{worker}")));
+    // Per-segment metric series, cached per replica life so the
+    // steady-state record path never touches the registry lock.
+    let mut seg_hists: std::collections::HashMap<String, Arc<LatencyHistogram>> =
+        std::collections::HashMap::new();
     loop {
         // Injection point `queue-stall`: a wedged dequeue. The queue
         // keeps admitting (and timing out) requests while this worker
@@ -1180,6 +1205,14 @@ fn batch_loop(
         // `AssertUnwindSafe` is the supervision contract made explicit:
         // on unwind the engine is assumed poisoned and is *never run
         // again* — the supervisor rebuilds it from the builder.
+        // The batch span (and the traced engine run) is attributed to
+        // the first live request's trace id — one batch, one trace.
+        let btrace = if ts.is_some() {
+            live.first().map_or(0, |r| r.trace)
+        } else {
+            0
+        };
+        let t0 = ts.is_some().then(Instant::now);
         let exec = catch_unwind(AssertUnwindSafe(|| {
             if let Some(f) = faults {
                 if f.fire(FaultPoint::WorkerPanic) {
@@ -1189,10 +1222,13 @@ fn batch_loop(
                     std::thread::sleep(FaultInjector::stall());
                 }
             }
-            engine.run(input)
+            engine.run_traced(input, btrace)
         }));
+        if let (Some(ts), Some(t0)) = (ts.as_ref(), t0) {
+            ts.record(crate::obs::SpanKind::Batch, "batch", btrace, t0);
+        }
         match exec {
-            Ok(Ok((out, _stats))) => {
+            Ok(Ok((out, exec_stats))) => {
                 let out_elems = out.shape.numel() / batch;
                 // Ordering: all Relaxed — independent statistical
                 // counters (see the `ServerStats` contract). The reply
@@ -1203,6 +1239,22 @@ fn batch_loop(
                 stats
                     .padded_slots
                     .fetch_add((batch - live.len()) as u64, Ordering::Relaxed);
+                // Always-on per-segment metrics: one histogram series
+                // per executed segment name, fed from the engine's own
+                // `ExecStats` (measured on the CPU backend, modeled on
+                // sim — either way `/v1/metrics` shows where batch time
+                // goes).
+                for seg in &exec_stats.segments {
+                    let h = seg_hists.entry(seg.name.clone()).or_insert_with(|| {
+                        hook.obs.metrics.histogram(
+                            "brainslug_segment_seconds",
+                            "Per-segment execution time of served batches.",
+                            "segment",
+                            &seg.name,
+                        )
+                    });
+                    h.record((seg.seconds * 1e6) as u64);
+                }
                 let mut out_dims = out.shape.dims.clone();
                 out_dims[0] = 1;
                 for (i, r) in live.iter().enumerate() {
@@ -1213,6 +1265,11 @@ fn batch_loop(
                     let us = r.enqueued.elapsed().as_micros() as u64;
                     stats.latency_us_sum.fetch_add(us, Ordering::Relaxed);
                     stats.latency.record(us);
+                    if let Some(ts) = ts.as_ref() {
+                        // Request span: enqueue → reply, so queue wait
+                        // is visible as the gap down to the Batch span.
+                        ts.record(crate::obs::SpanKind::Request, "request", r.trace, r.enqueued);
+                    }
                     let _ = r.reply.send(Ok(t));
                 }
             }
@@ -1281,46 +1338,9 @@ mod tests {
     use crate::engine::Engine;
     use crate::optimizer::CollapseOptions;
 
-    #[test]
-    fn histogram_buckets_are_monotone_and_tight() {
-        // Index is monotone in the value and the midpoint estimate is
-        // within 12.5 % above 16 µs (exact below).
-        let mut last = 0usize;
-        for us in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1000, 65_536, 1 << 30] {
-            let idx = LatencyHistogram::index(us);
-            assert!(idx >= last, "index not monotone at {us}");
-            last = idx;
-            let mid = LatencyHistogram::midpoint_us(idx);
-            if us < 16 {
-                assert!((mid - (us as f64 + 0.5)).abs() < 1e-9, "{us}");
-            } else {
-                let rel = (mid - us as f64).abs() / us as f64;
-                assert!(rel <= 0.30, "us={us} mid={mid} rel={rel}");
-            }
-        }
-        // Absurd values clamp into the top bucket instead of panicking.
-        assert_eq!(LatencyHistogram::index(u64::MAX), HIST_BUCKETS - 1);
-    }
-
-    #[test]
-    fn histogram_percentiles() {
-        let h = LatencyHistogram::default();
-        assert_eq!(h.percentile_ms(0.5), 0.0, "empty histogram is 0.0, not NaN");
-        // 100 observations at 1 ms, 10 at 100 ms: p50 ≈ 1 ms, p99+ ≈ 100 ms.
-        for _ in 0..100 {
-            h.record(1_000);
-        }
-        for _ in 0..10 {
-            h.record(100_000);
-        }
-        assert_eq!(h.count(), 110);
-        let p50 = h.percentile_ms(0.50);
-        let p99 = h.percentile_ms(0.99);
-        assert!((0.8..=1.3).contains(&p50), "p50 {p50}");
-        assert!((80.0..=130.0).contains(&p99), "p99 {p99}");
-        assert!(h.percentile_ms(0.0) <= p50 && p50 <= p99);
-        assert!(p99 <= h.percentile_ms(1.0) + 1e-9);
-    }
+    // The histogram's own unit tests (bucket monotonicity, midpoint
+    // tightness, percentile math) live with the shared implementation
+    // in `obs::metrics`; here we only exercise the serving-side wiring.
 
     #[test]
     fn stats_json_shape() {
@@ -1659,11 +1679,24 @@ mod tests {
             reply: reply_tx,
             enqueued: Instant::now(),
             deadline: None,
+            trace: 0,
         }))
         .unwrap();
         drop(tx);
         let rx = Arc::new(Mutex::new(rx));
-        let exit = batch_loop(0, &mut failing, &rx, &stats, Duration::from_millis(1), None);
+        let hook = ObsHook {
+            obs: Arc::default(),
+            tracing: false,
+        };
+        let exit = batch_loop(
+            0,
+            &mut failing,
+            &rx,
+            &stats,
+            Duration::from_millis(1),
+            None,
+            &hook,
+        );
         assert!(matches!(exit, LoopExit::Shutdown), "bail!-errors do not crash the replica");
         let reply = reply_rx.recv().unwrap();
         let err = reply.unwrap_err();
@@ -1807,6 +1840,60 @@ mod tests {
         assert_eq!(fresh.health.phase(), HealthPhase::Degraded);
         fresh.health.rebuild_finished();
         assert_eq!(fresh.health.phase(), HealthPhase::Ready);
+    }
+
+    #[test]
+    fn server_obs_records_spans_and_segment_metrics() {
+        // Tracing armed: the batch loop records a Request span per
+        // served request and a Batch span around execution, both
+        // carrying the caller's trace id; the metrics registry picks up
+        // one per-segment histogram series per executed segment (the
+        // sim backend reports modeled per-layer stats, so this works
+        // artifact-free).
+        let obs = Arc::new(crate::obs::Obs::default());
+        let server = ServerConfig::new(sim_engine(2))
+            .max_wait(Duration::from_millis(1))
+            .obs(obs.clone())
+            .start()
+            .unwrap();
+        let h = server.handle();
+        let elems = h.image_shape().numel();
+        let out = h
+            .try_infer_deadline_traced(vec![0.0; elems], None, 0xBEEF)
+            .unwrap();
+        assert_eq!(out.shape.batch(), 1);
+        server.stop();
+        assert!(obs.metrics.series_count() > 0, "no per-segment series registered");
+        let spans = obs.spans.drain();
+        let req: Vec<_> = spans
+            .iter()
+            .filter(|s| s.kind == crate::obs::SpanKind::Request)
+            .collect();
+        assert_eq!(req.len(), 1, "one served request, one Request span");
+        assert_eq!(req[0].trace, 0xBEEF);
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.kind == crate::obs::SpanKind::Batch && s.trace == 0xBEEF),
+            "batch span missing or unattributed"
+        );
+    }
+
+    #[test]
+    fn untraced_server_still_counts_segment_metrics_but_no_spans() {
+        // Default (no `.obs()`): spans stay off — the internal context
+        // records none — but the per-segment metric series still fill,
+        // so `/v1/metrics` is useful without ever arming tracing.
+        let server = ServerConfig::new(sim_engine(2))
+            .max_wait(Duration::from_millis(1))
+            .start()
+            .unwrap();
+        let h = server.handle();
+        assert!(h.infer(vec![0.0; h.image_shape().numel()]).is_ok());
+        let obs = server.obs();
+        server.stop();
+        assert!(obs.metrics.series_count() > 0);
+        assert!(obs.spans.drain().is_empty(), "untraced server recorded spans");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 use brainslug::conc::{explore, report_to_diags, ExploreOptions, Violation};
 use brainslug::fault::{supervisor_protocol, SupervisorBugs};
 use brainslug::http::listener::{self, ListenerBugs};
+use brainslug::obs::{flush_protocol, FlushBugs};
 use brainslug::server::{self, DrainBugs};
 use std::sync::Arc;
 
@@ -72,6 +73,48 @@ fn shipped_fault_supervisor_explores_clean() {
     );
     assert!(report.finding.is_none(), "{:?}", report.finding);
     assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+#[test]
+fn shipped_obs_flush_explores_clean() {
+    let report = explore(
+        "obs-flush",
+        &opts(256),
+        Arc::new(|| flush_protocol(2, 2, FlushBugs::default())),
+    );
+    assert!(report.finding.is_none(), "{:?}", report.finding);
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+}
+
+// ---------------------------------------------------------------------
+// The span-flush drain-before-join bug: the exporter drains shards
+// while writer threads are still recording (before the recording gate
+// closes and the writers are joined). Under a schedule where a writer
+// records after the drain, its span obligation stays open — BSL056.
+// ---------------------------------------------------------------------
+
+#[test]
+fn obs_flush_drain_before_join_is_found_as_bsl056() {
+    let bugs = FlushBugs {
+        drain_before_join: true,
+    };
+    let report = explore(
+        "obs-flush-drain-early",
+        &opts(512),
+        Arc::new(move || flush_protocol(2, 2, bugs)),
+    );
+    let finding = report.finding.expect("drain-before-join bug must be rediscovered");
+    assert!(
+        matches!(finding.violation, Violation::NonQuiescent { .. }),
+        "wrong classification: {:?}",
+        finding.violation
+    );
+    assert!(
+        !finding.counterexample.schedule.is_empty(),
+        "counterexample must carry a replayable schedule"
+    );
+    let diags = report_to_diags(&report);
+    assert!(diags.iter().any(|d| d.code.as_str() == "BSL056"), "{diags:?}");
 }
 
 // ---------------------------------------------------------------------
